@@ -1,0 +1,221 @@
+"""AOT compiler: lower every model entrypoint to HLO text + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+runtime (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``python -m compile.aot --out ../artifacts``):
+  artifacts/<entry>.hlo.txt      one per entrypoint x precision variant
+  artifacts/manifest.json        the Rust<->Python ABI: model configs,
+                                 param specs, entrypoint signatures
+  artifacts/params_<arch>.bin    deterministic initial weights (f32 LE,
+                                 param_spec order) so Rust and tests start
+                                 from identical policies
+
+Incremental: ``--only <substring>`` restricts which entrypoints are
+re-lowered; the Makefile treats the whole directory as one target.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Experiment-scale constants (the Rust side reads these from the manifest)
+# ---------------------------------------------------------------------------
+
+B_ROLLOUT = 32     # decode micro-batch rows in the engine
+PROMPT_LEN = 16    # padded prompt length for prefill
+B_TRAIN = 64       # (prompt x sample) rows per DAPO update
+T_TRAIN = 64       # padded full-sequence length for training (== max_seq)
+
+DENSE = M.ModelConfig(
+    vocab=32, d_model=128, n_layers=4, n_heads=4, n_kv_heads=2,
+    d_head=32, d_ff=256, moe=False, max_seq=64,
+)
+MOE = M.ModelConfig(
+    vocab=32, d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+    d_head=32, d_ff=256, moe=True, n_experts=8, top_k=2, d_expert=128,
+    max_seq=64,
+)
+ARCHS = {"dense": DENSE, "moe": MOE}
+
+ROLLOUT_BY_ARCH = {
+    "dense": ["bf16", "fp8lin", "kvfp8", "fullfp8", "fp8lin_ue8m0"],
+    "moe": ["bf16", "fp8lin", "fp8lin_rfp8", "fp8lin_rfp32",
+            "fp8lin_ue8m0", "fullfp8"],
+}
+TRAIN_BY_ARCH = {
+    "dense": ["bf16", "fp8hybrid", "fp8e4m3"],
+    "moe": ["bf16", "fp8hybrid", "fp8e4m3", "fp8hybrid_ue8m0"],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "s32"}[np.dtype(dtype).name]
+
+
+def _sig(specs):
+    return [
+        {"shape": list(s.shape), "dtype": _dt(s.dtype)} for s in specs
+    ]
+
+
+def _param_specs(cfg):
+    return [_spec(shape) for _, shape in M.param_spec(cfg)]
+
+
+def build_entrypoints(arch: str, cfg: M.ModelConfig):
+    """Yield (name, fn, extra_input_specs, n_param_blocks) tuples.
+
+    Every entrypoint takes the flat param list first (possibly repeated
+    for optimizer state), then the extras listed here.
+    """
+    pspecs = _param_specs(cfg)
+    npar = len(pspecs)
+    kv_shape = (cfg.n_layers, B_ROLLOUT, cfg.n_kv_heads, cfg.max_seq,
+                cfg.d_head)
+
+    entries = []
+    for vname in ROLLOUT_BY_ARCH[arch]:
+        rv = M.ROLLOUT_VARIANTS[vname]
+        entries.append((
+            f"{arch}_prefill_{vname}",
+            M.make_prefill(cfg, rv, B_ROLLOUT, PROMPT_LEN),
+            pspecs + [
+                _spec((B_ROLLOUT, PROMPT_LEN), jnp.int32),
+                _spec((1, 1)), _spec((1, 1)),
+            ],
+            dict(kind="prefill", arch=arch, variant=vname),
+        ))
+        entries.append((
+            f"{arch}_decode_{vname}",
+            M.make_decode(cfg, rv, B_ROLLOUT),
+            pspecs + [
+                _spec(kv_shape), _spec(kv_shape),
+                _spec((B_ROLLOUT, 1), jnp.int32),
+                _spec((B_ROLLOUT, 1), jnp.int32),
+                _spec((1, 1)), _spec((1, 1)),
+            ],
+            dict(kind="decode", arch=arch, variant=vname),
+        ))
+    for vname in TRAIN_BY_ARCH[arch]:
+        tv = M.TRAIN_VARIANTS[vname]
+        entries.append((
+            f"{arch}_train_{vname}",
+            M.make_train_step(cfg, tv, B_TRAIN, T_TRAIN),
+            pspecs * 3 + [
+                _spec((1, 1)),                                  # step
+                _spec((B_TRAIN, T_TRAIN), jnp.int32),           # tokens
+                _spec((B_TRAIN, T_TRAIN - 1)),                  # mask
+                _spec((B_TRAIN, T_TRAIN - 1)),                  # adv
+                _spec((B_TRAIN, T_TRAIN - 1)),                  # rollout_logp
+                _spec((1, 4)),                                  # hp
+            ],
+            dict(kind="train", arch=arch, variant=vname),
+        ))
+    entries.append((
+        f"{arch}_logprobs_bf16",
+        M.make_logprobs(cfg, M.TRAIN_VARIANTS["bf16"], B_TRAIN, T_TRAIN),
+        pspecs + [_spec((B_TRAIN, T_TRAIN), jnp.int32)],
+        dict(kind="logprobs", arch=arch, variant="bf16"),
+    ))
+    entries.append((
+        f"{arch}_calibrate",
+        M.make_calibrate(cfg, B_TRAIN, T_TRAIN),
+        pspecs + [_spec((B_TRAIN, T_TRAIN), jnp.int32)],
+        dict(kind="calibrate", arch=arch, variant="bf16"),
+    ))
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "constants": {
+            "b_rollout": B_ROLLOUT,
+            "prompt_len": PROMPT_LEN,
+            "b_train": B_TRAIN,
+            "t_train": T_TRAIN,
+            "metric_names": M.METRIC_NAMES,
+        },
+        "models": {},
+        "entrypoints": [],
+    }
+
+    for arch, cfg in ARCHS.items():
+        manifest["models"][arch] = {
+            "config": dataclasses.asdict(cfg),
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)
+            ],
+        }
+        # deterministic initial weights
+        params = M.init_params(cfg, jax.random.PRNGKey(42))
+        flat = M.flatten_params(cfg, params)
+        bin_path = os.path.join(args.out, f"params_{arch}.bin")
+        with open(bin_path, "wb") as f:
+            for a in flat:
+                f.write(np.asarray(a, dtype="<f4").tobytes())
+
+        for name, fn, specs, meta in build_entrypoints(arch, cfg):
+            out_path = os.path.join(args.out, f"{name}.hlo.txt")
+            entry = dict(
+                name=name,
+                file=f"{name}.hlo.txt",
+                inputs=_sig(specs),
+                **meta,
+            )
+            manifest["entrypoints"].append(entry)
+            if args.only and args.only not in name:
+                continue
+            t0 = time.time()
+            # keep_unused: entrypoints like `calibrate` ignore some params
+            # (lm_head, ln_f); the Rust ABI passes the full flat list, so
+            # unused parameters must survive lowering
+            lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+            text = to_hlo_text(lowered)
+            with open(out_path, "w") as f:
+                f.write(text)
+            print(
+                f"[aot] {name}: {len(text) / 1e6:.2f} MB "
+                f"({time.time() - t0:.1f}s)"
+            )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest with {len(manifest['entrypoints'])} entrypoints")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .fp8_quant import act_quant, blockwise_quant, w8a8_matmul  # noqa: F401
+from .attention import blocked_attention  # noqa: F401

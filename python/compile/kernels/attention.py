@@ -1,0 +1,171 @@
+"""Pallas blocked attention with optional FP8 KV-cache dequantization (L1).
+
+The paper's §2.3 quantizes the KV cache to E4M3 with per-step-recalibrated
+QKV scales. On GPU this lives inside the paged-attention kernel (dequant in
+shared memory); the TPU-style port streams K/V blocks HBM->VMEM via
+BlockSpec and dequantizes in-register before the blocked
+softmax-attention (online/flash-style accumulation across KV blocks).
+
+Variants (selected by flags, one kernel body):
+  * plain (BF16 path) — f32 K/V straight through.
+  * fp8_kv            — K/V arrive FP8-quantized against the per-step
+    recalibrated per-tensor scales (k_scale, v_scale operands); the kernel
+    dequantizes in-register. ("KV cache FP8 only")
+  * fp8_attn          — additionally rounds Q and the attention
+    probabilities through E4M3 ("Full FP8" = linear + KV + attention).
+
+The first-query position is a runtime operand (``qpos``), so one compiled
+module serves every decode step — no per-position recompiles.
+
+Perf (§Perf iteration 1): heads are processed in blocks of
+``head_block`` per grid step. On a real TPU head_block=1 maps one head
+per core pass; under interpret=True the grid is a sequential loop, so
+batching all heads into one block cut decode step time ~2x (see
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fp8_numerics import _FMT
+
+INTERPRET = True
+NEG_INF = -1e30
+
+
+def _qdq(x, fmt="e4m3"):
+    f = _FMT[fmt]
+    return jnp.clip(x, -f["max"], f["max"]).astype(f["dtype"]).astype(x.dtype)
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, kscale_ref, vscale_ref, qpos_ref,
+    out_ref, m_ref, l_ref, acc_ref,
+    *, nkv, kv_block, causal, fp8_kv, fp8_attn,
+):
+    """One (head-block, q-block) output tile, streaming over KV blocks
+    (grid axis 2, sequential) with online-softmax state carried in
+    m/l/acc output refs. All refs carry a leading head-block axis."""
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]  # (HB, TQ, D)
+    k = k_ref[...]  # (HB, TK, D)
+    v = v_ref[...]  # (HB, TK, D)
+
+    if fp8_kv:
+        ks = kscale_ref[0, 0]
+        vs = vscale_ref[0, 0]
+        k = _qdq(k / ks) * ks
+        v = _qdq(v / vs) * vs
+    if fp8_attn:
+        q = _qdq(q)
+
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "hqd,hkd->hqk", q, k, preferred_element_type=jnp.float32
+    ) * (1.0 / jnp.sqrt(jnp.float32(d)))
+
+    hb, tq, tk = s.shape
+    if causal:
+        qp = qpos_ref[...][:, :, None] + jax.lax.broadcasted_iota(
+            jnp.int32, (hb, tq, tk), 1
+        )
+        kp = kv_idx * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (hb, tq, tk), 2
+        )
+        s = jnp.where(kp <= qp, s, NEG_INF)
+
+    m_prev = m_ref[...]      # (HB, TQ, 1)
+    l_prev = l_ref[...]      # (HB, TQ, 1)
+    acc_prev = acc_ref[...]  # (HB, TQ, D)
+
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    if fp8_attn:
+        p = _qdq(p)  # attention-probability quantization ("Full FP8")
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jnp.einsum(
+        "hqk,hkd->hqd", p, v, preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(kv_idx == nkv - 1)
+    def _final():
+        out_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def blocked_attention(
+    q: jnp.ndarray,          # (H, TQ, D)
+    k: jnp.ndarray,          # (H, TK, D)
+    v: jnp.ndarray,          # (H, TK, D)
+    k_scale: jnp.ndarray,    # (1, 1) per-step recalibrated scale
+    v_scale: jnp.ndarray,    # (1, 1)
+    qpos: jnp.ndarray,       # (H, 1) int32 — per-head first-query position
+                             # (heads may fold a batch axis in decode, where
+                             # each sequence sits at a different position)
+    *,
+    causal: bool = True,
+    kv_block: int = 128,
+    head_block: int = 0,     # 0 = all heads in one block (CPU-interpret
+                             # sweet spot); TPU would use 1..8
+    fp8_kv: bool = False,
+    fp8_attn: bool = False,
+):
+    """Blocked (flash-style) multi-head attention; returns (H, TQ, D) f32."""
+    h, tq, d = q.shape
+    _, tk, _ = k.shape
+    kv_block = min(kv_block, tk)
+    assert tk % kv_block == 0, (tk, kv_block)
+    nkv = tk // kv_block
+    hb = h if head_block == 0 else min(head_block, h)
+    assert h % hb == 0, (h, hb)
+    kernel = functools.partial(
+        _attn_kernel,
+        nkv=nkv, kv_block=kv_block, causal=causal,
+        fp8_kv=fp8_kv, fp8_attn=fp8_attn,
+    )
+    out, _m, _l, _acc = pl.pallas_call(
+        kernel,
+        grid=(h // hb, 1, nkv),
+        in_specs=[
+            pl.BlockSpec((hb, tq, d), lambda hh, qq, kk: (hh, 0, 0)),
+            pl.BlockSpec((hb, kv_block, d), lambda hh, qq, kk: (hh, kk, 0)),
+            pl.BlockSpec((hb, kv_block, d), lambda hh, qq, kk: (hh, kk, 0)),
+            pl.BlockSpec((1, 1), lambda hh, qq, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda hh, qq, kk: (0, 0)),
+            pl.BlockSpec((hb, 1), lambda hh, qq, kk: (hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((hb, tq, d), lambda hh, qq, kk: (hh, 0, 0)),
+            pl.BlockSpec((hb, tq, 1), lambda hh, qq, kk: (hh, 0, 0)),
+            pl.BlockSpec((hb, tq, 1), lambda hh, qq, kk: (hh, 0, 0)),
+            pl.BlockSpec((hb, tq, d), lambda hh, qq, kk: (hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, tq, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, tq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, tq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, tq, d), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v, k_scale, v_scale, qpos)
+    return out
+
+
+__all__ = ["blocked_attention"]

@@ -1,0 +1,211 @@
+"""Pallas kernels for blockwise FP8 quantization and W8A8 matmul (L1).
+
+These are the paper's compute hot spots re-thought for the TPU model
+(DESIGN.md §2 Hardware adaptation):
+
+* ``blockwise_quant``      — per (BM x BN) block amax -> scale -> saturating
+                             E4M3 round-trip. The weight-sync phase's kernel.
+* ``act_quant``            — dynamic per (1 x BK) tile activation quant.
+* ``w8a8_matmul``          — blockwise-scaled FP8 GEMM: grid over
+                             (M/BM, N/BN, K/BK); weight tiles are fake-quant
+                             E4M3 with one scale per (BK x BN) block,
+                             activation rows are quantized per (1 x BK) tile
+                             in-kernel, MXU accumulates in f32 with scale
+                             folding — the DeepGEMM analogue.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower into the same HLO as the surrounding jax model so
+the AOT artifacts contain them. Correctness oracle: ``ref.py`` (pytest).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fp8_numerics import fp8_max, _FMT
+
+INTERPRET = True  # CPU path; real TPU would flip this off
+
+
+def _qdq_in_kernel(x, fmt: str):
+    """Saturating FP8 round-trip usable inside a pallas kernel body."""
+    f = _FMT[fmt]
+    clipped = jnp.clip(x, -f["max"], f["max"])
+    return clipped.astype(f["dtype"]).astype(x.dtype)
+
+
+def _mk_scale(amax, fmt: str, pow2_scale: bool):
+    scale = jnp.maximum(amax, 1e-12) / fp8_max(fmt)
+    if pow2_scale:
+        scale = 2.0 ** jnp.ceil(jnp.log2(scale))
+    return scale
+
+
+# ---------------------------------------------------------------------------
+# blockwise weight quantization
+# ---------------------------------------------------------------------------
+
+
+def _blockwise_quant_kernel(w_ref, out_ref, scale_ref, *, fmt, pow2_scale):
+    blk = w_ref[...]
+    scale = _mk_scale(jnp.max(jnp.abs(blk)), fmt, pow2_scale)
+    out_ref[...] = _qdq_in_kernel(blk / scale, fmt) * scale
+    scale_ref[0, 0] = scale
+
+
+def blockwise_quant(
+    w: jnp.ndarray,
+    block: Tuple[int, int] = (128, 128),
+    fmt: str = "e4m3",
+    pow2_scale: bool = False,
+):
+    """Fake-quant ``w`` blockwise; returns (dequantized w, per-block scales).
+
+    Shapes must be multiples of ``block`` (aot pads its weights to the
+    block grid; tests sweep both aligned shapes and the jnp-ref padding
+    path in fp8_numerics).
+    """
+    m, n = w.shape
+    bm, bn = block
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, block)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(
+        _blockwise_quant_kernel, fmt=fmt, pow2_scale=pow2_scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), w.dtype),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(w)
+
+
+# ---------------------------------------------------------------------------
+# dynamic activation quantization
+# ---------------------------------------------------------------------------
+
+
+def _act_quant_kernel(x_ref, out_ref, *, fmt, tile, pow2_scale):
+    row = x_ref[...]  # (BR, K)
+    k = row.shape[-1]
+    tiles = row.reshape(row.shape[0], k // tile, tile)
+    amax = jnp.max(jnp.abs(tiles), axis=-1, keepdims=True)
+    scale = _mk_scale(amax, fmt, pow2_scale)
+    q = _qdq_in_kernel(tiles / scale, fmt) * scale
+    out_ref[...] = q.reshape(row.shape)
+
+
+def act_quant(
+    x: jnp.ndarray,
+    tile: int = 128,
+    fmt: str = "e4m3",
+    block_rows: int = 8,
+    pow2_scale: bool = False,
+):
+    """Per-(1 x tile) dynamic fake-quant of a 2-D activation matrix."""
+    r, k = x.shape
+    tile = min(tile, k)
+    assert k % tile == 0, (k, tile)
+    br = min(block_rows, r)
+    while r % br:
+        br -= 1
+    kernel = functools.partial(
+        _act_quant_kernel, fmt=fmt, tile=tile, pow2_scale=pow2_scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# W8A8 blockwise matmul
+# ---------------------------------------------------------------------------
+
+
+def _w8a8_matmul_kernel(x_ref, w_ref, o_ref, *, fmt, act_tile, nk, pow2_scale):
+    """One (BM x BN) output tile, accumulating over the K grid axis.
+
+    x tile: (BM, BK) activations — quantized per (1 x act_tile) here.
+    w tile: (BK, BN) weights — ONE scale for the whole block (the paper's
+            128x128 weight-block granularity).
+    The output ref doubles as the f32 accumulator across the K axis (the
+    grid's last dimension is sequential, the TPU "arbitrary" dimension).
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    # weight block quant (static per block; idempotent for pre-quantized w)
+    wscale = _mk_scale(jnp.max(jnp.abs(w)), fmt, pow2_scale)
+    wq = _qdq_in_kernel(w / wscale, fmt)
+    # activation tile quant (dynamic)
+    bm, bk = x.shape
+    tiles = x.reshape(bm, bk // act_tile, act_tile)
+    ascale = _mk_scale(
+        jnp.max(jnp.abs(tiles), axis=-1, keepdims=True), fmt, pow2_scale
+    )
+    xq = _qdq_in_kernel(tiles / ascale, fmt)
+    xdq = (xq * ascale).reshape(bm, bk)
+    # MXU matmul with scale folding: (xq*ascale) @ wq * wscale
+    o_ref[...] += jnp.dot(xdq, wq, preferred_element_type=jnp.float32) * wscale
+
+
+def w8a8_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block: Tuple[int, int, int] = (8, 128, 128),
+    act_tile: int = 128,
+    fmt: str = "e4m3",
+    pow2_scale: bool = False,
+):
+    """Blockwise-scaled W8A8 GEMM: ``x @ w`` with FP8 fake-quant operands."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    act_tile = min(act_tile, bk)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape, block)
+    assert bk % act_tile == 0
+    nk = k // bk
+    kernel = functools.partial(
+        _w8a8_matmul_kernel, fmt=fmt, act_tile=act_tile, nk=nk,
+        pow2_scale=pow2_scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+__all__ = ["blockwise_quant", "act_quant", "w8a8_matmul"]

@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` computes the same math as its kernel with no pallas, no
+blocking and no online accumulation, so pytest can ``assert_allclose``
+kernel-vs-ref across shape/dtype sweeps (hypothesis drives the sweeps in
+python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..fp8_numerics import (
+    make_scale,
+    qdq_native,
+    quant_act_tilewise,
+    quant_weight_blockwise,
+)
+
+
+def ref_blockwise_quant(
+    w: jnp.ndarray,
+    block: Tuple[int, int] = (128, 128),
+    fmt: str = "e4m3",
+    pow2_scale: bool = False,
+):
+    """Oracle for kernels.fp8_quant.blockwise_quant (values + scales)."""
+    bm = min(block[0], w.shape[0])
+    bn = min(block[1], w.shape[1])
+    scale_fmt = "ue8m0" if pow2_scale else "fp32"
+    deq = quant_weight_blockwise(w, (bm, bn), fmt, scale_fmt, native=True)
+    m, n = w.shape
+    blocks = w.reshape(m // bm, bm, n // bn, bn)
+    amax = jnp.max(jnp.abs(blocks), axis=(1, 3))
+    scales = make_scale(amax, fmt, scale_fmt)
+    return deq, scales
+
+
+def ref_act_quant(
+    x: jnp.ndarray, tile: int = 128, fmt: str = "e4m3",
+    pow2_scale: bool = False,
+):
+    """Oracle for kernels.fp8_quant.act_quant."""
+    tile = min(tile, x.shape[-1])
+    scale_fmt = "ue8m0" if pow2_scale else "fp32"
+    return quant_act_tilewise(x, tile, fmt, scale_fmt, native=True)
+
+
+def ref_w8a8_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block: Tuple[int, int, int] = (8, 128, 128),
+    act_tile: int = 128,
+    fmt: str = "e4m3",
+    pow2_scale: bool = False,
+):
+    """Oracle for kernels.fp8_quant.w8a8_matmul.
+
+    Quantizes w per (BK x BN) block and x per (1 x act_tile) tile exactly
+    as the kernel does, then one dense f32 matmul.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    _, bk, bn = block
+    bk, bn = min(bk, k), min(bn, n)
+    act_tile = min(act_tile, bk)
+    scale_fmt = "ue8m0" if pow2_scale else "fp32"
+    wq = quant_weight_blockwise(w, (bk, bn), fmt, scale_fmt, native=True)
+    xq = quant_act_tilewise(x, act_tile, fmt, scale_fmt, native=True)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def ref_attention(
+    q: jnp.ndarray,        # (H, TQ, D)
+    k: jnp.ndarray,        # (H, TK, D)
+    v: jnp.ndarray,        # (H, TK, D)
+    k_scale: jnp.ndarray,  # (1, 1)
+    v_scale: jnp.ndarray,  # (1, 1)
+    qpos: jnp.ndarray,     # (H, 1) int32 per-head first-query position
+    *,
+    causal: bool = True,
+    fp8_kv: bool = False,
+    fp8_attn: bool = False,
+):
+    """Oracle for kernels.attention.blocked_attention (dense softmax)."""
+    if fp8_kv:
+        ks = k_scale[0, 0]
+        vs = v_scale[0, 0]
+        k = qdq_native(k / ks) * ks
+        v = qdq_native(v / vs) * vs
+    if fp8_attn:
+        q = qdq_native(q)
+    d = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    if causal:
+        tq, tk = s.shape[1], s.shape[2]
+        qp = qpos[:, 0][:, None, None] + jnp.arange(tq)[None, :, None]
+        kp = jnp.arange(tk)[None, None, :]
+        s = jnp.where(kp <= qp, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    if fp8_attn:
+        p = qdq_native(p)
+    return jnp.einsum("hqk,hkd->hqd", p, v) / jnp.maximum(
+        jnp.sum(p, axis=-1, keepdims=True), 1e-30
+    )
+
+
+__all__ = [
+    "ref_blockwise_quant",
+    "ref_act_quant",
+    "ref_w8a8_matmul",
+    "ref_attention",
+]

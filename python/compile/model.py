@@ -1,0 +1,802 @@
+"""L2: the policy model — a Qwen3-family tiny transformer, dense and MoE.
+
+Everything the Rust coordinator executes is defined here and lowered by
+``aot.py``:
+
+* ``prefill``     — process a padded prompt batch, fill the KV cache,
+                    return per-position logits (rollout path, pallas
+                    attention, precision per `RolloutVariant`).
+* ``decode_step`` — one generation step over the dense KV cache (rollout
+                    hot path; pallas attention + pallas W8A8 linears when
+                    FP8).
+* ``logprobs``    — teacher-forced token logprobs + entropy under the
+                    trainer's precision (pure jnp — the *different kernel
+                    implementation* is deliberate: it reproduces the
+                    paper's kernel-level train/inference mismatch).
+* ``train_step``  — one DAPO update (token-level policy-gradient loss with
+                    clip-higher, token-level TIS correction, Adam) with the
+                    FP8-training fake-quant recipes (hybrid E4M3/E5M2 or
+                    pure E4M3) and gradient tile-exceedance profiling.
+* ``calibrate``   — K/V amax scan for QKV-scale recalibration (both the
+                    inference-side and trainer-side strategies call this
+                    on different data — paper Fig 7).
+
+Architecture follows Qwen3: RMSNorm, RoPE, GQA attention, SwiGLU MLP,
+optional top-k-routed MoE with softmax gating. All math f32; "BF16"
+paths round through bfloat16 to model BF16 compute error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8_numerics as F8
+from .kernels.attention import blocked_attention
+from .kernels.fp8_quant import w8a8_matmul
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the policy. ``moe=False`` -> dense (Qwen3-8B
+    stand-in), ``moe=True`` -> top-k routed MoE (Qwen3-30B-A3B stand-in)."""
+
+    vocab: int = 32
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    moe: bool = False
+    n_experts: int = 8
+    top_k: int = 2
+    d_expert: int = 128
+    max_seq: int = 64
+    rope_base: float = 10000.0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+
+@dataclasses.dataclass(frozen=True)
+class RolloutVariant:
+    """Precision of the rollout (inference) path — paper §2.1/§2.3."""
+
+    name: str = "bf16"
+    fp8_linear: bool = False      # W8A8 blockwise linears
+    fp8_kv: bool = False          # FP8 KV-cache storage
+    fp8_attn: bool = False        # FP8 attention (Q & probabilities)
+    router: str = "bf16"          # 'fp8' | 'bf16' | 'fp32' (MoE only)
+    pow2_scale: bool = False      # UE8M0 scales instead of FP32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainVariant:
+    """Precision of the training path — paper §2.4."""
+
+    name: str = "bf16"
+    fp8: bool = False
+    bwd_fmt: str = "e5m2"         # 'e5m2' (hybrid) | 'e4m3' (pure recipe)
+    router: str = "fp32"          # trainer router precision
+    pow2_scale: bool = False
+
+
+# The named variants the experiment figures use.
+ROLLOUT_VARIANTS: Dict[str, RolloutVariant] = {
+    v.name: v
+    for v in [
+        RolloutVariant("bf16"),
+        RolloutVariant("fp8lin", fp8_linear=True),
+        RolloutVariant("kvfp8", fp8_kv=True),
+        RolloutVariant("fullfp8", fp8_linear=True, fp8_kv=True, fp8_attn=True),
+        RolloutVariant("fp8lin_rfp8", fp8_linear=True, router="fp8"),
+        RolloutVariant("fp8lin_rfp32", fp8_linear=True, router="fp32"),
+        RolloutVariant("fp8lin_ue8m0", fp8_linear=True, pow2_scale=True),
+    ]
+}
+
+TRAIN_VARIANTS: Dict[str, TrainVariant] = {
+    v.name: v
+    for v in [
+        TrainVariant("bf16"),
+        TrainVariant("fp8hybrid", fp8=True, bwd_fmt="e5m2"),
+        TrainVariant("fp8e4m3", fp8=True, bwd_fmt="e4m3"),
+        TrainVariant("fp8hybrid_ue8m0", fp8=True, bwd_fmt="e5m2",
+                     pow2_scale=True),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the Rust<->Python ABI for params."""
+    d, q, kv, ff = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (d,)),
+            (p + "q_proj", (d, q)),
+            (p + "k_proj", (d, kv)),
+            (p + "v_proj", (d, kv)),
+            (p + "o_proj", (q, d)),
+            (p + "ln2", (d,)),
+        ]
+        if cfg.moe:
+            spec.append((p + "router", (d, cfg.n_experts)))
+            for e in range(cfg.n_experts):
+                ep = p + f"expert{e}."
+                spec += [
+                    (ep + "gate_proj", (d, cfg.d_expert)),
+                    (ep + "up_proj", (d, cfg.d_expert)),
+                    (ep + "down_proj", (cfg.d_expert, d)),
+                ]
+        else:
+            spec += [
+                (p + "gate_proj", (d, ff)),
+                (p + "up_proj", (d, ff)),
+                (p + "down_proj", (ff, d)),
+            ]
+    spec += [("ln_f", (d,)), ("lm_head", (d, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init; norm gains at 1."""
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            std = shape[0] ** -0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]):
+    return [params[n] for n, _ in param_spec(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Dict[str, jnp.ndarray]:
+    return {n: a for (n, _), a in zip(param_spec(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Precision helpers
+# ---------------------------------------------------------------------------
+
+
+def _bf16_round(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def rollout_linear(x, w, rv: RolloutVariant):
+    """Linear layer on the rollout path (x 2-D).
+
+    FP8: the pallas W8A8 blockwise kernel (weights one scale per 128x128
+    block, activations per 1x128 tile — paper §2.1.1).
+    BF16: operands and result rounded through bfloat16 (models BF16 tensor
+    cores; the trainer's f32 math then differs slightly — the paper's
+    baseline-level train/inference mismatch).
+    """
+    if rv.fp8_linear:
+        m, k = x.shape
+        # §Perf iteration 2: larger M-blocks cut interpret-mode grid
+        # steps 4x at decode batch 32 (TPU would keep bm at the MXU's 8)
+        bm = 32 if m % 32 == 0 else (8 if m % 8 == 0 else 1)
+        bk = 128 if k % 128 == 0 else k
+        bn = 128 if w.shape[1] % 128 == 0 else w.shape[1]
+        return w8a8_matmul(
+            x, w, block=(bm, bk, bn), act_tile=min(128, bk),
+            pow2_scale=rv.pow2_scale,
+        )
+    return _bf16_round(_bf16_round(x) @ _bf16_round(w))
+
+
+def router_logits(x, w, precision: str):
+    """MoE router matmul at configurable precision (Fig 6 ablation)."""
+    if precision == "fp8":
+        xq = F8.quant_act_tilewise(x, min(128, x.shape[-1]), "e4m3", "fp32")
+        wq = F8.quant_weight_blockwise(
+            w, (min(128, w.shape[0]), min(128, w.shape[1])), "e4m3", "fp32"
+        )
+        return xq @ wq
+    if precision == "bf16":
+        return _bf16_round(_bf16_round(x) @ _bf16_round(w))
+    return x @ w  # fp32
+
+
+# --- FP8 training linear (fake-quant fwd E4M3, bwd per recipe) -------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fp8_train_linear(x, w, bwd_fmt: str, pow2_scale: bool):
+    return _fp8_fwd_value(x, w, pow2_scale)
+
+
+def _fp8_fwd_value(x, w, pow2_scale):
+    scale_fmt = "ue8m0" if pow2_scale else "fp32"
+    xq = F8.quant_act_tilewise(x, min(128, x.shape[-1]), "e4m3", scale_fmt)
+    wq = F8.quant_weight_blockwise(
+        w, (min(128, w.shape[0]), min(128, w.shape[1])), "e4m3", scale_fmt
+    )
+    return xq @ wq
+
+
+def _fp8_fwd(x, w, bwd_fmt, pow2_scale):
+    return _fp8_fwd_value(x, w, pow2_scale), (x, w)
+
+
+def _fp8_bwd(bwd_fmt, pow2_scale, res, g):
+    """Backward GEMMs with the grad-output quantized to ``bwd_fmt`` —
+    E5M2 (hybrid recipe) or E4M3 (DeepSeek-V3-style pure recipe)."""
+    x, w = res
+    scale_fmt = "ue8m0" if pow2_scale else "fp32"
+    gq = F8.quant_grad_blockwise(
+        g, bwd_fmt, (min(128, g.shape[0]), min(128, g.shape[-1])), scale_fmt
+    )
+    dx = gq @ w.T
+    dw = x.T @ gq
+    return dx, dw
+
+
+fp8_train_linear.defvjp(_fp8_fwd, _fp8_bwd)
+
+
+def train_linear(x, w, tv: TrainVariant):
+    if tv.fp8:
+        shp = x.shape
+        x2 = x.reshape(-1, shp[-1])
+        out = fp8_train_linear(x2, w, tv.bwd_fmt, tv.pow2_scale)
+        return out.reshape(*shp[:-1], w.shape[1])
+    return x @ w  # f32 master math = "BF16 mixed precision" stand-in
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def rope(x, pos, base: float):
+    """Rotary embedding. x: (..., T, H, D), pos: (..., T) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _repeat_kv(x, n_rep: int):
+    """(B, T, Hkv, D) -> (B, T, Hkv*n_rep, D) for GQA."""
+    if n_rep == 1:
+        return x
+    b, t, h, d = x.shape
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, t, h, n_rep, d)
+    ).reshape(b, t, h * n_rep, d)
+
+
+def swiglu(x, gate_w, up_w, down_w, linear):
+    g = linear(x, gate_w)
+    u = linear(x, up_w)
+    return linear(jax.nn.silu(g) * u, down_w)
+
+
+def _topk_oldxla(logits, k: int):
+    """Top-k via iterative argmax + mask. `jax.lax.top_k` lowers to a
+    Sort carrying a `largest` attribute that xla_extension 0.5.1's HLO
+    text parser rejects; this uses only argmax/select/iota (k is 2)."""
+    n, v = logits.shape
+    x = logits
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)  # (N,)
+        onehot = i[:, None] == jnp.arange(v)[None, :]
+        vals.append(jnp.sum(jnp.where(onehot, x, 0.0), axis=-1))
+        idxs.append(i)
+        x = jnp.where(onehot, -jnp.inf, x)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def moe_block(x, params, prefix, cfg: ModelConfig, linear, router_prec):
+    """Top-k softmax-gated MoE. x: (N, d). Dense expert compute (tiny
+    models) with discrete top-k routing — precision really flips routing."""
+    logits = router_logits(x, params[prefix + "router"], router_prec)
+    topv, topi = _topk_oldxla(logits, cfg.top_k)  # (N, k)
+    gates = jax.nn.softmax(topv, axis=-1)
+    out = jnp.zeros((x.shape[0], cfg.d_model), jnp.float32)
+    for e in range(cfg.n_experts):
+        ep = prefix + f"expert{e}."
+        y = swiglu(
+            x, params[ep + "gate_proj"], params[ep + "up_proj"],
+            params[ep + "down_proj"], linear,
+        )
+        w_e = jnp.sum(jnp.where(topi == e, gates, 0.0), axis=-1)  # (N,)
+        out = out + y * w_e[:, None]
+    return out, logits
+
+
+# ---------------------------------------------------------------------------
+# Rollout path (pallas attention; KV cache as explicit state)
+# ---------------------------------------------------------------------------
+# KV cache layout: k_cache, v_cache: (L, B, Hkv, Tmax, Dh) f32. FP8-KV
+# variants store fake-quant values (bit-identical to u8 codes x scale; the
+# Rust engine accounts capacity at 1 byte/elem).
+
+
+def _attn_rollout(cfg, rv, q, k_all, v_all, pos, kscale, vscale, tq):
+    """q: (B, TQ, Hq, Dh); k_all/v_all: (B, Hkv, Tmax, Dh); pos: (B,)."""
+    b = q.shape[0]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    # fold batch into heads for the pallas kernel
+    qh = q.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, tq, cfg.d_head)
+    kh = jnp.broadcast_to(
+        k_all[:, :, None],
+        (b, cfg.n_kv_heads, n_rep, cfg.max_seq, cfg.d_head),
+    ).reshape(b * cfg.n_heads, cfg.max_seq, cfg.d_head)
+    vh = jnp.broadcast_to(
+        v_all[:, :, None],
+        (b, cfg.n_kv_heads, n_rep, cfg.max_seq, cfg.d_head),
+    ).reshape(b * cfg.n_heads, cfg.max_seq, cfg.d_head)
+    qpos = jnp.repeat(pos, cfg.n_heads).reshape(b * cfg.n_heads, 1)
+    out = blocked_attention(
+        qh, kh, vh,
+        kscale.reshape(1, 1), vscale.reshape(1, 1),
+        qpos.astype(jnp.int32),
+        causal=True,
+        kv_block=min(64, cfg.max_seq),
+        fp8_kv=rv.fp8_kv,
+        fp8_attn=rv.fp8_attn,
+    )
+    return out.reshape(b, cfg.n_heads, tq, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _rollout_block(cfg, rv, params, i, x, k_cache, v_cache, pos, tq,
+                   kscale, vscale):
+    """One transformer layer on the rollout path.
+
+    x: (B, TQ, d); writes K/V at positions pos..pos+TQ-1; returns new x
+    and this layer's updated K/V planes.
+    """
+    p = f"layer{i}."
+    b = x.shape[0]
+
+    def lin(a, w):
+        out = rollout_linear(a.reshape(-1, a.shape[-1]), w, rv)
+        return out.reshape(*a.shape[:-1], w.shape[1])
+
+    h = rmsnorm(x, params[p + "ln1"])
+    q = lin(h, params[p + "q_proj"]).reshape(b, tq, cfg.n_heads, cfg.d_head)
+    k = lin(h, params[p + "k_proj"]).reshape(b, tq, cfg.n_kv_heads, cfg.d_head)
+    v = lin(h, params[p + "v_proj"]).reshape(b, tq, cfg.n_kv_heads, cfg.d_head)
+    tpos = pos[:, None] + jnp.arange(tq)[None, :]  # (B, TQ)
+    q = rope(q, tpos, cfg.rope_base)
+    k = rope(k, tpos, cfg.rope_base)
+
+    if rv.fp8_kv:
+        # quantize at write time against the per-step recalibrated scales
+        k = F8.qdq(k / kscale) * kscale
+        v = F8.qdq(v / vscale) * vscale
+
+    # scatter K/V into the cache at per-row positions (one-hot overwrite)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, TQ, Dh)
+    vt = v.transpose(0, 2, 1, 3)
+    onehot = (
+        tpos[:, None, :, None]
+        == jnp.arange(cfg.max_seq)[None, None, None, :]
+    ).astype(jnp.float32)  # (B, 1, TQ, Tmax)
+    write_k = jnp.einsum("bhqd,bxqt->bhtd", kt, onehot)
+    write_v = jnp.einsum("bhqd,bxqt->bhtd", vt, onehot)
+    mask_t = jnp.max(onehot, axis=2)[:, :, :, None]  # (B, 1, Tmax, 1)
+    new_k = k_cache[i] * (1.0 - mask_t) + write_k
+    new_v = v_cache[i] * (1.0 - mask_t) + write_v
+
+    attn = _attn_rollout(cfg, rv, q, new_k, new_v, pos, kscale, vscale, tq)
+    attn = attn.reshape(b, tq, cfg.q_dim)
+    x = x + lin(attn, params[p + "o_proj"])
+
+    h2 = rmsnorm(x, params[p + "ln2"])
+    if cfg.moe:
+        flat = h2.reshape(-1, cfg.d_model)
+        mout, _ = moe_block(
+            flat, params, p, cfg,
+            lambda a, w: rollout_linear(a, w, rv), rv.router,
+        )
+        x = x + mout.reshape(b, tq, cfg.d_model)
+    else:
+        x = x + swiglu(
+            h2, params[p + "gate_proj"], params[p + "up_proj"],
+            params[p + "down_proj"], lin,
+        )
+    return x, new_k, new_v
+
+
+def rollout_forward(cfg, rv, params, tokens, pos, k_cache, v_cache,
+                    kscale, vscale):
+    """Shared prefill/decode forward. tokens: (B, TQ); pos: (B,) start
+    positions. Returns (logits (B, TQ, V), k_cache', v_cache')."""
+    b, tq = tokens.shape
+    x = params["embed"][tokens]  # (B, TQ, d)
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        x, nk, nv = _rollout_block(
+            cfg, rv, params, i, x, k_cache, v_cache, pos, tq, kscale, vscale
+        )
+        new_ks.append(nk)
+        new_vs.append(nv)
+    x = rmsnorm(x, params["ln_f"])
+    # lm_head stays high precision (paper: excluded from quantization)
+    logits = _bf16_round(x.reshape(-1, cfg.d_model) @ params["lm_head"])
+    return (
+        logits.reshape(b, tq, cfg.vocab),
+        jnp.stack(new_ks),
+        jnp.stack(new_vs),
+    )
+
+
+def make_prefill(cfg: ModelConfig, rv: RolloutVariant, batch: int,
+                 prompt_len: int):
+    """f(flat_params..., tokens (B,P) i32, kscale (1,1), vscale (1,1))
+    -> (logits (B,P,V), k_cache, v_cache)."""
+
+    def prefill(*args):
+        n = len(param_spec(cfg))
+        params = unflatten_params(cfg, args[:n])
+        tokens, kscale, vscale = args[n], args[n + 1], args[n + 2]
+        zeros = jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_seq, cfg.d_head),
+            jnp.float32,
+        )
+        pos = jnp.zeros((batch,), jnp.int32)
+        logits, kc, vc = rollout_forward(
+            cfg, rv, params, tokens, pos, zeros, zeros,
+            kscale[0, 0], vscale[0, 0],
+        )
+        return logits, kc, vc
+
+    return prefill
+
+
+def make_decode(cfg: ModelConfig, rv: RolloutVariant, batch: int):
+    """f(flat_params..., k_cache, v_cache, tokens (B,1) i32, pos (B,1) i32,
+    kscale (1,1), vscale (1,1)) -> (logits (B,V), k_cache', v_cache')."""
+
+    def decode(*args):
+        n = len(param_spec(cfg))
+        params = unflatten_params(cfg, args[:n])
+        k_cache, v_cache, tokens, pos, kscale, vscale = args[n:n + 6]
+        logits, kc, vc = rollout_forward(
+            cfg, rv, params, tokens, pos[:, 0], k_cache, v_cache,
+            kscale[0, 0], vscale[0, 0],
+        )
+        return logits[:, 0], kc, vc
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Trainer path (pure jnp, teacher-forced)
+# ---------------------------------------------------------------------------
+
+
+def train_forward(cfg: ModelConfig, tv: TrainVariant, params, tokens):
+    """Teacher-forced forward. tokens: (B, T) -> logits (B, T, V).
+
+    Deliberately a different implementation than the rollout path (dense
+    causal attention, f32 math or FP8 fake-quant linears) — the kernel
+    difference is the paper's residual mismatch source.
+    """
+    b, t = tokens.shape
+
+    def lin(a, w):
+        return train_linear(a, w, tv)
+
+    x = params["embed"][tokens]
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = lin(h, params[p + "q_proj"]).reshape(b, t, cfg.n_heads, cfg.d_head)
+        k = lin(h, params[p + "k_proj"]).reshape(
+            b, t, cfg.n_kv_heads, cfg.d_head
+        )
+        v = lin(h, params[p + "v_proj"]).reshape(
+            b, t, cfg.n_kv_heads, cfg.d_head
+        )
+        q = rope(q, pos, cfg.rope_base)
+        k = rope(k, pos, cfg.rope_base)
+        k = _repeat_kv(k, n_rep)
+        v = _repeat_kv(v, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.d_head)
+        )
+        s = jnp.where(causal[None, None], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, t, cfg.q_dim)
+        x = x + lin(attn, params[p + "o_proj"])
+        h2 = rmsnorm(x, params[p + "ln2"])
+        if cfg.moe:
+            flat = h2.reshape(-1, cfg.d_model)
+            mout, _ = moe_block(flat, params, p, cfg, lin, tv.router)
+            x = x + mout.reshape(b, t, cfg.d_model)
+        else:
+            x = x + swiglu(
+                h2, params[p + "gate_proj"], params[p + "up_proj"],
+                params[p + "down_proj"], lin,
+            )
+    x = rmsnorm(x, params["ln_f"])
+    return (x.reshape(-1, cfg.d_model) @ params["lm_head"]).reshape(
+        b, t, cfg.vocab
+    )
+
+
+def token_logprobs_entropy(cfg, tv, params, tokens):
+    """logp[b, t] = log p(tokens[b, t+1] | tokens[b, :t+1]); entropy of the
+    predictive distribution at each position. Shapes (B, T-1)."""
+    logits = train_forward(cfg, tv, params, tokens)  # (B, T, V)
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp_all = logits - logz
+    nxt = tokens[:, 1:]
+    lp = jnp.take_along_axis(logp_all[:, :-1], nxt[..., None], -1)[..., 0]
+    probs = jnp.exp(logp_all)
+    ent = -jnp.sum(probs * logp_all, axis=-1)[:, :-1]
+    return lp, ent
+
+
+def make_logprobs(cfg: ModelConfig, tv: TrainVariant, batch: int, t: int):
+    """f(flat_params..., tokens (B,T) i32) -> (logp (B,T-1), ent (B,T-1))."""
+
+    def logprobs(*args):
+        n = len(param_spec(cfg))
+        params = unflatten_params(cfg, args[:n])
+        tokens = args[n]
+        return token_logprobs_entropy(cfg, tv, params, tokens)
+
+    return logprobs
+
+
+# ---------------------------------------------------------------------------
+# DAPO train step
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+CLIP_LOW, CLIP_HIGH = 0.2, 0.28  # DAPO clip-higher
+GRAD_CLIP = 1.0
+
+METRIC_NAMES = [
+    "loss", "entropy", "kl_k1", "kl_k3", "tis_mean", "ratio_raw_mean",
+    "grad_norm", "exceed_fc1", "exceed_other", "exceed_p99", "lr",
+    "r12", "r13", "r14", "r15", "r16",
+]
+
+
+def dapo_loss(cfg, tv, params, tokens, mask, adv, rollout_logp, tis_c,
+              ent_coef, mis_mode):
+    """Token-level DAPO objective with importance-sampling rollout
+    correction (paper eq. 2-3, §2.1.3) plus an entropy bonus (prevents
+    early policy collapse at this scale).
+
+    Two correction variants (paper: "token-level TIS/MIS variants"):
+      * TIS (mis_mode <= 0): w = min(pi_old/pi_fp8, C) — clip the weight.
+      * MIS (mis_mode > 0): mask out tokens whose raw ratio falls outside
+        [1/C, C] entirely (IcePop-style masked IS) — unreliable tokens
+        contribute nothing rather than a clipped amount.
+
+    tokens (B,T) i32; mask/adv/rollout_logp (B,T-1) f32 aligned to the
+    *predicted* token; tis_c scalar (<=0 disables the correction).
+    """
+    lp, ent = token_logprobs_entropy(cfg, tv, params, tokens)
+    lp_old = jax.lax.stop_gradient(lp)  # one update/batch: pi_old == pi_theta
+    ratio = jnp.exp(lp - lp_old)
+    raw_w = jnp.exp(lp_old - rollout_logp)
+    tis_w = jnp.where(
+        mis_mode > 0.0,
+        # MIS: keep weight 1 inside the trust band, 0 outside
+        jnp.where(
+            (raw_w <= tis_c) & (raw_w >= 1.0 / jnp.maximum(tis_c, 1e-6)),
+            jnp.ones_like(raw_w),
+            jnp.zeros_like(raw_w),
+        ),
+        # TIS: clipped weight
+        jnp.minimum(raw_w, tis_c),
+    )
+    tis_w = jnp.where(tis_c > 0.0, tis_w, jnp.ones_like(raw_w))
+    clipped = jnp.clip(ratio, 1.0 - CLIP_LOW, 1.0 + CLIP_HIGH)
+    obj = jnp.minimum(ratio * adv, clipped * adv) * tis_w
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    mean_ent = jnp.sum(ent * mask) / denom
+    loss = -jnp.sum(obj * mask) / denom - ent_coef * mean_ent
+    # mismatch KL: D_KL(pi_fp8 || pi_theta) on pi_fp8 samples.
+    # k1 = E[log(pi_fp8/pi_theta)]; k3 = E[(r-1) - log r], r = pi_theta/pi_fp8
+    dlog = lp_old - rollout_logp  # log(pi_theta / pi_fp8)
+    k1 = -jnp.sum(dlog * mask) / denom
+    k3 = jnp.sum(((jnp.exp(dlog) - 1.0) - dlog) * mask) / denom
+    aux = {
+        "entropy": jnp.sum(ent * mask) / denom,
+        "kl_k1": k1,
+        "kl_k3": k3,
+        "tis_mean": jnp.sum(tis_w * mask) / denom,
+        "ratio_raw_mean": jnp.sum(raw_w * mask) / denom,
+    }
+    return loss, aux
+
+
+def make_train_step(cfg: ModelConfig, tv: TrainVariant, batch: int, t: int):
+    """f(flat_params..., m..., v..., step (1,1), tokens (B,T) i32,
+    mask/adv/rollout_logp (B,T-1), hp (1,4)=[lr, tis_c, _, _])
+    -> (flat_params'..., m'..., v'..., step', metrics (1,16)).
+
+    metrics order: METRIC_NAMES.
+    """
+    names = [n for n, _ in param_spec(cfg)]
+    n = len(names)
+
+    def step_fn(*args):
+        params = unflatten_params(cfg, args[:n])
+        m_st = {nm: a for nm, a in zip(names, args[n:2 * n])}
+        v_st = {nm: a for nm, a in zip(names, args[2 * n:3 * n])}
+        step = args[3 * n][0, 0]
+        tokens, mask, adv, rollout_logp, hp = args[3 * n + 1:3 * n + 6]
+        lr, tis_c, ent_coef, mis_mode = (
+            hp[0, 0], hp[0, 1], hp[0, 2], hp[0, 3],
+        )
+
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: dapo_loss(
+                cfg, tv, p, tokens, mask, adv, rollout_logp, tis_c,
+                ent_coef, mis_mode,
+            ),
+            has_aux=True,
+        )(params)
+
+        # ---- gradient tile-exceedance profiling (Fig 11) ----
+        fc1_fracs, other_fracs, fc1_maxes = [], [], []
+        for name in names:
+            g = grads[name]
+            if g.ndim != 2:
+                continue
+            blk = (min(32, g.shape[0]), min(32, g.shape[1]))
+            frac = F8.tile_exceedance(g, blk)
+            if ("gate_proj" in name) or ("up_proj" in name):
+                fc1_fracs.append(jnp.mean(frac))
+                fc1_maxes.append(jnp.max(frac))
+            else:
+                other_fracs.append(jnp.mean(frac))
+        ex_fc1 = (
+            jnp.mean(jnp.stack(fc1_fracs)) if fc1_fracs else jnp.float32(0)
+        )
+        ex_other = (
+            jnp.mean(jnp.stack(other_fracs)) if other_fracs else jnp.float32(0)
+        )
+        ex_p99 = (
+            jnp.max(jnp.stack(fc1_maxes)) if fc1_maxes else jnp.float32(0)
+        )
+
+        # ---- global grad-norm clip + Adam ----
+        gnorm = jnp.sqrt(sum(jnp.sum(grads[nm] ** 2) for nm in names))
+        clip_coef = jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+        t_new = step + 1.0
+        bc1 = 1.0 - ADAM_B1 ** t_new
+        bc2 = 1.0 - ADAM_B2 ** t_new
+        new_p, new_m, new_v = [], [], []
+        for nm in names:
+            g = grads[nm] * clip_coef
+            m_new = ADAM_B1 * m_st[nm] + (1 - ADAM_B1) * g
+            v_new = ADAM_B2 * v_st[nm] + (1 - ADAM_B2) * g * g
+            upd = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + ADAM_EPS)
+            new_p.append(params[nm] - upd)
+            new_m.append(m_new)
+            new_v.append(v_new)
+
+        metrics = jnp.stack([
+            loss, aux["entropy"], aux["kl_k1"], aux["kl_k3"],
+            aux["tis_mean"], aux["ratio_raw_mean"], gnorm,
+            ex_fc1, ex_other, ex_p99, lr,
+            jnp.float32(0), jnp.float32(0), jnp.float32(0),
+            jnp.float32(0), jnp.float32(0),
+        ]).reshape(1, 16)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (
+            jnp.array([[0.0]], jnp.float32) + t_new.reshape(1, 1),
+            metrics,
+        )
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# QKV scale calibration (paper §2.3.1 — both strategies call this)
+# ---------------------------------------------------------------------------
+
+
+def make_calibrate(cfg: ModelConfig, batch: int, t: int):
+    """f(flat_params..., tokens (B,T) i32) -> (kscale (1,1), vscale (1,1)).
+
+    Runs a high-precision forward tracking per-layer K/V amax and returns
+    the recalibrated global KV scales for the next rollout. The
+    inference-side strategy feeds rollout prompts; the trainer-side
+    strategy feeds training-batch data (prompts + previous responses)."""
+
+    def calibrate(*args):
+        n = len(param_spec(cfg))
+        params = unflatten_params(cfg, args[:n])
+        tokens = args[n]
+        b, tt = tokens.shape
+        x = params["embed"][tokens]
+        pos = jnp.broadcast_to(jnp.arange(tt)[None], (b, tt))
+        causal = jnp.tril(jnp.ones((tt, tt), bool))
+        n_rep = cfg.n_heads // cfg.n_kv_heads
+        k_amax = jnp.float32(0)
+        v_amax = jnp.float32(0)
+        for i in range(cfg.n_layers):
+            p = f"layer{i}."
+            h = rmsnorm(x, params[p + "ln1"])
+            q = (h @ params[p + "q_proj"]).reshape(
+                b, tt, cfg.n_heads, cfg.d_head
+            )
+            k = (h @ params[p + "k_proj"]).reshape(
+                b, tt, cfg.n_kv_heads, cfg.d_head
+            )
+            v = (h @ params[p + "v_proj"]).reshape(
+                b, tt, cfg.n_kv_heads, cfg.d_head
+            )
+            q = rope(q, pos, cfg.rope_base)
+            k = rope(k, pos, cfg.rope_base)
+            k_amax = jnp.maximum(k_amax, jnp.max(jnp.abs(k)))
+            v_amax = jnp.maximum(v_amax, jnp.max(jnp.abs(v)))
+            kr, vr = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / jnp.sqrt(
+                jnp.float32(cfg.d_head)
+            )
+            s = jnp.where(causal[None, None], s, -1e30)
+            a = jax.nn.softmax(s, axis=-1)
+            attn = jnp.einsum("bhqk,bkhd->bqhd", a, vr).reshape(
+                b, tt, cfg.q_dim
+            )
+            x = x + attn @ params[p + "o_proj"]
+            h2 = rmsnorm(x, params[p + "ln2"])
+            if cfg.moe:
+                flat = h2.reshape(-1, cfg.d_model)
+                mout, _ = moe_block(
+                    flat, params, p, cfg, lambda a2, w: a2 @ w, "fp32"
+                )
+                x = x + mout.reshape(b, tt, cfg.d_model)
+            else:
+                x = x + swiglu(
+                    h2, params[p + "gate_proj"], params[p + "up_proj"],
+                    params[p + "down_proj"], lambda a2, w: a2 @ w,
+                )
+        kscale = jnp.maximum(k_amax, 1e-6) / F8.E4M3_MAX
+        vscale = jnp.maximum(v_amax, 1e-6) / F8.E4M3_MAX
+        return kscale.reshape(1, 1), vscale.reshape(1, 1)
+
+    return calibrate

@@ -1,0 +1,128 @@
+"""FP8 numerics: native jax casts vs the pure-f32 emulation oracle, plus
+the golden table shared with rust/tests/quantizer_parity.rs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fp8_numerics as F8
+
+# (input, e4m3 qdq, e5m2 qdq) — must match the Rust golden table
+GOLDEN = [
+    (0.0, 0.0, 0.0),
+    (1.0, 1.0, 1.0),
+    (1.7, 1.75, 1.75),
+    (-300.0, -288.0, -320.0),
+    (500.0, 448.0, 512.0),
+    (0.001, 0.001953125, 0.0009765625),
+    (448.0, 448.0, 448.0),
+    (57344.0, 448.0, 57344.0),
+    (-0.17, -0.171875, -0.15625),
+    (3.14159, 3.25, 3.0),
+    (1e-9, 0.0, 0.0),
+    (0.0625, 0.0625, 0.0625),
+]
+
+
+@pytest.mark.parametrize("x,e4,e5", GOLDEN)
+def test_golden_native(x, e4, e5):
+    xv = jnp.asarray([x], jnp.float32)
+    assert float(F8.qdq_native(xv, "e4m3")[0]) == e4
+    assert float(F8.qdq_native(xv, "e5m2")[0]) == e5
+
+
+@pytest.mark.parametrize("x,e4,e5", GOLDEN)
+def test_golden_emulated(x, e4, e5):
+    xv = jnp.asarray([x], jnp.float32)
+    assert float(F8.qdq_emulated(xv, "e4m3")[0]) == e4
+    assert float(F8.qdq_emulated(xv, "e5m2")[0]) == e5
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(
+        min_value=-1000.0, max_value=1000.0,
+        allow_nan=False, allow_infinity=False, width=32,
+    ),
+    st.sampled_from(["e4m3", "e5m2"]),
+)
+def test_native_matches_emulated(x, fmt):
+    xv = jnp.asarray([x], jnp.float32)
+    a = float(F8.qdq_native(xv, fmt)[0])
+    b = float(F8.qdq_emulated(xv, fmt)[0])
+    assert a == b, f"{fmt}({x}): native {a} vs emulated {b}"
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-448.0, max_value=448.0, allow_nan=False,
+                 width=32))
+def test_qdq_is_projection(x):
+    xv = jnp.asarray([x], jnp.float32)
+    once = F8.qdq_native(xv, "e4m3")
+    twice = F8.qdq_native(once, "e4m3")
+    assert float(once[0]) == float(twice[0])
+
+
+def test_saturation_not_nan():
+    # the raw jax cast maps overflow to NaN; our qdq must saturate
+    big = jnp.asarray([1e9, -1e9], jnp.float32)
+    out = F8.qdq_native(big, "e4m3")
+    assert list(np.asarray(out)) == [448.0, -448.0]
+
+
+def test_scale_formats():
+    amax = jnp.asarray([3.0])
+    s_fp32 = F8.scale_fp32(amax)
+    assert np.isclose(float(s_fp32[0]), 3.0 / 448.0)
+    s_p2 = F8.scale_ue8m0(amax)
+    v = float(s_p2[0])
+    assert np.log2(v) == int(np.log2(v))  # power of two
+    assert v >= float(s_fp32[0])  # ceil: never overflows
+
+
+def test_blockwise_weight_quant_properties():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+    q = F8.quant_weight_blockwise(w, (32, 32))
+    # per-block relative error bound: half-ulp at the block amax
+    wq = np.asarray(q)
+    wn = np.asarray(w)
+    for bi in range(2):
+        for bj in range(3):
+            blk = wn[bi * 32:(bi + 1) * 32, bj * 32:(bj + 1) * 32]
+            blkq = wq[bi * 32:(bi + 1) * 32, bj * 32:(bj + 1) * 32]
+            scale = np.abs(blk).max() / 448.0
+            assert np.abs(blk - blkq).max() <= scale * 32.0
+
+
+def test_act_tilewise_shapes_and_padding():
+    rng = np.random.default_rng(1)
+    for shape in [(4, 130), (3, 7), (8, 128), (1, 1)]:
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        q = F8.quant_act_tilewise(x, 128)
+        assert q.shape == x.shape
+        assert np.all(np.isfinite(np.asarray(q)))
+
+
+def test_grad_quant_e5m2_has_wider_range():
+    g = jnp.asarray([[1000.0, 1e-5] * 8] * 2, jnp.float32)
+    q5 = F8.quant_grad_blockwise(g, "e5m2", (2, 16))
+    q3 = F8.quant_grad_blockwise(g, "e4m3", (2, 16))
+    # same block scale, but e5m2's extra exponent bits keep more of the
+    # tiny entries alive
+    alive5 = np.count_nonzero(np.asarray(q5))
+    alive3 = np.count_nonzero(np.asarray(q3))
+    assert alive5 >= alive3
+
+
+def test_tile_exceedance_flags_wide_dynamic_range():
+    rng = np.random.default_rng(2)
+    ok = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    assert float(jnp.mean(F8.tile_exceedance(ok, (32, 32)))) < 0.05
+    # adversarial: one huge outlier pins the scale, flushing the rest
+    bad = np.full((32, 32), 1e-6, np.float32)
+    bad[0, 0] = 1e4
+    frac = F8.tile_exceedance(jnp.asarray(bad), (32, 32))
+    assert float(jnp.mean(frac)) > 0.9

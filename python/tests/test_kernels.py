@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles (the L1 correctness contract).
+
+Hypothesis sweeps shapes/seeds; assert_allclose against ref.py. Kernels
+run interpret=True so tolerances are float32-tight."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import fp8_quant as K
+from compile.kernels import ref as R
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(
+        (rng.standard_normal(shape) * scale).astype(np.float32)
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.sampled_from([(32, 32), (64, 32), (64, 128), (128, 64)]),
+    st.booleans(),
+    st.integers(0, 2**31 - 1),
+)
+def test_blockwise_quant_matches_ref(shape, pow2, seed):
+    rng = np.random.default_rng(seed)
+    w = arr(rng, *shape, scale=3.0)
+    block = (32, 32)
+    deq, scales = K.blockwise_quant(w, block, pow2_scale=pow2)
+    rdeq, rscales = R.ref_blockwise_quant(w, block, pow2_scale=pow2)
+    np.testing.assert_allclose(deq, rdeq, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(scales, rscales, rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.sampled_from([(8, 64), (16, 128), (4, 32)]),
+    st.integers(0, 2**31 - 1),
+)
+def test_act_quant_matches_ref(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, *shape, scale=5.0)
+    tile = min(32, shape[1])
+    q = K.act_quant(x, tile)
+    r = R.ref_act_quant(x, tile)
+    np.testing.assert_allclose(q, r, atol=5e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([(8, 64, 32), (16, 128, 64), (8, 32, 32)]),
+    st.booleans(),
+    st.integers(0, 2**31 - 1),
+)
+def test_w8a8_matmul_matches_ref(dims, pow2, seed):
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    x = arr(rng, m, k)
+    w = arr(rng, k, n)
+    block = (8, 32, 32)
+    out = K.w8a8_matmul(x, w, block, act_tile=32, pow2_scale=pow2)
+    ref = R.ref_w8a8_matmul(x, w, block, act_tile=32, pow2_scale=pow2)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4)
+
+
+def test_w8a8_error_vs_exact_is_bounded():
+    rng = np.random.default_rng(3)
+    x = arr(rng, 16, 128)
+    w = arr(rng, 128, 64)
+    out = np.asarray(K.w8a8_matmul(x, w, (8, 128, 64), act_tile=64))
+    exact = np.asarray(x @ w)
+    rel = np.abs(out - exact).max() / np.abs(exact).max()
+    # fp8 fake-quant GEMM error stays within a few percent
+    assert rel < 0.08, rel
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.sampled_from([(2, 1, 64, 16), (4, 8, 128, 32), (2, 4, 64, 32)]),
+    st.sampled_from([(False, False), (True, False), (True, True)]),
+    st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(dims, flags, seed):
+    h, tq, tk, d = dims
+    fp8_kv, fp8_attn = flags
+    rng = np.random.default_rng(seed)
+    q = arr(rng, h, tq, d)
+    k = arr(rng, h, tk, d)
+    v = arr(rng, h, tk, d)
+    ks = jnp.asarray(np.abs(np.asarray(k)).max() / 448.0).reshape(1, 1)
+    vs = jnp.asarray(np.abs(np.asarray(v)).max() / 448.0).reshape(1, 1)
+    qpos = jnp.asarray(
+        rng.integers(tq - 1, tk, size=(h, 1)).astype(np.int32)
+    )
+    out = A.blocked_attention(
+        q, k, v, ks, vs, qpos, kv_block=32, fp8_kv=fp8_kv,
+        fp8_attn=fp8_attn,
+    )
+    ref = R.ref_attention(
+        q, k, v, ks, vs, qpos, fp8_kv=fp8_kv, fp8_attn=fp8_attn
+    )
+    # Tolerances by variant:
+    # * plain: online-vs-dense softmax is float-tight.
+    # * fp8_kv: f8 casts can flip ties on boundary elements (~one V-ulp).
+    # * fp8_attn: genuinely different quantization points — the online
+    #   kernel rounds p = exp(s - m_running) per KV block then rescales,
+    #   the dense ref rounds p = exp(s - m_global); both are valid
+    #   "quantized attention" definitions (hardware kernels do the
+    #   former), differing by up to ~one probability-ulp (1/16 relative).
+    atol = 5e-2 if fp8_attn else (1e-2 if fp8_kv else 1e-5)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=atol)
+
+
+def test_attention_causal_mask_position_operand():
+    # moving qpos must change attention (it is a live runtime operand,
+    # not baked at trace time)
+    rng = np.random.default_rng(4)
+    q = arr(rng, 1, 1, 16)
+    k = arr(rng, 1, 64, 16)
+    v = arr(rng, 1, 64, 16)
+    one = jnp.ones((1, 1))
+    out_early = A.blocked_attention(
+        q, k, v, one, one, jnp.asarray([[3]], jnp.int32), kv_block=32
+    )
+    out_late = A.blocked_attention(
+        q, k, v, one, one, jnp.asarray([[60]], jnp.int32), kv_block=32
+    )
+    assert not np.allclose(np.asarray(out_early), np.asarray(out_late))
+
+
+def test_fp8_kv_attention_error_small():
+    rng = np.random.default_rng(5)
+    q = arr(rng, 2, 1, 32)
+    k = arr(rng, 2, 64, 32)
+    v = arr(rng, 2, 64, 32)
+    ks = jnp.asarray(np.abs(np.asarray(k)).max() / 448.0).reshape(1, 1)
+    vs = jnp.asarray(np.abs(np.asarray(v)).max() / 448.0).reshape(1, 1)
+    qpos = jnp.asarray([[63], [63]], jnp.int32)
+    exact = A.blocked_attention(q, k, v, ks, vs, qpos, kv_block=32)
+    quant = A.blocked_attention(
+        q, k, v, ks, vs, qpos, kv_block=32, fp8_kv=True
+    )
+    err = np.abs(np.asarray(exact) - np.asarray(quant)).max()
+    assert 0 < err < 0.05, err

@@ -1,0 +1,227 @@
+"""L2 model tests: shapes, decode/train-path consistency, precision
+variants, DAPO train-step behaviour, calibration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(
+    vocab=32, d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+    d_head=16, d_ff=128, max_seq=32,
+)
+MOE_CFG = M.ModelConfig(
+    vocab=32, d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+    d_head=16, d_ff=128, moe=True, n_experts=4, top_k=2, d_expert=64,
+    max_seq=32,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe_params():
+    return M.init_params(MOE_CFG, jax.random.PRNGKey(0))
+
+
+def test_param_spec_roundtrip(params):
+    flat = M.flatten_params(CFG, params)
+    back = M.unflatten_params(CFG, flat)
+    assert set(back) == set(params)
+    assert all(back[k] is params[k] for k in params)
+
+
+def test_param_spec_moe_has_experts():
+    names = [n for n, _ in M.param_spec(MOE_CFG)]
+    assert "layer0.router" in names
+    assert "layer1.expert3.down_proj" in names
+
+
+@pytest.mark.parametrize("variant", ["bf16", "fp8lin", "kvfp8", "fullfp8"])
+def test_prefill_decode_shapes(params, variant):
+    rv = M.ROLLOUT_VARIANTS[variant]
+    flat = M.flatten_params(CFG, params)
+    b, p = 4, 8
+    toks = jnp.ones((b, p), jnp.int32)
+    one = jnp.ones((1, 1))
+    logits, kc, vc = M.make_prefill(CFG, rv, b, p)(*flat, toks, one, one)
+    assert logits.shape == (b, p, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, b, CFG.n_kv_heads, CFG.max_seq,
+                        CFG.d_head)
+    pos = jnp.full((b, 1), p, jnp.int32)
+    nxt = jnp.ones((b, 1), jnp.int32)
+    lg, kc2, vc2 = M.make_decode(CFG, rv, b)(
+        *flat, kc, vc, nxt, pos, one, one
+    )
+    assert lg.shape == (b, CFG.vocab)
+    # decode must only touch position p in the cache
+    diff = np.asarray(kc2 - kc)
+    touched = np.nonzero(np.abs(diff).sum(axis=(0, 2, 4)))
+    assert set(touched[1].tolist()) <= {p}
+
+
+def test_decode_consistent_with_train_forward(params):
+    """Teacher-forcing the same tokens through the rollout path must give
+    (approximately) the trainer's logits — the residual gap IS the
+    paper's kernel-level mismatch, so assert it is small but nonzero."""
+    rv = M.ROLLOUT_VARIANTS["bf16"]
+    tv = M.TRAIN_VARIANTS["bf16"]
+    flat = M.flatten_params(CFG, params)
+    b, p = 4, 6
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 31, size=(b, p)).astype(np.int32))
+    one = jnp.ones((1, 1))
+    logits_r, _, _ = M.make_prefill(CFG, rv, b, p)(*flat, toks, one, one)
+    logits_t = M.train_forward(CFG, tv, params, toks)
+    gap = np.abs(np.asarray(logits_r) - np.asarray(logits_t)).max()
+    assert gap < 0.2, f"paths diverged too much: {gap}"
+    assert gap > 0.0, "suspiciously identical: bf16 rounding is dead?"
+
+
+def test_fp8_rollout_diverges_more_than_bf16(params):
+    flat = M.flatten_params(CFG, params)
+    b, p = 4, 6
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, 31, size=(b, p)).astype(np.int32))
+    one = jnp.ones((1, 1))
+    tv = M.TRAIN_VARIANTS["bf16"]
+    ref = np.asarray(M.train_forward(CFG, tv, params, toks))
+    gaps = {}
+    for v in ["bf16", "fp8lin"]:
+        rv = M.ROLLOUT_VARIANTS[v]
+        lg, _, _ = M.make_prefill(CFG, rv, b, p)(*flat, toks, one, one)
+        gaps[v] = np.abs(np.asarray(lg) - ref).max()
+    assert gaps["fp8lin"] > gaps["bf16"]
+
+
+def test_moe_router_precision_changes_routing(moe_params):
+    # fp8 router quantization must flip at least one top-k decision on
+    # random inputs (the Fig 6 mechanism)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    w = moe_params["layer0.router"]
+    lo = M.router_logits(x, w, "fp32")
+    hi = M.router_logits(x, w, "fp8")
+    _, top_lo = M._topk_oldxla(lo, 2)
+    _, top_hi = M._topk_oldxla(hi, 2)
+    flips = int(np.sum(np.asarray(top_lo) != np.asarray(top_hi)))
+    assert flips > 0, "fp8 router never flips expert selection?"
+
+
+def test_train_step_improves_selected_tokens(params):
+    tv = M.TRAIN_VARIANTS["bf16"]
+    b, t = 4, 12
+    step_fn = M.make_train_step(CFG, tv, b, t)
+    flat = M.flatten_params(CFG, params)
+    zeros = [jnp.zeros_like(a) for a in flat]
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 31, size=(b, t)).astype(np.int32))
+    mask = jnp.ones((b, t - 1))
+    adv = jnp.ones((b, t - 1))  # "all these tokens were good"
+    rlp = -2.0 * jnp.ones((b, t - 1))
+    hp = jnp.asarray([[3e-3, -1.0, 0.0, 0.0]], jnp.float32)
+
+    lp0, _ = M.token_logprobs_entropy(CFG, tv, params, toks)
+    state = list(flat) + zeros + zeros + [jnp.zeros((1, 1))]
+    for _ in range(5):
+        outs = jax.jit(step_fn)(*state[:-1], state[-1], toks, mask, adv,
+                                rlp, hp)
+        n = len(flat)
+        state = list(outs[: 3 * n]) + [outs[3 * n]]
+    new_params = M.unflatten_params(CFG, state[: len(flat)])
+    lp1, _ = M.token_logprobs_entropy(CFG, tv, new_params, toks)
+    assert float(jnp.mean(lp1)) > float(jnp.mean(lp0))
+    metrics = np.asarray(outs[-1])[0]
+    assert metrics.shape == (16,)
+    assert np.isfinite(metrics).all()
+
+
+def test_tis_weight_capped_in_metrics(params):
+    tv = M.TRAIN_VARIANTS["bf16"]
+    b, t = 2, 8
+    step_fn = M.make_train_step(CFG, tv, b, t)
+    flat = M.flatten_params(CFG, params)
+    zeros = [jnp.zeros_like(a) for a in flat]
+    toks = jnp.ones((b, t), jnp.int32)
+    mask = jnp.ones((b, t - 1))
+    adv = jnp.ones((b, t - 1))
+    rlp = -50.0 * jnp.ones((b, t - 1))  # rollout says "impossible tokens"
+    hp = jnp.asarray([[1e-3, 2.0, 0.0, 0.0]], jnp.float32)
+    outs = jax.jit(step_fn)(
+        *flat, *zeros, *zeros, jnp.zeros((1, 1)), toks, mask, adv, rlp, hp
+    )
+    metrics = np.asarray(outs[-1])[0]
+    names = M.METRIC_NAMES
+    tis_mean = metrics[names.index("tis_mean")]
+    raw_mean = metrics[names.index("ratio_raw_mean")]
+    assert tis_mean <= 2.0 + 1e-4  # clipped at C
+    assert raw_mean > tis_mean  # raw ratios exploded
+
+
+def test_fp8_train_variants_run_and_differ(params):
+    b, t = 2, 8
+    flat = M.flatten_params(CFG, params)
+    zeros = [jnp.zeros_like(a) for a in flat]
+    toks = jnp.ones((b, t), jnp.int32)
+    mask = jnp.ones((b, t - 1))
+    adv = jnp.ones((b, t - 1))
+    rlp = -2.0 * jnp.ones((b, t - 1))
+    hp = jnp.asarray([[1e-3, 2.0, 0.0, 0.0]], jnp.float32)
+    outs = {}
+    for v in ["bf16", "fp8hybrid", "fp8e4m3"]:
+        tv = M.TRAIN_VARIANTS[v]
+        step_fn = M.make_train_step(CFG, tv, b, t)
+        o = jax.jit(step_fn)(
+            *flat, *zeros, *zeros, jnp.zeros((1, 1)), toks, mask, adv,
+            rlp, hp,
+        )
+        outs[v] = np.asarray(o[0])  # updated embed
+    assert not np.allclose(outs["bf16"], outs["fp8hybrid"])
+    assert not np.allclose(outs["fp8hybrid"], outs["fp8e4m3"])
+
+
+def test_calibrate_returns_positive_scales(params):
+    flat = M.flatten_params(CFG, params)
+    cal = M.make_calibrate(CFG, 4, 10)
+    toks = jnp.ones((4, 10), jnp.int32)
+    ks, vs = jax.jit(cal)(*flat, toks)
+    assert ks.shape == (1, 1) and vs.shape == (1, 1)
+    assert float(ks[0, 0]) > 0 and float(vs[0, 0]) > 0
+    # scales track activation magnitude: doubling weights raises amax
+    boosted = [a * 2.0 for a in flat]
+    ks2, _ = jax.jit(cal)(*boosted, toks)
+    assert float(ks2[0, 0]) > float(ks[0, 0])
+
+
+def test_mis_masks_out_of_band_tokens(params):
+    """MIS (mis_mode=1) zeroes the IS weight for tokens whose raw ratio
+    leaves [1/C, C]; TIS clips it instead (paper §2.1.3 variants)."""
+    tv = M.TRAIN_VARIANTS["bf16"]
+    b, t = 2, 8
+    flat = M.flatten_params(CFG, params)
+    zeros = [jnp.zeros_like(a) for a in flat]
+    toks = jnp.ones((b, t), jnp.int32)
+    mask = jnp.ones((b, t - 1))
+    adv = jnp.ones((b, t - 1))
+    rlp = -50.0 * jnp.ones((b, t - 1))  # impossible under rollout => huge ratio
+    step_fn = M.make_train_step(CFG, tv, b, t)
+    names = M.METRIC_NAMES
+
+    def run(mis):
+        hp = jnp.asarray([[1e-3, 2.0, 0.0, mis]], jnp.float32)
+        outs = jax.jit(step_fn)(
+            *flat, *zeros, *zeros, jnp.zeros((1, 1)), toks, mask, adv,
+            rlp, hp,
+        )
+        return np.asarray(outs[-1])[0]
+
+    tis_metrics = run(0.0)
+    mis_metrics = run(1.0)
+    # TIS clips at C=2; MIS masks to zero
+    assert tis_metrics[names.index("tis_mean")] > 1.0
+    assert mis_metrics[names.index("tis_mean")] < 1e-6

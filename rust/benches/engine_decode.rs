@@ -1,0 +1,61 @@
+//! End-to-end engine bench: real HLO decode throughput per rollout
+//! variant on the tiny policy (the L3+runtime hot path the §Perf pass
+//! optimizes). Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench engine_decode`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fp8_rl::rollout::{EngineConfig, HloEngine, Request, SamplingParams};
+use fp8_rl::runtime::Runtime;
+use fp8_rl::util::rng::Pcg64;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        eprintln!("skipping engine bench: run `make artifacts` first");
+        return;
+    };
+    let rt = Arc::new(rt);
+    for variant in ["bf16", "fp8lin", "kvfp8", "fullfp8"] {
+        let mut engine = match HloEngine::new(
+            rt.clone(),
+            EngineConfig::new("dense", variant),
+        ) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skip {variant}: {e}");
+                continue;
+            }
+        };
+        let mut rng = Pcg64::new(3);
+        let reqs: Vec<Request> = (0..32)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![
+                    12,
+                    rng.below(10) as i32,
+                    10,
+                    rng.below(10) as i32,
+                    11,
+                ],
+                params: SamplingParams {
+                    max_new_tokens: 32,
+                    ..Default::default()
+                },
+            })
+            .collect();
+        // warm (compiles cached in-process)
+        let _ = engine.generate(reqs.clone()).unwrap();
+        let t0 = Instant::now();
+        let done = engine.generate(reqs).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+        println!(
+            "bench engine/decode[{variant:8}]: {tokens} tokens in \
+             {dt:.2}s = {:.1} tok/s ({:.2} ms/token/step batched)",
+            tokens as f64 / dt,
+            dt * 1e3 / engine.stats.decode_steps.max(1) as f64,
+        );
+    }
+}

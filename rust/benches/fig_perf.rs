@@ -1,0 +1,114 @@
+//! Paper perf figures as benches: Fig 3 (dense rollout), Fig 5 (MoE
+//! rollout), Fig 9 (KV-quant speedup bars), Fig 14 (trainer-side-calib
+//! speedup bars). Prints the same rows/series the paper plots, from the
+//! H100 cost model + the shared scheduler/KV allocator.
+//!
+//! Run: `cargo bench --bench fig_perf`
+
+use fp8_rl::perfmodel::modelcost::{QWEN3_30B_A3B, QWEN3_8B};
+use fp8_rl::perfmodel::{
+    LlmDescriptor, PrecisionPlan, SimConfig, Simulator, H100,
+};
+
+fn sweep(
+    title: &str,
+    model: LlmDescriptor,
+    n_gpus: f64,
+    paper_band: (f64, f64),
+) {
+    println!("\n== {title} (paper speedup band: {:.0}%-{:.0}%) ==",
+        paper_band.0, paper_band.1);
+    println!(
+        "{:>9} {:>13} {:>13} {:>9}",
+        "resp_len", "bf16 ms/tok", "fp8 ms/tok", "speedup"
+    );
+    for resp in [1024usize, 2048, 4096, 8192, 12288, 16384, 20480] {
+        let mut rows = Vec::new();
+        for plan in [PrecisionPlan::BF16, PrecisionPlan::LINEAR_W8A8] {
+            let mut cfg = SimConfig::new(H100, model, plan, resp);
+            cfg.n_gpus = n_gpus;
+            cfg.n_requests = 768;
+            cfg.prompt_len = 1024;
+            cfg.max_batch = 1024;
+            rows.push(Simulator::run(&cfg));
+        }
+        println!(
+            "{:>9} {:>13.3} {:>13.3} {:>8.1}%",
+            resp,
+            rows[0].ms_per_token,
+            rows[1].ms_per_token,
+            (rows[0].ms_per_token / rows[1].ms_per_token - 1.0) * 100.0
+        );
+    }
+}
+
+fn bars(title: &str, calib_overhead: f64, paper: &[(&str, f64)]) {
+    println!("\n== {title} ==");
+    let arms = [
+        ("bf16", PrecisionPlan::BF16),
+        ("linear_w8a8", PrecisionPlan::LINEAR_W8A8),
+        ("kv_fp8_only", PrecisionPlan::KV_ONLY),
+        ("full_fp8", PrecisionPlan::FULL_FP8),
+    ];
+    let mut base = 0.0;
+    for ((name, plan), (pname, pval)) in arms.iter().zip(paper) {
+        assert_eq!(name, pname);
+        let mut cfg = SimConfig::new(H100, QWEN3_8B, *plan, 8192);
+        cfg.n_gpus = 8.0;
+        cfg.n_requests = 1536;
+        cfg.prompt_len = 1024;
+        cfg.max_batch = 1024;
+        let mut r = Simulator::run(&cfg);
+        if *plan != PrecisionPlan::BF16 && calib_overhead > 0.0 {
+            r.tokens_per_s /= 1.0 + calib_overhead;
+        }
+        if *name == "bf16" {
+            base = r.tokens_per_s;
+        }
+        println!(
+            "{:>13}: {:>9.0} tok/s  +{:>5.1}%   (paper: +{:.0}%)  \
+             preempt={} batch={:.0}",
+            name,
+            r.tokens_per_s,
+            (r.tokens_per_s / base - 1.0) * 100.0,
+            pval,
+            r.preemptions,
+            r.mean_batch,
+        );
+    }
+}
+
+fn main() {
+    sweep(
+        "Fig 3: Qwen3-8B dense rollout, BF16 vs FP8 W8A8",
+        QWEN3_8B,
+        8.0,
+        (10.0, 20.0),
+    );
+    sweep(
+        "Fig 5: Qwen3-30B-A3B MoE rollout, BF16 vs FP8 W8A8",
+        QWEN3_30B_A3B,
+        16.0,
+        (30.0, 50.0),
+    );
+    bars(
+        "Fig 9: Qwen3-8B speedup by quantization scope (verl)",
+        0.0,
+        &[
+            ("bf16", 0.0),
+            ("linear_w8a8", 20.0),
+            ("kv_fp8_only", 38.0),
+            ("full_fp8", 44.0),
+        ],
+    );
+    bars(
+        "Fig 14: trainer-side calibration (NeMo-RL), 2.5% calib overhead",
+        0.025,
+        &[
+            ("bf16", 0.0),
+            ("linear_w8a8", 20.0),
+            ("kv_fp8_only", 30.0),
+            ("full_fp8", 48.0),
+        ],
+    );
+}

@@ -1,0 +1,111 @@
+//! Micro-benchmarks for the L3 hot paths (the §Perf profile targets):
+//! blockwise quantizer (weight-sync inner loop), KV block allocator,
+//! token sampler, and the JSON manifest parser.
+//!
+//! Run: `cargo bench --bench micro`
+
+use std::time::Duration;
+
+use fp8_rl::bench::{black_box, Bench};
+use fp8_rl::fp8::{
+    quantize_blockwise, ScaleFormat, Tensor, E4M3,
+};
+use fp8_rl::rollout::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
+use fp8_rl::rollout::request::SamplingParams;
+use fp8_rl::rollout::sampler;
+use fp8_rl::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(42);
+
+    // ---- blockwise quantizer: the weight-sync hot loop ----
+    // a 128x256 projection (the tiny model's biggest tensor)
+    let data: Vec<f32> =
+        (0..128 * 256).map(|_| rng.normal() as f32).collect();
+    let t = Tensor::new(vec![128, 256], data).unwrap();
+    Bench::new("fp8/quantize_blockwise 128x256 (e4m3, fp32 scales)")
+        .target(Duration::from_millis(400))
+        .run(|| {
+            black_box(quantize_blockwise(
+                &t,
+                (128, 128),
+                E4M3,
+                ScaleFormat::Fp32,
+            ));
+        });
+    // a 1024x1024 weight (realistic serving-scale shard)
+    let data: Vec<f32> =
+        (0..1024 * 1024).map(|_| rng.normal() as f32).collect();
+    let big = Tensor::new(vec![1024, 1024], data).unwrap();
+    Bench::new("fp8/quantize_blockwise 1024x1024")
+        .target(Duration::from_millis(600))
+        .max_iters(200)
+        .run(|| {
+            black_box(quantize_blockwise(
+                &big,
+                (128, 128),
+                E4M3,
+                ScaleFormat::Fp32,
+            ));
+        });
+
+    // ---- KV block manager: alloc/extend/release cycle ----
+    let geo = KvGeometry {
+        n_layers: 36,
+        n_kv_heads: 8,
+        d_head: 128,
+        block_tokens: 16,
+        precision: KvPrecision::Fp8,
+    };
+    Bench::new("kvcache/alloc+64 extends+release x64 seqs")
+        .target(Duration::from_millis(400))
+        .run(|| {
+            let mut m = KvBlockManager::new(geo, 4096);
+            for id in 0..64u64 {
+                m.allocate(id, 128);
+            }
+            for _ in 0..64 {
+                for id in 0..64u64 {
+                    m.append_token(id);
+                }
+            }
+            for id in 0..64u64 {
+                m.release(id);
+            }
+            black_box(m.alloc_failures);
+        });
+
+    // ---- sampler over a 32-vocab logit row (engine inner loop) ----
+    let logits: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+    let params = SamplingParams::default();
+    let mut srng = Pcg64::new(7);
+    Bench::new("sampler/sample vocab=32 (temp=1)")
+        .target(Duration::from_millis(300))
+        .run(|| {
+            black_box(sampler::sample(&logits, &params, &mut srng));
+        });
+    // serving-scale vocab
+    let logits_big: Vec<f32> =
+        (0..152_064).map(|_| rng.normal() as f32).collect();
+    Bench::new("sampler/sample vocab=152k (temp=1, top-k=50)")
+        .target(Duration::from_millis(500))
+        .max_iters(500)
+        .run(|| {
+            let p = SamplingParams {
+                top_k: 50,
+                ..Default::default()
+            };
+            black_box(sampler::sample(&logits_big, &p, &mut srng));
+        });
+
+    // ---- JSON manifest parse (runtime startup path) ----
+    if let Ok(src) = std::fs::read_to_string("artifacts/manifest.json") {
+        Bench::new("json/parse manifest.json")
+            .target(Duration::from_millis(400))
+            .run(|| {
+                black_box(
+                    fp8_rl::util::json::Json::parse(&src).unwrap(),
+                );
+            });
+    }
+}

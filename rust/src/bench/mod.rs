@@ -1,0 +1,142 @@
+//! Mini benchmarking harness (criterion is unavailable offline).
+//!
+//! `Bench::new("name").run(..)` does warmup, adaptive iteration-count
+//! selection, and reports mean / p50 / p95 per iteration. Benches under
+//! `rust/benches/*.rs` use `harness = false` and print the same rows the
+//! paper's tables/figures report.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:40} iters={:6}  mean={:>12}  p50={:>12}  p95={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    target: Duration,
+    max_iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            target: Duration::from_secs(1),
+            max_iters: 10_000,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn target(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Time `f` (which should include its own state handling) and report.
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // estimate per-iter cost from warmup to pick the sample count
+        let per = if warm_iters > 0 {
+            w0.elapsed().as_secs_f64() / warm_iters as f64
+        } else {
+            1e-3
+        };
+        let iters = ((self.target.as_secs_f64() / per) as usize)
+            .clamp(10, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let res = BenchResult {
+            name: self.name,
+            iters,
+            mean_ns: mean,
+            p50_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+        };
+        res.report();
+        res
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(10))
+            .target(Duration::from_millis(50))
+            .run(|| {
+                black_box(1 + 1);
+            });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

@@ -1,0 +1,124 @@
+//! Experiment configuration — the knobs every paper figure varies.
+
+use crate::fp8::ScaleFormat;
+use crate::sync::CalibStrategy;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub arch: String,            // dense | moe
+    pub rollout_variant: String, // bf16 | fp8lin | kvfp8 | fullfp8 | ...
+    pub train_variant: String,   // bf16 | fp8hybrid | fp8e4m3 | ...
+    /// token-level TIS clip C; <= 0 disables rollout correction
+    pub tis_c: f32,
+    /// Masked IS instead of Truncated IS (drop out-of-band tokens)
+    pub mis: bool,
+    pub calib: CalibStrategy,
+    /// weight-sync scale format (Fig 12)
+    pub scale_fmt: ScaleFormat,
+    /// quantize the MoE router during sync (Fig 6 FP8-router arm)
+    pub quantize_router: bool,
+    pub steps: usize,
+    pub prompts_per_step: usize,
+    pub samples_per_prompt: usize,
+    pub lr: f32,
+    pub ent_coef: f32,
+    pub validate_every: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    /// task difficulty
+    pub max_digits: u32,
+    /// cap a+b (Some(9) keeps answers one digit — the fast curriculum)
+    pub max_sum: Option<u64>,
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON config file; only present keys override the
+    /// defaults (the config system for scripted experiment sweeps).
+    pub fn from_json_file(path: &str) -> anyhow::Result<Self> {
+        use crate::util::json::Json;
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let gets = |k: &str, d: &str| -> String {
+            j.opt(k)
+                .and_then(|v| v.as_str().ok())
+                .unwrap_or(d)
+                .to_string()
+        };
+        let mut c = ExperimentConfig::new(
+            &gets("name", "config_run"),
+            &gets("arch", "dense"),
+            &gets("rollout_variant", "bf16"),
+            &gets("train_variant", "bf16"),
+        );
+        let getf = |k: &str, d: f64| -> f64 {
+            j.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(d)
+        };
+        let getb = |k: &str, d: bool| -> bool {
+            j.opt(k).and_then(|v| v.as_bool().ok()).unwrap_or(d)
+        };
+        c.tis_c = getf("tis_c", c.tis_c as f64) as f32;
+        c.mis = getb("mis", c.mis);
+        c.steps = getf("steps", c.steps as f64) as usize;
+        c.prompts_per_step =
+            getf("prompts_per_step", c.prompts_per_step as f64) as usize;
+        c.samples_per_prompt =
+            getf("samples_per_prompt", c.samples_per_prompt as f64) as usize;
+        c.lr = getf("lr", c.lr as f64) as f32;
+        c.ent_coef = getf("ent_coef", c.ent_coef as f64) as f32;
+        c.validate_every =
+            getf("validate_every", c.validate_every as f64) as usize;
+        c.max_new_tokens =
+            getf("max_new_tokens", c.max_new_tokens as f64) as usize;
+        c.seed = getf("seed", c.seed as f64) as u64;
+        c.max_digits = getf("max_digits", c.max_digits as f64) as u32;
+        if let Some(ms) = j.opt("max_sum") {
+            c.max_sum = Some(ms.as_f64()? as u64);
+        }
+        c.quantize_router = getb("quantize_router", c.quantize_router);
+        match gets("scale_fmt", "fp32").as_str() {
+            "ue8m0" => c.scale_fmt = ScaleFormat::Ue8m0,
+            _ => c.scale_fmt = ScaleFormat::Fp32,
+        }
+        match gets("calib", "inference").as_str() {
+            "trainer" => c.calib = CalibStrategy::TrainerSide,
+            _ => c.calib = CalibStrategy::InferenceSide,
+        }
+        Ok(c)
+    }
+
+    pub fn new(name: &str, arch: &str, rollout: &str, train: &str) -> Self {
+        ExperimentConfig {
+            name: name.to_string(),
+            arch: arch.to_string(),
+            rollout_variant: rollout.to_string(),
+            train_variant: train.to_string(),
+            tis_c: 2.0,
+            mis: false,
+            calib: CalibStrategy::InferenceSide,
+            scale_fmt: ScaleFormat::Fp32,
+            quantize_router: false,
+            steps: 150,
+            prompts_per_step: 16,
+            samples_per_prompt: 4,
+            lr: 3e-4,
+            ent_coef: 0.02,
+            validate_every: 5,
+            max_new_tokens: 8,
+            seed: 1234,
+            max_digits: 2,
+            max_sum: None,
+        }
+    }
+
+    /// Rollout path uses FP8 linears? (drives the weight-sync pipeline)
+    pub fn rollout_fp8_linear(&self) -> bool {
+        self.rollout_variant.contains("fp8lin")
+            || self.rollout_variant.contains("fullfp8")
+    }
+
+    pub fn rollout_fp8_kv(&self) -> bool {
+        self.rollout_variant.contains("kvfp8")
+            || self.rollout_variant.contains("fullfp8")
+    }
+}

@@ -1,0 +1,123 @@
+//! Per-step metric recording + CSV export for the figure harness.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+
+/// Column order for the training-curve CSVs (matches the paper's panels:
+/// accuracy / reward / response length / mismatch KL, plus diagnostics).
+pub const CURVE_COLUMNS: &[&str] = &[
+    "step",
+    "val_accuracy",
+    "reward",
+    "response_len",
+    "mismatch_kl",
+    "mismatch_kl_k3",
+    "entropy",
+    "grad_norm",
+    "tis_mean",
+    "ratio_raw_mean",
+    "exceed_fc1",
+    "exceed_other",
+    "exceed_p99",
+    "preemptions",
+    "rollout_s",
+    "sync_s",
+    "train_s",
+    "loss",
+];
+
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub values: BTreeMap<String, f64>,
+}
+
+impl StepRecord {
+    pub fn set(&mut self, key: &str, v: f64) {
+        self.values.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> f64 {
+        *self.values.get(key).unwrap_or(&f64::NAN)
+    }
+}
+
+#[derive(Default)]
+pub struct Recorder {
+    pub steps: Vec<StepRecord>,
+}
+
+impl Recorder {
+    pub fn push(&mut self, rec: StepRecord) {
+        self.steps.push(rec);
+    }
+
+    pub fn last(&self) -> Option<&StepRecord> {
+        self.steps.last()
+    }
+
+    /// Write the run as a curve CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = CsvWriter::create(path, CURVE_COLUMNS)?;
+        for rec in &self.steps {
+            let row: Vec<f64> =
+                CURVE_COLUMNS.iter().map(|c| rec.get(c)).collect();
+            w.row(&row)?;
+        }
+        w.flush()
+    }
+
+    /// Mean of a column over the last `n` steps (summary reporting).
+    pub fn tail_mean(&self, key: &str, n: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .steps
+            .iter()
+            .rev()
+            .take(n)
+            .map(|r| r.get(key))
+            .filter(|v| v.is_finite())
+            .collect();
+        if tail.is_empty() {
+            f64::NAN
+        } else {
+            tail.iter().sum::<f64>() / tail.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut rec = Recorder::default();
+        for i in 0..10 {
+            let mut r = StepRecord::default();
+            r.set("step", i as f64);
+            r.set("reward", i as f64 * 0.1);
+            rec.push(r);
+        }
+        assert!((rec.tail_mean("reward", 2) - 0.85).abs() < 1e-12);
+        assert!(rec.tail_mean("missing", 3).is_nan());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut rec = Recorder::default();
+        let mut r = StepRecord::default();
+        r.set("step", 1.0);
+        r.set("reward", 0.5);
+        rec.push(r);
+        let dir = std::env::temp_dir().join("fp8rl_metrics_test");
+        let path = dir.join("curve.csv");
+        rec.write_csv(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with("step,val_accuracy"));
+        assert!(s.lines().count() == 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

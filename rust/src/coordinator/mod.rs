@@ -1,0 +1,9 @@
+//! L3 coordinator: the RL loop leader (rollout -> weight sync -> train)
+//! and the experiment harness driving every paper figure.
+pub mod config;
+pub mod metrics;
+pub mod rlloop;
+
+pub use config::ExperimentConfig;
+pub use metrics::{Recorder, StepRecord, CURVE_COLUMNS};
+pub use rlloop::RlLoop;

@@ -1,0 +1,270 @@
+//! The synchronous RL loop leader — verl's role in the paper (Fig 1):
+//! rollout phase -> weight-sync phase -> training phase, once per step,
+//! with validation probes and per-step metric recording.
+//!
+//! Everything precision-related is injected through the experiment
+//! config: which decode artifact the engine runs (rollout precision),
+//! which train artifact updates the policy (training precision), whether
+//! the sync pipeline quantizes (and with which scale format), whether
+//! TIS corrects the mismatch, and which calibration strategy refreshes
+//! the KV scales.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::rl::dapo::{Sample, TrainBatch};
+use crate::rl::task::{Task, TaskConfig, TOK_PAD};
+use crate::rl::trainer::{Trainer, TrainerConfig};
+use crate::rollout::{
+    EngineConfig, HloEngine, Request, SamplingParams,
+};
+use crate::runtime::Runtime;
+use crate::sync::{CalibStrategy, Calibrator, WeightSync, WeightSyncConfig};
+
+use super::config::ExperimentConfig;
+use super::metrics::{Recorder, StepRecord};
+
+pub struct RlLoop {
+    pub cfg: ExperimentConfig,
+    rt: Arc<Runtime>,
+    task: Task,
+    engine: HloEngine,
+    trainer: Trainer,
+    sync: WeightSync,
+    calib: Calibrator,
+    pub recorder: Recorder,
+    /// last training-batch rows (trainer-side calibration data)
+    last_train_rows: Vec<Vec<i32>>,
+    req_counter: u64,
+    last_val_acc: f64,
+}
+
+impl RlLoop {
+    pub fn new(rt: Arc<Runtime>, cfg: ExperimentConfig) -> Result<RlLoop> {
+        let engine = HloEngine::new(
+            rt.clone(),
+            EngineConfig {
+                seed: cfg.seed,
+                ..EngineConfig::new(&cfg.arch, &cfg.rollout_variant)
+            },
+        )?;
+        let trainer = Trainer::new(
+            rt.clone(),
+            TrainerConfig {
+                lr: cfg.lr,
+                tis_c: cfg.tis_c,
+                ent_coef: cfg.ent_coef,
+                mis: cfg.mis,
+                ..TrainerConfig::new(&cfg.arch, &cfg.train_variant)
+            },
+        )?;
+        let sync_cfg = WeightSyncConfig {
+            fp8: cfg.rollout_fp8_linear(),
+            scale_fmt: cfg.scale_fmt,
+            quantize_router: cfg.quantize_router,
+            ..WeightSyncConfig::bf16()
+        };
+        let calib = Calibrator::new(rt.clone(), &cfg.arch, cfg.calib)?;
+        let task = Task::new(TaskConfig {
+            max_digits: cfg.max_digits,
+            max_sum: cfg.max_sum,
+            n_validation: 64,
+            seed: cfg.seed ^ 0xABCD,
+        });
+        Ok(RlLoop {
+            engine,
+            trainer,
+            sync: WeightSync::new(sync_cfg),
+            calib,
+            task,
+            rt,
+            cfg,
+            recorder: Recorder::default(),
+            last_train_rows: Vec::new(),
+            req_counter: 0,
+            last_val_acc: f64::NAN,
+        })
+    }
+
+    /// Run the configured number of steps; returns the recorder.
+    pub fn run(&mut self) -> Result<()> {
+        for step in 0..self.cfg.steps {
+            let rec = self.step(step)?;
+            if step % 10 == 0 {
+                log::info!(
+                    "[{}] step {step}: reward={:.3} acc={:.3} kl={:.2e}",
+                    self.cfg.name,
+                    rec.get("reward"),
+                    rec.get("val_accuracy"),
+                    rec.get("mismatch_kl"),
+                );
+            }
+            self.recorder.push(rec);
+        }
+        Ok(())
+    }
+
+    /// One full RL iteration (public so figures can interleave probes).
+    pub fn step(&mut self, step: usize) -> Result<StepRecord> {
+        let mut rec = StepRecord::default();
+        rec.set("step", step as f64);
+
+        // ---- phase 1: weight synchronization (paper Fig 1) ----
+        let t0 = Instant::now();
+        let spec = self.rt.manifest.model(&self.cfg.arch)?.clone();
+        let (weights, _report) =
+            self.sync.run(&spec, self.trainer.params())?;
+        self.engine.install_weights(&weights)?;
+
+        // sample this step's problems first: inference-side calibration
+        // uses the upcoming prompts (vLLM forced-recalibration style)
+        let problems: Vec<_> = (0..self.cfg.prompts_per_step)
+            .map(|_| self.task.sample())
+            .collect();
+
+        if self.cfg.rollout_fp8_kv() {
+            let rows: Vec<Vec<i32>> = match self.calib.strategy() {
+                CalibStrategy::InferenceSide => {
+                    problems.iter().map(|p| p.prompt.clone()).collect()
+                }
+                CalibStrategy::TrainerSide => {
+                    if self.last_train_rows.is_empty() {
+                        problems.iter().map(|p| p.prompt.clone()).collect()
+                    } else {
+                        self.last_train_rows.clone()
+                    }
+                }
+            };
+            let (ks, vs) = self.calib.recalibrate(
+                self.trainer.params(),
+                &rows,
+                TOK_PAD,
+            )?;
+            self.engine.install_kv_scales(ks, vs);
+        }
+        rec.set("sync_s", t0.elapsed().as_secs_f64());
+
+        // ---- phase 2: rollout (generation) ----
+        let t1 = Instant::now();
+        let n = self.cfg.samples_per_prompt;
+        let mut requests = Vec::new();
+        for (pi, p) in problems.iter().enumerate() {
+            for si in 0..n {
+                self.req_counter += 1;
+                requests.push(Request {
+                    id: (pi * n + si) as u64
+                        + self.req_counter * 10_000,
+                    prompt: p.prompt.clone(),
+                    params: SamplingParams {
+                        temperature: 1.0,
+                        max_new_tokens: self.cfg.max_new_tokens,
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+        let id_base: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        let pre_preempt = self.engine.stats.preemptions;
+        let completions = self.engine.generate(requests)?;
+        rec.set(
+            "preemptions",
+            (self.engine.stats.preemptions - pre_preempt) as f64,
+        );
+        rec.set("rollout_s", t1.elapsed().as_secs_f64());
+
+        // map completions back to (problem, group)
+        let mut samples: Vec<Sample> = Vec::new();
+        for c in completions {
+            let idx = id_base
+                .iter()
+                .position(|&id| id == c.id)
+                .expect("completion for unknown request");
+            let (pi, _si) = (idx / n, idx % n);
+            samples.push(Sample {
+                problem: problems[pi].clone(),
+                completion: c,
+                reward: 0.0,
+                group: pi,
+            });
+        }
+        crate::rl::dapo::score(&mut samples);
+
+        // ---- phase 3: training (DAPO + TIS) ----
+        let t2 = Instant::now();
+        let c = &self.rt.manifest.constants;
+        let batch = TrainBatch::assemble(
+            &samples,
+            c.b_train,
+            c.t_train,
+            1e-4,
+            true,
+        );
+        self.last_train_rows = batch
+            .tokens
+            .chunks(c.t_train)
+            .take(samples.len())
+            .map(|r| r.to_vec())
+            .collect();
+        let metrics = self.trainer.train_step(&batch)?;
+        rec.set("train_s", t2.elapsed().as_secs_f64());
+
+        rec.set("reward", batch.mean_reward as f64);
+        rec.set("response_len", batch.mean_response_len as f64);
+        rec.set("loss", metrics.get("loss") as f64);
+        rec.set("mismatch_kl", metrics.get("kl_k3") as f64);
+        rec.set("mismatch_kl_k3", metrics.get("kl_k3") as f64);
+        rec.set("entropy", metrics.get("entropy") as f64);
+        rec.set("grad_norm", metrics.get("grad_norm") as f64);
+        rec.set("tis_mean", metrics.get("tis_mean") as f64);
+        rec.set(
+            "ratio_raw_mean",
+            metrics.get("ratio_raw_mean") as f64,
+        );
+        rec.set("exceed_fc1", metrics.get("exceed_fc1") as f64);
+        rec.set("exceed_other", metrics.get("exceed_other") as f64);
+        rec.set("exceed_p99", metrics.get("exceed_p99") as f64);
+
+        // ---- validation probe (through the rollout engine, like the
+        // paper's online AIME24 eval) ----
+        if step % self.cfg.validate_every == 0 {
+            self.last_val_acc = self.validate()?;
+        }
+        rec.set("val_accuracy", self.last_val_acc);
+        Ok(rec)
+    }
+
+    /// Greedy decoding over the held-out set; exact-match accuracy.
+    pub fn validate(&mut self) -> Result<f64> {
+        let problems = self.task.validation().to_vec();
+        let mut requests = Vec::new();
+        for (i, p) in problems.iter().enumerate() {
+            self.req_counter += 1;
+            requests.push(Request {
+                id: i as u64 + self.req_counter * 10_000,
+                prompt: p.prompt.clone(),
+                params: SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: self.cfg.max_new_tokens,
+                    ..Default::default()
+                },
+            });
+        }
+        let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        let completions = self.engine.generate(requests)?;
+        let mut correct = 0usize;
+        for c in &completions {
+            let idx =
+                ids.iter().position(|&id| id == c.id).unwrap();
+            if Task::is_correct(&problems[idx], &c.tokens) {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / problems.len() as f64)
+    }
+
+    pub fn engine_stats(&self) -> &crate::rollout::EngineStats {
+        &self.engine.stats
+    }
+}

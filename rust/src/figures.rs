@@ -1,0 +1,415 @@
+//! Figure reproduction harness: maps every paper figure to the runs /
+//! simulator sweeps that regenerate it (DESIGN.md §4 experiment index).
+//!
+//! Training-curve figures (`reproduce --figure figN`): each arm is a
+//! named RL run; runs are cached under `results/runs/<run>.csv` and
+//! SHARED across figures (e.g. the dense FP8+TIS run is fig2's blue arm
+//! and fig8's orange arm), so `--figure all` costs 15 unique runs, not
+//! 27. One process reuses one `Runtime`, so each artifact compiles once.
+//!
+//! Perf figures (`perf --figure figN`): H100 cost-model simulator sweeps
+//! printing the same series the paper plots, plus CSVs.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
+use fp8_rl::fp8::ScaleFormat;
+use fp8_rl::perfmodel::{
+    modelcost::{QWEN3_30B_A3B, QWEN3_8B},
+    LlmDescriptor, PrecisionPlan, SimConfig, Simulator, H100,
+};
+use fp8_rl::runtime::Runtime;
+use fp8_rl::sync::CalibStrategy;
+use fp8_rl::util::cli::Args;
+use fp8_rl::util::csv::CsvWriter;
+
+pub const FIGURES: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "all",
+];
+
+const DENSE_STEPS: usize = 50;
+const MOE_STEPS: usize = 30;
+
+/// The unique training runs (name -> config builder).
+fn run_registry() -> BTreeMap<&'static str, ExperimentConfig> {
+    let mut m = BTreeMap::new();
+    let dense = |name: &str, rollout: &str, train: &str| {
+        let mut c = ExperimentConfig::new(name, "dense", rollout, train);
+        c.steps = DENSE_STEPS;
+        c.lr = 1e-3;
+        c.max_digits = 1;
+        c.max_sum = Some(9); // one-digit answers: fast-learnable curriculum
+        c.samples_per_prompt = 8;
+        c.prompts_per_step = 8;
+        c.max_new_tokens = 6;
+        c
+    };
+    let moe = |name: &str, rollout: &str, train: &str| {
+        let mut c = ExperimentConfig::new(name, "moe", rollout, train);
+        c.steps = MOE_STEPS;
+        c.lr = 1e-3;
+        c.max_digits = 1;
+        c.max_sum = Some(9);
+        c.samples_per_prompt = 8;
+        c.prompts_per_step = 8;
+        c.max_new_tokens = 6;
+        c
+    };
+
+    // ---- dense runs ----
+    let mut c = dense("dense_bf16_noTIS", "bf16", "bf16");
+    c.tis_c = -1.0;
+    m.insert("dense_bf16_noTIS", c);
+
+    m.insert(
+        "dense_fp8lin_tis",
+        dense("dense_fp8lin_tis", "fp8lin", "bf16"),
+    );
+
+    let mut c = dense("dense_fp8lin_noTIS", "fp8lin", "bf16");
+    c.tis_c = -1.0;
+    m.insert("dense_fp8lin_noTIS", c);
+
+    m.insert(
+        "dense_kvfp8_tis",
+        dense("dense_kvfp8_tis", "kvfp8", "bf16"),
+    );
+    m.insert(
+        "dense_fullfp8_tis",
+        dense("dense_fullfp8_tis", "fullfp8", "bf16"),
+    );
+
+    let mut c = dense("dense_fullfp8_trainercalib", "fullfp8", "bf16");
+    c.calib = CalibStrategy::TrainerSide;
+    m.insert("dense_fullfp8_trainercalib", c);
+
+    m.insert(
+        "dense_e2e_hybrid",
+        dense("dense_e2e_hybrid", "fullfp8", "fp8hybrid"),
+    );
+
+    // ---- moe runs ----
+    m.insert("moe_bf16_tis", moe("moe_bf16_tis", "bf16", "bf16"));
+    m.insert("moe_fp8lin_tis", moe("moe_fp8lin_tis", "fp8lin", "bf16"));
+
+    let mut c = moe("moe_fp8_rfp8", "fp8lin_rfp8", "bf16");
+    c.quantize_router = true;
+    m.insert("moe_fp8_rfp8", c);
+
+    m.insert(
+        "moe_fp8_rfp32",
+        moe("moe_fp8_rfp32", "fp8lin_rfp32", "bf16"),
+    );
+
+    m.insert(
+        "moe_e2e_hybrid",
+        moe("moe_e2e_hybrid", "fp8lin", "fp8hybrid"),
+    );
+    m.insert(
+        "moe_e2e_e4m3",
+        moe("moe_e2e_e4m3", "fp8lin", "fp8e4m3"),
+    );
+
+    let mut c = moe("moe_e2e_ue8m0", "fp8lin_ue8m0", "fp8hybrid_ue8m0");
+    c.scale_fmt = ScaleFormat::Ue8m0;
+    m.insert("moe_e2e_ue8m0", c);
+
+    let mut c = moe("moe_e2e_mixed", "fp8lin_ue8m0", "fp8hybrid");
+    c.scale_fmt = ScaleFormat::Ue8m0; // rollout-side ue8m0 scales
+    m.insert("moe_e2e_mixed", c);
+
+    m
+}
+
+/// figure -> [(arm label, run name)]
+fn figure_arms(fig: &str) -> Option<Vec<(&'static str, &'static str)>> {
+    let arms: Vec<(&str, &str)> = match fig {
+        "fig2" => vec![
+            ("bf16_baseline", "dense_bf16_noTIS"),
+            ("fp8_w8a8_tis", "dense_fp8lin_tis"),
+            ("fp8_w8a8_no_tis", "dense_fp8lin_noTIS"),
+        ],
+        "fig4" => vec![
+            ("bf16_tis", "moe_bf16_tis"),
+            ("fp8_w8a8_tis", "moe_fp8lin_tis"),
+        ],
+        "fig6" => vec![
+            ("bf16_baseline", "moe_bf16_tis"),
+            ("fp8_router_fp8", "moe_fp8_rfp8"),
+            ("fp8_router_bf16", "moe_fp8lin_tis"),
+            ("fp8_router_fp32", "moe_fp8_rfp32"),
+        ],
+        "fig8" => vec![
+            ("bf16_baseline", "dense_bf16_noTIS"),
+            ("linear_w8a8_tis", "dense_fp8lin_tis"),
+            ("kv_fp8_only_tis", "dense_kvfp8_tis"),
+            ("full_fp8_tis", "dense_fullfp8_tis"),
+        ],
+        "fig10" => vec![
+            ("bf16_train_bf16_rollout", "moe_bf16_tis"),
+            ("fp8_train_fp8_rollout", "moe_e2e_hybrid"),
+            ("bf16_train_fp8_rollout", "moe_fp8lin_tis"),
+        ],
+        "fig11" => vec![
+            ("bf16_baseline", "moe_bf16_tis"),
+            ("fp8_e2e_hybrid", "moe_e2e_hybrid"),
+            ("fp8_e2e_pure_e4m3", "moe_e2e_e4m3"),
+        ],
+        "fig12" => vec![
+            ("scales_all_fp32", "moe_e2e_hybrid"),
+            ("scales_all_ue8m0", "moe_e2e_ue8m0"),
+            ("scales_mixed", "moe_e2e_mixed"),
+        ],
+        "fig13" => vec![
+            ("bf16_baseline", "dense_bf16_noTIS"),
+            ("linear_w8a8", "dense_fp8lin_tis"),
+            ("full_fp8_trainer_calib", "dense_fullfp8_trainercalib"),
+        ],
+        "fig15" => vec![
+            ("bf16_train_bf16_rollout", "dense_bf16_noTIS"),
+            ("bf16_train_fp8_rollout", "dense_fullfp8_tis"),
+            ("fp8_train_fp8_rollout", "dense_e2e_hybrid"),
+        ],
+        _ => return None,
+    };
+    Some(arms)
+}
+
+pub fn reproduce(args: &Args) -> Result<()> {
+    let fig = args.str_or("figure", "all").to_string();
+    let out_dir = args.str_or("out", "results").to_string();
+    let steps_override = args.get("steps").map(|s| s.parse::<usize>());
+    let figs: Vec<String> = if fig == "all" {
+        FIGURES
+            .iter()
+            .filter(|f| {
+                figure_arms(f).is_some() // training-curve figures only
+            })
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        vec![fig]
+    };
+
+    // collect the unique runs the requested figures need
+    let registry = run_registry();
+    let mut needed: Vec<&str> = Vec::new();
+    for f in &figs {
+        let Some(arms) = figure_arms(f) else {
+            bail!("unknown training-curve figure {f:?} (see `list`)")
+        };
+        for (_, run) in arms {
+            if !needed.contains(&run) {
+                needed.push(run);
+            }
+        }
+    }
+
+    let rt = Arc::new(Runtime::new(
+        args.str_or("artifacts", "artifacts"),
+    )?);
+    for run in &needed {
+        let path = format!("{out_dir}/runs/{run}.csv");
+        if std::path::Path::new(&path).exists() && !args.bool("force") {
+            println!("[cached] {run}");
+            continue;
+        }
+        let mut cfg = registry[run].clone();
+        if let Some(s) = &steps_override {
+            cfg.steps = *s.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        println!("[run] {run} ({} steps, arch={})", cfg.steps, cfg.arch);
+        let t0 = std::time::Instant::now();
+        let mut rl = RlLoop::new(rt.clone(), cfg.clone())?;
+        // incremental CSV so partial runs survive interruption
+        for step in 0..cfg.steps {
+            let rec = rl.step(step)?;
+            rl.recorder.push(rec);
+            if step % 10 == 9 {
+                rl.recorder.write_csv(&path)?;
+            }
+        }
+        rl.recorder.write_csv(&path)?;
+        println!(
+            "[run] {run} done in {:.0}s: reward={:.3} acc={:.3} kl={:.2e}",
+            t0.elapsed().as_secs_f64(),
+            rl.recorder.tail_mean("reward", 10),
+            rl.recorder.tail_mean("val_accuracy", 10),
+            rl.recorder.tail_mean("mismatch_kl", 10),
+        );
+    }
+
+    // assemble per-figure arm CSVs (copies with stable arm names)
+    for f in &figs {
+        for (arm, run) in figure_arms(f).unwrap() {
+            let src = format!("{out_dir}/runs/{run}.csv");
+            let dst_dir = format!("{out_dir}/{f}");
+            std::fs::create_dir_all(&dst_dir)?;
+            std::fs::copy(&src, format!("{dst_dir}/{arm}.csv"))?;
+        }
+        println!("[figure] {f} -> {out_dir}/{f}/");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Perf figures (simulator sweeps)
+// ---------------------------------------------------------------------------
+
+fn sweep_lengths() -> Vec<usize> {
+    vec![1024, 2048, 4096, 8192, 12288, 16384, 20480]
+}
+
+fn sim(
+    model: LlmDescriptor,
+    plan: PrecisionPlan,
+    resp: usize,
+    n_gpus: f64,
+    n_requests: usize,
+    calib_overhead: f64,
+) -> fp8_rl::perfmodel::SimReport {
+    let mut cfg = SimConfig::new(H100, model, plan, resp);
+    cfg.n_gpus = n_gpus;
+    cfg.n_requests = n_requests;
+    cfg.prompt_len = 1024;
+    cfg.max_batch = 1024;
+    let mut rep = Simulator::run(&cfg);
+    // trainer-side calibration costs ~2-3% of step time (paper B.2)
+    rep.sim_seconds *= 1.0 + calib_overhead;
+    rep.ms_per_token *= 1.0 + calib_overhead;
+    rep.tokens_per_s /= 1.0 + calib_overhead;
+    rep
+}
+
+pub fn perf(args: &Args) -> Result<()> {
+    let fig = args.str_or("figure", "fig9").to_string();
+    let out_dir = args.str_or("out", "results").to_string();
+    match fig.as_str() {
+        "fig3" => perf_length_sweep(
+            &out_dir, "fig3", QWEN3_8B, 8.0, 768,
+            &[("bf16", PrecisionPlan::BF16),
+              ("fp8_w8a8", PrecisionPlan::LINEAR_W8A8)],
+        ),
+        "fig5" => perf_length_sweep(
+            &out_dir, "fig5", QWEN3_30B_A3B, 16.0, 768,
+            &[("bf16", PrecisionPlan::BF16),
+              ("fp8_w8a8", PrecisionPlan::LINEAR_W8A8)],
+        ),
+        "fig9" => perf_bars(&out_dir, "fig9", 0.0),
+        "fig14" => perf_bars(&out_dir, "fig14", 0.025),
+        "all" => {
+            perf(&fake_args("fig3"))?;
+            perf(&fake_args("fig5"))?;
+            perf(&fake_args("fig9"))?;
+            perf(&fake_args("fig14"))
+        }
+        other => bail!("unknown perf figure {other:?} (fig3|fig5|fig9|fig14)"),
+    }
+}
+
+fn fake_args(fig: &str) -> Args {
+    let mut a = Args::default();
+    a.flags.insert("figure".into(), fig.into());
+    a
+}
+
+/// Fig 3 / Fig 5: ms/token + throughput vs response length.
+fn perf_length_sweep(
+    out_dir: &str,
+    fig: &str,
+    model: LlmDescriptor,
+    n_gpus: f64,
+    n_requests: usize,
+    plans: &[(&str, PrecisionPlan)],
+) -> Result<()> {
+    println!("== {fig}: {} rollout perf (H100 cost model) ==", model.name);
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>10}",
+        "resp_len", "bf16 ms/tok", "fp8 ms/tok", "speedup", "preempt(bf16)"
+    );
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/{fig}/rollout_perf.csv"),
+        &["resp_len", "plan", "ms_per_token", "tokens_per_s",
+          "preemptions", "mean_batch"],
+    )?;
+    for &len in &sweep_lengths() {
+        let mut reports = Vec::new();
+        for (pname, plan) in plans {
+            let r = sim(model, *plan, len, n_gpus, n_requests, 0.0);
+            w.row_mixed(&[
+                len.to_string(),
+                pname.to_string(),
+                format!("{:.4}", r.ms_per_token),
+                format!("{:.1}", r.tokens_per_s),
+                r.preemptions.to_string(),
+                format!("{:.1}", r.mean_batch),
+            ])?;
+            reports.push(r);
+        }
+        println!(
+            "{:>8} {:>12.3} {:>12.3} {:>11.1}% {:>10}",
+            len,
+            reports[0].ms_per_token,
+            reports[1].ms_per_token,
+            (reports[0].ms_per_token / reports[1].ms_per_token - 1.0)
+                * 100.0,
+            reports[0].preemptions,
+        );
+    }
+    w.flush()?;
+    println!("-> {out_dir}/{fig}/rollout_perf.csv");
+    Ok(())
+}
+
+/// Fig 9 / Fig 14: speedup bars for the four precision arms at 20K.
+fn perf_bars(out_dir: &str, fig: &str, calib_overhead: f64) -> Result<()> {
+    let arms: &[(&str, PrecisionPlan, f64)] = &[
+        ("bf16", PrecisionPlan::BF16, 0.0),
+        ("linear_w8a8", PrecisionPlan::LINEAR_W8A8, 0.0),
+        ("kv_fp8_only", PrecisionPlan::KV_ONLY, calib_overhead),
+        ("full_fp8", PrecisionPlan::FULL_FP8, calib_overhead),
+    ];
+    println!(
+        "== {fig}: Qwen3-8B rollout speedup at 20K tokens \
+         (H100 cost model{}) ==",
+        if calib_overhead > 0.0 {
+            ", trainer-side calib overhead"
+        } else {
+            ""
+        }
+    );
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/{fig}/speedup.csv"),
+        &["plan", "ms_per_token", "tokens_per_s", "speedup_pct",
+          "preemptions", "mean_batch"],
+    )?;
+    let mut base = 0.0;
+    for (name, plan, cal) in arms {
+        let r = sim(QWEN3_8B, *plan, 20_480, 8.0, 1536, *cal);
+        if *name == "bf16" {
+            base = r.tokens_per_s;
+        }
+        let speedup = (r.tokens_per_s / base - 1.0) * 100.0;
+        println!(
+            "{:>14}: {:>8.3} ms/tok  {:>10.0} tok/s  +{:>5.1}%  \
+             preemptions={} batch={:.0}",
+            name, r.ms_per_token, r.tokens_per_s, speedup,
+            r.preemptions, r.mean_batch
+        );
+        w.row_mixed(&[
+            name.to_string(),
+            format!("{:.4}", r.ms_per_token),
+            format!("{:.1}", r.tokens_per_s),
+            format!("{:.1}", speedup),
+            r.preemptions.to_string(),
+            format!("{:.1}", r.mean_batch),
+        ])?;
+    }
+    w.flush()?;
+    println!("-> {out_dir}/{fig}/speedup.csv");
+    Ok(())
+}

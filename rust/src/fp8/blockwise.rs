@@ -1,0 +1,256 @@
+//! Blockwise FP8 quantization — the Rust half of the weight-sync pipeline
+//! (paper §2.1.1 / Fig 1 "weight synchronization phase").
+//!
+//! At every RL step the trainer's BF16/FP32 master weights are quantized
+//! here (128x128 blocks, per-block scale, E4M3) before being loaded into
+//! the rollout engine. The quantized representation keeps real u8 codes +
+//! scales — the engine's memory accounting and the paper's 2x footprint
+//! reduction fall out of that (1 byte/elem + 1 f32 per block).
+//!
+//! Numerics are bit-identical to the Pallas `blockwise_quant` kernel and
+//! the jnp reference (`fp8_numerics.quant_weight_blockwise`); the pytest
+//! suite checks the Python pair, and `tests/quantizer_parity.rs` checks
+//! Rust-vs-golden.
+
+use super::formats::{Fp8Format, ScaleFormat, E4M3};
+use super::tensor::Tensor;
+
+/// Default paper block size.
+pub const BLOCK: usize = 128;
+
+/// A blockwise-quantized 2-D weight: u8 codes + per-block f32 scales.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: (usize, usize),
+    pub codes: Vec<u8>,
+    /// row-major (rows/bm) x (cols/bn) scales
+    pub scales: Vec<f32>,
+    pub fmt: Fp8Format,
+}
+
+impl QuantizedTensor {
+    /// FP8 memory footprint in bytes (codes + scales).
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+
+    /// Dequantize back to f32 (what the FP8 GEMM "sees").
+    pub fn dequantize(&self) -> Tensor {
+        let (bm, bn) = self.block;
+        let nbc = self.cols.div_ceil(bn);
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let s = self.scales[(r / bm) * nbc + (c / bn)];
+                data[r * self.cols + c] =
+                    self.fmt.decode(self.codes[r * self.cols + c]) * s;
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], data).unwrap()
+    }
+}
+
+/// Quantize a 2-D (or flattened) tensor blockwise.
+pub fn quantize_blockwise(
+    t: &Tensor,
+    block: (usize, usize),
+    fmt: Fp8Format,
+    scale_fmt: ScaleFormat,
+) -> QuantizedTensor {
+    let (rows, cols) = t.dims2();
+    let (bm, bn) = block;
+    let nbr = rows.div_ceil(bm);
+    let nbc = cols.div_ceil(bn);
+    let mut scales = vec![0.0f32; nbr * nbc];
+    // pass 1: per-block amax
+    for br in 0..nbr {
+        for bc in 0..nbc {
+            let mut amax = 0.0f32;
+            for r in br * bm..((br + 1) * bm).min(rows) {
+                for c in bc * bn..((bc + 1) * bn).min(cols) {
+                    amax = amax.max(t.data[r * cols + c].abs());
+                }
+            }
+            let s = scale_fmt.apply(amax.max(1e-12) / fmt.max);
+            scales[br * nbc + bc] = s;
+        }
+    }
+    // pass 2: encode
+    let mut codes = vec![0u8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let s = scales[(r / bm) * nbc + (c / bn)];
+            codes[r * cols + c] = fmt.encode(t.data[r * cols + c] / s);
+        }
+    }
+    QuantizedTensor {
+        rows,
+        cols,
+        block,
+        codes,
+        scales,
+        fmt,
+    }
+}
+
+/// Convenience: default paper configuration (E4M3, 128x128, FP32 scales).
+pub fn quantize_default(t: &Tensor) -> QuantizedTensor {
+    quantize_blockwise(t, (BLOCK, BLOCK), E4M3, ScaleFormat::Fp32)
+}
+
+/// Fake-quant round trip used by tests and the calibration paths.
+pub fn qdq_blockwise(
+    t: &Tensor,
+    block: (usize, usize),
+    fmt: Fp8Format,
+    scale_fmt: ScaleFormat,
+) -> Tensor {
+    quantize_blockwise(t, block, fmt, scale_fmt).dequantize()
+}
+
+/// Per-(1 x tile) dynamic activation quantization (matches the Pallas
+/// `act_quant` kernel). Used by tests and the perf model's traffic math.
+pub fn qdq_act_tilewise(
+    t: &Tensor,
+    tile: usize,
+    fmt: Fp8Format,
+    scale_fmt: ScaleFormat,
+) -> Tensor {
+    let (rows, cols) = t.dims2();
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + tile).min(cols);
+            let mut amax = 0.0f32;
+            for c in c0..c1 {
+                amax = amax.max(t.data[r * cols + c].abs());
+            }
+            let s = scale_fmt.apply(amax.max(1e-12) / fmt.max);
+            for c in c0..c1 {
+                out[r * cols + c] = fmt.qdq(t.data[r * cols + c] / s) * s;
+            }
+            c0 = c1;
+        }
+    }
+    Tensor::new(t.shape.clone(), out).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_tensor(rng: &mut Pcg64, rows: usize, cols: usize) -> Tensor {
+        let data = (0..rows * cols)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        Tensor::new(vec![rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        // relative error per element <= ulp/2 at block scale:
+        // |x - qdq(x)| <= scale * 2^-mbits (coarse bound: scale * 0.0625)
+        let mut rng = Pcg64::new(1);
+        let t = random_tensor(&mut rng, 64, 96);
+        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32);
+        let d = q.dequantize();
+        for (i, (&x, &y)) in t.data.iter().zip(&d.data).enumerate() {
+            let br = (i / 96) / 32;
+            let bc = (i % 96) / 32;
+            let s = q.scales[br * 3 + bc];
+            assert!(
+                (x - y).abs() <= s * 448.0 * (1.0 / 16.0),
+                "elem {i}: {x} vs {y} (scale {s})"
+            );
+        }
+    }
+
+    #[test]
+    fn scales_map_amax_to_max() {
+        let mut t = Tensor::zeros(vec![4, 4]);
+        t.data[5] = -100.0;
+        let q = quantize_blockwise(&t, (4, 4), E4M3, ScaleFormat::Fp32);
+        assert_eq!(q.scales.len(), 1);
+        assert!((q.scales[0] - 100.0 / 448.0).abs() < 1e-9);
+        // the amax element must round-trip exactly (it sits at fmt.max)
+        assert_eq!(q.dequantize().data[5], -100.0);
+    }
+
+    #[test]
+    fn block_isolation() {
+        // a huge outlier in one block must not degrade other blocks
+        let mut rng = Pcg64::new(2);
+        let mut t = random_tensor(&mut rng, 64, 64);
+        t.data[0] = 1e4; // block (0,0)
+        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32);
+        let d = q.dequantize();
+        // far block (1,1): error stays at its own scale's half-ulp
+        // (worst ulp near amax is 32 * scale), not the outlier's 357
+        let far_scale = q.scales[1 * 2 + 1];
+        let bound = far_scale * 16.0;
+        assert!(bound < 0.5, "unexpected scale {far_scale}");
+        for r in 32..64 {
+            for c in 32..64 {
+                let i = r * 64 + c;
+                assert!(
+                    (t.data[i] - d.data[i]).abs() <= bound,
+                    "({r},{c}): {} vs {}",
+                    t.data[i],
+                    d.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ue8m0_scales_are_pow2() {
+        let mut rng = Pcg64::new(3);
+        let t = random_tensor(&mut rng, 32, 32);
+        let q = quantize_blockwise(&t, (16, 16), E4M3, ScaleFormat::Ue8m0);
+        for &s in &q.scales {
+            assert_eq!(s.log2().fract(), 0.0, "scale {s} not a power of 2");
+        }
+        // ue8m0 error >= fp32-scale error on average (coarser scales)
+        let qf = quantize_blockwise(&t, (16, 16), E4M3, ScaleFormat::Fp32);
+        let ef: f32 = t.max_abs_diff(&qf.dequantize());
+        let eu: f32 = t.max_abs_diff(&q.dequantize());
+        assert!(eu >= ef * 0.99, "ue8m0 {eu} vs fp32 {ef}");
+    }
+
+    #[test]
+    fn nbytes_is_half_of_bf16() {
+        let t = Tensor::zeros(vec![256, 256]);
+        let q = quantize_default(&t);
+        let bf16_bytes = 256 * 256 * 2;
+        // 1 byte/elem + 4 scales * 4B  => well under bf16
+        assert!(q.nbytes() < bf16_bytes * 6 / 10);
+        assert_eq!(q.codes.len(), 256 * 256);
+        assert_eq!(q.scales.len(), 4);
+    }
+
+    #[test]
+    fn ragged_shapes() {
+        let mut rng = Pcg64::new(4);
+        let t = random_tensor(&mut rng, 33, 65); // not multiples of block
+        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32);
+        assert_eq!(q.scales.len(), 2 * 3);
+        let d = q.dequantize();
+        assert_eq!(d.shape, vec![33, 65]);
+        // worst-case half-ulp at the largest block scale
+        let smax = q.scales.iter().fold(0.0f32, |m, &s| m.max(s));
+        assert!(t.max_abs_diff(&d) <= smax * 16.0);
+    }
+
+    #[test]
+    fn act_tilewise_matches_block_1xn() {
+        let mut rng = Pcg64::new(5);
+        let t = random_tensor(&mut rng, 8, 64);
+        let a = qdq_act_tilewise(&t, 32, E4M3, ScaleFormat::Fp32);
+        let b = qdq_blockwise(&t, (1, 32), E4M3, ScaleFormat::Fp32);
+        assert_eq!(a, b);
+    }
+}

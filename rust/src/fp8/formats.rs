@@ -1,0 +1,337 @@
+//! Bit-exact FP8 codecs: E4M3 (fn variant), E5M2 and the UE8M0 scale
+//! format (Micikevicius et al., "FP8 Formats for Deep Learning").
+//!
+//! Encoding is saturating round-to-nearest-even — the tensor-core
+//! behaviour the paper's stack relies on (and what `ml_dtypes` produces
+//! after an explicit clip). Cross-checked against JAX in
+//! `python/tests/test_fp8_formats.py` via golden values, and internally
+//! by exhaustive round-trip tests over all 256 codes.
+
+/// An FP8 format description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fp8Format {
+    /// exponent bits
+    pub ebits: u32,
+    /// mantissa bits
+    pub mbits: u32,
+    /// exponent bias
+    pub bias: i32,
+    /// largest finite magnitude
+    pub max: f32,
+    /// smallest positive normal
+    pub min_normal: f32,
+    /// smallest positive subnormal
+    pub min_subnormal: f32,
+}
+
+/// E4M3 (fn): 4 exponent bits, 3 mantissa bits, bias 7, max 448.
+/// The all-ones exponent is reused for normals; only S.1111.111 is NaN.
+pub const E4M3: Fp8Format = Fp8Format {
+    ebits: 4,
+    mbits: 3,
+    bias: 7,
+    max: 448.0,
+    min_normal: 0.015625,          // 2^-6
+    min_subnormal: 0.001953125,    // 2^-9
+};
+
+/// E5M2: 5 exponent bits, 2 mantissa bits, bias 15, max 57344.
+/// IEEE-like: exponent 31 encodes inf/NaN.
+pub const E5M2: Fp8Format = Fp8Format {
+    ebits: 5,
+    mbits: 2,
+    bias: 15,
+    max: 57344.0,
+    min_normal: 6.103515625e-5,    // 2^-14
+    min_subnormal: 1.52587890625e-5, // 2^-16
+};
+
+impl Fp8Format {
+    /// Saturating round-to-nearest-even encode of an f32.
+    /// NaN maps to the format's NaN code; +-inf saturates to +-max.
+    pub fn encode(&self, x: f32) -> u8 {
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        if x.is_nan() {
+            // canonical NaN: E4M3fn = S.1111.111, E5M2 = S.11111.01
+            return if self.ebits == 4 { 0x7F } else { 0x7D } | sign;
+        }
+        let ax = x.abs();
+        if ax >= self.max {
+            // saturate (covers inf): max finite code
+            return self.max_code() | sign;
+        }
+        if ax == 0.0 {
+            return sign;
+        }
+        // decompose ax = m * 2^e with m in [1, 2)
+        let bits = ax.to_bits();
+        let e_unb = ((bits >> 23) & 0xFF) as i32 - 127;
+        let min_exp = 1 - self.bias; // smallest normal exponent
+        // quantum (ulp) exponent: e - mbits for normals, fixed for subnormals
+        let q_exp = if e_unb < min_exp {
+            min_exp - self.mbits as i32
+        } else {
+            e_unb - self.mbits as i32
+        };
+        // round ax to a multiple of 2^q_exp, half-to-even.
+        // do it in integer space: n = ax / 2^q_exp
+        let scaled = ax as f64 / (q_exp as f64).exp2();
+        let floor = scaled.floor();
+        let frac = scaled - floor;
+        let mut n = floor as u64;
+        if frac > 0.5 || (frac == 0.5 && n & 1 == 1) {
+            n += 1;
+        }
+        if n == 0 {
+            return sign; // underflow to zero
+        }
+        // re-derive exponent/mantissa from n * 2^q_exp
+        let val = n as f64 * (q_exp as f64).exp2();
+        if val >= self.max as f64 {
+            return self.max_code() | sign;
+        }
+        let vb = (val as f32).to_bits();
+        let ve = ((vb >> 23) & 0xFF) as i32 - 127;
+        if ve < min_exp {
+            // subnormal: code = value / min_subnormal
+            let ms = (val / self.min_subnormal as f64).round() as u8;
+            return ms | sign;
+        }
+        let biased = (ve + self.bias) as u32;
+        let mant_f32 = vb & 0x7F_FFFF;
+        let mant = (mant_f32 >> (23 - self.mbits)) as u8;
+        ((biased as u8) << self.mbits) | mant | sign
+    }
+
+    /// Decode one code to f32. Exhaustively tested over all 256 codes.
+    pub fn decode(&self, code: u8) -> f32 {
+        let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let body = code & 0x7F;
+        let exp = (body >> self.mbits) as i32;
+        let mant = (body & ((1 << self.mbits) - 1)) as f32;
+        let mscale = (1u32 << self.mbits) as f32;
+        if self.ebits == 4 {
+            // e4m3fn: only S.1111.111 is NaN; no infinities
+            if body == 0x7F {
+                return f32::NAN;
+            }
+        } else if exp == 0x1F {
+            // e5m2 IEEE: inf / NaN
+            return if mant == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            };
+        }
+        if exp == 0 {
+            // subnormal
+            let v = mant / mscale * (1.0f32 / (1 << (self.bias - 1)) as f32);
+            return sign * v;
+        }
+        let e = exp - self.bias;
+        sign * (1.0 + mant / mscale) * (e as f32).exp2()
+    }
+
+    /// Saturating fake-quant round trip.
+    pub fn qdq(&self, x: f32) -> f32 {
+        self.decode(self.encode(x))
+    }
+
+    fn max_code(&self) -> u8 {
+        if self.ebits == 4 {
+            0x7E // 1111.110 = 448
+        } else {
+            0x7B // 11110.11 = 57344
+        }
+    }
+}
+
+/// UE8M0: unsigned power-of-2 scale format (8 exponent bits, no mantissa,
+/// bias 127). Used for the Fig 12 scaling-factor ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ue8m0(pub u8);
+
+impl Ue8m0 {
+    /// Smallest power of two >= s (so block values never overflow).
+    pub fn encode_ceil(s: f32) -> Ue8m0 {
+        assert!(s > 0.0 && s.is_finite(), "scale must be positive: {s}");
+        let e = s.log2().ceil() as i32;
+        Ue8m0((e + 127).clamp(0, 255) as u8)
+    }
+
+    pub fn decode(self) -> f32 {
+        ((self.0 as i32 - 127) as f32).exp2()
+    }
+}
+
+/// Round a scale to the given scale format ("fp32" keeps it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScaleFormat {
+    #[default]
+    Fp32,
+    Ue8m0,
+}
+
+impl ScaleFormat {
+    pub fn apply(self, s: f32) -> f32 {
+        match self {
+            ScaleFormat::Fp32 => s,
+            ScaleFormat::Ue8m0 => Ue8m0::encode_ceil(s).decode(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_known_values() {
+        assert_eq!(E4M3.qdq(448.0), 448.0);
+        assert_eq!(E4M3.qdq(1e9), 448.0); // saturation
+        assert_eq!(E4M3.qdq(-1e9), -448.0);
+        assert_eq!(E4M3.qdq(1.0), 1.0);
+        assert_eq!(E4M3.qdq(1.75), 1.75);
+        // 1.7 is between 1.625 and 1.75; nearest is 1.75
+        assert_eq!(E4M3.qdq(1.7), 1.75);
+        // jax golden (from the smoke run): e4m3(-300) = -288
+        assert_eq!(E4M3.qdq(-300.0), -288.0);
+        // subnormals
+        assert_eq!(E4M3.qdq(0.001953125), 0.001953125); // 2^-9
+        assert_eq!(E4M3.qdq(0.002), 0.001953125);
+        // jax golden: e4m3(0.001) = 0.00195312 (rounds up to min subnormal)
+        assert_eq!(E4M3.qdq(0.001), 0.001953125);
+        // below half the min subnormal: flushes to zero
+        assert_eq!(E4M3.qdq(0.0009), 0.0);
+    }
+
+    #[test]
+    fn e5m2_known_values() {
+        assert_eq!(E5M2.qdq(57344.0), 57344.0);
+        assert_eq!(E5M2.qdq(1e9), 57344.0);
+        // jax golden: e5m2(-300) = -320, e5m2(500) = 512
+        assert_eq!(E5M2.qdq(-300.0), -320.0);
+        assert_eq!(E5M2.qdq(500.0), 512.0);
+        // jax golden: e5m2(0.001) = 0.0009765625
+        assert_eq!(E5M2.qdq(0.001), 0.0009765625);
+        assert_eq!(E5M2.qdq(1.75), 1.75);
+    }
+
+    #[test]
+    fn zero_and_signs() {
+        for f in [E4M3, E5M2] {
+            assert_eq!(f.encode(0.0), 0);
+            assert_eq!(f.encode(-0.0), 0x80);
+            assert_eq!(f.decode(0), 0.0);
+            assert_eq!(f.decode(0x80), 0.0);
+            assert_eq!(f.qdq(-1.0), -1.0);
+        }
+    }
+
+    #[test]
+    fn nan_handling() {
+        assert!(E4M3.decode(0x7F).is_nan());
+        assert!(E4M3.decode(0xFF).is_nan());
+        assert!(E4M3.qdq(f32::NAN).is_nan());
+        assert!(E5M2.qdq(f32::NAN).is_nan());
+        // infinities saturate on encode
+        assert_eq!(E4M3.qdq(f32::INFINITY), 448.0);
+        assert_eq!(E5M2.qdq(f32::NEG_INFINITY), -57344.0);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_e4m3() {
+        // decode(c) must encode back to c for every non-NaN code
+        for c in 0u16..=255 {
+            let c = c as u8;
+            if c & 0x7F == 0x7F {
+                continue; // NaN
+            }
+            let v = E4M3.decode(c);
+            let c2 = E4M3.encode(v);
+            // -0 encodes to 0x80; both decode to 0.0
+            assert_eq!(
+                E4M3.decode(c2),
+                v,
+                "code {c:#x} -> {v} -> {c2:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_e5m2() {
+        for c in 0u16..=255 {
+            let c = c as u8;
+            let body = c & 0x7F;
+            if body >= 0x7C {
+                continue; // inf/NaN codes
+            }
+            let v = E5M2.decode(c);
+            let c2 = E5M2.encode(v);
+            assert_eq!(E5M2.decode(c2), v, "code {c:#x}");
+        }
+    }
+
+    #[test]
+    fn monotone_decode() {
+        // decode must be strictly increasing over positive codes
+        for f in [E4M3, E5M2] {
+            let top = if f.ebits == 4 { 0x7Eu8 } else { 0x7B };
+            let mut prev = f.decode(0);
+            for c in 1..=top {
+                let v = f.decode(c);
+                assert!(v > prev, "non-monotone at {c:#x}: {prev} !< {v}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // midpoint between 1.0 (code 0x38 e4m3) and next (1.125): 1.0625
+        // mantissa of 1.0 is even -> ties round down
+        assert_eq!(E4M3.qdq(1.0625), 1.0);
+        // midpoint between 1.125 and 1.25 is 1.1875; 1.125 has odd mantissa
+        // -> ties round up to 1.25
+        assert_eq!(E4M3.qdq(1.1875), 1.25);
+    }
+
+    #[test]
+    fn nearest_property_sampled() {
+        // encode(x) must be one of the two bracketing codes, whichever is
+        // closer (sampled sweep; full property test in testkit suite)
+        let f = E4M3;
+        let mut x = 0.001f32;
+        while x < 440.0 {
+            let q = f.qdq(x);
+            let err = (q - x).abs();
+            // find true nearest by brute force over all codes
+            let mut best = f32::INFINITY;
+            for c in 0u16..=255 {
+                let v = f.decode(c as u8);
+                if v.is_nan() {
+                    continue;
+                }
+                best = best.min((v - x).abs());
+            }
+            assert!(
+                (err - best).abs() < 1e-6 * x.max(1e-3),
+                "x={x}: err {err} best {best}"
+            );
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn ue8m0() {
+        assert_eq!(Ue8m0::encode_ceil(1.0).decode(), 1.0);
+        assert_eq!(Ue8m0::encode_ceil(0.9).decode(), 1.0);
+        assert_eq!(Ue8m0::encode_ceil(1.1).decode(), 2.0);
+        assert_eq!(Ue8m0::encode_ceil(0.25).decode(), 0.25);
+        let s = 0.0123f32;
+        let d = Ue8m0::encode_ceil(s).decode();
+        assert!(d >= s && d < 2.0 * s);
+        assert_eq!(ScaleFormat::Fp32.apply(0.3), 0.3);
+        assert_eq!(ScaleFormat::Ue8m0.apply(0.3), 0.5);
+    }
+}

@@ -1,0 +1,16 @@
+//! Software FP8: bit-exact formats, blockwise quantization and tensors.
+//!
+//! This is the numeric core of the weight-sync pipeline (paper §2.1.1)
+//! and the Rust-side twin of `python/compile/fp8_numerics.py`.
+pub mod blockwise;
+pub mod formats;
+pub mod nvfp4;
+pub mod tensor;
+
+pub use blockwise::{
+    qdq_act_tilewise, qdq_blockwise, quantize_blockwise, quantize_default,
+    QuantizedTensor, BLOCK,
+};
+pub use formats::{Fp8Format, ScaleFormat, Ue8m0, E4M3, E5M2};
+pub use nvfp4::{qdq_e2m1, quantize_nvfp4, Nvfp4Tensor, E2M1_MAX};
+pub use tensor::Tensor;

@@ -1,0 +1,201 @@
+//! NVFP4 (E2M1 + per-16-element scales) — the paper's §4 future-work
+//! format ("exploring more aggressive formats such as NVFP4, noting
+//! reported instability from accumulated quantization error").
+//!
+//! E2M1: 1 sign, 2 exponent (bias 1), 1 mantissa bit. Eight positive
+//! values: 0, 0.5, 1, 1.5, 2, 3, 4, 6. NVFP4 packs two codes per byte
+//! and scales each 16-element micro-tile (we use FP32 scales here; the
+//! hardware uses UE4M3).
+//!
+//! Included so the quantization-error comparison in the tests quantifies
+//! *why* the paper expects instability: NVFP4's relative error is ~8x
+//! E4M3's at the same blocking, which compounds over autoregressive
+//! steps exactly like the KV-error accumulation the paper measures.
+
+use super::formats::ScaleFormat;
+use super::tensor::Tensor;
+
+/// Largest finite E2M1 magnitude.
+pub const E2M1_MAX: f32 = 6.0;
+
+/// The 8 non-negative E2M1 values.
+const GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Encode one f32 to a 4-bit E2M1 code (round-to-nearest, ties-to-even
+/// in code space), saturating at +-6.
+pub fn encode_e2m1(x: f32) -> u8 {
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let ax = x.abs();
+    if ax.is_nan() {
+        return 0x7 | sign; // no NaN encoding: saturate like the HW does
+    }
+    let mut best = 0usize;
+    let mut best_err = f32::INFINITY;
+    for (i, &g) in GRID.iter().enumerate() {
+        let err = (ax - g).abs();
+        // ties toward the even code (matches RN-even on the code lattice)
+        if err < best_err || (err == best_err && i % 2 == 0 && best % 2 == 1)
+        {
+            best = i;
+            best_err = err;
+        }
+    }
+    best as u8 | sign
+}
+
+/// Decode a 4-bit code.
+pub fn decode_e2m1(code: u8) -> f32 {
+    let v = GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Fake-quant round trip.
+pub fn qdq_e2m1(x: f32) -> f32 {
+    decode_e2m1(encode_e2m1(x))
+}
+
+/// An NVFP4-quantized tensor: packed nibbles + per-16-elem scales.
+#[derive(Clone, Debug)]
+pub struct Nvfp4Tensor {
+    pub shape: Vec<usize>,
+    /// two codes per byte, row-major, low nibble first
+    pub packed: Vec<u8>,
+    /// one scale per 16 consecutive elements (last tile may be short)
+    pub scales: Vec<f32>,
+    pub n: usize,
+}
+
+pub const TILE: usize = 16;
+
+/// Quantize with per-16-element FP32 scales (amax -> 6.0 mapping).
+pub fn quantize_nvfp4(t: &Tensor, scale_fmt: ScaleFormat) -> Nvfp4Tensor {
+    let n = t.data.len();
+    let n_tiles = n.div_ceil(TILE);
+    let mut scales = Vec::with_capacity(n_tiles);
+    let mut packed = vec![0u8; n.div_ceil(2)];
+    for ti in 0..n_tiles {
+        let lo = ti * TILE;
+        let hi = (lo + TILE).min(n);
+        let amax = t.data[lo..hi]
+            .iter()
+            .fold(0.0f32, |m, &x| m.max(x.abs()));
+        let s = scale_fmt.apply(amax.max(1e-12) / E2M1_MAX);
+        scales.push(s);
+        for i in lo..hi {
+            let code = encode_e2m1(t.data[i] / s);
+            if i % 2 == 0 {
+                packed[i / 2] |= code;
+            } else {
+                packed[i / 2] |= code << 4;
+            }
+        }
+    }
+    Nvfp4Tensor {
+        shape: t.shape.clone(),
+        packed,
+        scales,
+        n,
+    }
+}
+
+impl Nvfp4Tensor {
+    pub fn dequantize(&self) -> Tensor {
+        let mut data = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let byte = self.packed[i / 2];
+            let code = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
+            data.push(decode_e2m1(code) * self.scales[i / TILE]);
+        }
+        Tensor::new(self.shape.clone(), data).unwrap()
+    }
+
+    /// Bytes: packed nibbles + f32 scales (4x weight-footprint reduction
+    /// vs bf16 at tile 16, before scale overhead).
+    pub fn nbytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{quantize_blockwise, E4M3};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn grid_roundtrip() {
+        for code in 0u8..16 {
+            let v = decode_e2m1(code);
+            let back = encode_e2m1(v);
+            assert_eq!(decode_e2m1(back), v, "code {code}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(qdq_e2m1(0.0), 0.0);
+        assert_eq!(qdq_e2m1(1.0), 1.0);
+        assert_eq!(qdq_e2m1(5.1), 6.0);
+        assert_eq!(qdq_e2m1(4.9), 4.0);
+        assert_eq!(qdq_e2m1(100.0), 6.0); // saturation
+        assert_eq!(qdq_e2m1(-2.4), -2.0);
+        assert_eq!(qdq_e2m1(0.2), 0.0);
+        assert_eq!(qdq_e2m1(0.26), 0.5);
+    }
+
+    #[test]
+    fn pack_unpack() {
+        let mut rng = Pcg64::new(21);
+        let data: Vec<f32> =
+            (0..77).map(|_| rng.normal() as f32 * 3.0).collect();
+        let t = Tensor::new(vec![77], data).unwrap();
+        let q = quantize_nvfp4(&t, ScaleFormat::Fp32);
+        let d = q.dequantize();
+        assert_eq!(d.shape, t.shape);
+        // every element within a tile half-step of its source
+        for (i, (&x, &y)) in t.data.iter().zip(&d.data).enumerate() {
+            let s = q.scales[i / TILE];
+            assert!((x - y).abs() <= s * 1.0 + 1e-6, "elem {i}");
+        }
+        // footprint: ~0.5 B/elem + scales
+        assert!(q.nbytes() < t.data.len());
+    }
+
+    #[test]
+    fn error_vs_e4m3_quantifies_instability_risk() {
+        // the paper's future-work caveat: NVFP4 error per element is much
+        // larger than E4M3's at comparable blocking
+        let mut rng = Pcg64::new(22);
+        let data: Vec<f32> =
+            (0..4096).map(|_| rng.normal() as f32).collect();
+        let t = Tensor::new(vec![64, 64], data).unwrap();
+        let e4 = quantize_blockwise(
+            &t,
+            (1, 16),
+            E4M3,
+            ScaleFormat::Fp32,
+        )
+        .dequantize();
+        let e2 = quantize_nvfp4(&t, ScaleFormat::Fp32).dequantize();
+        let err4: f32 = t
+            .data
+            .iter()
+            .zip(&e4.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        let err2: f32 = t
+            .data
+            .iter()
+            .zip(&e2.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(
+            err2 > 4.0 * err4,
+            "nvfp4 total err {err2} should dwarf e4m3 {err4}"
+        );
+    }
+}

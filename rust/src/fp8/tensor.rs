@@ -1,0 +1,88 @@
+//! Minimal dense f32 tensor used by the weight-sync pipeline and tests.
+//!
+//! Deliberately tiny: shape + contiguous row-major data. The heavy math
+//! lives in the AOT-compiled XLA artifacts; Rust-side tensor work is
+//! limited to quantization passes, parameter storage and metrics.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows/cols for a 2-D tensor (1-D treated as a single row).
+    pub fn dims2(&self) -> (usize, usize) {
+        match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            _ => {
+                let last = *self.shape.last().unwrap();
+                (self.data.len() / last, last)
+            }
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Max |a - b| between two same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn dims2() {
+        assert_eq!(Tensor::zeros(vec![6]).dims2(), (1, 6));
+        assert_eq!(Tensor::zeros(vec![2, 3]).dims2(), (2, 3));
+        assert_eq!(Tensor::zeros(vec![2, 3, 4]).dims2(), (6, 4));
+    }
+
+    #[test]
+    fn abs_max() {
+        let t = Tensor::new(vec![3], vec![1.0, -5.0, 2.0]).unwrap();
+        assert_eq!(t.abs_max(), 5.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # fp8-rl — FP8-RL reproduced as a Rust + JAX + Pallas stack
+//!
+//! Reproduction of *FP8-RL: A Practical and Stable Low-Precision Stack
+//! for LLM Reinforcement Learning* (NVIDIA, 2026). See DESIGN.md for the
+//! system inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layers:
+//! * [`coordinator`] — the RL loop leader (rollout -> weight-sync ->
+//!   train), experiment driver for every figure.
+//! * [`rollout`] — the inference engine: continuous batcher, paged
+//!   KV-cache manager with preemption, prefill/decode scheduler, sampler.
+//! * [`sync`] — step-level weight synchronization with blockwise FP8
+//!   quantization and QKV scale recalibration.
+//! * [`rl`] — DAPO, token-level TIS/MIS, mismatch-KL, the synthetic
+//!   arithmetic task, trainer driving the train-step artifact.
+//! * [`fp8`] — bit-exact E4M3/E5M2/UE8M0 software codecs + blockwise
+//!   quantizer (the numeric core of weight sync).
+//! * [`runtime`] — PJRT wrapper loading the AOT HLO-text artifacts.
+//! * [`perfmodel`] — H100 roofline cost model reproducing the paper's
+//!   throughput figures on 8B-dense / 30B-MoE descriptors.
+//! * [`util`], [`testkit`], [`bench`] — substrates built in-repo (the
+//!   offline registry lacks serde/clap/criterion/proptest).
+
+pub mod bench;
+pub mod coordinator;
+pub mod fp8;
+pub mod perfmodel;
+pub mod rl;
+pub mod rollout;
+pub mod runtime;
+pub mod sync;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,39 @@
+//! Minimal env_logger replacement: `RUST_LOG=debug|info|warn` to stderr.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _m: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "E",
+                Level::Warn => "W",
+                Level::Info => "I",
+                Level::Debug => "D",
+                Level::Trace => "T",
+            };
+            eprintln!("[{tag}] {}", record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+pub fn init() {
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(level));
+}

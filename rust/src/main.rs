@@ -1,0 +1,161 @@
+//! fp8-rl — leader entrypoint.
+//!
+//! Subcommands:
+//!   smoke                         load artifacts, run one decode + one
+//!                                 train step, print sanity numbers
+//!   train   [--arch --rollout --train-variant --steps --no-tis ...]
+//!                                 run one RL experiment config
+//!   reproduce --figure figN       regenerate a paper figure's CSVs
+//!   perf    --figure figN         print a perf figure's table rows
+//!   list                          list artifacts and experiment configs
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --out DIR
+//! (default ./results), --steps N, --seed N.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
+use fp8_rl::runtime::Runtime;
+use fp8_rl::util::cli::Args;
+
+mod figures;
+mod logger;
+
+fn main() -> Result<()> {
+    logger::init();
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "smoke" => smoke(&args),
+        "train" => train(&args),
+        "reproduce" => figures::reproduce(&args),
+        "perf" => figures::perf(&args),
+        "list" => list(&args),
+        _ => {
+            eprintln!(
+                "usage: fp8-rl <smoke|train|reproduce|perf|list> [flags]\n\
+                 see rust/src/main.rs for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+pub(crate) fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts").to_string()
+}
+
+fn list(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir(args))?;
+    println!("artifacts ({}):", rt.manifest.dir.display());
+    for (name, e) in &rt.manifest.entrypoints {
+        println!(
+            "  {name:32} kind={:9} arch={:5} variant={}",
+            e.kind, e.arch, e.variant
+        );
+    }
+    println!("figures: {}", figures::FIGURES.join(", "));
+    Ok(())
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    use fp8_rl::rollout::{EngineConfig, HloEngine, Request, SamplingParams};
+    let rt = Arc::new(Runtime::new(artifacts_dir(args))?);
+    println!("manifest: {} entrypoints", rt.manifest.entrypoints.len());
+
+    // engine smoke: generate from the initial policy
+    let mut engine =
+        HloEngine::new(rt.clone(), EngineConfig::new("dense", "bf16"))?;
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![12, 2, 10, 3, 11], // BOS 2 + 3 =
+            params: SamplingParams {
+                max_new_tokens: 6,
+                ..Default::default()
+            },
+        })
+        .collect();
+    let done = engine.generate(reqs)?;
+    for c in &done {
+        println!(
+            "req {}: tokens={:?} logp[0]={:.3} finish={:?}",
+            c.id,
+            c.tokens,
+            c.logprobs.first().unwrap_or(&f32::NAN),
+            c.finish
+        );
+    }
+
+    // trainer smoke: one DAPO step on those completions
+    use fp8_rl::rl::dapo::{score, Sample, TrainBatch};
+    use fp8_rl::rl::task::make_problem;
+    use fp8_rl::rl::trainer::{Trainer, TrainerConfig};
+    let problem = make_problem(2, 3);
+    let mut samples: Vec<Sample> = done
+        .into_iter()
+        .map(|completion| Sample {
+            problem: problem.clone(),
+            completion,
+            reward: 0.0,
+            group: 0,
+        })
+        .collect();
+    score(&mut samples);
+    let c = &rt.manifest.constants;
+    let batch =
+        TrainBatch::assemble(&samples, c.b_train, c.t_train, 1e-4, false);
+    let mut trainer =
+        Trainer::new(rt.clone(), TrainerConfig::new("dense", "bf16"))?;
+    let metrics = trainer.train_step(&batch)?;
+    println!(
+        "train: loss={:.4} kl_k3={:.3e} entropy={:.3} grad_norm={:.3}",
+        metrics.get("loss"),
+        metrics.get("kl_k3"),
+        metrics.get("entropy"),
+        metrics.get("grad_norm"),
+    );
+    println!("smoke OK");
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    // --config file.json provides the base; CLI flags override
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_json_file(path)?
+    } else {
+        let arch = args.str_or("arch", "dense").to_string();
+        let rollout = args.str_or("rollout", "bf16").to_string();
+        let train_v = args.str_or("train-variant", "bf16").to_string();
+        let name = format!("{arch}_{rollout}_{train_v}");
+        ExperimentConfig::new(&name, &arch, &rollout, &train_v)
+    };
+    let name = cfg.name.clone();
+    cfg.steps = args.usize_or("steps", 100)?;
+    cfg.seed = args.usize_or("seed", 1234)? as u64;
+    cfg.lr = args.f64_or("lr", 3e-4)? as f32;
+    cfg.tis_c = args.f64_or("tis", 2.0)? as f32;
+    if args.bool("no-tis") {
+        cfg.tis_c = -1.0;
+    }
+    cfg.mis = args.bool("mis");
+    cfg.max_digits = args.usize_or("digits", 2)? as u32;
+    cfg.validate_every = args.usize_or("validate-every", 5)?;
+    let rt = Arc::new(Runtime::new(artifacts_dir(args))?);
+    let mut rl = RlLoop::new(rt, cfg)?;
+    rl.run()?;
+    let out = format!("{}/{}.csv", args.str_or("out", "results"), name);
+    rl.recorder.write_csv(&out)?;
+    println!(
+        "done: reward(tail)={:.3} acc(tail)={:.3} -> {out}",
+        rl.recorder.tail_mean("reward", 10),
+        rl.recorder.tail_mean("val_accuracy", 10),
+    );
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! H100 roofline cost model + rollout simulator (perf figures).
+pub mod hw;
+pub mod modelcost;
+pub mod simulator;
+
+pub use hw::{Gpu, H100};
+pub use modelcost::{LlmDescriptor, PrecisionPlan, StepCost};
+pub use simulator::{SimConfig, SimReport, Simulator};

@@ -1,0 +1,253 @@
+//! DAPO batch assembly: group-relative advantages + token alignment.
+//!
+//! The group-relative advantage (GRPO/DAPO family) normalizes each
+//! response's reward within its prompt group: A_i = (r_i - mean) / (std
+//! + eps); the same advantage is broadcast to every response token.
+//! Dynamic-sampling (DAPO's "keep groups with signal") drops groups
+//! whose rewards are all identical (no gradient).
+//!
+//! `TrainBatch::assemble` also aligns rollout logprobs to the trainer's
+//! (B, T-1) next-token grid: position t carries the logprob/advantage of
+//! token t+1, masked to response tokens only.
+
+use crate::rollout::Completion;
+
+use super::task::{Problem, Task, TOK_PAD};
+
+/// One (prompt, response) row with its reward and group id.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub problem: Problem,
+    pub completion: Completion,
+    pub reward: f32,
+    pub group: usize,
+}
+
+/// Assembled tensors for one train-step artifact call.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,       // (B, T)
+    pub mask: Vec<f32>,         // (B, T-1)
+    pub advantages: Vec<f32>,   // (B, T-1)
+    pub rollout_logp: Vec<f32>, // (B, T-1)
+    pub mean_reward: f32,
+    pub mean_response_len: f32,
+    /// groups dropped by dynamic sampling (zero variance)
+    pub dropped_groups: usize,
+}
+
+pub fn score(task_samples: &mut [Sample]) {
+    for s in task_samples.iter_mut() {
+        s.reward = Task::reward(&s.problem, &s.completion.tokens);
+    }
+}
+
+/// Group-relative advantages. Returns per-sample advantage.
+pub fn group_advantages(samples: &[Sample], eps: f32) -> Vec<f32> {
+    let n_groups = samples
+        .iter()
+        .map(|s| s.group)
+        .max()
+        .map(|g| g + 1)
+        .unwrap_or(0);
+    let mut sums = vec![0.0f64; n_groups];
+    let mut sqs = vec![0.0f64; n_groups];
+    let mut counts = vec![0usize; n_groups];
+    for s in samples {
+        sums[s.group] += s.reward as f64;
+        sqs[s.group] += (s.reward as f64) * (s.reward as f64);
+        counts[s.group] += 1;
+    }
+    samples
+        .iter()
+        .map(|s| {
+            let n = counts[s.group] as f64;
+            let mean = sums[s.group] / n;
+            let var = (sqs[s.group] / n - mean * mean).max(0.0);
+            ((s.reward as f64 - mean) / (var.sqrt() + eps as f64)) as f32
+        })
+        .collect()
+}
+
+impl TrainBatch {
+    /// Build the padded (B, T) batch. Rows beyond `samples.len()` are
+    /// fully masked padding.
+    pub fn assemble(
+        samples: &[Sample],
+        b: usize,
+        t: usize,
+        adv_eps: f32,
+        drop_zero_variance_groups: bool,
+    ) -> TrainBatch {
+        let advs = group_advantages(samples, adv_eps);
+        // dynamic sampling: identify zero-signal groups
+        let n_groups = samples
+            .iter()
+            .map(|s| s.group)
+            .max()
+            .map(|g| g + 1)
+            .unwrap_or(0);
+        let mut group_has_signal = vec![false; n_groups];
+        if drop_zero_variance_groups {
+            let mut gmin = vec![f32::INFINITY; n_groups];
+            let mut gmax = vec![f32::NEG_INFINITY; n_groups];
+            for s in samples {
+                gmin[s.group] = gmin[s.group].min(s.reward);
+                gmax[s.group] = gmax[s.group].max(s.reward);
+            }
+            for g in 0..n_groups {
+                group_has_signal[g] = gmax[g] - gmin[g] > 1e-6;
+            }
+        } else {
+            group_has_signal.iter_mut().for_each(|x| *x = true);
+        }
+        let dropped_groups =
+            group_has_signal.iter().filter(|&&x| !x).count();
+
+        let mut tokens = vec![TOK_PAD; b * t];
+        let mut mask = vec![0.0f32; b * (t - 1)];
+        let mut advantages = vec![0.0f32; b * (t - 1)];
+        let mut rollout_logp = vec![0.0f32; b * (t - 1)];
+        let mut total_reward = 0.0f32;
+        let mut total_len = 0usize;
+
+        for (i, s) in samples.iter().take(b).enumerate() {
+            let plen = s.problem.prompt.len();
+            let resp = &s.completion.tokens;
+            total_reward += s.reward;
+            total_len += resp.len();
+            // row = prompt ++ response, truncated to t
+            for (j, &tok) in s
+                .problem
+                .prompt
+                .iter()
+                .chain(resp.iter())
+                .take(t)
+                .enumerate()
+            {
+                tokens[i * t + j] = tok;
+            }
+            // NOTE: zero-variance ("dropped") groups keep their mask —
+            // their advantage is exactly 0 so they contribute no
+            // gradient, but the mismatch-KL / entropy / TIS metrics must
+            // still see their tokens (the paper logs mismatch KL over
+            // the whole rollout batch). `dropped_groups` reports the
+            // dynamic-sampling statistic.
+            // mask/adv/logp at position j predict token j+1: response
+            // token r_k sits at absolute index plen + k, so its
+            // prediction slot is plen + k - 1
+            for (k, _) in resp.iter().enumerate() {
+                let slot = plen + k - 1;
+                if slot >= t - 1 {
+                    break;
+                }
+                mask[i * (t - 1) + slot] = 1.0;
+                advantages[i * (t - 1) + slot] = advs[i];
+                rollout_logp[i * (t - 1) + slot] =
+                    s.completion.logprobs[k];
+            }
+        }
+        TrainBatch {
+            b,
+            t,
+            tokens,
+            mask,
+            advantages,
+            rollout_logp,
+            mean_reward: total_reward / samples.len().max(1) as f32,
+            mean_response_len: total_len as f32
+                / samples.len().max(1) as f32,
+            dropped_groups,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rollout::request::FinishReason;
+    use crate::rl::task::{make_problem, TOK_EOS};
+
+    fn sample(group: usize, reward: f32, resp: Vec<i32>) -> Sample {
+        let problem = make_problem(2, 3);
+        let lp = vec![-0.5; resp.len()];
+        Sample {
+            problem: problem.clone(),
+            completion: Completion {
+                id: 0,
+                prompt: problem.prompt.clone(),
+                tokens: resp,
+                logprobs: lp,
+                finish: FinishReason::Eos,
+                preemptions: 0,
+            },
+            reward,
+            group,
+        }
+    }
+
+    #[test]
+    fn group_advantage_zero_mean() {
+        let samples = vec![
+            sample(0, 1.0, vec![5, TOK_EOS]),
+            sample(0, 0.0, vec![9, TOK_EOS]),
+            sample(1, 0.5, vec![5, TOK_EOS]),
+            sample(1, 0.5, vec![5, TOK_EOS]),
+        ];
+        let advs = group_advantages(&samples, 1e-4);
+        assert!((advs[0] + advs[1]).abs() < 1e-5); // zero-mean per group
+        assert!(advs[0] > 0.0 && advs[1] < 0.0);
+        assert_eq!(advs[2], 0.0); // no variance => zero advantage
+    }
+
+    #[test]
+    fn batch_alignment() {
+        let s = sample(0, 1.0, vec![5, TOK_EOS]);
+        let plen = s.problem.prompt.len(); // BOS 2 + 3 = -> 5 tokens
+        let batch = TrainBatch::assemble(
+            &[
+                s,
+                sample(0, 0.0, vec![9, TOK_EOS]),
+            ],
+            4,
+            16,
+            1e-4,
+            false,
+        );
+        // token row: prompt then response
+        assert_eq!(batch.tokens[plen], 5);
+        assert_eq!(batch.tokens[plen + 1], TOK_EOS);
+        // mask slots: plen-1 (predicting '5') and plen (predicting EOS)
+        assert_eq!(batch.mask[plen - 1], 1.0);
+        assert_eq!(batch.mask[plen], 1.0);
+        assert_eq!(batch.mask[plen + 1], 0.0);
+        // prompt positions unmasked
+        assert_eq!(batch.mask[0], 0.0);
+        // rollout logprobs land on the same slots
+        assert_eq!(batch.rollout_logp[plen - 1], -0.5);
+        // padding rows fully masked
+        for j in 0..15 {
+            assert_eq!(batch.mask[2 * 15 + j], 0.0);
+        }
+    }
+
+    #[test]
+    fn dynamic_sampling_reports_flat_groups() {
+        let samples = vec![
+            sample(0, 0.5, vec![5, TOK_EOS]),
+            sample(0, 0.5, vec![5, TOK_EOS]),
+            sample(1, 1.0, vec![5, TOK_EOS]),
+            sample(1, 0.0, vec![9, TOK_EOS]),
+        ];
+        let batch = TrainBatch::assemble(&samples, 4, 16, 1e-4, true);
+        assert_eq!(batch.dropped_groups, 1);
+        let plen = samples[0].problem.prompt.len();
+        // flat group keeps its mask (KL metrics) but has zero advantage
+        assert_eq!(batch.mask[plen - 1], 1.0);
+        assert_eq!(batch.advantages[plen - 1], 0.0);
+        // group with signal has nonzero advantage
+        assert!(batch.advantages[2 * 15 + plen - 1] > 0.0);
+    }
+}

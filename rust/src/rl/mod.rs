@@ -1,0 +1,10 @@
+//! RL algorithm layer: the DAPO batch machinery, token-level TIS/MIS
+//! mismatch correction (computed inside the train-step artifact), the
+//! synthetic arithmetic task, and the trainer driving the AOT train step.
+pub mod dapo;
+pub mod task;
+pub mod trainer;
+
+pub use dapo::{group_advantages, Sample, TrainBatch};
+pub use task::{Problem, Task, TaskConfig};
+pub use trainer::{Trainer, TrainerConfig, TrainMetrics};

@@ -1,0 +1,217 @@
+//! The synthetic reasoning task: multi-digit addition with exact-match
+//! reward — the AIME24/DAPO-math stand-in (DESIGN.md §1).
+//!
+//! Vocabulary (32 tokens, matching the model config):
+//!   0..9   digits
+//!   10     '+'
+//!   11     '='
+//!   12     BOS
+//!   13     EOS
+//!   14     PAD
+//!   15..31 unused
+//!
+//! Prompt:  BOS d1.. '+' d2.. '='     (numbers little-ended per digit)
+//! Target:  digits of the sum, then EOS.
+//!
+//! Reward = 0.5 * (correct digit prefix fraction) + 0.5 * exact match —
+//! dense enough for a tiny policy to climb, sparse enough that accuracy
+//! curves look like the paper's (slow rise, plateaus).
+
+use crate::util::rng::Pcg64;
+
+pub const TOK_PLUS: i32 = 10;
+pub const TOK_EQ: i32 = 11;
+pub const TOK_BOS: i32 = 12;
+pub const TOK_EOS: i32 = 13;
+pub const TOK_PAD: i32 = 14;
+
+#[derive(Clone, Debug)]
+pub struct TaskConfig {
+    /// max digits per operand
+    pub max_digits: u32,
+    /// optional cap on a+b (curriculum: Some(9) keeps answers one digit)
+    pub max_sum: Option<u64>,
+    /// held-out validation problems
+    pub n_validation: usize,
+    pub seed: u64,
+}
+
+impl Default for TaskConfig {
+    fn default() -> Self {
+        TaskConfig {
+            max_digits: 2,
+            max_sum: None,
+            n_validation: 64,
+            seed: 7,
+        }
+    }
+}
+
+/// One problem instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Problem {
+    pub a: u64,
+    pub b: u64,
+    pub prompt: Vec<i32>,
+    /// expected answer tokens INCLUDING the trailing EOS
+    pub answer: Vec<i32>,
+}
+
+fn digits(mut n: u64) -> Vec<i32> {
+    if n == 0 {
+        return vec![0];
+    }
+    let mut out = Vec::new();
+    while n > 0 {
+        out.push((n % 10) as i32);
+        n /= 10;
+    }
+    out.reverse();
+    out
+}
+
+pub fn make_problem(a: u64, b: u64) -> Problem {
+    let mut prompt = vec![TOK_BOS];
+    prompt.extend(digits(a));
+    prompt.push(TOK_PLUS);
+    prompt.extend(digits(b));
+    prompt.push(TOK_EQ);
+    let mut answer = digits(a + b);
+    answer.push(TOK_EOS);
+    Problem {
+        a,
+        b,
+        prompt,
+        answer,
+    }
+}
+
+/// The task: samples training problems, holds a fixed validation set.
+pub struct Task {
+    pub cfg: TaskConfig,
+    rng: Pcg64,
+    validation: Vec<Problem>,
+}
+
+impl Task {
+    pub fn new(cfg: TaskConfig) -> Task {
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut validation = Vec::new();
+        // prefer distinct problems; if the problem space is smaller than
+        // n_validation (e.g. one-digit sums: 55 pairs), allow repeats
+        let mut attempts = 0usize;
+        while validation.len() < cfg.n_validation {
+            let (a, b) = Self::draw(&cfg, &mut rng);
+            attempts += 1;
+            if seen.insert((a, b)) || attempts > 20 * cfg.n_validation {
+                validation.push(make_problem(a, b));
+            }
+        }
+        Task {
+            cfg,
+            rng,
+            validation,
+        }
+    }
+
+    fn draw(cfg: &TaskConfig, rng: &mut Pcg64) -> (u64, u64) {
+        let hi = 10u64.pow(cfg.max_digits) - 1;
+        loop {
+            let a = rng.below(hi + 1);
+            let b = rng.below(hi + 1);
+            if cfg.max_sum.map(|m| a + b <= m).unwrap_or(true) {
+                return (a, b);
+            }
+        }
+    }
+
+    /// Sample a fresh training problem (may overlap validation — the
+    /// space is tiny, like re-sampling the same math contest topics).
+    pub fn sample(&mut self) -> Problem {
+        let (a, b) = Self::draw(&self.cfg, &mut self.rng);
+        make_problem(a, b)
+    }
+
+    pub fn validation(&self) -> &[Problem] {
+        &self.validation
+    }
+
+    /// Reward for a generated response (tokens up to and incl. EOS).
+    pub fn reward(problem: &Problem, response: &[i32]) -> f32 {
+        let exact = response == problem.answer.as_slice();
+        // digit-prefix credit (ignores trailing EOS slot)
+        let want = &problem.answer[..problem.answer.len() - 1];
+        let mut correct = 0usize;
+        for (i, &w) in want.iter().enumerate() {
+            if response.get(i) == Some(&w) {
+                correct += 1;
+            } else {
+                break;
+            }
+        }
+        let frac = correct as f32 / want.len() as f32;
+        0.5 * frac + if exact { 0.5 } else { 0.0 }
+    }
+
+    /// Exact-match check (the validation-accuracy metric).
+    pub fn is_correct(problem: &Problem, response: &[i32]) -> bool {
+        response == problem.answer.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_encoding() {
+        let p = make_problem(27, 19);
+        assert_eq!(
+            p.prompt,
+            vec![TOK_BOS, 2, 7, TOK_PLUS, 1, 9, TOK_EQ]
+        );
+        assert_eq!(p.answer, vec![4, 6, TOK_EOS]);
+    }
+
+    #[test]
+    fn zero_operands() {
+        let p = make_problem(0, 0);
+        assert_eq!(p.prompt, vec![TOK_BOS, 0, TOK_PLUS, 0, TOK_EQ]);
+        assert_eq!(p.answer, vec![0, TOK_EOS]);
+    }
+
+    #[test]
+    fn rewards() {
+        let p = make_problem(27, 19); // 46
+        assert_eq!(Task::reward(&p, &[4, 6, TOK_EOS]), 1.0);
+        assert_eq!(Task::reward(&p, &[4, 5, TOK_EOS]), 0.25); // prefix 1/2
+        assert_eq!(Task::reward(&p, &[9, 9, TOK_EOS]), 0.0);
+        // right digits but no EOS -> not exact
+        let r = Task::reward(&p, &[4, 6, 1]);
+        assert_eq!(r, 0.5);
+        assert!(Task::is_correct(&p, &[4, 6, TOK_EOS]));
+        assert!(!Task::is_correct(&p, &[4, 6]));
+    }
+
+    #[test]
+    fn validation_is_deterministic() {
+        let t1 = Task::new(TaskConfig::default());
+        let t2 = Task::new(TaskConfig::default());
+        assert_eq!(t1.validation()[0], t2.validation()[0]);
+        assert_eq!(t1.validation().len(), 64);
+    }
+
+    #[test]
+    fn prompt_lengths_bounded() {
+        let mut t = Task::new(TaskConfig {
+            max_digits: 2,
+            ..Default::default()
+        });
+        for _ in 0..200 {
+            let p = t.sample();
+            assert!(p.prompt.len() <= 1 + 2 + 1 + 2 + 1);
+            assert!(p.answer.len() <= 4);
+        }
+    }
+}

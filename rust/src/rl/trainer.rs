@@ -1,0 +1,196 @@
+//! The trainer: owns master weights + Adam state and drives the AOT
+//! train-step artifact (DAPO loss + token-level TIS + Adam fused in HLO).
+//!
+//! The artifact computes everything differentiable; this wrapper owns
+//! state threading, hyperparameters, and metric extraction (including
+//! the paper's mismatch-KL and the Fig-11 gradient tile-exceedance
+//! profile).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostArray, Runtime};
+
+use super::dapo::TrainBatch;
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub arch: String,
+    /// train variant: bf16 | fp8hybrid | fp8e4m3 | fp8hybrid_ue8m0
+    pub variant: String,
+    pub lr: f32,
+    /// TIS clip threshold C (paper uses 2.0); <= 0 disables TIS
+    pub tis_c: f32,
+    /// entropy bonus coefficient (stabilizes tiny-scale DAPO)
+    pub ent_coef: f32,
+    /// use Masked IS instead of Truncated IS (paper §2.1.3 "TIS/MIS")
+    pub mis: bool,
+}
+
+impl TrainerConfig {
+    pub fn new(arch: &str, variant: &str) -> TrainerConfig {
+        TrainerConfig {
+            arch: arch.to_string(),
+            variant: variant.to_string(),
+            lr: 3e-4,
+            tis_c: 2.0,
+            ent_coef: 0.02,
+            mis: false,
+        }
+    }
+}
+
+/// Metrics from one train step (names from the manifest).
+#[derive(Clone, Debug, Default)]
+pub struct TrainMetrics {
+    pub values: BTreeMap<String, f32>,
+}
+
+impl TrainMetrics {
+    pub fn get(&self, name: &str) -> f32 {
+        *self.values.get(name).unwrap_or(&f32::NAN)
+    }
+}
+
+pub struct Trainer {
+    rt: Arc<Runtime>,
+    pub cfg: TrainerConfig,
+    /// flat master weights (param_spec order)
+    params: Vec<HostArray>,
+    m_state: Vec<HostArray>,
+    v_state: Vec<HostArray>,
+    step: f32,
+    n_params: usize,
+    b: usize,
+    t: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, cfg: TrainerConfig) -> Result<Trainer> {
+        let spec = rt.manifest.model(&cfg.arch)?.clone();
+        let c = rt.manifest.constants.clone();
+        let init = rt.manifest.load_initial_params(&cfg.arch)?;
+        let params: Vec<HostArray> = init
+            .into_iter()
+            .zip(&spec.params)
+            .map(|(v, p)| HostArray::f32(p.shape.clone(), v))
+            .collect();
+        let zeros: Vec<HostArray> = spec
+            .params
+            .iter()
+            .map(|p| {
+                HostArray::f32(
+                    p.shape.clone(),
+                    vec![0.0; p.shape.iter().product()],
+                )
+            })
+            .collect();
+        Ok(Trainer {
+            rt,
+            n_params: params.len(),
+            params,
+            m_state: zeros.clone(),
+            v_state: zeros,
+            step: 0.0,
+            b: c.b_train,
+            t: c.t_train,
+            cfg,
+        })
+    }
+
+    pub fn params(&self) -> &[HostArray] {
+        &self.params
+    }
+
+    pub fn step_count(&self) -> f32 {
+        self.step
+    }
+
+    /// Run one DAPO update on an assembled batch.
+    pub fn train_step(&mut self, batch: &TrainBatch) -> Result<TrainMetrics> {
+        if batch.b != self.b || batch.t != self.t {
+            bail!(
+                "batch ({}, {}) does not match artifact ({}, {})",
+                batch.b,
+                batch.t,
+                self.b,
+                self.t
+            );
+        }
+        let exe = self.rt.load(&format!(
+            "{}_train_{}",
+            self.cfg.arch, self.cfg.variant
+        ))?;
+        let mut inputs: Vec<HostArray> = Vec::with_capacity(
+            3 * self.n_params + 6,
+        );
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m_state.iter().cloned());
+        inputs.extend(self.v_state.iter().cloned());
+        inputs.push(HostArray::f32(vec![1, 1], vec![self.step]));
+        inputs.push(HostArray::i32(
+            vec![self.b, self.t],
+            batch.tokens.clone(),
+        ));
+        inputs.push(HostArray::f32(
+            vec![self.b, self.t - 1],
+            batch.mask.clone(),
+        ));
+        inputs.push(HostArray::f32(
+            vec![self.b, self.t - 1],
+            batch.advantages.clone(),
+        ));
+        inputs.push(HostArray::f32(
+            vec![self.b, self.t - 1],
+            batch.rollout_logp.clone(),
+        ));
+        inputs.push(HostArray::f32(
+            vec![1, 4],
+            vec![
+                self.cfg.lr,
+                self.cfg.tis_c,
+                self.cfg.ent_coef,
+                if self.cfg.mis { 1.0 } else { 0.0 },
+            ],
+        ));
+        let out = exe.run(&inputs)?;
+        let n = self.n_params;
+        if out.len() != 3 * n + 2 {
+            bail!("train artifact returned {} outputs", out.len());
+        }
+        self.params = out[..n].to_vec();
+        self.m_state = out[n..2 * n].to_vec();
+        self.v_state = out[2 * n..3 * n].to_vec();
+        self.step = out[3 * n].as_f32()?[0];
+        let metric_vals = out[3 * n + 1].as_f32()?;
+        let names = &self.rt.manifest.constants.metric_names;
+        let mut metrics = TrainMetrics::default();
+        for (name, &v) in names.iter().zip(metric_vals.iter()) {
+            metrics.values.insert(name.clone(), v);
+        }
+        Ok(metrics)
+    }
+
+    /// Mismatch KL / TIS diagnostics without updating weights: runs the
+    /// logprobs artifact to evaluate the current policy on given rows.
+    pub fn eval_logprobs(
+        &self,
+        tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .rt
+            .load(&format!("{}_logprobs_bf16", self.cfg.arch))?;
+        let mut inputs: Vec<HostArray> = self.params.to_vec();
+        inputs.push(HostArray::i32(
+            vec![self.b, self.t],
+            tokens.to_vec(),
+        ));
+        let out = exe.run(&inputs)?;
+        Ok((
+            out[0].as_f32()?.to_vec(),
+            out[1].as_f32()?.to_vec(),
+        ))
+    }
+}

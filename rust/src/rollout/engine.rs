@@ -1,0 +1,429 @@
+//! The HLO-backed generation engine: continuous batching over the AOT
+//! decode artifact, with the paged-KV scheduler, per-slot sampling and
+//! rollout-policy logprob capture.
+//!
+//! Slot model: the decode artifact has a fixed batch of `B` slots. Each
+//! slot hosts one running sequence at its own position. New sequences are
+//! admitted into free slots and *prefilled through the decode path*
+//! (prompt tokens teacher-forced one per step — chunked-prefill style),
+//! so prefill and decode mix in the same batch exactly like a
+//! continuous-batching server. A whole-batch fast path uses the prefill
+//! artifact when the engine starts empty (the common RL-rollout shape).
+//!
+//! Weights are persistent device buffers; the per-step KV state rides
+//! through each execution. The engine's weights are the *quantized* ones
+//! installed by the weight-sync pipeline (sync/), so sampled-token
+//! logprobs measured here are exactly pi_fp8 from paper eq. (2).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Executable, HostArray, Runtime};
+use crate::util::rng::Pcg64;
+
+use super::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
+use super::request::{Completion, FinishReason, Request};
+use super::sampler;
+use super::scheduler::Scheduler;
+
+/// Engine configuration: which artifact variant backs generation and how
+/// much KV memory the scheduler may use.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub arch: String,      // "dense" | "moe"
+    pub variant: String,   // rollout variant name (bf16, fp8lin, ...)
+    /// KV storage precision (affects capacity accounting; numerics are
+    /// baked into the artifact variant)
+    pub kv_precision: KvPrecision,
+    /// KV byte budget for the block manager; None = exactly the dense
+    /// cache the artifact carries (no artificial pressure)
+    pub kv_budget_bytes: Option<usize>,
+    pub block_tokens: usize,
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    pub fn new(arch: &str, variant: &str) -> Self {
+        let kv_precision = if variant.contains("kvfp8")
+            || variant.contains("fullfp8")
+        {
+            KvPrecision::Fp8
+        } else {
+            KvPrecision::Bf16
+        };
+        EngineConfig {
+            arch: arch.to_string(),
+            variant: variant.to_string(),
+            kv_precision,
+            kv_budget_bytes: None,
+            block_tokens: 16,
+            seed: 1234,
+        }
+    }
+}
+
+struct Slot {
+    req: Request,
+    /// tokens written to the KV cache so far (== current position)
+    pos: usize,
+    /// next prompt token to feed (prefill-through-decode cursor)
+    cursor: usize,
+    /// token to feed this step (last sampled, once prompt is exhausted)
+    next_feed: i32,
+    generated: Vec<i32>,
+    logprobs: Vec<f32>,
+}
+
+/// Aggregate counters the experiments read.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub decode_steps: u64,
+    pub prefill_waves: u64,
+    pub tokens_generated: u64,
+    pub preemptions: u64,
+}
+
+pub struct HloEngine {
+    rt: Arc<Runtime>,
+    cfg: EngineConfig,
+    prefill: Arc<Executable>,
+    decode: Arc<Executable>,
+    param_bufs: Vec<crate::runtime::DeviceBuffer>,
+    /// dense KV cache state threaded through decode calls
+    kc: HostArray,
+    vc: HostArray,
+    kscale: f32,
+    vscale: f32,
+    slots: Vec<Option<Slot>>,
+    sched: Scheduler,
+    rng: Pcg64,
+    preempt_counts: std::collections::BTreeMap<u64, u32>,
+    pub stats: EngineStats,
+    // geometry
+    b: usize,
+    max_seq: usize,
+    prompt_len: usize,
+    vocab: usize,
+}
+
+impl HloEngine {
+    pub fn new(rt: Arc<Runtime>, cfg: EngineConfig) -> Result<HloEngine> {
+        let m = rt.manifest.model(&cfg.arch)?.clone();
+        let c = rt.manifest.constants.clone();
+        let prefill =
+            rt.load(&format!("{}_prefill_{}", cfg.arch, cfg.variant))?;
+        let decode =
+            rt.load(&format!("{}_decode_{}", cfg.arch, cfg.variant))?;
+        let b = c.b_rollout;
+        let max_seq = m.cfg("max_seq");
+        let geo = KvGeometry {
+            n_layers: m.cfg("n_layers"),
+            n_kv_heads: m.cfg("n_kv_heads"),
+            d_head: m.cfg("d_head"),
+            block_tokens: cfg.block_tokens,
+            precision: cfg.kv_precision,
+        };
+        let kv = match cfg.kv_budget_bytes {
+            Some(budget) => KvBlockManager::from_budget(geo, budget),
+            None => {
+                // capacity == the dense cache the artifact carries
+                KvBlockManager::new(
+                    geo,
+                    b * max_seq / cfg.block_tokens,
+                )
+            }
+        };
+        let sched = Scheduler::new(kv, b);
+        let kv_shape = vec![
+            geo.n_layers,
+            b,
+            geo.n_kv_heads,
+            max_seq,
+            geo.d_head,
+        ];
+        let n: usize = kv_shape.iter().product();
+        let kc = HostArray::f32(kv_shape.clone(), vec![0.0; n]);
+        let vc = HostArray::f32(kv_shape, vec![0.0; n]);
+        // initial weights: the aot dump; weight-sync replaces them
+        let init = rt.manifest.load_initial_params(&cfg.arch)?;
+        let params: Vec<HostArray> = init
+            .into_iter()
+            .zip(&m.params)
+            .map(|(v, p)| HostArray::f32(p.shape.clone(), v))
+            .collect();
+        let param_bufs = rt.to_device_all(&params)?;
+        let seed = cfg.seed;
+        Ok(HloEngine {
+            rt,
+            cfg,
+            prefill,
+            decode,
+            param_bufs,
+            kc,
+            vc,
+            kscale: 1.0,
+            vscale: 1.0,
+            slots: (0..b).map(|_| None).collect(),
+            sched,
+            rng: Pcg64::new(seed),
+            preempt_counts: std::collections::BTreeMap::new(),
+            stats: EngineStats::default(),
+            b,
+            max_seq,
+            prompt_len: c.prompt_len,
+            vocab: m.cfg("vocab"),
+        })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Install freshly synchronized weights (called by sync::Pipeline at
+    /// every RL step — paper Fig 1 "weight synchronization phase").
+    pub fn install_weights(&mut self, params: &[HostArray]) -> Result<()> {
+        self.param_bufs = self.rt.to_device_all(params)?;
+        Ok(())
+    }
+
+    /// Install recalibrated QKV scales (paper §2.3.1).
+    pub fn install_kv_scales(&mut self, kscale: f32, vscale: f32) {
+        self.kscale = kscale;
+        self.vscale = vscale;
+    }
+
+    pub fn kv_scales(&self) -> (f32, f32) {
+        (self.kscale, self.vscale)
+    }
+
+    /// Generate completions for a batch of requests (runs to drain).
+    pub fn generate(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<Vec<Completion>> {
+        for r in &requests {
+            if r.prompt.is_empty() || r.prompt.len() > self.prompt_len {
+                bail!(
+                    "prompt length {} outside 1..={}",
+                    r.prompt.len(),
+                    self.prompt_len
+                );
+            }
+            self.sched.submit(r.clone());
+        }
+        let mut done: Vec<Completion> = Vec::new();
+        // fast path: empty engine + batch start => batched prefill wave
+        if self.slots.iter().all(|s| s.is_none()) {
+            self.prefill_wave(&mut done)?;
+        }
+        let mut guard = 0usize;
+        while !self.sched.is_idle() {
+            self.admit_into_slots();
+            self.decode_step(&mut done)?;
+            guard += 1;
+            if guard > 200_000 {
+                bail!("engine livelock: {} running", self.sched.n_running());
+            }
+        }
+        // stable output order by request id
+        done.sort_by_key(|c| c.id);
+        Ok(done)
+    }
+
+    /// Admit waiting requests into free slots.
+    fn admit_into_slots(&mut self) {
+        let admitted = self.sched.admit();
+        for req in admitted {
+            let slot_idx = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("scheduler admitted beyond slot capacity");
+            let first = req.prompt[0];
+            self.slots[slot_idx] = Some(Slot {
+                next_feed: first,
+                cursor: 1,
+                pos: 0,
+                generated: Vec::new(),
+                logprobs: Vec::new(),
+                req,
+            });
+        }
+    }
+
+    /// Whole-batch prefill fast path (engine must be empty).
+    fn prefill_wave(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        let admitted = self.sched.admit();
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        self.stats.prefill_waves += 1;
+        let mut tokens = vec![0i32; self.b * self.prompt_len];
+        for (i, req) in admitted.iter().enumerate() {
+            for (j, &t) in req.prompt.iter().enumerate() {
+                tokens[i * self.prompt_len + j] = t;
+            }
+            // pad by repeating the last prompt token (never attended)
+            for j in req.prompt.len()..self.prompt_len {
+                tokens[i * self.prompt_len + j] =
+                    *req.prompt.last().unwrap();
+            }
+        }
+        let mut inputs: Vec<HostArray> = Vec::new();
+        let tok =
+            HostArray::i32(vec![self.b, self.prompt_len], tokens);
+        let ks = HostArray::scalar_f32(self.kscale);
+        let vs = HostArray::scalar_f32(self.vscale);
+        inputs.push(tok);
+        inputs.push(ks);
+        inputs.push(vs);
+        let in_bufs = self.rt.to_device_all(&inputs)?;
+        let mut all: Vec<&xla::PjRtBuffer> =
+            self.param_bufs.iter().map(|d| &d.buf).collect();
+        all.extend(in_bufs.iter().map(|d| &d.buf));
+        let out = self.prefill.run_buffers(&all)?;
+        let (logits, kc, vc) = (&out[0], out[1].clone(), out[2].clone());
+        self.kc = kc;
+        self.vc = vc;
+        // install slots; prompt tokens 0..plen-1 are already in cache;
+        // the scheduler allocated plen tokens. sample the first response
+        // token from logits[:, plen-1].
+        let lg = logits.as_f32()?;
+        for (i, req) in admitted.into_iter().enumerate() {
+            let plen = req.prompt.len();
+            let row = &lg[(i * self.prompt_len + plen - 1) * self.vocab
+                ..(i * self.prompt_len + plen - 1) * self.vocab
+                    + self.vocab];
+            let (tok, lp) = sampler::sample(row, &req.params, &mut self.rng);
+            let mut slot = Slot {
+                next_feed: tok,
+                cursor: plen, // prompt fully consumed
+                pos: plen,
+                generated: vec![tok],
+                logprobs: vec![lp],
+                req,
+            };
+            // prefill wrote positions 0..plen-1; positions beyond plen-1
+            // hold pad junk that is never attended (causal mask) and is
+            // overwritten as decoding proceeds.
+            self.stats.tokens_generated += 1;
+            if self.maybe_finish(&mut slot, tok, done) {
+                continue;
+            }
+            // the prefill artifact put sequence i's KV in cache row i,
+            // so the slot index MUST be i
+            debug_assert!(self.slots[i].is_none());
+            self.slots[i] = Some(slot);
+        }
+        Ok(())
+    }
+
+    /// One decode step over all active slots.
+    fn decode_step(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        if self.slots.iter().all(|s| s.is_none()) {
+            return Ok(());
+        }
+        self.stats.decode_steps += 1;
+        let mut tokens = vec![0i32; self.b];
+        let mut pos = vec![0i32; self.b];
+        // sequences consuming a token BEYOND their preallocated prompt
+        // this step (those need a KV-block extension)
+        let mut grow_ids: Vec<u64> = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.next_feed;
+                pos[i] = s.pos as i32;
+                if s.pos >= s.req.prompt.len() {
+                    grow_ids.push(s.req.id);
+                }
+            }
+        }
+        let inputs = [
+            self.kc.clone(),
+            self.vc.clone(),
+            HostArray::i32(vec![self.b, 1], tokens),
+            HostArray::i32(vec![self.b, 1], pos),
+            HostArray::scalar_f32(self.kscale),
+            HostArray::scalar_f32(self.vscale),
+        ];
+        let in_bufs = self.rt.to_device_all(&inputs)?;
+        let mut all: Vec<&xla::PjRtBuffer> =
+            self.param_bufs.iter().map(|d| &d.buf).collect();
+        all.extend(in_bufs.iter().map(|d| &d.buf));
+        let out = self.decode.run_buffers(&all)?;
+        let logits = out[0].as_f32()?.to_vec();
+        self.kc = out[1].clone();
+        self.vc = out[2].clone();
+
+        // grow bookkeeping + preemption
+        let report = self.sched.extend_all(&grow_ids);
+        self.stats.preemptions += report.preempted.len() as u64;
+        for victim in &report.preempted {
+            *self.preempt_counts.entry(*victim).or_insert(0) += 1;
+            for s in self.slots.iter_mut() {
+                if s.as_ref().map(|x| x.req.id) == Some(*victim) {
+                    *s = None;
+                }
+            }
+        }
+
+        // per-slot: advance cursor/sample
+        for i in 0..self.b {
+            let Some(slot) = self.slots[i].as_mut() else { continue };
+            slot.pos += 1;
+            if slot.cursor < slot.req.prompt.len() {
+                // still prefilling: feed next prompt token, ignore logits
+                slot.next_feed = slot.req.prompt[slot.cursor];
+                slot.cursor += 1;
+                continue;
+            }
+            let row = &logits[i * self.vocab..(i + 1) * self.vocab];
+            let (tok, lp) =
+                sampler::sample(row, &slot.req.params, &mut self.rng);
+            slot.generated.push(tok);
+            slot.logprobs.push(lp);
+            slot.next_feed = tok;
+            self.stats.tokens_generated += 1;
+            let mut taken = self.slots[i].take().unwrap();
+            if !self.maybe_finish(&mut taken, tok, done) {
+                self.slots[i] = Some(taken);
+            }
+        }
+        Ok(())
+    }
+
+    /// Check termination; if finished, release and record the completion.
+    fn maybe_finish(
+        &mut self,
+        slot: &mut Slot,
+        last_tok: i32,
+        done: &mut Vec<Completion>,
+    ) -> bool {
+        let finish = if last_tok == slot.req.params.eos {
+            Some(FinishReason::Eos)
+        } else if slot.generated.len() >= slot.req.params.max_new_tokens {
+            Some(FinishReason::MaxTokens)
+        } else if slot.pos >= self.max_seq {
+            Some(FinishReason::CacheLimit)
+        } else {
+            None
+        };
+        if let Some(reason) = finish {
+            self.sched.finish(slot.req.id);
+            done.push(Completion {
+                id: slot.req.id,
+                prompt: slot.req.prompt.clone(),
+                tokens: slot.generated.clone(),
+                logprobs: slot.logprobs.clone(),
+                finish: reason,
+                preemptions: self
+                    .preempt_counts
+                    .remove(&slot.req.id)
+                    .unwrap_or(0),
+            });
+            return true;
+        }
+        false
+    }
+}

@@ -1,0 +1,16 @@
+//! The rollout (inference) engine — the vLLM-role component: paged
+//! KV-cache block manager, continuous-batching scheduler with
+//! preemption, token sampler, request router, and the HLO-backed
+//! generation engine the RL loop drives.
+pub mod engine;
+pub mod kvcache;
+pub mod request;
+pub mod router;
+pub mod sampler;
+pub mod scheduler;
+
+pub use engine::{EngineConfig, EngineStats, HloEngine};
+pub use kvcache::{KvBlockManager, KvGeometry, KvPrecision};
+pub use request::{Completion, FinishReason, Request, SamplingParams};
+pub use router::{RoutePolicy, Router};
+pub use scheduler::Scheduler;

@@ -1,0 +1,57 @@
+//! Request types flowing through the rollout engine.
+
+/// Sampling parameters for one request.
+#[derive(Clone, Debug)]
+pub struct SamplingParams {
+    /// softmax temperature; 0.0 means greedy (argmax)
+    pub temperature: f32,
+    /// top-k truncation (0 = disabled)
+    pub top_k: usize,
+    /// nucleus truncation (1.0 = disabled)
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+    /// stop token (EOS)
+    pub eos: i32,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            max_new_tokens: 32,
+            eos: 13,
+        }
+    }
+}
+
+/// A generation request submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// hit the model's max_seq capacity
+    CacheLimit,
+}
+
+/// Completed request output.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub tokens: Vec<i32>,
+    /// rollout-policy logprob of each generated token (pi_fp8 in the
+    /// paper's eq. 2 — measured from the engine's own logits)
+    pub logprobs: Vec<f32>,
+    pub finish: FinishReason,
+    /// decode steps this request waited due to preemption
+    pub preemptions: u32,
+}

@@ -1,0 +1,110 @@
+//! Request router across multiple rollout engines (the vllm-router-style
+//! front door used by `examples/rollout_server.rs`).
+//!
+//! Policies: round-robin and least-loaded (by queued prompt tokens). The
+//! router only decides placement; each engine runs its own scheduler.
+
+use super::request::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+pub struct Router {
+    policy: RoutePolicy,
+    n_engines: usize,
+    next: usize,
+    /// outstanding token load per engine (prompt + expected decode)
+    load: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, n_engines: usize) -> Router {
+        assert!(n_engines > 0);
+        Router {
+            policy,
+            n_engines,
+            next: 0,
+            load: vec![0; n_engines],
+        }
+    }
+
+    /// Pick an engine for the request and account its load.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let cost =
+            (req.prompt.len() + req.params.max_new_tokens) as u64;
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.next;
+                self.next = (self.next + 1) % self.n_engines;
+                i
+            }
+            RoutePolicy::LeastLoaded => {
+                let (i, _) = self
+                    .load
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &l)| l)
+                    .unwrap();
+                i
+            }
+        };
+        self.load[idx] += cost;
+        idx
+    }
+
+    /// Report completion so load drains.
+    pub fn complete(&mut self, engine: usize, req: &Request) {
+        let cost =
+            (req.prompt.len() + req.params.max_new_tokens) as u64;
+        self.load[engine] = self.load[engine].saturating_sub(cost);
+    }
+
+    pub fn loads(&self) -> &[u64] {
+        &self.load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rollout::request::SamplingParams;
+
+    fn req(id: u64, plen: usize) -> Request {
+        Request {
+            id,
+            prompt: vec![0; plen],
+            params: SamplingParams::default(),
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> =
+            (0..6).map(|i| r.route(&req(i, 4))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let a = r.route(&req(1, 100)); // heavy
+        let b = r.route(&req(2, 1)); // goes to the other engine
+        assert_ne!(a, b);
+        let c = r.route(&req(3, 1)); // engine b still lighter
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn completion_drains_load() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let q = req(1, 50);
+        let e = r.route(&q);
+        assert!(r.loads()[e] > 0);
+        r.complete(e, &q);
+        assert_eq!(r.loads()[e], 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Token sampler: temperature / top-k / top-p over a logit row, returning
+//! the sampled token AND its logprob under the *untruncated* softmax —
+//! the rollout-policy logprob the trainer's TIS correction consumes.
+//!
+//! (verl computes pi_fp8 the same way: full-vocabulary log-softmax of the
+//! engine logits at the sampled token.)
+
+use crate::util::rng::Pcg64;
+
+use super::request::SamplingParams;
+
+/// log-softmax value of index `idx` under logits (natural log).
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let z: f64 = logits.iter().map(|&l| ((l - m) as f64).exp()).sum();
+    (logits[idx] - m) as f64 as f32 - (z.ln() as f32)
+}
+
+/// Sample one token. Returns (token, logprob under the full softmax at
+/// the sampling temperature).
+pub fn sample(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Pcg64,
+) -> (i32, f32) {
+    if params.temperature <= 0.0 {
+        // greedy
+        let (idx, _) = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        return (idx as i32, log_softmax_at(logits, idx));
+    }
+    let scaled: Vec<f32> =
+        logits.iter().map(|&l| l / params.temperature).collect();
+
+    // candidate set after top-k / top-p truncation
+    let mut order: Vec<usize> = (0..scaled.len()).collect();
+    order.sort_by(|&a, &b| scaled[b].partial_cmp(&scaled[a]).unwrap());
+    let mut keep = order.len();
+    if params.top_k > 0 {
+        keep = keep.min(params.top_k);
+    }
+    if params.top_p < 1.0 {
+        let m = scaled[order[0]];
+        let exps: Vec<f64> = order
+            .iter()
+            .map(|&i| ((scaled[i] - m) as f64).exp())
+            .collect();
+        let total: f64 = exps.iter().sum();
+        let mut acc = 0.0;
+        let mut np = 0;
+        for e in exps.iter().take(keep) {
+            acc += e / total;
+            np += 1;
+            if acc >= params.top_p as f64 {
+                break;
+            }
+        }
+        keep = np.max(1);
+    }
+
+    // sample within the kept set
+    let m = scaled[order[0]];
+    let weights: Vec<f32> = order[..keep]
+        .iter()
+        .map(|&i| ((scaled[i] - m) as f64).exp() as f32)
+        .collect();
+    let pick = rng.categorical(&weights);
+    let idx = order[pick];
+    (idx as i32, log_softmax_at(&scaled, idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(temp: f32) -> SamplingParams {
+        SamplingParams {
+            temperature: temp,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Pcg64::new(1);
+        let (tok, lp) = sample(&logits, &params(0.0), &mut rng);
+        assert_eq!(tok, 1);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn logprob_is_log_softmax() {
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let lp = log_softmax_at(&logits, 2);
+        assert!((lp - (0.25f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sampling_matches_distribution() {
+        let logits = vec![0.0, (2.0f32).ln(), (4.0f32).ln()]; // p = 1:2:4
+        let mut rng = Pcg64::new(2);
+        let mut counts = [0usize; 3];
+        for _ in 0..70_000 {
+            let (t, _) = sample(&logits, &params(1.0), &mut rng);
+            counts[t as usize] += 1;
+        }
+        let total = 70_000f64;
+        assert!((counts[0] as f64 / total - 1.0 / 7.0).abs() < 0.01);
+        assert!((counts[2] as f64 / total - 4.0 / 7.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let logits = vec![5.0, 4.0, -100.0, -100.0];
+        let mut rng = Pcg64::new(3);
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            ..Default::default()
+        };
+        for _ in 0..200 {
+            let (t, _) = sample(&logits, &p, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_head() {
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_p: 0.9,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(4);
+        for _ in 0..200 {
+            let (t, _) = sample(&logits, &p, &mut rng);
+            assert_eq!(t, 0); // head token alone has >90% mass
+        }
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let logits = vec![1.0, 0.0];
+        let mut rng = Pcg64::new(5);
+        let mut hot = 0;
+        let mut cold = 0;
+        for _ in 0..20_000 {
+            if sample(&logits, &params(2.0), &mut rng).0 == 0 {
+                hot += 1;
+            }
+            if sample(&logits, &params(0.25), &mut rng).0 == 0 {
+                cold += 1;
+            }
+        }
+        assert!(cold > hot, "low temperature must concentrate: {cold} vs {hot}");
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the rollout/training hot paths. Adapted from /opt/xla-example/load_hlo.
+//!
+//! Key mechanics:
+//! * HLO **text** interchange (old xla_extension rejects jax>=0.5 protos).
+//! * Outputs arrive as ONE tuple PjRtBuffer per execution; we fetch it to
+//!   a literal and decompose. Inputs can be passed either as host arrays
+//!   (uploaded per call) or as persistent device buffers — the engine
+//!   keeps model weights resident and only streams per-step state.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::host::HostArray;
+use super::manifest::{EntrySpec, Manifest};
+
+/// A device-resident input buffer with its backing host literal pinned.
+pub struct DeviceBuffer {
+    pub buf: xla::PjRtBuffer,
+    _keepalive: xla::Literal,
+}
+
+/// A compiled entrypoint.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host arrays (uploads inputs, downloads outputs).
+    pub fn run(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        Self::collect(out)
+    }
+
+    /// Execute with pre-staged device buffers (the hot path: weights stay
+    /// resident, only per-step state is uploaded by the caller).
+    pub fn run_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<HostArray>> {
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        Self::collect(out)
+    }
+
+    fn collect(
+        out: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<HostArray>> {
+        let buf = &out[0][0];
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts
+            .iter()
+            .map(HostArray::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+
+    fn check_inputs(&self, inputs: &[HostArray]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (a, sig)) in
+            inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            if !a.matches(sig) {
+                bail!(
+                    "{}: input {i} shape/dtype mismatch: got {:?} {:?}, \
+                     want {:?} {:?}",
+                    self.spec.name,
+                    a.shape(),
+                    a.dtype(),
+                    sig.shape,
+                    sig.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The PJRT runtime: one CPU client + a compile cache over entrypoints.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "pjrt client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an entrypoint (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exec = Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host array to a persistent device buffer.
+    ///
+    /// TFRT-CPU's `BufferFromHostLiteral` copies asynchronously and the
+    /// xla crate exposes no ready-future, so the source literal MUST
+    /// outlive the transfer — `DeviceBuffer` pins it for the buffer's
+    /// whole lifetime (dropping it early is a use-after-free that shows
+    /// up as nondeterministic `shape_util.cc` fatal checks).
+    pub fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
+        let lit = a.to_literal()?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceBuffer {
+            buf,
+            _keepalive: lit,
+        })
+    }
+
+    /// Upload many host arrays.
+    pub fn to_device_all(
+        &self,
+        arrays: &[HostArray],
+    ) -> Result<Vec<DeviceBuffer>> {
+        arrays.iter().map(|a| self.to_device(a)).collect()
+    }
+}

@@ -1,0 +1,132 @@
+//! Host-side array values crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSig};
+
+/// A typed host array (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostArray {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostArray {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostArray::F32(shape, data)
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostArray {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostArray::I32(shape, data)
+    }
+
+    pub fn zeros(sig: &TensorSig) -> HostArray {
+        match sig.dtype {
+            DType::F32 => {
+                HostArray::F32(sig.shape.clone(), vec![0.0; sig.numel()])
+            }
+            DType::I32 => {
+                HostArray::I32(sig.shape.clone(), vec![0; sig.numel()])
+            }
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostArray {
+        HostArray::F32(vec![1, 1], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostArray::F32(s, _) | HostArray::I32(s, _) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostArray::F32(..) => DType::F32,
+            HostArray::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostArray::F32(_, d) => Ok(d),
+            _ => bail!("expected f32 array, got i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostArray::F32(_, d) => Ok(d),
+            _ => bail!("expected f32 array, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostArray::I32(_, d) => Ok(d),
+            _ => bail!("expected i32 array, got f32"),
+        }
+    }
+
+    /// Convert to an xla literal (with shape).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostArray::F32(_, d) => xla::Literal::vec1(d),
+            HostArray::I32(_, d) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an xla literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostArray> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                Ok(HostArray::F32(dims, lit.to_vec::<f32>()?))
+            }
+            xla::PrimitiveType::S32 => {
+                Ok(HostArray::I32(dims, lit.to_vec::<i32>()?))
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+
+    pub fn matches(&self, sig: &TensorSig) -> bool {
+        self.shape() == sig.shape.as_slice() && self.dtype() == sig.dtype
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let a = HostArray::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(a.numel(), 6);
+        assert_eq!(a.dtype(), DType::F32);
+        assert!(a.as_f32().is_ok());
+        assert!(a.as_i32().is_err());
+    }
+
+    #[test]
+    fn sig_match() {
+        let sig = TensorSig {
+            shape: vec![4],
+            dtype: DType::I32,
+        };
+        assert!(HostArray::zeros(&sig).matches(&sig));
+        assert!(!HostArray::f32(vec![4], vec![0.0; 4]).matches(&sig));
+    }
+}

@@ -1,0 +1,248 @@
+//! Artifact manifest — the Rust<->Python ABI emitted by
+//! `python/compile/aot.py` (`artifacts/manifest.json`).
+//!
+//! Describes the model architectures (param name/shape lists in flat
+//! order), every AOT entrypoint's input signature, and the experiment
+//! scale constants (batch sizes, sequence lengths) both sides must agree
+//! on.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub arch: String,
+    /// architecture hyperparameters (vocab, d_model, n_layers, ...)
+    pub config: BTreeMap<String, f64>,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    pub fn cfg(&self, key: &str) -> usize {
+        *self
+            .config
+            .get(key)
+            .unwrap_or_else(|| panic!("model config missing '{key}'"))
+            as usize
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,    // prefill | decode | train | logprobs | calibrate
+    pub arch: String,    // dense | moe
+    pub variant: String, // bf16 | fp8lin | ...
+    pub inputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Constants {
+    pub b_rollout: usize,
+    pub prompt_len: usize,
+    pub b_train: usize,
+    pub t_train: usize,
+    pub metric_names: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub constants: Constants,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub entrypoints: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = j.get("constants")?;
+        let constants = Constants {
+            b_rollout: c.get("b_rollout")?.as_usize()?,
+            prompt_len: c.get("prompt_len")?.as_usize()?,
+            b_train: c.get("b_train")?.as_usize()?,
+            t_train: c.get("t_train")?.as_usize()?,
+            metric_names: c
+                .get("metric_names")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let mut models = BTreeMap::new();
+        for (arch, m) in j.get("models")?.as_obj()? {
+            let mut config = BTreeMap::new();
+            for (k, v) in m.get("config")?.as_obj()? {
+                let num = match v {
+                    Json::Num(n) => *n,
+                    Json::Bool(b) => {
+                        if *b {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    }
+                    _ => continue,
+                };
+                config.insert(k.clone(), num);
+            }
+            let params = m
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<std::result::Result<Vec<_>, _>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                arch.clone(),
+                ModelSpec {
+                    arch: arch.clone(),
+                    config,
+                    params,
+                },
+            );
+        }
+
+        let mut entrypoints = BTreeMap::new();
+        for e in j.get("entrypoints")?.as_arr()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(TensorSig {
+                        shape: s
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<std::result::Result<Vec<_>, _>>()?,
+                        dtype: DType::parse(s.get("dtype")?.as_str()?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let spec = EntrySpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                kind: e.get("kind")?.as_str()?.to_string(),
+                arch: e.get("arch")?.as_str()?.to_string(),
+                variant: e.get("variant")?.as_str()?.to_string(),
+                inputs,
+            };
+            entrypoints.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest {
+            dir,
+            constants,
+            models,
+            entrypoints,
+        })
+    }
+
+    pub fn model(&self, arch: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(arch)
+            .with_context(|| format!("unknown arch {arch:?}"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("unknown entrypoint {name:?}"))
+    }
+
+    /// Load the deterministic initial weights dumped by aot.py.
+    pub fn load_initial_params(&self, arch: &str) -> Result<Vec<Vec<f32>>> {
+        let spec = self.model(arch)?;
+        let path = self.dir.join(format!("params_{arch}.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let total: usize = spec.total_weights();
+        if bytes.len() != total * 4 {
+            bail!(
+                "params_{arch}.bin: expected {} bytes, got {}",
+                total * 4,
+                bytes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(spec.params.len());
+        let mut off = 0usize;
+        for p in &spec.params {
+            let n: usize = p.shape.iter().product();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime layer: manifest-driven loading and execution of the AOT
+//! HLO-text artifacts produced by `python/compile/aot.py`.
+pub mod client;
+pub mod host;
+pub mod manifest;
+
+pub use client::{DeviceBuffer, Executable, Runtime};
+pub use host::HostArray;
+pub use manifest::{Constants, DType, EntrySpec, Manifest, ModelSpec, TensorSig};

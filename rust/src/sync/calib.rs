@@ -1,0 +1,81 @@
+//! QKV scale recalibration — both strategies from paper Fig 7.
+//!
+//! The FP8 KV cache needs scales that track the *current* policy: the
+//! policy changes every RL step, so static calibration (as in offline
+//! inference) goes stale. Both strategies execute the same `calibrate`
+//! artifact (a high-precision forward that tracks K/V amax); they differ
+//! in *what data* they feed and *who triggers* them:
+//!
+//! * **InferenceSide** (verl implementation): triggered by the engine
+//!   right before the rollout phase, fed the upcoming rollout *prompts*
+//!   (vLLM's `calculate_kv_scales`-style forced recalibration).
+//! * **TrainerSide** (NeMo-RL implementation): triggered at the end of
+//!   the training step, fed a subset of the *training batch* (prompts +
+//!   previous responses), then shipped to the engine with the weights.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{HostArray, Runtime};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibStrategy {
+    InferenceSide,
+    TrainerSide,
+}
+
+pub struct Calibrator {
+    rt: Arc<Runtime>,
+    arch: String,
+    strategy: CalibStrategy,
+    /// (b_train, t_train) shape the calibrate artifact expects
+    b: usize,
+    t: usize,
+}
+
+impl Calibrator {
+    pub fn new(
+        rt: Arc<Runtime>,
+        arch: &str,
+        strategy: CalibStrategy,
+    ) -> Result<Calibrator> {
+        let c = &rt.manifest.constants;
+        let (b, t) = (c.b_train, c.t_train);
+        Ok(Calibrator {
+            rt,
+            arch: arch.to_string(),
+            strategy,
+            b,
+            t,
+        })
+    }
+
+    pub fn strategy(&self) -> CalibStrategy {
+        self.strategy
+    }
+
+    /// Run recalibration on token rows (ragged; padded/truncated to the
+    /// artifact's (B, T) — the paper's "subset of training data").
+    /// Returns (kscale, vscale).
+    pub fn recalibrate(
+        &self,
+        params: &[HostArray],
+        rows: &[Vec<i32>],
+        pad: i32,
+    ) -> Result<(f32, f32)> {
+        let exe = self.rt.load(&format!("{}_calibrate", self.arch))?;
+        let mut tokens = vec![pad; self.b * self.t];
+        for (i, row) in rows.iter().take(self.b).enumerate() {
+            for (j, &tok) in row.iter().take(self.t).enumerate() {
+                tokens[i * self.t + j] = tok;
+            }
+        }
+        let mut inputs: Vec<HostArray> = params.to_vec();
+        inputs.push(HostArray::i32(vec![self.b, self.t], tokens));
+        let out = exe.run(&inputs)?;
+        let k = out[0].as_f32()?[0];
+        let v = out[1].as_f32()?[0];
+        Ok((k, v))
+    }
+}

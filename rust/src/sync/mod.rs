@@ -1,0 +1,23 @@
+//! Step-level weight synchronization (paper §2.1.2, Fig 1) and QKV scale
+//! recalibration (paper §2.3.1, Fig 7).
+//!
+//! At every RL step:
+//! 1. the trainer's master weights (f32 "BF16" or FP8-trained) are pulled,
+//! 2. the 2-D projection weights are quantized blockwise to E4M3 (128x128
+//!    blocks, FP32 or UE8M0 scales) — embeddings, norms and lm_head stay
+//!    high precision (paper's exclusion list),
+//! 3. the (de)quantized weights are installed into the rollout engine,
+//! 4. the KV scales are recalibrated (inference-side: on the upcoming
+//!    rollout prompts; trainer-side: on the previous training batch).
+//!
+//! The quantize-then-dequantize installation is numerically identical to
+//! shipping (codes, scales) — the engine's Pallas W8A8 kernel re-derives
+//! the same codes (idempotency is asserted in tests) — while the
+//! `QuantizedTensor` codes drive the memory accounting (2x footprint
+//! reduction).
+
+pub mod calib;
+pub mod pipeline;
+
+pub use calib::{CalibStrategy, Calibrator};
+pub use pipeline::{SyncReport, WeightSync, WeightSyncConfig};

@@ -1,0 +1,174 @@
+//! The weight-sync pipeline: trainer params -> blockwise FP8 -> engine.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::fp8::{
+    quantize_blockwise, Fp8Format, ScaleFormat, Tensor, E4M3,
+};
+use crate::runtime::{HostArray, ModelSpec};
+
+/// Which parameters get quantized — the paper's scope list (§2.1.1):
+/// attention projections, MLP projections, MoE experts; embeddings,
+/// norms, lm_head and the (configurable) router are excluded.
+pub fn should_quantize(name: &str, quantize_router: bool) -> bool {
+    if name == "embed" || name == "lm_head" || name == "ln_f" {
+        return false;
+    }
+    if name.ends_with("ln1") || name.ends_with("ln2") {
+        return false;
+    }
+    if name.ends_with("router") {
+        return quantize_router;
+    }
+    name.ends_with("q_proj")
+        || name.ends_with("k_proj")
+        || name.ends_with("v_proj")
+        || name.ends_with("o_proj")
+        || name.ends_with("gate_proj")
+        || name.ends_with("up_proj")
+        || name.ends_with("down_proj")
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightSyncConfig {
+    /// quantize at all (false = BF16 rollout: weights pass through)
+    pub fp8: bool,
+    pub fmt: Fp8Format,
+    pub scale_fmt: ScaleFormat,
+    pub block: (usize, usize),
+    /// include the MoE router in quantization (Fig 6 ablation: only the
+    /// router-FP8 variant sets this)
+    pub quantize_router: bool,
+}
+
+impl WeightSyncConfig {
+    pub fn bf16() -> Self {
+        WeightSyncConfig {
+            fp8: false,
+            fmt: E4M3,
+            scale_fmt: ScaleFormat::Fp32,
+            block: (128, 128),
+            quantize_router: false,
+        }
+    }
+
+    pub fn fp8() -> Self {
+        WeightSyncConfig {
+            fp8: true,
+            ..Self::bf16()
+        }
+    }
+}
+
+/// Result of one synchronization (metrics for EXPERIMENTS.md).
+#[derive(Clone, Debug, Default)]
+pub struct SyncReport {
+    pub n_quantized: usize,
+    pub n_passthrough: usize,
+    /// bytes if shipped as f32/bf16 vs as (codes + scales)
+    pub bytes_bf16: usize,
+    pub bytes_fp8: usize,
+    pub elapsed_s: f64,
+    /// max |w - dequant(quant(w))| across quantized tensors
+    pub max_quant_err: f32,
+}
+
+/// The pipeline object. Stateless apart from config; `run` converts a
+/// full flat param list into the engine-installable list.
+pub struct WeightSync {
+    pub cfg: WeightSyncConfig,
+}
+
+impl WeightSync {
+    pub fn new(cfg: WeightSyncConfig) -> WeightSync {
+        WeightSync { cfg }
+    }
+
+    /// Quantize the trainer's params per the scope rules. Returns the
+    /// arrays to install into the engine plus a report.
+    pub fn run(
+        &self,
+        spec: &ModelSpec,
+        params: &[HostArray],
+    ) -> Result<(Vec<HostArray>, SyncReport)> {
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(params.len());
+        let mut rep = SyncReport::default();
+        for (p, a) in spec.params.iter().zip(params) {
+            let data = a.as_f32()?;
+            rep.bytes_bf16 += data.len() * 2;
+            if self.cfg.fp8
+                && p.shape.len() == 2
+                && should_quantize(&p.name, self.cfg.quantize_router)
+            {
+                let t = Tensor::new(p.shape.clone(), data.to_vec())?;
+                let q = quantize_blockwise(
+                    &t,
+                    self.cfg.block,
+                    self.cfg.fmt,
+                    self.cfg.scale_fmt,
+                );
+                rep.bytes_fp8 += q.nbytes();
+                let d = q.dequantize();
+                rep.max_quant_err =
+                    rep.max_quant_err.max(t.max_abs_diff(&d));
+                rep.n_quantized += 1;
+                out.push(HostArray::f32(p.shape.clone(), d.data));
+            } else {
+                rep.bytes_fp8 += data.len() * 2; // shipped at bf16
+                rep.n_passthrough += 1;
+                out.push(a.clone());
+            }
+        }
+        rep.elapsed_s = t0.elapsed().as_secs_f64();
+        Ok((out, rep))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_rules() {
+        assert!(should_quantize("layer0.q_proj", false));
+        assert!(should_quantize("layer3.down_proj", false));
+        assert!(should_quantize("layer1.expert4.gate_proj", false));
+        assert!(!should_quantize("embed", false));
+        assert!(!should_quantize("lm_head", false));
+        assert!(!should_quantize("ln_f", false));
+        assert!(!should_quantize("layer0.ln1", false));
+        assert!(!should_quantize("layer0.router", false));
+        assert!(should_quantize("layer0.router", true));
+    }
+
+    #[test]
+    fn quantization_is_idempotent() {
+        // dequant(quant(dequant(quant(w)))) == dequant(quant(w)) — the
+        // property that lets the sync pipeline ship dequantized f32 while
+        // the engine-side kernel re-derives identical codes.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(7);
+        let data: Vec<f32> =
+            (0..64 * 64).map(|_| rng.normal() as f32).collect();
+        let t = Tensor::new(vec![64, 64], data).unwrap();
+        let q1 = quantize_blockwise(
+            &t,
+            (32, 32),
+            E4M3,
+            ScaleFormat::Fp32,
+        );
+        let d1 = q1.dequantize();
+        let q2 = quantize_blockwise(
+            &d1,
+            (32, 32),
+            E4M3,
+            ScaleFormat::Fp32,
+        );
+        let d2 = q2.dequantize();
+        assert_eq!(d1, d2);
+        assert_eq!(q1.codes, q2.codes);
+    }
+}

@@ -1,0 +1,216 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
+//! from `gen`; on failure it performs greedy shrinking via the input's
+//! `Shrink` implementation and reports the minimal counterexample with
+//! the seed needed to replay it.
+//!
+//! Used by the coordinator/rollout invariant suites
+//! (`rust/tests/prop_*.rs`).
+
+use crate::util::rng::Pcg64;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate smaller values (tried in order, first failing one wins).
+    fn shrink(&self) -> Vec<Self>;
+}
+
+/// Halving-distance candidates: n-d for d = n, n/2, n/4, ..., 1. Gives
+/// binary-search convergence to a failing boundary in O(log n) rounds.
+fn int_candidates(n: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut d = n;
+    while d > 0 {
+        out.push(n - d);
+        d /= 2;
+    }
+    out.dedup();
+    out
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        int_candidates(*self as u64)
+            .into_iter()
+            .map(|v| v as usize)
+            .collect()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        int_candidates(*self)
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            out.push(self.trunc());
+        }
+        out.retain(|v| v != self);
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            let mut tail = self.clone();
+            tail.pop();
+            out.push(tail);
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for s in x.shrink().into_iter().take(2) {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Result of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over random inputs with shrinking on failure.
+///
+/// Panics with the minimal counterexample (so `cargo test` reports it).
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg64) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (seed {seed}, case {case}):\n  \
+                 input: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> PropResult>(
+    mut cur: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // greedy descent, bounded
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in cur.shrink() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+/// Generate a vector of length in [lo, hi] with element generator `f`.
+pub fn vec_of<T>(
+    rng: &mut Pcg64,
+    lo: usize,
+    hi: usize,
+    mut f: impl FnMut(&mut Pcg64) -> T,
+) -> Vec<T> {
+    let n = rng.range_i64(lo as i64, hi as i64) as usize;
+    (0..n).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            200,
+            |r| r.below(1000) as usize,
+            |&n| {
+                if n < 1000 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                2,
+                200,
+                |r| r.below(1000) as usize,
+                |&n| {
+                    if n < 500 {
+                        Ok(())
+                    } else {
+                        Err(format!("{n} too big"))
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink should land exactly on the boundary 500
+        assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                3,
+                100,
+                |r| vec_of(r, 0, 20, |rr| rr.below(10) as usize),
+                |v: &Vec<usize>| {
+                    if v.len() < 3 {
+                        Ok(())
+                    } else {
+                        Err("long".into())
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing vec has exactly 3 elements
+        let count = msg.matches(',').count();
+        assert!(count <= 3, "not shrunk: {msg}");
+    }
+}

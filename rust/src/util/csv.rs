@@ -1,0 +1,79 @@
+//! CSV writer for experiment curves (`results/*.csv`) — the files the
+//! figure-reproduction harness emits and EXPERIMENTS.md references.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = File::create(&path)
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        let line = values
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        writeln!(self.out, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join("fp8rl_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,2.5\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let dir = std::env::temp_dir().join("fp8rl_csv_test2");
+        let mut w =
+            CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        w.row(&[1.0]).unwrap();
+    }
+}

@@ -1,0 +1,6 @@
+//! Substrate utilities: JSON, RNG, statistics, CLI parsing, CSV output.
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,230 @@
+//! Property tests on the coordinator/rollout invariants (the testkit
+//! mini-proptest framework — proptest is unavailable offline).
+//!
+//! Invariants under arbitrary workloads:
+//!   * the KV allocator never double-books or leaks blocks;
+//!   * the scheduler's running set and KV allocations stay in sync
+//!     through admit / extend / preempt / finish storms;
+//!   * every submitted request is eventually admitted at least once when
+//!     capacity allows;
+//!   * FP8 KV capacity is exactly 2x BF16 for the same budget;
+//!   * group-relative advantages are zero-mean within every group.
+
+use fp8_rl::rl::dapo::{group_advantages, Sample};
+use fp8_rl::rl::task::make_problem;
+use fp8_rl::rollout::kvcache::{
+    KvBlockManager, KvGeometry, KvPrecision,
+};
+use fp8_rl::rollout::request::{
+    Completion, FinishReason, Request, SamplingParams,
+};
+use fp8_rl::rollout::scheduler::Scheduler;
+use fp8_rl::testkit::{check, vec_of, Shrink};
+use fp8_rl::util::rng::Pcg64;
+
+fn geo(block_tokens: usize) -> KvGeometry {
+    KvGeometry {
+        n_layers: 2,
+        n_kv_heads: 2,
+        d_head: 8,
+        block_tokens,
+        precision: KvPrecision::Bf16,
+    }
+}
+
+/// One scripted scheduler op.
+#[derive(Clone, Debug)]
+enum Op {
+    Submit(usize),  // prompt length
+    Admit,
+    Extend,
+    FinishOldest,
+}
+
+impl Shrink for Op {
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            Op::Submit(n) if *n > 1 => vec![Op::Submit(n / 2)],
+            _ => vec![],
+        }
+    }
+}
+
+fn random_ops(rng: &mut Pcg64) -> Vec<Op> {
+    vec_of(rng, 1, 60, |r| match r.below(4) {
+        0 => Op::Submit(1 + r.below(12) as usize),
+        1 => Op::Admit,
+        2 => Op::Extend,
+        _ => Op::FinishOldest,
+    })
+}
+
+fn run_script(
+    blocks: usize,
+    max_batch: usize,
+    ops: &[Op],
+) -> Result<(), String> {
+    let mut sched =
+        Scheduler::new(KvBlockManager::new(geo(4), blocks), max_batch);
+    let mut next_id = 0u64;
+    for op in ops {
+        match op {
+            Op::Submit(plen) => {
+                sched.submit(Request {
+                    id: next_id,
+                    prompt: vec![0; *plen],
+                    params: SamplingParams::default(),
+                });
+                next_id += 1;
+            }
+            Op::Admit => {
+                sched.admit();
+            }
+            Op::Extend => {
+                let ids = sched.running_ids().to_vec();
+                sched.extend_all(&ids);
+            }
+            Op::FinishOldest => {
+                if let Some(&id) = sched.running_ids().first() {
+                    sched.finish(id);
+                }
+            }
+        }
+        sched.check_invariants()?;
+    }
+    Ok(())
+}
+
+#[test]
+fn scheduler_invariants_hold_under_op_storms() {
+    check(
+        101,
+        300,
+        |r| {
+            let blocks = 1 + r.below(24) as usize;
+            let max_batch = 1 + r.below(8) as usize;
+            (blocks, (max_batch, random_ops(r)))
+        },
+        |(blocks, (max_batch, ops))| {
+            run_script(*blocks, *max_batch, ops)
+        },
+    );
+}
+
+#[test]
+fn kv_capacity_doubles_with_fp8() {
+    check(
+        102,
+        200,
+        |r| 1usize + r.below(1 << 22) as usize,
+        |&budget| {
+            let bf = KvGeometry {
+                precision: KvPrecision::Bf16,
+                ..geo(16)
+            };
+            let f8 = KvGeometry {
+                precision: KvPrecision::Fp8,
+                ..geo(16)
+            };
+            let nb = bf.blocks_in(budget);
+            let nf = f8.blocks_in(budget);
+            // fp8 fits at least 2x-1 blocks (floor effects) and at most 2x+1
+            if nf < nb * 2 || nf > nb * 2 + 1 {
+                return Err(format!("budget {budget}: bf16 {nb} fp8 {nf}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn no_request_starves_with_capacity() {
+    // submit K short requests into ample capacity; after one admit all
+    // must be running
+    check(
+        103,
+        200,
+        |r| 1usize + r.below(6) as usize,
+        |&k| {
+            let mut sched = Scheduler::new(
+                KvBlockManager::new(geo(4), 64),
+                8,
+            );
+            for id in 0..k as u64 {
+                sched.submit(Request {
+                    id,
+                    prompt: vec![0; 3],
+                    params: SamplingParams::default(),
+                });
+            }
+            let admitted = sched.admit();
+            if admitted.len() != k.min(8) {
+                return Err(format!(
+                    "admitted {} of {k}",
+                    admitted.len()
+                ));
+            }
+            sched.check_invariants()
+        },
+    );
+}
+
+#[test]
+fn group_advantages_zero_mean_per_group() {
+    check(
+        104,
+        300,
+        |r| {
+            let n_groups = 1 + r.below(4) as usize;
+            vec_of(r, n_groups, n_groups * 6, |rr| {
+                (
+                    rr.below(n_groups as u64) as usize,
+                    (rr.next_f32() * 2.0) - 0.5,
+                )
+            })
+        },
+        |pairs: &Vec<(usize, f32)>| {
+            let samples: Vec<Sample> = pairs
+                .iter()
+                .map(|(g, rew)| {
+                    let problem = make_problem(1, 2);
+                    Sample {
+                        problem: problem.clone(),
+                        completion: Completion {
+                            id: 0,
+                            prompt: problem.prompt.clone(),
+                            tokens: vec![3, 13],
+                            logprobs: vec![-0.1, -0.1],
+                            finish: FinishReason::Eos,
+                            preemptions: 0,
+                        },
+                        reward: *rew,
+                        group: *g,
+                    }
+                })
+                .collect();
+            let advs = group_advantages(&samples, 1e-4);
+            let n_groups =
+                samples.iter().map(|s| s.group).max().unwrap() + 1;
+            for g in 0..n_groups {
+                let vals: Vec<f32> = samples
+                    .iter()
+                    .zip(&advs)
+                    .filter(|(s, _)| s.group == g)
+                    .map(|(_, &a)| a)
+                    .collect();
+                if vals.is_empty() {
+                    continue;
+                }
+                let mean: f32 =
+                    vals.iter().sum::<f32>() / vals.len() as f32;
+                if mean.abs() > 1e-3 {
+                    return Err(format!(
+                        "group {g} advantage mean {mean}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,153 @@
+//! Rust-vs-JAX FP8 parity: the Rust codecs/quantizer must agree
+//! bit-exactly with the numerics baked into the AOT artifacts (jax's
+//! ml_dtypes casts). Golden values were captured from jax 0.8.2
+//! (`float8_e4m3fn` / `float8_e5m2` casts after an explicit clip) —
+//! python/tests/test_fp8_formats.py asserts the same table from the
+//! Python side, so both halves are pinned to one contract.
+
+use fp8_rl::fp8::{
+    qdq_act_tilewise, qdq_blockwise, ScaleFormat, Tensor, E4M3, E5M2,
+};
+use fp8_rl::testkit::check;
+use fp8_rl::util::rng::Pcg64;
+
+/// (input, e4m3 round-trip, e5m2 round-trip) — golden from jax.
+const GOLDEN: &[(f32, f32, f32)] = &[
+    (0.0, 0.0, 0.0),
+    (1.0, 1.0, 1.0),
+    (1.7, 1.75, 1.75),
+    (-300.0, -288.0, -320.0),
+    (500.0, 448.0, 512.0),
+    (0.001, 0.001953125, 0.0009765625),
+    (448.0, 448.0, 448.0),
+    (57344.0, 448.0, 57344.0),
+    (-0.17, -0.171875, -0.15625),
+    (3.14159, 3.25, 3.0),
+    (1e-9, 0.0, 0.0),
+    (0.0625, 0.0625, 0.0625),
+];
+
+#[test]
+fn golden_e4m3_parity_with_jax() {
+    for &(x, want, _) in GOLDEN {
+        assert_eq!(E4M3.qdq(x), want, "e4m3({x})");
+    }
+}
+
+#[test]
+fn golden_e5m2_parity_with_jax() {
+    for &(x, _, want) in GOLDEN {
+        assert_eq!(E5M2.qdq(x), want, "e5m2({x})");
+    }
+}
+
+#[test]
+fn qdq_is_projection() {
+    // property: quantization is idempotent (a projection onto the fp8
+    // grid) for every format and any input
+    check(
+        7,
+        2000,
+        |r| (r.next_f32() - 0.5) * 1000.0,
+        |&x| {
+            for f in [E4M3, E5M2] {
+                let once = f.qdq(x);
+                let twice = f.qdq(once);
+                if once != twice {
+                    return Err(format!(
+                        "{f:?}: qdq({x}) = {once}, qdq^2 = {twice}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn qdq_never_increases_magnitude_error_past_half_ulp() {
+    // |x - qdq(x)| <= 2^-mbits * |x| for normals (relative half-ulp-ish
+    // bound: ulp(x) <= x * 2^(1-mbits))
+    check(
+        8,
+        2000,
+        |r| 0.02f32 + r.next_f32() * 440.0,
+        |&x| {
+            let q = E4M3.qdq(x);
+            let bound = x * (1.0 / 16.0) + 1e-6;
+            if (q - x).abs() > bound {
+                return Err(format!("e4m3({x}) = {q}, err > {bound}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blockwise_matches_flat_when_single_block() {
+    // a whole-tensor block is just per-tensor quantization
+    let mut rng = Pcg64::new(9);
+    let data: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let t = Tensor::new(vec![8, 8], data.clone()).unwrap();
+    let q = qdq_blockwise(&t, (8, 8), E4M3, ScaleFormat::Fp32);
+    let amax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = amax / 448.0;
+    for (i, (&x, &y)) in data.iter().zip(&q.data).enumerate() {
+        let want = E4M3.qdq(x / scale) * scale;
+        assert!(
+            (y - want).abs() < 1e-7,
+            "elem {i}: {y} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn act_tilewise_respects_tile_independence() {
+    // changing one tile must not change another tile's quantization
+    let mut rng = Pcg64::new(10);
+    let base: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+    let t1 = Tensor::new(vec![1, 32], base.clone()).unwrap();
+    let mut bumped = base.clone();
+    bumped[0] = 1000.0; // tile 0 outlier
+    let t2 = Tensor::new(vec![1, 32], bumped).unwrap();
+    let q1 = qdq_act_tilewise(&t1, 16, E4M3, ScaleFormat::Fp32);
+    let q2 = qdq_act_tilewise(&t2, 16, E4M3, ScaleFormat::Fp32);
+    // tile 1 (elements 16..32) identical
+    assert_eq!(&q1.data[16..], &q2.data[16..]);
+    // tile 0 differs
+    assert_ne!(&q1.data[..16], &q2.data[..16]);
+}
+
+#[test]
+fn ue8m0_scales_never_overflow_codes() {
+    // with pow2 ceil scales, |x|/scale <= 448 always (no saturation)
+    check(
+        11,
+        1000,
+        |r| {
+            let n = 16;
+            (0..n)
+                .map(|_| (r.next_f32() - 0.5) * 2000.0)
+                .collect::<Vec<f32>>()
+        },
+        |xs: &Vec<f32>| {
+            let t = Tensor::new(vec![1, xs.len()], xs.clone()).unwrap();
+            let q = fp8_rl::fp8::quantize_blockwise(
+                &t,
+                (1, xs.len()),
+                E4M3,
+                ScaleFormat::Ue8m0,
+            );
+            let s = q.scales[0];
+            for &x in xs {
+                if (x / s).abs() > 448.0 + 1e-3 {
+                    return Err(format!(
+                        "|{x}|/{s} = {} > 448",
+                        (x / s).abs()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

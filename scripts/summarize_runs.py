@@ -1,0 +1,12 @@
+import csv, glob, os
+def tail_mean(rows, key, n=10):
+    vals = [float(r[key]) for r in rows[-n:] if r[key] not in ('', 'NaN', 'nan')]
+    return sum(vals)/len(vals) if vals else float('nan')
+def peak(rows, key):
+    vals = [float(r[key]) for r in rows if r[key] not in ('', 'NaN', 'nan')]
+    return max(vals) if vals else float('nan')
+print(f"{'run':32} {'rew(t10)':>9} {'acc(t10)':>9} {'acc(max)':>9} {'kl(t10)':>10} {'kl(max)':>10} {'ent(t10)':>9} {'ex_fc1(max)':>11} {'gnorm(max)':>10}")
+for f in sorted(glob.glob('results/runs/*.csv')):
+    rows = list(csv.DictReader(open(f)))
+    name = os.path.basename(f)[:-4]
+    print(f"{name:32} {tail_mean(rows,'reward'):9.3f} {tail_mean(rows,'val_accuracy'):9.3f} {peak(rows,'val_accuracy'):9.3f} {tail_mean(rows,'mismatch_kl'):10.2e} {peak(rows,'mismatch_kl'):10.2e} {tail_mean(rows,'entropy'):9.2f} {peak(rows,'exceed_fc1'):11.4f} {peak(rows,'grad_norm'):10.2f}")
