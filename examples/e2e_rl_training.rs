@@ -15,10 +15,10 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
 use fp8_rl::runtime::Runtime;
 use fp8_rl::util::cli::Args;
+use fp8_rl::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;

@@ -7,11 +7,11 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use fp8_rl::rl::trainer::{Trainer, TrainerConfig};
 use fp8_rl::rollout::{EngineConfig, HloEngine, Request, SamplingParams};
 use fp8_rl::runtime::Runtime;
 use fp8_rl::sync::{WeightSync, WeightSyncConfig};
+use fp8_rl::util::error::Result;
 
 fn main() -> Result<()> {
     let rt = Arc::new(Runtime::new("artifacts")?);

@@ -11,12 +11,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
 use fp8_rl::rollout::{
     EngineConfig, HloEngine, Request, RoutePolicy, Router, SamplingParams,
 };
 use fp8_rl::runtime::Runtime;
 use fp8_rl::util::cli::Args;
+use fp8_rl::util::error::Result;
 use fp8_rl::util::rng::Pcg64;
 
 fn main() -> Result<()> {

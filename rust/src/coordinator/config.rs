@@ -35,7 +35,7 @@ pub struct ExperimentConfig {
 impl ExperimentConfig {
     /// Load from a JSON config file; only present keys override the
     /// defaults (the config system for scripted experiment sweeps).
-    pub fn from_json_file(path: &str) -> anyhow::Result<Self> {
+    pub fn from_json_file(path: &str) -> crate::util::error::Result<Self> {
         use crate::util::json::Json;
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text)?;

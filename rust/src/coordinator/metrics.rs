@@ -3,9 +3,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::Result;
-
 use crate::util::csv::CsvWriter;
+use crate::util::error::Result;
 
 /// Column order for the training-curve CSVs (matches the paper's panels:
 /// accuracy / reward / response length / mismatch KL, plus diagnostics).

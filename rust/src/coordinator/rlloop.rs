@@ -9,10 +9,9 @@
 //! TIS corrects the mismatch, and which calibration strategy refreshes
 //! the KV scales.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
-
-use anyhow::Result;
 
 use crate::rl::dapo::{Sample, TrainBatch};
 use crate::rl::task::{Task, TaskConfig, TOK_PAD};
@@ -22,9 +21,20 @@ use crate::rollout::{
 };
 use crate::runtime::Runtime;
 use crate::sync::{CalibStrategy, Calibrator, WeightSync, WeightSyncConfig};
+use crate::util::error::Result;
 
 use super::config::ExperimentConfig;
 use super::metrics::{Recorder, StepRecord};
+
+/// Globally unique, monotone request ids. The old scheme —
+/// `(pi * n + si) + req_counter * 10_000` — collided as soon as a step
+/// produced >= 10_000 requests, silently cross-wiring completions
+/// between prompt groups; the bare counter cannot collide and the id ->
+/// origin maps below replace the O(n^2) `position()` scans.
+fn next_request_id(counter: &mut u64) -> u64 {
+    *counter += 1;
+    *counter
+}
 
 pub struct RlLoop {
     pub cfg: ExperimentConfig,
@@ -93,7 +103,7 @@ impl RlLoop {
         for step in 0..self.cfg.steps {
             let rec = self.step(step)?;
             if step % 10 == 0 {
-                log::info!(
+                crate::log_info!(
                     "[{}] step {step}: reward={:.3} acc={:.3} kl={:.2e}",
                     self.cfg.name,
                     rec.get("reward"),
@@ -150,12 +160,14 @@ impl RlLoop {
         let t1 = Instant::now();
         let n = self.cfg.samples_per_prompt;
         let mut requests = Vec::new();
+        // id -> flat (problem, sample) slot, for completion mapping
+        let mut origin: BTreeMap<u64, usize> = BTreeMap::new();
         for (pi, p) in problems.iter().enumerate() {
             for si in 0..n {
-                self.req_counter += 1;
+                let id = next_request_id(&mut self.req_counter);
+                origin.insert(id, pi * n + si);
                 requests.push(Request {
-                    id: (pi * n + si) as u64
-                        + self.req_counter * 10_000,
+                    id,
                     prompt: p.prompt.clone(),
                     params: SamplingParams {
                         temperature: 1.0,
@@ -165,7 +177,7 @@ impl RlLoop {
                 });
             }
         }
-        let id_base: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        debug_assert_eq!(origin.len(), requests.len());
         let pre_preempt = self.engine.stats.preemptions;
         let completions = self.engine.generate(requests)?;
         rec.set(
@@ -177,11 +189,10 @@ impl RlLoop {
         // map completions back to (problem, group)
         let mut samples: Vec<Sample> = Vec::new();
         for c in completions {
-            let idx = id_base
-                .iter()
-                .position(|&id| id == c.id)
+            let idx = *origin
+                .get(&c.id)
                 .expect("completion for unknown request");
-            let (pi, _si) = (idx / n, idx % n);
+            let pi = idx / n;
             samples.push(Sample {
                 problem: problems[pi].clone(),
                 completion: c,
@@ -239,10 +250,12 @@ impl RlLoop {
     pub fn validate(&mut self) -> Result<f64> {
         let problems = self.task.validation().to_vec();
         let mut requests = Vec::new();
+        let mut origin: BTreeMap<u64, usize> = BTreeMap::new();
         for (i, p) in problems.iter().enumerate() {
-            self.req_counter += 1;
+            let id = next_request_id(&mut self.req_counter);
+            origin.insert(id, i);
             requests.push(Request {
-                id: i as u64 + self.req_counter * 10_000,
+                id,
                 prompt: p.prompt.clone(),
                 params: SamplingParams {
                     temperature: 0.0,
@@ -251,12 +264,10 @@ impl RlLoop {
                 },
             });
         }
-        let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
         let completions = self.engine.generate(requests)?;
         let mut correct = 0usize;
         for c in &completions {
-            let idx =
-                ids.iter().position(|&id| id == c.id).unwrap();
+            let idx = origin[&c.id];
             if Task::is_correct(&problems[idx], &c.tokens) {
                 correct += 1;
             }
@@ -266,5 +277,43 @@ impl RlLoop {
 
     pub fn engine_stats(&self) -> &crate::rollout::EngineStats {
         &self.engine.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::next_request_id;
+
+    #[test]
+    fn request_ids_never_collide() {
+        // regression for the old `(pi*n+si) + counter*10_000` scheme:
+        // with 10_001 requests per step, step 0's request 10_000 and
+        // step 1's request 0 produced the same id
+        const PER_STEP: u64 = 10_001;
+        let mut old_counter = 0u64;
+        let mut old_ids = BTreeSet::new();
+        let mut old_collided = false;
+        for _step in 0..2 {
+            for j in 0..PER_STEP {
+                old_counter += 1;
+                if !old_ids.insert(j + old_counter * 10_000) {
+                    old_collided = true;
+                }
+            }
+        }
+        assert!(old_collided, "old id scheme should collide here");
+
+        let mut counter = 0u64;
+        let mut ids = BTreeSet::new();
+        for _step in 0..2 {
+            for _ in 0..PER_STEP {
+                assert!(
+                    ids.insert(next_request_id(&mut counter)),
+                    "monotone ids must be unique"
+                );
+            }
+        }
     }
 }

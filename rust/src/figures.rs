@@ -13,8 +13,6 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
 use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
 use fp8_rl::fp8::ScaleFormat;
 use fp8_rl::perfmodel::{
@@ -25,6 +23,7 @@ use fp8_rl::runtime::Runtime;
 use fp8_rl::sync::CalibStrategy;
 use fp8_rl::util::cli::Args;
 use fp8_rl::util::csv::CsvWriter;
+use fp8_rl::util::error::{bail, Context, Result};
 
 pub const FIGURES: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10",
@@ -182,7 +181,12 @@ fn figure_arms(fig: &str) -> Option<Vec<(&'static str, &'static str)>> {
 pub fn reproduce(args: &Args) -> Result<()> {
     let fig = args.str_or("figure", "all").to_string();
     let out_dir = args.str_or("out", "results").to_string();
-    let steps_override = args.get("steps").map(|s| s.parse::<usize>());
+    let steps_override = match args.get("steps") {
+        Some(s) => Some(s.parse::<usize>().with_context(|| {
+            format!("--steps expects an integer, got '{s}'")
+        })?),
+        None => None,
+    };
     let figs: Vec<String> = if fig == "all" {
         FIGURES
             .iter()
@@ -219,8 +223,8 @@ pub fn reproduce(args: &Args) -> Result<()> {
             continue;
         }
         let mut cfg = registry[run].clone();
-        if let Some(s) = &steps_override {
-            cfg.steps = *s.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(s) = steps_override {
+            cfg.steps = s;
         }
         println!("[run] {run} ({} steps, arch={})", cfg.steps, cfg.arch);
         let t0 = std::time::Instant::now();

@@ -4,7 +4,7 @@
 //! lives in the AOT-compiled XLA artifacts; Rust-side tensor work is
 //! limited to quantization passes, parameter storage and metrics.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {

@@ -15,11 +15,14 @@
 //!   arithmetic task, trainer driving the train-step artifact.
 //! * [`fp8`] — bit-exact E4M3/E5M2/UE8M0 software codecs + blockwise
 //!   quantizer (the numeric core of weight sync).
-//! * [`runtime`] — PJRT wrapper loading the AOT HLO-text artifacts.
+//! * [`runtime`] — manifest-driven execution behind a pluggable
+//!   [`runtime::Backend`]: the hermetic [`runtime::RefBackend`] by
+//!   default, the XLA PJRT wrapper for the AOT HLO-text artifacts
+//!   behind the `pjrt` cargo feature.
 //! * [`perfmodel`] — H100 roofline cost model reproducing the paper's
 //!   throughput figures on 8B-dense / 30B-MoE descriptors.
 //! * [`util`], [`testkit`], [`bench`] — substrates built in-repo (the
-//!   offline registry lacks serde/clap/criterion/proptest).
+//!   offline registry lacks serde/clap/criterion/proptest/anyhow/log).
 
 pub mod bench;
 pub mod coordinator;

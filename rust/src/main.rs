@@ -14,17 +14,15 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
 use fp8_rl::runtime::Runtime;
 use fp8_rl::util::cli::Args;
+use fp8_rl::util::error::Result;
 
 mod figures;
-mod logger;
 
 fn main() -> Result<()> {
-    logger::init();
+    fp8_rl::util::log::init();
     let args = Args::from_env()?;
     let cmd = args
         .positional

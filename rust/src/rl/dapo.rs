@@ -81,6 +81,11 @@ impl TrainBatch {
         adv_eps: f32,
         drop_zero_variance_groups: bool,
     ) -> TrainBatch {
+        assert!(
+            t >= 2,
+            "t_train must be at least 2, got {t}: the (B, T-1) \
+             next-token buffers would underflow"
+        );
         let advs = group_advantages(samples, adv_eps);
         // dynamic sampling: identify zero-signal groups
         let n_groups = samples
@@ -149,6 +154,11 @@ impl TrainBatch {
                     s.completion.logprobs[k];
             }
         }
+        // metrics average over the rows actually assembled: when a step
+        // produces more samples than b_train, the overflow rows carry
+        // no tokens/rewards into this batch and must not dilute (or
+        // skew) the recorded reward
+        let used = samples.len().min(b).max(1);
         TrainBatch {
             b,
             t,
@@ -156,9 +166,8 @@ impl TrainBatch {
             mask,
             advantages,
             rollout_logp,
-            mean_reward: total_reward / samples.len().max(1) as f32,
-            mean_response_len: total_len as f32
-                / samples.len().max(1) as f32,
+            mean_reward: total_reward / used as f32,
+            mean_response_len: total_len as f32 / used as f32,
             dropped_groups,
         }
     }
@@ -231,6 +240,27 @@ mod tests {
         for j in 0..15 {
             assert_eq!(batch.mask[2 * 15 + j], 0.0);
         }
+    }
+
+    #[test]
+    fn overflow_metrics_average_filled_rows_only() {
+        // regression: 3 samples into b=2 used to divide the 2 assembled
+        // rows' totals by 3, under-reporting reward and length
+        let samples = vec![
+            sample(0, 1.0, vec![5, 5, TOK_EOS]),
+            sample(0, 1.0, vec![5, 5, TOK_EOS]),
+            sample(1, 0.0, vec![9, TOK_EOS]),
+        ];
+        let batch = TrainBatch::assemble(&samples, 2, 16, 1e-4, false);
+        assert_eq!(batch.mean_reward, 1.0);
+        assert_eq!(batch.mean_response_len, 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "t_train must be at least 2")]
+    fn degenerate_t_panics_with_diagnostic() {
+        let samples = vec![sample(0, 1.0, vec![5, TOK_EOS])];
+        let _ = TrainBatch::assemble(&samples, 2, 1, 1e-4, false);
     }
 
     #[test]

@@ -9,9 +9,8 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
 use crate::runtime::{HostArray, Runtime};
+use crate::util::error::{bail, Result};
 
 use super::dapo::TrainBatch;
 

@@ -1,6 +1,7 @@
-//! The HLO-backed generation engine: continuous batching over the AOT
-//! decode artifact, with the paged-KV scheduler, per-slot sampling and
-//! rollout-policy logprob capture.
+//! The generation engine: continuous batching over the decode
+//! entrypoint (RefBackend or PJRT — see runtime/backend.rs), with the
+//! paged-KV scheduler, per-slot sampling and rollout-policy logprob
+//! capture.
 //!
 //! Slot model: the decode artifact has a fixed batch of `B` slots. Each
 //! slot hosts one running sequence at its own position. New sequences are
@@ -17,9 +18,8 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
-use crate::runtime::{Executable, HostArray, Runtime};
+use crate::runtime::{DeviceBuffer, Executable, HostArray, Runtime};
+use crate::util::error::{bail, Result};
 use crate::util::rng::Pcg64;
 
 use super::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
@@ -89,7 +89,7 @@ pub struct HloEngine {
     cfg: EngineConfig,
     prefill: Arc<Executable>,
     decode: Arc<Executable>,
-    param_bufs: Vec<crate::runtime::DeviceBuffer>,
+    param_bufs: Vec<DeviceBuffer>,
     /// dense KV cache state threaded through decode calls
     kc: HostArray,
     vc: HostArray,
@@ -220,6 +220,25 @@ impl HloEngine {
         let mut guard = 0usize;
         while !self.sched.is_idle() {
             self.admit_into_slots();
+            if self.sched.n_running() == 0 {
+                // Nothing is running and admission produced nothing, so
+                // no KV block can ever be freed: the head-of-line
+                // request can never fit. Fail fast with a diagnostic
+                // instead of spinning 200k no-op iterations.
+                let head = self
+                    .sched
+                    .head_of_line()
+                    .expect("stalled scheduler with an empty queue");
+                bail!(
+                    "engine stalled: request {} can never be admitted — \
+                     its {}-token prompt (+1 growth reserve) needs {} KV \
+                     blocks but the cache has only {} blocks total",
+                    head.id,
+                    head.prompt.len(),
+                    self.sched.kv.blocks_for(head.prompt.len() + 1),
+                    self.sched.kv.total_blocks()
+                );
+            }
             self.decode_step(&mut done)?;
             guard += 1;
             if guard > 200_000 {
@@ -279,9 +298,9 @@ impl HloEngine {
         inputs.push(ks);
         inputs.push(vs);
         let in_bufs = self.rt.to_device_all(&inputs)?;
-        let mut all: Vec<&xla::PjRtBuffer> =
-            self.param_bufs.iter().map(|d| &d.buf).collect();
-        all.extend(in_bufs.iter().map(|d| &d.buf));
+        let mut all: Vec<&DeviceBuffer> =
+            self.param_bufs.iter().collect();
+        all.extend(in_bufs.iter());
         let out = self.prefill.run_buffers(&all)?;
         let (logits, kc, vc) = (&out[0], out[1].clone(), out[2].clone());
         self.kc = kc;
@@ -348,9 +367,9 @@ impl HloEngine {
             HostArray::scalar_f32(self.vscale),
         ];
         let in_bufs = self.rt.to_device_all(&inputs)?;
-        let mut all: Vec<&xla::PjRtBuffer> =
-            self.param_bufs.iter().map(|d| &d.buf).collect();
-        all.extend(in_bufs.iter().map(|d| &d.buf));
+        let mut all: Vec<&DeviceBuffer> =
+            self.param_bufs.iter().collect();
+        all.extend(in_bufs.iter());
         let out = self.decode.run_buffers(&all)?;
         let logits = out[0].as_f32()?.to_vec();
         self.kc = out[1].clone();
@@ -364,6 +383,26 @@ impl HloEngine {
             for s in self.slots.iter_mut() {
                 if s.as_ref().map(|x| x.req.id) == Some(*victim) {
                     *s = None;
+                }
+            }
+        }
+        // A sequence that self-preempts with nothing else running had
+        // the WHOLE cache to itself and still ran out of blocks.
+        // Recompute can only succeed if resampling terminates earlier
+        // (EOS), so allow a couple of retries, then fail fast instead
+        // of thrashing until the 200k-iteration guard.
+        if self.sched.n_running() == 0 {
+            if let Some(&victim) = report.preempted.last() {
+                let tries =
+                    self.preempt_counts.get(&victim).copied().unwrap_or(0);
+                if tries >= 3 {
+                    bail!(
+                        "engine livelock: request {victim} self-preempted \
+                         {tries} times with the whole KV cache ({} blocks) \
+                         to itself — its prompt+generation footprint can \
+                         never fit",
+                        self.sched.kv.total_blocks()
+                    );
                 }
             }
         }

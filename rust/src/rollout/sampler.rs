@@ -1,9 +1,17 @@
 //! Token sampler: temperature / top-k / top-p over a logit row, returning
-//! the sampled token AND its logprob under the *untruncated* softmax —
-//! the rollout-policy logprob the trainer's TIS correction consumes.
+//! the sampled token AND its logprob under the *untruncated* softmax of
+//! the **raw** (temperature-free) logits — the rollout-policy logprob
+//! pi_fp8 that the trainer's TIS/MIS correction consumes.
 //!
-//! (verl computes pi_fp8 the same way: full-vocabulary log-softmax of the
-//! engine logits at the sampled token.)
+//! Convention: temperature/top-k/top-p shape the *exploration*
+//! distribution only. The returned logprob is always evaluated at
+//! temperature 1 over the full vocabulary, because the trainer's
+//! logprobs path evaluates pi_theta the same way and the TIS ratio
+//! pi_theta/pi_fp8 must compare same-temperature quantities. (verl
+//! computes pi_fp8 identically: full-vocabulary log-softmax of the
+//! engine logits at the sampled token.) The greedy and sampled paths
+//! used to disagree here — greedy returned raw-logit logprobs while
+//! sampling returned temperature-scaled ones, silently skewing TIS.
 
 use crate::util::rng::Pcg64;
 
@@ -16,8 +24,8 @@ pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
     (logits[idx] - m) as f64 as f32 - (z.ln() as f32)
 }
 
-/// Sample one token. Returns (token, logprob under the full softmax at
-/// the sampling temperature).
+/// Sample one token. Returns (token, logprob under the full softmax of
+/// the raw logits — see the module docs for the convention).
 pub fn sample(
     logits: &[f32],
     params: &SamplingParams,
@@ -69,7 +77,7 @@ pub fn sample(
         .collect();
     let pick = rng.categorical(&weights);
     let idx = order[pick];
-    (idx as i32, log_softmax_at(&scaled, idx))
+    (idx as i32, log_softmax_at(logits, idx))
 }
 
 #[cfg(test)]
@@ -141,6 +149,40 @@ mod tests {
             let (t, _) = sample(&logits, &p, &mut rng);
             assert_eq!(t, 0); // head token alone has >90% mass
         }
+    }
+
+    #[test]
+    fn logprob_convention_is_temperature_free() {
+        // regression: the sampled path used to return the log-softmax
+        // of the temperature-SCALED logits while greedy used the raw
+        // ones; both must report pi at temperature 1
+        let logits = vec![2.0, 0.5, -1.0, 0.0];
+        let mut rng = Pcg64::new(11);
+        for temp in [0.0f32, 0.25, 1.0, 4.0] {
+            for _ in 0..50 {
+                let (tok, lp) = sample(&logits, &params(temp), &mut rng);
+                let want = log_softmax_at(&logits, tok as usize);
+                assert!(
+                    (lp - want).abs() < 1e-6,
+                    "temp {temp}: token {tok} logprob {lp} != {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_and_sampled_paths_agree() {
+        // a near-deterministic distribution: the low-temperature sample
+        // picks the argmax, and its logprob must equal the greedy one
+        let logits = vec![8.0, 0.0, 0.0, 0.0];
+        let mut rng = Pcg64::new(12);
+        let (g_tok, g_lp) = sample(&logits, &params(0.0), &mut rng);
+        let (s_tok, s_lp) = sample(&logits, &params(0.05), &mut rng);
+        assert_eq!(g_tok, s_tok);
+        assert!(
+            (g_lp - s_lp).abs() < 1e-6,
+            "paths disagree: {g_lp} vs {s_lp}"
+        );
     }
 
     #[test]

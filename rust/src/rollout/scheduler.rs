@@ -71,6 +71,12 @@ impl Scheduler {
         &self.running
     }
 
+    /// Peek the head-of-line waiting request (FCFS order) — the engine
+    /// uses it to diagnose permanently-stuck admissions.
+    pub fn head_of_line(&self) -> Option<&Request> {
+        self.waiting.front()
+    }
+
     /// Admit as many waiting requests as fit. Returns the newly admitted
     /// requests (the engine assigns them to slots and starts prefill).
     pub fn admit(&mut self) -> Vec<Request> {

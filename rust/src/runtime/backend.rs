@@ -1,0 +1,86 @@
+//! The execution-backend abstraction.
+//!
+//! Everything below [`crate::runtime::Runtime`] is a [`Backend`]: it
+//! compiles manifest entrypoints into [`ExecutableImpl`]s and moves
+//! host arrays into backend-owned [`DeviceBufferImpl`]s. Two
+//! implementations exist:
+//!
+//! * [`crate::runtime::RefBackend`] (default) — a pure-Rust,
+//!   deterministic reference executor serving every manifest entrypoint
+//!   kind; hermetic (no native libraries, no crates.io).
+//! * `PjrtBackend` (behind the `pjrt` cargo feature,
+//!   runtime/pjrt.rs) — the XLA PJRT wrapper executing the AOT HLO-text
+//!   artifacts produced by `python/compile/aot.py`.
+//!
+//! The engine / trainer / calibrator layers only ever see the erased
+//! [`DeviceBuffer`] and `Executable` types, so swapping backends never
+//! touches the RL loop.
+
+use crate::util::error::Result;
+
+use super::host::HostArray;
+use super::manifest::{EntrySpec, Manifest};
+
+/// A device-resident array owned by a backend.
+pub trait DeviceBufferImpl {
+    /// Copy the buffer back to a host array.
+    fn to_host(&self) -> Result<HostArray>;
+
+    /// Backend-specific downcast hook (the PJRT implementation uses it
+    /// to keep weights device-resident across calls instead of
+    /// round-tripping through the host).
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// A device-resident input buffer (backend-erased).
+pub struct DeviceBuffer {
+    imp: Box<dyn DeviceBufferImpl>,
+}
+
+impl DeviceBuffer {
+    pub fn new(imp: Box<dyn DeviceBufferImpl>) -> DeviceBuffer {
+        DeviceBuffer { imp }
+    }
+
+    pub fn to_host(&self) -> Result<HostArray> {
+        self.imp.to_host()
+    }
+
+    pub fn imp(&self) -> &dyn DeviceBufferImpl {
+        self.imp.as_ref()
+    }
+}
+
+/// A compiled entrypoint.
+pub trait ExecutableImpl {
+    /// Execute with host arrays (uploads inputs, downloads outputs).
+    fn run(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>>;
+
+    /// Execute with pre-staged device buffers (the engine hot path:
+    /// weights stay resident, only per-step state is re-staged). The
+    /// default fetches every buffer to host and runs the host path —
+    /// exact for the reference backend, where "device" IS host memory.
+    fn run_buffers(
+        &self,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<HostArray>> {
+        let hosts: Result<Vec<HostArray>> =
+            inputs.iter().map(|b| b.to_host()).collect();
+        self.run(&hosts?)
+    }
+}
+
+/// An execution substrate: compiles entrypoints, owns device memory.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Compile (or otherwise instantiate) one manifest entrypoint.
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &EntrySpec,
+    ) -> Result<Box<dyn ExecutableImpl>>;
+
+    /// Upload a host array to a persistent device buffer.
+    fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer>;
+}

@@ -1,67 +1,45 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the rollout/training hot paths. Adapted from /opt/xla-example/load_hlo.
+//! Backend-agnostic runtime: manifest-driven loading and execution of
+//! entrypoints through the pluggable [`Backend`] trait.
 //!
-//! Key mechanics:
-//! * HLO **text** interchange (old xla_extension rejects jax>=0.5 protos).
-//! * Outputs arrive as ONE tuple PjRtBuffer per execution; we fetch it to
-//!   a literal and decompose. Inputs can be passed either as host arrays
-//!   (uploaded per call) or as persistent device buffers — the engine
-//!   keeps model weights resident and only streams per-step state.
+//! The default backend is the hermetic [`RefBackend`]; the original XLA
+//! PJRT path lives behind the `pjrt` cargo feature (runtime/pjrt.rs)
+//! and becomes the default when that feature is enabled. Entrypoints
+//! are compiled once and cached; inputs can be passed either as host
+//! arrays (validated against the manifest signature) or as persistent
+//! device buffers — the engine keeps model weights resident and only
+//! streams per-step state.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
+use super::backend::{Backend, DeviceBuffer, ExecutableImpl};
 use super::host::HostArray;
 use super::manifest::{EntrySpec, Manifest};
+use super::refbackend::RefBackend;
 
-/// A device-resident input buffer with its backing host literal pinned.
-pub struct DeviceBuffer {
-    pub buf: xla::PjRtBuffer,
-    _keepalive: xla::Literal,
-}
-
-/// A compiled entrypoint.
+/// A compiled entrypoint bound to its manifest signature.
 pub struct Executable {
     pub spec: EntrySpec,
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn ExecutableImpl>,
 }
 
 impl Executable {
-    /// Execute with host arrays (uploads inputs, downloads outputs).
+    /// Execute with host arrays (validates shapes/dtypes first).
     pub fn run(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
         self.check_inputs(inputs)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|a| a.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let out = self.exe.execute::<xla::Literal>(&lits)?;
-        Self::collect(out)
+        self.imp.run(inputs)
     }
 
-    /// Execute with pre-staged device buffers (the hot path: weights stay
-    /// resident, only per-step state is uploaded by the caller).
+    /// Execute with pre-staged device buffers (the hot path: weights
+    /// stay resident, only per-step state is uploaded by the caller).
     pub fn run_buffers(
         &self,
-        inputs: &[&xla::PjRtBuffer],
+        inputs: &[&DeviceBuffer],
     ) -> Result<Vec<HostArray>> {
-        let out = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
-        Self::collect(out)
-    }
-
-    fn collect(
-        out: Vec<Vec<xla::PjRtBuffer>>,
-    ) -> Result<Vec<HostArray>> {
-        let buf = &out[0][0];
-        let lit = buf.to_literal_sync()?;
-        let parts = lit.to_tuple()?;
-        parts
-            .iter()
-            .map(HostArray::from_literal)
-            .collect::<Result<Vec<_>>>()
+        self.imp.run_buffers(inputs)
     }
 
     fn check_inputs(&self, inputs: &[HostArray]) -> Result<()> {
@@ -92,29 +70,58 @@ impl Executable {
     }
 }
 
-/// The PJRT runtime: one CPU client + a compile cache over entrypoints.
+/// The runtime: one backend + a compile cache over entrypoints.
 pub struct Runtime {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
+    /// Load the manifest from `artifacts_dir` and attach the default
+    /// backend. When no manifest exists on disk, fall back to the
+    /// built-in synthetic manifest so the stack stays runnable without
+    /// `make artifacts` (the hermetic mode `cargo test` exercises).
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
         let dir = artifacts_dir.into();
-        let manifest = Manifest::load(&dir)?;
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!(
-            "pjrt client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(&dir)?
+        } else {
+            crate::log_warn!(
+                "no manifest under {dir:?} — falling back to the \
+                 SYNTHETIC hermetic manifest (toy model, seeded \
+                 weights); run `make artifacts` for the real AOT \
+                 artifacts"
+            );
+            Manifest::synthetic()
+        };
+        Runtime::with_backend(manifest, default_backend()?)
+    }
+
+    /// Fully hermetic runtime: synthetic manifest + RefBackend,
+    /// regardless of features or on-disk artifacts.
+    pub fn hermetic() -> Runtime {
+        Runtime::with_backend(
+            Manifest::synthetic(),
+            Box::new(RefBackend::new()),
+        )
+        .expect("hermetic runtime construction cannot fail")
+    }
+
+    /// Attach an explicit backend to a manifest.
+    pub fn with_backend(
+        manifest: Manifest,
+        backend: Box<dyn Backend>,
+    ) -> Result<Runtime> {
         Ok(Runtime {
             manifest,
-            client,
+            backend,
             cache: Mutex::new(HashMap::new()),
         })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Load + compile an entrypoint (cached).
@@ -123,17 +130,11 @@ impl Runtime {
             return Ok(e.clone());
         }
         let spec = self.manifest.entry(name)?.clone();
-        let path = self.manifest.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
+        let imp = self
+            .backend
+            .compile(&self.manifest, &spec)
             .with_context(|| format!("compiling {name}"))?;
-        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
-        let exec = Arc::new(Executable { spec, exe });
+        let exec = Arc::new(Executable { spec, imp });
         self.cache
             .lock()
             .unwrap()
@@ -142,19 +143,8 @@ impl Runtime {
     }
 
     /// Upload a host array to a persistent device buffer.
-    ///
-    /// TFRT-CPU's `BufferFromHostLiteral` copies asynchronously and the
-    /// xla crate exposes no ready-future, so the source literal MUST
-    /// outlive the transfer — `DeviceBuffer` pins it for the buffer's
-    /// whole lifetime (dropping it early is a use-after-free that shows
-    /// up as nondeterministic `shape_util.cc` fatal checks).
     pub fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
-        let lit = a.to_literal()?;
-        let buf = self.client.buffer_from_host_literal(None, &lit)?;
-        Ok(DeviceBuffer {
-            buf,
-            _keepalive: lit,
-        })
+        self.backend.to_device(a)
     }
 
     /// Upload many host arrays.
@@ -163,5 +153,39 @@ impl Runtime {
         arrays: &[HostArray],
     ) -> Result<Vec<DeviceBuffer>> {
         arrays.iter().map(|a| self.to_device(a)).collect()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn default_backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(RefBackend::new()))
+}
+
+#[cfg(feature = "pjrt")]
+fn default_backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::pjrt::PjrtBackend::new()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hermetic_runtime_loads_and_validates() {
+        let rt = Runtime::hermetic();
+        assert_eq!(rt.backend_name(), "ref");
+        let exe = rt.load("dense_calibrate").unwrap();
+        // wrong arity is rejected before execution
+        assert!(exe.run(&[]).is_err());
+        // unknown entrypoints are rejected
+        assert!(rt.load("dense_decode_nonsense").is_err());
+    }
+
+    #[test]
+    fn compile_cache_is_shared() {
+        let rt = Runtime::hermetic();
+        let a = rt.load("dense_prefill_bf16").unwrap();
+        let b = rt.load("dense_prefill_bf16").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
     }
 }

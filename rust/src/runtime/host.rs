@@ -1,6 +1,6 @@
-//! Host-side array values crossing the PJRT boundary.
+//! Host-side array values crossing the backend boundary.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use super::manifest::{DType, TensorSig};
 
@@ -72,33 +72,6 @@ impl HostArray {
         match self {
             HostArray::I32(_, d) => Ok(d),
             _ => bail!("expected i32 array, got f32"),
-        }
-    }
-
-    /// Convert to an xla literal (with shape).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> =
-            self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostArray::F32(_, d) => xla::Literal::vec1(d),
-            HostArray::I32(_, d) => xla::Literal::vec1(d),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    /// Convert from an xla literal.
-    pub fn from_literal(lit: &xla::Literal) -> Result<HostArray> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> =
-            shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.primitive_type() {
-            xla::PrimitiveType::F32 => {
-                Ok(HostArray::F32(dims, lit.to_vec::<f32>()?))
-            }
-            xla::PrimitiveType::S32 => {
-                Ok(HostArray::I32(dims, lit.to_vec::<i32>()?))
-            }
-            other => bail!("unsupported output element type {other:?}"),
         }
     }
 

@@ -9,9 +9,9 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::util::error::{bail, Context, Result};
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -101,6 +101,10 @@ pub struct Manifest {
     pub constants: Constants,
     pub models: BTreeMap<String, ModelSpec>,
     pub entrypoints: BTreeMap<String, EntrySpec>,
+    /// `Some(seed)`: generate deterministic initial params in-process
+    /// instead of reading `params_<arch>.bin` — the hermetic mode used
+    /// by [`Manifest::synthetic`]. Mirrors aot.py's scaled-normal init.
+    pub params_seed: Option<u64>,
 }
 
 impl Manifest {
@@ -202,6 +206,7 @@ impl Manifest {
             constants,
             models,
             entrypoints,
+            params_seed: None,
         })
     }
 
@@ -217,9 +222,13 @@ impl Manifest {
             .with_context(|| format!("unknown entrypoint {name:?}"))
     }
 
-    /// Load the deterministic initial weights dumped by aot.py.
+    /// Load the deterministic initial weights dumped by aot.py, or (for
+    /// synthetic manifests) generate them in-process from the seed.
     pub fn load_initial_params(&self, arch: &str) -> Result<Vec<Vec<f32>>> {
         let spec = self.model(arch)?;
+        if let Some(seed) = self.params_seed {
+            return Ok(synthetic_params(spec, seed));
+        }
         let path = self.dir.join(format!("params_{arch}.bin"));
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {path:?}"))?;
@@ -245,4 +254,334 @@ impl Manifest {
         }
         Ok(out)
     }
+
+    /// The built-in hermetic manifest: the same architectures, variant
+    /// lists and entrypoint signatures aot.py emits, at a smaller scale,
+    /// with seeded initial weights — so the whole stack runs in `cargo
+    /// test` without Python, artifacts or native libraries. Served by
+    /// the RefBackend (see runtime/refbackend.rs).
+    pub fn synthetic() -> Manifest {
+        let constants = Constants {
+            b_rollout: 8,
+            prompt_len: 16,
+            b_train: 16,
+            t_train: 32,
+            metric_names: METRIC_NAMES
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        };
+        let mut models = BTreeMap::new();
+        let mut entrypoints = BTreeMap::new();
+        for arch in ["dense", "moe"] {
+            let spec = synthetic_model(arch);
+            add_synthetic_entrypoints(&mut entrypoints, &spec, &constants);
+            models.insert(arch.to_string(), spec);
+        }
+        Manifest {
+            dir: PathBuf::new(),
+            constants,
+            models,
+            entrypoints,
+            params_seed: Some(42),
+        }
+    }
 }
+
+// ---------------------------------------------------------------------
+// Synthetic manifest construction (hermetic twin of aot.py)
+// ---------------------------------------------------------------------
+
+/// Metric layout of the train-step artifact — must match
+/// `python/compile/model.py::METRIC_NAMES`.
+pub const METRIC_NAMES: &[&str] = &[
+    "loss",
+    "entropy",
+    "kl_k1",
+    "kl_k3",
+    "tis_mean",
+    "ratio_raw_mean",
+    "grad_norm",
+    "exceed_fc1",
+    "exceed_other",
+    "exceed_p99",
+    "lr",
+    "r12",
+    "r13",
+    "r14",
+    "r15",
+    "r16",
+];
+
+/// Variant lists per arch — must mirror aot.py's ROLLOUT_BY_ARCH /
+/// TRAIN_BY_ARCH so experiment configs resolve identically offline.
+const ROLLOUT_DENSE: &[&str] =
+    &["bf16", "fp8lin", "kvfp8", "fullfp8", "fp8lin_ue8m0"];
+const ROLLOUT_MOE: &[&str] = &[
+    "bf16",
+    "fp8lin",
+    "fp8lin_rfp8",
+    "fp8lin_rfp32",
+    "fp8lin_ue8m0",
+    "fullfp8",
+];
+const TRAIN_DENSE: &[&str] = &["bf16", "fp8hybrid", "fp8e4m3"];
+const TRAIN_MOE: &[&str] =
+    &["bf16", "fp8hybrid", "fp8e4m3", "fp8hybrid_ue8m0"];
+
+fn synthetic_model(arch: &str) -> ModelSpec {
+    let moe = arch == "moe";
+    let (vocab, d_model, n_layers) = (32usize, 32usize, 2usize);
+    let (n_heads, n_kv_heads, d_head) = (2usize, 2usize, 16usize);
+    let (d_ff, max_seq) = (64usize, 64usize);
+    let (n_experts, top_k, d_expert) = (4usize, 2usize, 32usize);
+    let q = n_heads * d_head;
+    let kv = n_kv_heads * d_head;
+
+    let mut params = Vec::new();
+    let mut push = |name: String, shape: Vec<usize>| {
+        params.push(ParamSpec { name, shape });
+    };
+    push("embed".into(), vec![vocab, d_model]);
+    for i in 0..n_layers {
+        let p = format!("layer{i}.");
+        push(format!("{p}ln1"), vec![d_model]);
+        push(format!("{p}q_proj"), vec![d_model, q]);
+        push(format!("{p}k_proj"), vec![d_model, kv]);
+        push(format!("{p}v_proj"), vec![d_model, kv]);
+        push(format!("{p}o_proj"), vec![q, d_model]);
+        push(format!("{p}ln2"), vec![d_model]);
+        if moe {
+            push(format!("{p}router"), vec![d_model, n_experts]);
+            for e in 0..n_experts {
+                let ep = format!("{p}expert{e}.");
+                push(format!("{ep}gate_proj"), vec![d_model, d_expert]);
+                push(format!("{ep}up_proj"), vec![d_model, d_expert]);
+                push(format!("{ep}down_proj"), vec![d_expert, d_model]);
+            }
+        } else {
+            push(format!("{p}gate_proj"), vec![d_model, d_ff]);
+            push(format!("{p}up_proj"), vec![d_model, d_ff]);
+            push(format!("{p}down_proj"), vec![d_ff, d_model]);
+        }
+    }
+    push("ln_f".into(), vec![d_model]);
+    push("lm_head".into(), vec![d_model, vocab]);
+
+    let mut config = BTreeMap::new();
+    for (k, v) in [
+        ("vocab", vocab),
+        ("d_model", d_model),
+        ("n_layers", n_layers),
+        ("n_heads", n_heads),
+        ("n_kv_heads", n_kv_heads),
+        ("d_head", d_head),
+        ("d_ff", d_ff),
+        ("max_seq", max_seq),
+        ("moe", usize::from(moe)),
+        ("n_experts", n_experts),
+        ("top_k", top_k),
+        ("d_expert", d_expert),
+    ] {
+        config.insert(k.to_string(), v as f64);
+    }
+    ModelSpec {
+        arch: arch.to_string(),
+        config,
+        params,
+    }
+}
+
+fn add_synthetic_entrypoints(
+    entrypoints: &mut BTreeMap<String, EntrySpec>,
+    model: &ModelSpec,
+    c: &Constants,
+) {
+    let arch = model.arch.clone();
+    let param_sigs: Vec<TensorSig> = model
+        .params
+        .iter()
+        .map(|p| TensorSig {
+            shape: p.shape.clone(),
+            dtype: DType::F32,
+        })
+        .collect();
+    let f32_sig = |shape: Vec<usize>| TensorSig {
+        shape,
+        dtype: DType::F32,
+    };
+    let i32_sig = |shape: Vec<usize>| TensorSig {
+        shape,
+        dtype: DType::I32,
+    };
+    let kv_sig = || {
+        f32_sig(vec![
+            model.cfg("n_layers"),
+            c.b_rollout,
+            model.cfg("n_kv_heads"),
+            model.cfg("max_seq"),
+            model.cfg("d_head"),
+        ])
+    };
+    let mut add = |name: String,
+                   kind: &str,
+                   variant: &str,
+                   inputs: Vec<TensorSig>| {
+        entrypoints.insert(
+            name.clone(),
+            EntrySpec {
+                file: format!("{name}.hlo.txt"),
+                name,
+                kind: kind.to_string(),
+                arch: arch.clone(),
+                variant: variant.to_string(),
+                inputs,
+            },
+        );
+    };
+
+    let rollout: &[&str] = if model.cfg("moe") == 1 {
+        ROLLOUT_MOE
+    } else {
+        ROLLOUT_DENSE
+    };
+    let train: &[&str] = if model.cfg("moe") == 1 {
+        TRAIN_MOE
+    } else {
+        TRAIN_DENSE
+    };
+    for v in rollout {
+        let mut inputs = param_sigs.clone();
+        inputs.push(i32_sig(vec![c.b_rollout, c.prompt_len]));
+        inputs.push(f32_sig(vec![1, 1]));
+        inputs.push(f32_sig(vec![1, 1]));
+        add(format!("{}_prefill_{v}", model.arch), "prefill", v, inputs);
+
+        let mut inputs = param_sigs.clone();
+        inputs.push(kv_sig());
+        inputs.push(kv_sig());
+        inputs.push(i32_sig(vec![c.b_rollout, 1]));
+        inputs.push(i32_sig(vec![c.b_rollout, 1]));
+        inputs.push(f32_sig(vec![1, 1]));
+        inputs.push(f32_sig(vec![1, 1]));
+        add(format!("{}_decode_{v}", model.arch), "decode", v, inputs);
+    }
+    for v in train {
+        let mut inputs = Vec::new();
+        for _ in 0..3 {
+            inputs.extend(param_sigs.clone());
+        }
+        inputs.push(f32_sig(vec![1, 1]));
+        inputs.push(i32_sig(vec![c.b_train, c.t_train]));
+        inputs.push(f32_sig(vec![c.b_train, c.t_train - 1]));
+        inputs.push(f32_sig(vec![c.b_train, c.t_train - 1]));
+        inputs.push(f32_sig(vec![c.b_train, c.t_train - 1]));
+        inputs.push(f32_sig(vec![1, 4]));
+        add(format!("{}_train_{v}", model.arch), "train", v, inputs);
+    }
+    let mut inputs = param_sigs.clone();
+    inputs.push(i32_sig(vec![c.b_train, c.t_train]));
+    add(
+        format!("{}_logprobs_bf16", model.arch),
+        "logprobs",
+        "bf16",
+        inputs,
+    );
+    let mut inputs = param_sigs.clone();
+    inputs.push(i32_sig(vec![c.b_train, c.t_train]));
+    add(
+        format!("{}_calibrate", model.arch),
+        "calibrate",
+        "bf16",
+        inputs,
+    );
+}
+
+/// Deterministic scaled-normal init (aot.py's `init_params` scheme):
+/// norm gains at 1, embeddings at 0.02 sigma, projections at
+/// `fan_in^-0.5` sigma. Seeded per (arch, param name) so the values are
+/// independent of parameter ordering.
+fn synthetic_params(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
+    spec.params
+        .iter()
+        .map(|p| {
+            let n: usize = p.shape.iter().product();
+            let is_norm = p.name.ends_with("ln1")
+                || p.name.ends_with("ln2")
+                || p.name == "ln_f";
+            if is_norm {
+                return vec![1.0; n];
+            }
+            let std = if p.name == "embed" {
+                0.02
+            } else {
+                (p.shape[0] as f32).powf(-0.5)
+            };
+            let tag = fnv1a(&format!("{}/{}", spec.arch, p.name));
+            let mut rng = Pcg64::new(seed ^ tag);
+            (0..n).map(|_| rng.normal() as f32 * std).collect()
+        })
+        .collect()
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_is_consistent() {
+        let m = Manifest::synthetic();
+        assert!(m.entrypoints.len() >= 30);
+        for arch in ["dense", "moe"] {
+            let spec = m.model(arch).unwrap();
+            assert!(spec.total_weights() > 10_000);
+            let params = m.load_initial_params(arch).unwrap();
+            assert_eq!(params.len(), spec.params.len());
+            for (p, v) in spec.params.iter().zip(&params) {
+                assert_eq!(p.shape.iter().product::<usize>(), v.len());
+            }
+            // the reference state fits in the per-position cache slots
+            assert!(
+                spec.cfg("d_model")
+                    <= spec.cfg("n_layers")
+                        * spec.cfg("n_kv_heads")
+                        * spec.cfg("d_head")
+            );
+            for kind in
+                ["prefill", "decode", "train", "logprobs", "calibrate"]
+            {
+                assert!(
+                    m.entrypoints
+                        .values()
+                        .any(|e| e.arch == arch && e.kind == kind),
+                    "{arch} missing {kind}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_params_are_deterministic() {
+        let m = Manifest::synthetic();
+        let a = m.load_initial_params("dense").unwrap();
+        let b = m.load_initial_params("dense").unwrap();
+        assert_eq!(a, b);
+        // norms at 1, projections non-degenerate
+        let spec = m.model("dense").unwrap();
+        let lnf = spec.params.iter().position(|p| p.name == "ln_f").unwrap();
+        assert!(a[lnf].iter().all(|&x| x == 1.0));
+        let emb =
+            spec.params.iter().position(|p| p.name == "embed").unwrap();
+        assert!(a[emb].iter().any(|&x| x != 0.0));
+    }
+}
+

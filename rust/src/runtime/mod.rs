@@ -1,9 +1,25 @@
-//! PJRT runtime layer: manifest-driven loading and execution of the AOT
-//! HLO-text artifacts produced by `python/compile/aot.py`.
+//! Runtime layer: manifest-driven loading and execution of the AOT
+//! entrypoints through a pluggable execution backend.
+//!
+//! * [`backend`] — the `Backend` / `ExecutableImpl` / `DeviceBufferImpl`
+//!   trait surface every executor implements.
+//! * [`refbackend`] — the default, hermetic pure-Rust executor.
+//! * `pjrt` (feature `pjrt`) — the XLA PJRT executor for the HLO-text
+//!   artifacts produced by `python/compile/aot.py`.
+//! * [`manifest`] — the Rust<->Python ABI (+ the synthetic hermetic
+//!   manifest the RefBackend serves by default).
+pub mod backend;
 pub mod client;
 pub mod host;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod refbackend;
 
-pub use client::{DeviceBuffer, Executable, Runtime};
+pub use backend::{Backend, DeviceBuffer, DeviceBufferImpl, ExecutableImpl};
+pub use client::{Executable, Runtime};
 pub use host::HostArray;
-pub use manifest::{Constants, DType, EntrySpec, Manifest, ModelSpec, TensorSig};
+pub use manifest::{
+    Constants, DType, EntrySpec, Manifest, ModelSpec, METRIC_NAMES,
+};
+pub use refbackend::RefBackend;

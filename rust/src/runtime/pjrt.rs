@@ -1,0 +1,177 @@
+//! PJRT backend: load AOT HLO-text artifacts, compile once, execute
+//! from the rollout/training hot paths. Adapted from
+//! /opt/xla-example/load_hlo.
+//!
+//! Behind the `pjrt` cargo feature: it wraps the external `xla` crate,
+//! which needs the XLA C++ extension library — neither exists in the
+//! hermetic environment, so building with `--features pjrt` requires
+//! vendoring the crate (see DESIGN.md "Backends"). The default build
+//! never compiles this module; `cargo check --features pjrt` is the CI
+//! canary that keeps the code from rotting silently when an XLA
+//! toolchain IS present.
+//!
+//! Key mechanics:
+//! * HLO **text** interchange (old xla_extension rejects jax>=0.5
+//!   protos).
+//! * Outputs arrive as ONE tuple PjRtBuffer per execution; we fetch it
+//!   to a literal and decompose.
+//! * TFRT-CPU's `BufferFromHostLiteral` copies asynchronously and the
+//!   xla crate exposes no ready-future, so the source literal MUST
+//!   outlive the transfer — `PjrtDeviceBuffer` pins it for the buffer's
+//!   whole lifetime (dropping it early is a use-after-free that shows
+//!   up as nondeterministic `shape_util.cc` fatal checks).
+
+use std::time::Instant;
+
+use crate::util::error::{bail, Context, Result};
+
+use super::backend::{
+    Backend, DeviceBuffer, DeviceBufferImpl, ExecutableImpl,
+};
+use super::host::HostArray;
+use super::manifest::{EntrySpec, Manifest};
+
+/// A device-resident input buffer with its backing literal pinned.
+pub struct PjrtDeviceBuffer {
+    buf: xla::PjRtBuffer,
+    _keepalive: xla::Literal,
+}
+
+impl DeviceBufferImpl for PjrtDeviceBuffer {
+    fn to_host(&self) -> Result<HostArray> {
+        let lit = self.buf.to_literal_sync()?;
+        from_literal(&lit)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+pub struct PjrtExecutable {
+    spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ExecutableImpl for PjrtExecutable {
+    fn run(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        collect(out)
+    }
+
+    fn run_buffers(
+        &self,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<HostArray>> {
+        let mut bufs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(inputs.len());
+        for b in inputs {
+            let Some(p) =
+                b.imp().as_any().downcast_ref::<PjrtDeviceBuffer>()
+            else {
+                bail!(
+                    "{}: device buffer from a different backend",
+                    self.spec.name
+                );
+            };
+            bufs.push(&p.buf);
+        }
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        collect(out)
+    }
+}
+
+fn collect(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostArray>> {
+    let buf = &out[0][0];
+    let lit = buf.to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    parts.iter().map(from_literal).collect::<Result<Vec<_>>>()
+}
+
+/// Convert a host array to an xla literal (with shape).
+fn to_literal(a: &HostArray) -> Result<xla::Literal> {
+    let dims: Vec<i64> = a.shape().iter().map(|&d| d as i64).collect();
+    let lit = match a {
+        HostArray::F32(_, d) => xla::Literal::vec1(d),
+        HostArray::I32(_, d) => xla::Literal::vec1(d),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an xla literal back to a host array.
+fn from_literal(lit: &xla::Literal) -> Result<HostArray> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> =
+        shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.primitive_type() {
+        xla::PrimitiveType::F32 => {
+            Ok(HostArray::F32(dims, lit.to_vec::<f32>()?))
+        }
+        xla::PrimitiveType::S32 => {
+            Ok(HostArray::I32(dims, lit.to_vec::<i32>()?))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// The PJRT backend: one CPU client shared by all executables.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_info!(
+            "pjrt client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &EntrySpec,
+    ) -> Result<Box<dyn ExecutableImpl>> {
+        let path = manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        crate::log_info!(
+            "compiled {} in {:.2}s",
+            spec.name,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Box::new(PjrtExecutable {
+            spec: spec.clone(),
+            exe,
+        }))
+    }
+
+    fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
+        let lit = to_literal(a)?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceBuffer::new(Box::new(PjrtDeviceBuffer {
+            buf,
+            _keepalive: lit,
+        })))
+    }
+}

@@ -1,0 +1,953 @@
+//! RefBackend: the deterministic, hermetic reference executor.
+//!
+//! Serves every manifest entrypoint kind (`prefill` / `decode` /
+//! `train` / `logprobs` / `calibrate`) with a tiny recurrent language
+//! model computed from the *real* manifest parameters, so the full RL
+//! loop (engine -> weight sync -> trainer) runs end to end in
+//! `cargo test` with zero native or crates.io dependencies.
+//!
+//! The reference model, per batch row (d = d_model, V = vocab):
+//!
+//! ```text
+//! c_t      = 0.7 * c_{t-1} + embed[tok_t]        state, R^d
+//! h_t      = tanh(8 * c_t @ layer0.q_proj)       features, R^d
+//! logits_t = h_t @ lm_head                       R^V
+//! ```
+//!
+//! Precision semantics follow the variant name, mirroring the real
+//! artifacts' recipes:
+//!
+//! * rollout paths round logits through bf16 (tensor-core stand-in), so
+//!   even the `bf16` rollout diverges slightly from the trainer's f32
+//!   logprobs path — the paper's kernel-level train/inference mismatch;
+//! * `fp8lin` / `fullfp8` fake-quantize the features through E4M3 with a
+//!   per-row amax scale (UE8M0 scales for `*_ue8m0` variants) — this is
+//!   what makes pi_fp8 visibly diverge (paper eq. 2);
+//! * `kvfp8` / `fullfp8` store the KV state E4M3-quantized under the
+//!   live k/v scales, so scale calibration quality is observable.
+//!
+//! The KV state is genuinely threaded through the cache tensors: the
+//! recurrence reads position p-1 back from the (possibly quantized)
+//! cache, so chunked prefill through the decode path reproduces the
+//! batched prefill wave bit-exactly — the invariant the engine's two
+//! prefill paths rely on. The train path carries real Adam moments and
+//! a real policy-gradient update; backprop runs through the lm_head
+//! only (features are treated as constants), which is deliberate: it is
+//! enough for learning to be observable in tests while keeping the
+//! executor small. See DESIGN.md "RefBackend numerics" for the full
+//! contract and divergence from PJRT.
+
+use crate::fp8::{ScaleFormat, E4M3};
+use crate::util::error::{bail, Context, Result};
+
+use super::backend::{
+    Backend, DeviceBuffer, DeviceBufferImpl, ExecutableImpl,
+};
+use super::host::HostArray;
+use super::manifest::{Constants, EntrySpec, Manifest, ModelSpec};
+
+/// State-recurrence decay.
+const ALPHA: f32 = 0.7;
+/// Feature pre-activation gain (keeps logits in a workable range).
+const BETA: f32 = 8.0;
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+const GRAD_CLIP: f32 = 1.0;
+
+pub struct RefBackend;
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend
+    }
+}
+
+impl Default for RefBackend {
+    fn default() -> Self {
+        RefBackend::new()
+    }
+}
+
+struct RefBuffer(HostArray);
+
+impl DeviceBufferImpl for RefBuffer {
+    fn to_host(&self) -> Result<HostArray> {
+        Ok(self.0.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &EntrySpec,
+    ) -> Result<Box<dyn ExecutableImpl>> {
+        let model = manifest.model(&spec.arch)?.clone();
+        let geo = Geometry::from_model(&model)?;
+        Ok(Box::new(RefExecutable {
+            spec: spec.clone(),
+            model,
+            geo,
+            constants: manifest.constants.clone(),
+        }))
+    }
+
+    fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::new(Box::new(RefBuffer(a.clone()))))
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Geometry {
+    d: usize,
+    vocab: usize,
+    n_layers: usize,
+    n_kv_heads: usize,
+    d_head: usize,
+    max_seq: usize,
+}
+
+impl Geometry {
+    fn from_model(m: &ModelSpec) -> Result<Geometry> {
+        let g = Geometry {
+            d: m.cfg("d_model"),
+            vocab: m.cfg("vocab"),
+            n_layers: m.cfg("n_layers"),
+            n_kv_heads: m.cfg("n_kv_heads"),
+            d_head: m.cfg("d_head"),
+            max_seq: m.cfg("max_seq"),
+        };
+        // the state vector is striped across the per-position cache
+        // slots, so the cache must be at least d_model wide per token
+        let slots = g.n_layers * g.n_kv_heads * g.d_head;
+        if g.d > slots {
+            bail!(
+                "refbackend: d_model {} exceeds per-token KV capacity {}",
+                g.d,
+                slots
+            );
+        }
+        Ok(g)
+    }
+
+    /// Flat index of state component `j` at (row `b`, position `pos`)
+    /// inside a (L, B, H, S, Dh) cache tensor.
+    fn cache_index(
+        &self,
+        b_rollout: usize,
+        b: usize,
+        pos: usize,
+        j: usize,
+    ) -> usize {
+        let per_layer = self.n_kv_heads * self.d_head;
+        let l = j / per_layer;
+        let r = j % per_layer;
+        let h = r / self.d_head;
+        let dd = r % self.d_head;
+        (((l * b_rollout + b) * self.n_kv_heads + h) * self.max_seq + pos)
+            * self.d_head
+            + dd
+    }
+
+    fn cache_len(&self, b_rollout: usize) -> usize {
+        self.n_layers
+            * b_rollout
+            * self.n_kv_heads
+            * self.max_seq
+            * self.d_head
+    }
+
+    fn kv_shape(&self, b_rollout: usize) -> Vec<usize> {
+        vec![
+            self.n_layers,
+            b_rollout,
+            self.n_kv_heads,
+            self.max_seq,
+            self.d_head,
+        ]
+    }
+}
+
+#[derive(Clone, Copy)]
+struct VariantFlags {
+    fp8_linear: bool,
+    fp8_kv: bool,
+    scale_fmt: ScaleFormat,
+}
+
+fn variant_flags(variant: &str) -> VariantFlags {
+    VariantFlags {
+        fp8_linear: variant.contains("fp8lin")
+            || variant.contains("fullfp8"),
+        fp8_kv: variant.contains("kvfp8") || variant.contains("fullfp8"),
+        scale_fmt: if variant.contains("ue8m0") {
+            ScaleFormat::Ue8m0
+        } else {
+            ScaleFormat::Fp32
+        },
+    }
+}
+
+/// Truncate to bf16 precision (tensor-core rounding stand-in).
+fn bf16(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & 0xFFFF_0000)
+}
+
+/// E4M3 fake-quant of one value under an explicit scale.
+fn qdq_kv(x: f32, scale: f32) -> f32 {
+    if scale <= 0.0 || !scale.is_finite() {
+        return 0.0;
+    }
+    E4M3.qdq(x / scale) * scale
+}
+
+/// Per-row E4M3 activation fake-quant with an amax-derived scale.
+fn qdq_row_e4m3(h: &mut [f32], scale_fmt: ScaleFormat) {
+    let amax = h.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if amax <= 0.0 || !amax.is_finite() {
+        return;
+    }
+    let s = scale_fmt.apply(amax / E4M3.max);
+    for x in h.iter_mut() {
+        *x = E4M3.qdq(*x / s) * s;
+    }
+}
+
+/// Borrowed view of the reference model's live parameters.
+struct RefModel<'a> {
+    geo: Geometry,
+    embed: &'a [f32],
+    wq: Option<&'a [f32]>,
+    wq_cols: usize,
+    lm_head: &'a [f32],
+}
+
+impl<'a> RefModel<'a> {
+    fn new(
+        spec: &ModelSpec,
+        geo: Geometry,
+        params: &'a [HostArray],
+    ) -> Result<RefModel<'a>> {
+        let find = |name: &str| {
+            spec.params
+                .iter()
+                .position(|p| p.name == name)
+                .with_context(|| {
+                    format!("model {} has no param {name}", spec.arch)
+                })
+        };
+        let embed = params[find("embed")?].as_f32()?;
+        let lm_head = params[find("lm_head")?].as_f32()?;
+        let (wq, wq_cols) = match spec
+            .params
+            .iter()
+            .position(|p| p.name == "layer0.q_proj")
+        {
+            Some(i) => (Some(params[i].as_f32()?), spec.params[i].shape[1]),
+            None => (None, 0),
+        };
+        Ok(RefModel {
+            geo,
+            embed,
+            wq,
+            wq_cols,
+            lm_head,
+        })
+    }
+
+    /// c' = ALPHA * prev + embed[tok]
+    fn state_update(&self, prev: &[f32], tok: i32) -> Vec<f32> {
+        let d = self.geo.d;
+        let t = (tok.max(0) as usize) % self.geo.vocab;
+        let row = &self.embed[t * d..(t + 1) * d];
+        (0..d).map(|j| ALPHA * prev[j] + row[j]).collect()
+    }
+
+    /// h = tanh(BETA * c @ layer0.q_proj) (identity mix if absent).
+    fn features(&self, c: &[f32]) -> Vec<f32> {
+        let d = self.geo.d;
+        let mut h = vec![0.0f32; d];
+        let cols = self.wq_cols.min(d);
+        for (j, out) in h.iter_mut().enumerate() {
+            let acc = match self.wq {
+                Some(w) if j < cols => {
+                    let mut a = 0.0f32;
+                    for (k, ck) in c.iter().enumerate() {
+                        a += ck * w[k * self.wq_cols + j];
+                    }
+                    a
+                }
+                _ => c[j],
+            };
+            *out = (BETA * acc).tanh();
+        }
+        h
+    }
+
+    /// logits = h @ lm_head
+    fn logits(&self, h: &[f32]) -> Vec<f32> {
+        let v = self.geo.vocab;
+        let mut out = vec![0.0f32; v];
+        for (k, &hk) in h.iter().enumerate() {
+            if hk == 0.0 {
+                continue;
+            }
+            let row = &self.lm_head[k * v..(k + 1) * v];
+            for (o, r) in out.iter_mut().zip(row) {
+                *o += hk * r;
+            }
+        }
+        out
+    }
+}
+
+/// Read the state stored at `pos` back out of the caches (mean of the
+/// K and V copies — both carry the state, each under its own scale).
+fn read_state(
+    geo: Geometry,
+    kc: &[f32],
+    vc: &[f32],
+    b_rollout: usize,
+    b: usize,
+    pos: usize,
+) -> Vec<f32> {
+    (0..geo.d)
+        .map(|j| {
+            let i = geo.cache_index(b_rollout, b, pos, j);
+            0.5 * (kc[i] + vc[i])
+        })
+        .collect()
+}
+
+/// Store the state at `pos` (quantized when the variant demands it) and
+/// return exactly what a subsequent read would see — prefill threads
+/// this so the wave and chunked paths agree bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn store_state(
+    geo: Geometry,
+    kc: &mut [f32],
+    vc: &mut [f32],
+    b_rollout: usize,
+    b: usize,
+    pos: usize,
+    c: &[f32],
+    fp8_kv: bool,
+    ks: f32,
+    vs: f32,
+) -> Vec<f32> {
+    let mut seen = vec![0.0f32; geo.d];
+    for (j, &cj) in c.iter().enumerate() {
+        let i = geo.cache_index(b_rollout, b, pos, j);
+        let (k, v) = if fp8_kv {
+            (qdq_kv(cj, ks), qdq_kv(cj, vs))
+        } else {
+            (cj, cj)
+        };
+        kc[i] = k;
+        vc[i] = v;
+        seen[j] = 0.5 * (k + v);
+    }
+    seen
+}
+
+pub struct RefExecutable {
+    spec: EntrySpec,
+    model: ModelSpec,
+    geo: Geometry,
+    constants: Constants,
+}
+
+impl ExecutableImpl for RefExecutable {
+    fn run(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
+        match self.spec.kind.as_str() {
+            "prefill" => self.run_prefill(inputs),
+            "decode" => self.run_decode(inputs),
+            "train" => self.run_train(inputs),
+            "logprobs" => self.run_logprobs(inputs),
+            "calibrate" => self.run_calibrate(inputs),
+            other => {
+                bail!("refbackend: unsupported entrypoint kind {other:?}")
+            }
+        }
+    }
+}
+
+impl RefExecutable {
+    fn check_arity(&self, got: usize, want: usize) -> Result<()> {
+        if got != want {
+            bail!("{}: expected {want} inputs, got {got}", self.spec.name);
+        }
+        Ok(())
+    }
+
+    fn run_prefill(
+        &self,
+        inputs: &[HostArray],
+    ) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), n + 3)?;
+        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
+        let tokens = inputs[n].as_i32()?;
+        let ks = inputs[n + 1].as_f32()?[0];
+        let vs = inputs[n + 2].as_f32()?[0];
+        let flags = variant_flags(&self.spec.variant);
+        let geo = self.geo;
+        let (b_roll, plen) =
+            (self.constants.b_rollout, self.constants.prompt_len);
+        let v = geo.vocab;
+        let mut kc = vec![0.0f32; geo.cache_len(b_roll)];
+        let mut vc = vec![0.0f32; geo.cache_len(b_roll)];
+        let mut logits = vec![0.0f32; b_roll * plen * v];
+        for b in 0..b_roll {
+            let mut state = vec![0.0f32; geo.d];
+            for p in 0..plen {
+                let c = model.state_update(&state, tokens[b * plen + p]);
+                let mut h = model.features(&c);
+                if flags.fp8_linear {
+                    qdq_row_e4m3(&mut h, flags.scale_fmt);
+                }
+                let row = model.logits(&h);
+                let base = (b * plen + p) * v;
+                for (j, x) in row.iter().enumerate() {
+                    logits[base + j] = bf16(*x);
+                }
+                state = store_state(
+                    geo,
+                    &mut kc,
+                    &mut vc,
+                    b_roll,
+                    b,
+                    p,
+                    &c,
+                    flags.fp8_kv,
+                    ks,
+                    vs,
+                );
+            }
+        }
+        Ok(vec![
+            HostArray::f32(vec![b_roll, plen, v], logits),
+            HostArray::f32(geo.kv_shape(b_roll), kc),
+            HostArray::f32(geo.kv_shape(b_roll), vc),
+        ])
+    }
+
+    fn run_decode(
+        &self,
+        inputs: &[HostArray],
+    ) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), n + 6)?;
+        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
+        let mut kc = inputs[n].as_f32()?.to_vec();
+        let mut vc = inputs[n + 1].as_f32()?.to_vec();
+        let tokens = inputs[n + 2].as_i32()?;
+        let pos = inputs[n + 3].as_i32()?;
+        let ks = inputs[n + 4].as_f32()?[0];
+        let vs = inputs[n + 5].as_f32()?[0];
+        let flags = variant_flags(&self.spec.variant);
+        let geo = self.geo;
+        let b_roll = self.constants.b_rollout;
+        let v = geo.vocab;
+        let mut logits = vec![0.0f32; b_roll * v];
+        for b in 0..b_roll {
+            let p = pos[b].max(0) as usize;
+            if p >= geo.max_seq {
+                bail!(
+                    "{}: decode position {p} out of range (max_seq {})",
+                    self.spec.name,
+                    geo.max_seq
+                );
+            }
+            let prev = if p == 0 {
+                vec![0.0f32; geo.d]
+            } else {
+                read_state(geo, &kc, &vc, b_roll, b, p - 1)
+            };
+            let c = model.state_update(&prev, tokens[b]);
+            let mut h = model.features(&c);
+            if flags.fp8_linear {
+                qdq_row_e4m3(&mut h, flags.scale_fmt);
+            }
+            let row = model.logits(&h);
+            for (j, x) in row.iter().enumerate() {
+                logits[b * v + j] = bf16(*x);
+            }
+            store_state(
+                geo,
+                &mut kc,
+                &mut vc,
+                b_roll,
+                b,
+                p,
+                &c,
+                flags.fp8_kv,
+                ks,
+                vs,
+            );
+        }
+        Ok(vec![
+            HostArray::f32(vec![b_roll, v], logits),
+            HostArray::f32(geo.kv_shape(b_roll), kc),
+            HostArray::f32(geo.kv_shape(b_roll), vc),
+        ])
+    }
+
+    /// Teacher-forced forward on the trainer's f32 path. Returns, per
+    /// row and position t in 0..T-1: features h_t, softmax probs,
+    /// next-token logprob and entropy.
+    fn train_forward(
+        &self,
+        model: &RefModel,
+        tokens: &[i32],
+    ) -> TrainForward {
+        let geo = self.geo;
+        let (bt, tt) = (self.constants.b_train, self.constants.t_train);
+        let (d, v) = (geo.d, geo.vocab);
+        let steps = tt - 1;
+        let mut feats = vec![0.0f32; bt * steps * d];
+        let mut probs = vec![0.0f32; bt * steps * v];
+        let mut lp = vec![0.0f32; bt * steps];
+        let mut ent = vec![0.0f32; bt * steps];
+        for b in 0..bt {
+            let mut state = vec![0.0f32; d];
+            for t in 0..steps {
+                let c = model.state_update(&state, tokens[b * tt + t]);
+                let h = model.features(&c);
+                let row = model.logits(&h);
+                let mx =
+                    row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let z: f64 =
+                    row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
+                let logz = mx as f64 + z.ln();
+                let idx = b * steps + t;
+                let nxt = (tokens[b * tt + t + 1].max(0) as usize) % v;
+                lp[idx] = (row[nxt] as f64 - logz) as f32;
+                let mut e = 0.0f64;
+                for (j, &x) in row.iter().enumerate() {
+                    let p = ((x as f64) - logz).exp();
+                    probs[idx * v + j] = p as f32;
+                    e -= p * ((x as f64) - logz);
+                }
+                ent[idx] = e as f32;
+                feats[idx * d..(idx + 1) * d].copy_from_slice(&h);
+                state = c;
+            }
+        }
+        TrainForward {
+            feats,
+            probs,
+            lp,
+            ent,
+        }
+    }
+
+    fn run_train(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), 3 * n + 6)?;
+        let params = &inputs[..n];
+        let m_in = &inputs[n..2 * n];
+        let v_in = &inputs[2 * n..3 * n];
+        let step = inputs[3 * n].as_f32()?[0];
+        let tokens = inputs[3 * n + 1].as_i32()?;
+        let mask = inputs[3 * n + 2].as_f32()?;
+        let adv = inputs[3 * n + 3].as_f32()?;
+        let rlogp = inputs[3 * n + 4].as_f32()?;
+        let hp = inputs[3 * n + 5].as_f32()?;
+        let (lr, tis_c, ent_coef, mis) = (hp[0], hp[1], hp[2], hp[3]);
+
+        let model = RefModel::new(&self.model, self.geo, params)?;
+        let fwd = self.train_forward(&model, tokens);
+        let (bt, tt) = (self.constants.b_train, self.constants.t_train);
+        let (d, v) = (self.geo.d, self.geo.vocab);
+        let steps = tt - 1;
+
+        // ---- loss + mismatch diagnostics (pi_old == pi_theta: one
+        // update per batch, so ratio == 1 and the DAPO clip is inactive;
+        // the gradient of ratio*adv w.r.t. lp is exactly adv) ----
+        let denom: f32 =
+            mask.iter().sum::<f32>().max(1.0);
+        let mut obj = 0.0f64;
+        let mut sum_ent = 0.0f64;
+        let mut k1 = 0.0f64;
+        let mut k3 = 0.0f64;
+        let mut tis_sum = 0.0f64;
+        let mut raw_sum = 0.0f64;
+        let mut tis_w = vec![0.0f32; bt * steps];
+        for i in 0..bt * steps {
+            let mk = mask[i];
+            let dlog = (fwd.lp[i] - rlogp[i]) as f64;
+            let raw = dlog.exp();
+            let w = if tis_c > 0.0 {
+                if mis > 0.0 {
+                    let lo = 1.0 / (tis_c as f64).max(1e-6);
+                    if raw <= tis_c as f64 && raw >= lo {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    raw.min(tis_c as f64)
+                }
+            } else {
+                1.0
+            };
+            tis_w[i] = w as f32;
+            if mk == 0.0 {
+                continue;
+            }
+            let mkd = mk as f64;
+            obj += adv[i] as f64 * w * mkd;
+            sum_ent += fwd.ent[i] as f64 * mkd;
+            k1 -= dlog * mkd;
+            k3 += ((raw - 1.0) - dlog) * mkd;
+            tis_sum += w * mkd;
+            raw_sum += raw * mkd;
+        }
+        let mean_ent = sum_ent / denom as f64;
+        let loss =
+            -(obj / denom as f64) - ent_coef as f64 * mean_ent;
+
+        // ---- policy gradient through the lm_head only ----
+        let mut g_lm = vec![0.0f32; d * v];
+        for b in 0..bt {
+            for t in 0..steps {
+                let i = b * steps + t;
+                if mask[i] == 0.0 {
+                    continue;
+                }
+                let coef = -(adv[i] * tis_w[i]) / denom;
+                let nxt = (tokens[b * tt + t + 1].max(0) as usize) % v;
+                let hrow = &fwd.feats[i * d..(i + 1) * d];
+                for j in 0..v {
+                    let onehot = if j == nxt { 1.0 } else { 0.0 };
+                    let dl = coef * (onehot - fwd.probs[i * v + j]);
+                    if dl == 0.0 {
+                        continue;
+                    }
+                    for (k, &hk) in hrow.iter().enumerate() {
+                        g_lm[k * v + j] += hk * dl;
+                    }
+                }
+            }
+        }
+        let gnorm =
+            g_lm.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+        let gnorm = gnorm.sqrt() as f32;
+        let clip = (GRAD_CLIP / (gnorm + 1e-12)).min(1.0);
+
+        // ---- global-step Adam over ALL parameters (zero grads decay
+        // the moments; only lm_head receives signal) ----
+        let t_new = step + 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(t_new);
+        let bc2 = 1.0 - ADAM_B2.powf(t_new);
+        let zeros: Vec<f32> = Vec::new();
+        let mut new_p = Vec::with_capacity(n);
+        let mut new_m = Vec::with_capacity(n);
+        let mut new_v = Vec::with_capacity(n);
+        for (i, pspec) in self.model.params.iter().enumerate() {
+            let p = params[i].as_f32()?;
+            let m0 = m_in[i].as_f32()?;
+            let v0 = v_in[i].as_f32()?;
+            let grad: &[f32] = if pspec.name == "lm_head" {
+                &g_lm
+            } else {
+                &zeros
+            };
+            let len = p.len();
+            let mut pn = Vec::with_capacity(len);
+            let mut mn = Vec::with_capacity(len);
+            let mut vn = Vec::with_capacity(len);
+            for j in 0..len {
+                let g = grad.get(j).copied().unwrap_or(0.0) * clip;
+                let m1 = ADAM_B1 * m0[j] + (1.0 - ADAM_B1) * g;
+                let v1 = ADAM_B2 * v0[j] + (1.0 - ADAM_B2) * g * g;
+                let upd =
+                    lr * (m1 / bc1) / ((v1 / bc2).sqrt() + ADAM_EPS);
+                pn.push(p[j] - upd);
+                mn.push(m1);
+                vn.push(v1);
+            }
+            let shape = pspec.shape.clone();
+            new_p.push(HostArray::f32(shape.clone(), pn));
+            new_m.push(HostArray::f32(shape.clone(), mn));
+            new_v.push(HostArray::f32(shape, vn));
+        }
+
+        // ---- metrics in manifest order ----
+        let denom64 = denom as f64;
+        let value = |name: &str| -> f32 {
+            match name {
+                "loss" => loss as f32,
+                "entropy" => mean_ent as f32,
+                "kl_k1" => (k1 / denom64) as f32,
+                "kl_k3" => (k3 / denom64) as f32,
+                "tis_mean" => (tis_sum / denom64) as f32,
+                "ratio_raw_mean" => (raw_sum / denom64) as f32,
+                "grad_norm" => gnorm,
+                "lr" => lr,
+                // tile-exceedance profiling is a PJRT-only metric
+                _ => 0.0,
+            }
+        };
+        let names = &self.constants.metric_names;
+        let metrics: Vec<f32> =
+            names.iter().map(|nm| value(nm.as_str())).collect();
+
+        let mut out = new_p;
+        out.extend(new_m);
+        out.extend(new_v);
+        out.push(HostArray::f32(vec![1, 1], vec![t_new]));
+        out.push(HostArray::f32(vec![1, names.len()], metrics));
+        Ok(out)
+    }
+
+    fn run_logprobs(
+        &self,
+        inputs: &[HostArray],
+    ) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), n + 1)?;
+        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
+        let tokens = inputs[n].as_i32()?;
+        let fwd = self.train_forward(&model, tokens);
+        let (bt, tt) = (self.constants.b_train, self.constants.t_train);
+        Ok(vec![
+            HostArray::f32(vec![bt, tt - 1], fwd.lp),
+            HostArray::f32(vec![bt, tt - 1], fwd.ent),
+        ])
+    }
+
+    /// K/V amax scan over the given rows — the reference twin of the
+    /// calibrate artifact. K tracks even state components, V odd ones,
+    /// so the two scales are genuinely data-dependent but close.
+    fn run_calibrate(
+        &self,
+        inputs: &[HostArray],
+    ) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), n + 1)?;
+        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
+        let tokens = inputs[n].as_i32()?;
+        let (bt, tt) = (self.constants.b_train, self.constants.t_train);
+        let mut amax_even = 0.0f32;
+        let mut amax_odd = 0.0f32;
+        for b in 0..bt {
+            let mut state = vec![0.0f32; self.geo.d];
+            for t in 0..tt {
+                state = model.state_update(&state, tokens[b * tt + t]);
+                for (j, &x) in state.iter().enumerate() {
+                    if j % 2 == 0 {
+                        amax_even = amax_even.max(x.abs());
+                    } else {
+                        amax_odd = amax_odd.max(x.abs());
+                    }
+                }
+            }
+        }
+        let kscale = amax_even.max(1e-6) / E4M3.max;
+        let vscale = amax_odd.max(1e-6) / E4M3.max;
+        Ok(vec![
+            HostArray::f32(vec![1, 1], vec![kscale]),
+            HostArray::f32(vec![1, 1], vec![vscale]),
+        ])
+    }
+}
+
+struct TrainForward {
+    feats: Vec<f32>,
+    probs: Vec<f32>,
+    lp: Vec<f32>,
+    ent: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn exec(name: &str) -> RefExecutable {
+        let m = Manifest::synthetic();
+        let spec = m.entry(name).unwrap().clone();
+        let model = m.model(&spec.arch).unwrap().clone();
+        let geo = Geometry::from_model(&model).unwrap();
+        RefExecutable {
+            spec,
+            model,
+            geo,
+            constants: m.constants.clone(),
+        }
+    }
+
+    fn params(m: &Manifest, arch: &str) -> Vec<HostArray> {
+        let spec = m.model(arch).unwrap();
+        m.load_initial_params(arch)
+            .unwrap()
+            .into_iter()
+            .zip(&spec.params)
+            .map(|(v, p)| HostArray::f32(p.shape.clone(), v))
+            .collect()
+    }
+
+    #[test]
+    fn prefill_decode_state_threading_agrees() {
+        // feeding the same tokens through prefill vs one-at-a-time
+        // decode must land on identical logits at every position
+        let m = Manifest::synthetic();
+        let ps = params(&m, "dense");
+        let c = m.constants.clone();
+        let pre = exec("dense_prefill_bf16");
+        let dec = exec("dense_decode_bf16");
+        let geo = pre.geo;
+
+        let toks: Vec<i32> = (0..c.prompt_len as i32).collect();
+        let mut tokens = vec![0i32; c.b_rollout * c.prompt_len];
+        tokens[..c.prompt_len].copy_from_slice(&toks);
+        let mut inputs = ps.clone();
+        inputs.push(HostArray::i32(
+            vec![c.b_rollout, c.prompt_len],
+            tokens,
+        ));
+        inputs.push(HostArray::scalar_f32(1.0));
+        inputs.push(HostArray::scalar_f32(1.0));
+        let wave = pre.run(&inputs).unwrap();
+        let wave_logits = wave[0].as_f32().unwrap().to_vec();
+
+        let cache_len = geo.cache_len(c.b_rollout);
+        let mut kc = HostArray::f32(
+            geo.kv_shape(c.b_rollout),
+            vec![0.0; cache_len],
+        );
+        let mut vc = kc.clone();
+        for (p, &tok) in toks.iter().enumerate() {
+            let mut feed = vec![0i32; c.b_rollout];
+            feed[0] = tok;
+            let mut pos = vec![0i32; c.b_rollout];
+            pos[0] = p as i32;
+            let mut inputs = ps.clone();
+            inputs.push(kc.clone());
+            inputs.push(vc.clone());
+            inputs.push(HostArray::i32(vec![c.b_rollout, 1], feed));
+            inputs.push(HostArray::i32(vec![c.b_rollout, 1], pos));
+            inputs.push(HostArray::scalar_f32(1.0));
+            inputs.push(HostArray::scalar_f32(1.0));
+            let out = dec.run(&inputs).unwrap();
+            let dec_logits = out[0].as_f32().unwrap();
+            let want =
+                &wave_logits[p * geo.vocab..(p + 1) * geo.vocab];
+            assert_eq!(
+                &dec_logits[..geo.vocab],
+                want,
+                "position {p} diverged"
+            );
+            kc = out[1].clone();
+            vc = out[2].clone();
+        }
+    }
+
+    #[test]
+    fn fp8_variants_perturb_logits() {
+        let m = Manifest::synthetic();
+        let ps = params(&m, "dense");
+        let c = m.constants.clone();
+        let mk_inputs = || {
+            let mut inputs = ps.clone();
+            inputs.push(HostArray::i32(
+                vec![c.b_rollout, c.prompt_len],
+                vec![3; c.b_rollout * c.prompt_len],
+            ));
+            inputs.push(HostArray::scalar_f32(0.01));
+            inputs.push(HostArray::scalar_f32(0.01));
+            inputs
+        };
+        let bf16 = exec("dense_prefill_bf16").run(&mk_inputs()).unwrap();
+        let fp8 =
+            exec("dense_prefill_fullfp8").run(&mk_inputs()).unwrap();
+        assert_ne!(
+            bf16[0].as_f32().unwrap(),
+            fp8[0].as_f32().unwrap(),
+            "fp8 path must not be bit-identical to bf16"
+        );
+    }
+
+    #[test]
+    fn train_step_threads_adam_state() {
+        let m = Manifest::synthetic();
+        let ps = params(&m, "dense");
+        let c = m.constants.clone();
+        let n = ps.len();
+        let tr = exec("dense_train_bf16");
+        let zeros: Vec<HostArray> = ps
+            .iter()
+            .map(|p| {
+                HostArray::f32(
+                    p.shape().to_vec(),
+                    vec![0.0; p.numel()],
+                )
+            })
+            .collect();
+        let steps = c.t_train - 1;
+        let mut inputs = ps.clone();
+        inputs.extend(zeros.clone());
+        inputs.extend(zeros);
+        inputs.push(HostArray::f32(vec![1, 1], vec![0.0]));
+        let mut tokens = vec![14i32; c.b_train * c.t_train];
+        for (i, t) in tokens.iter_mut().enumerate().take(8) {
+            *t = (i % 10) as i32;
+        }
+        inputs.push(HostArray::i32(
+            vec![c.b_train, c.t_train],
+            tokens,
+        ));
+        let mut mask = vec![0.0f32; c.b_train * steps];
+        mask[2] = 1.0;
+        mask[3] = 1.0;
+        inputs.push(HostArray::f32(
+            vec![c.b_train, steps],
+            mask.clone(),
+        ));
+        let mut adv = vec![0.0f32; c.b_train * steps];
+        adv[2] = 1.0;
+        adv[3] = 1.0;
+        inputs.push(HostArray::f32(vec![c.b_train, steps], adv));
+        inputs.push(HostArray::f32(
+            vec![c.b_train, steps],
+            vec![-1.0; c.b_train * steps],
+        ));
+        inputs.push(HostArray::f32(
+            vec![1, 4],
+            vec![1e-2, 2.0, 0.0, 0.0],
+        ));
+        let out = tr.run(&inputs).unwrap();
+        assert_eq!(out.len(), 3 * n + 2);
+        // step advanced, grad norm positive, moments moved on lm_head
+        assert_eq!(out[3 * n].as_f32().unwrap()[0], 1.0);
+        let names = &m.constants.metric_names;
+        let gi = names.iter().position(|s| s == "grad_norm").unwrap();
+        let metrics = out[3 * n + 1].as_f32().unwrap();
+        assert!(metrics[gi] > 0.0, "expected gradient signal");
+        let li = m
+            .model("dense")
+            .unwrap()
+            .params
+            .iter()
+            .position(|p| p.name == "lm_head")
+            .unwrap();
+        // (the grad rows sum to zero across the vocab by construction,
+        // so check per-element movement, not the sum)
+        assert!(
+            out[n + li].as_f32().unwrap().iter().any(|&x| x != 0.0),
+            "lm_head Adam moment must move"
+        );
+    }
+}

@@ -15,9 +15,8 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::runtime::{HostArray, Runtime};
+use crate::util::error::Result;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CalibStrategy {

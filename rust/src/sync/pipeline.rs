@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::fp8::{
     quantize_blockwise, Fp8Format, ScaleFormat, Tensor, E4M3,

@@ -5,7 +5,7 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 pub struct CsvWriter {
     out: BufWriter<File>,

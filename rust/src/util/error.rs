@@ -1,0 +1,171 @@
+//! Minimal error-context substrate (anyhow is unavailable offline).
+//!
+//! [`Error`] is a rendered message chain: converting a source error
+//! captures its `Display` rendering (plus its `source()` chain), and
+//! [`Context`] prepends a layer of human context, exactly like anyhow.
+//! The crate-root `bail!` / `anyhow!` macros mirror the anyhow idiom so
+//! call sites read identically; they are re-exported here so modules can
+//! `use crate::util::error::{bail, Context, Result}`.
+
+use std::fmt;
+
+/// A rendered error: outermost context first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error {
+            chain: vec![m.into()],
+        }
+    }
+
+    /// Prepend a layer of context.
+    pub fn wrap(mut self, c: impl Into<String>) -> Error {
+        self.chain.insert(0, c.into());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// NOTE: like anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket conversion (and
+// the `Context` impl pair below) coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// anyhow-style context attachment for results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<S, F>(self, f: F) -> Result<T>
+    where
+        S: fmt::Display,
+        F: FnOnce() -> S;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(msg.to_string()))
+    }
+
+    fn with_context<S, F>(self, f: F) -> Result<T>
+    where
+        S: fmt::Display,
+        F: FnOnce() -> S,
+    {
+        self.map_err(|e| Error::from(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.wrap(msg.to_string()))
+    }
+
+    fn with_context<S, F>(self, f: F) -> Result<T>
+    where
+        S: fmt::Display,
+        F: FnOnce() -> S,
+    {
+        self.map_err(|e| e.wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<S, F>(self, f: F) -> Result<T>
+    where
+        S: fmt::Display,
+        F: FnOnce() -> S,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+    }
+
+    #[test]
+    fn context_layers() {
+        let r: Result<()> = fails().context("outer");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "outer: boom 42");
+        assert_eq!(e.root_cause(), "boom 42");
+    }
+
+    #[test]
+    fn std_error_conversion() {
+        let r: Result<usize> = "nope"
+            .parse::<usize>()
+            .with_context(|| format!("parsing {:?}", "nope"));
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("parsing \"nope\": "), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+}

@@ -17,19 +17,39 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json: expected {expected} but found {found} at {path}")]
     Type {
         expected: &'static str,
         found: &'static str,
         path: String,
     },
-    #[error("json: missing key '{0}'")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => {
+                write!(f, "json parse error at byte {at}: {msg}")
+            }
+            JsonError::Type {
+                expected,
+                found,
+                path,
+            } => {
+                write!(
+                    f,
+                    "json: expected {expected} but found {found} at {path}"
+                )
+            }
+            JsonError::Missing(key) => write!(f, "json: missing key '{key}'"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(src: &str) -> Result<Json, JsonError> {

@@ -1,6 +1,10 @@
-//! Substrate utilities: JSON, RNG, statistics, CLI parsing, CSV output.
+//! Substrate utilities: JSON, RNG, statistics, CLI parsing, CSV output,
+//! error context and logging (serde/clap/anyhow/log are unavailable
+//! offline — these are the in-repo replacements).
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod stats;

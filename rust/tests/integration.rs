@@ -1,55 +1,47 @@
 //! Integration tests over the runtime + engine + trainer + sync stack.
-//! These need `make artifacts`; they are skipped (with a note) if the
-//! artifacts directory is missing so unit CI can run without Python.
 //!
-//! Heavyweight by unit-test standards (each compiles XLA executables) —
-//! they share one global Runtime to compile each artifact exactly once.
+//! These run HERMETICALLY on the RefBackend (synthetic manifest, seeded
+//! weights): no Python, no `make artifacts`, no native libraries. The
+//! same suite exercises the exact code paths the PJRT backend drives —
+//! engine continuous batching, chunked-vs-wave prefill, weight sync,
+//! KV-scale calibration, DAPO training and the full RL loop — so what
+//! used to be permanently-skipped coverage is now always on.
 
-use std::cell::RefCell;
 use std::sync::Arc;
 
+use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
 use fp8_rl::rl::dapo::{score, Sample, TrainBatch};
 use fp8_rl::rl::task::{make_problem, Task, TaskConfig};
 use fp8_rl::rl::trainer::{Trainer, TrainerConfig};
 use fp8_rl::rollout::{
-    EngineConfig, HloEngine, Request, SamplingParams,
+    EngineConfig, FinishReason, HloEngine, Request, SamplingParams,
 };
 use fp8_rl::runtime::Runtime;
 use fp8_rl::sync::{
     CalibStrategy, Calibrator, WeightSync, WeightSyncConfig,
 };
 
-// xla's PjRtClient is Rc-based (!Send), so the shared Runtime lives in
-// TLS. Run `cargo test -- --test-threads=1` (the Makefile does) so all
-// tests share one compile cache.
-thread_local! {
-    static RT: RefCell<Option<Option<Arc<Runtime>>>> =
-        const { RefCell::new(None) };
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::hermetic())
 }
 
-fn runtime() -> Option<Arc<Runtime>> {
-    RT.with(|cell| {
-        cell.borrow_mut()
-            .get_or_insert_with(|| {
-                if !std::path::Path::new("artifacts/manifest.json")
-                    .exists()
-                {
-                    eprintln!(
-                        "integration tests skipped: run `make artifacts`"
-                    );
-                    return None;
-                }
-                Some(Arc::new(Runtime::new("artifacts").unwrap()))
-            })
-            .clone()
-    })
-}
-
-fn requests(n: u64, max_new: usize, temp: f32) -> Vec<Request> {
-    (0..n)
+/// Requests with ids (and prompts) drawn from `lo..hi`.
+fn requests_range(
+    lo: u64,
+    hi: u64,
+    max_new: usize,
+    temp: f32,
+) -> Vec<Request> {
+    (lo..hi)
         .map(|i| Request {
             id: i,
-            prompt: vec![12, (i % 10) as i32, 10, ((i + 3) % 10) as i32, 11],
+            prompt: vec![
+                12,
+                (i % 10) as i32,
+                10,
+                ((i + 3) % 10) as i32,
+                11,
+            ],
             params: SamplingParams {
                 temperature: temp,
                 max_new_tokens: max_new,
@@ -59,18 +51,23 @@ fn requests(n: u64, max_new: usize, temp: f32) -> Vec<Request> {
         .collect()
 }
 
+fn requests(n: u64, max_new: usize, temp: f32) -> Vec<Request> {
+    requests_range(0, n, max_new, temp)
+}
+
 #[test]
 fn manifest_loads_and_is_consistent() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let m = &rt.manifest;
     assert!(m.entrypoints.len() >= 30);
     for arch in ["dense", "moe"] {
         let spec = m.model(arch).unwrap();
-        assert!(spec.total_weights() > 100_000);
+        assert!(spec.total_weights() > 10_000);
         let params = m.load_initial_params(arch).unwrap();
         assert_eq!(params.len(), spec.params.len());
         // every kind exists for every arch
-        for kind in ["prefill", "decode", "train", "logprobs", "calibrate"] {
+        for kind in ["prefill", "decode", "train", "logprobs", "calibrate"]
+        {
             assert!(
                 m.entrypoints
                     .values()
@@ -83,7 +80,7 @@ fn manifest_loads_and_is_consistent() {
 
 #[test]
 fn engine_greedy_is_deterministic() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut e1 =
         HloEngine::new(rt.clone(), EngineConfig::new("dense", "bf16"))
             .unwrap();
@@ -92,37 +89,35 @@ fn engine_greedy_is_deterministic() {
             .unwrap();
     let a = e1.generate(requests(4, 6, 0.0)).unwrap();
     let b = e2.generate(requests(4, 6, 0.0)).unwrap();
+    assert_eq!(a.len(), 4);
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.tokens, y.tokens, "greedy decode must be stable");
+        assert_eq!(x.logprobs, y.logprobs);
     }
 }
 
 #[test]
-fn prefill_wave_matches_decode_prefill() {
+fn prefill_wave_matches_chunked_prefill() {
     // the batched-prefill fast path and the chunked (decode-path)
-    // prefill must produce the same greedy continuation
-    let Some(rt) = runtime() else { return };
-    let mut engine =
+    // prefill must produce the same greedy continuation. b_rollout is 8
+    // in the synthetic manifest, so an 11-request batch takes the wave
+    // for the first 8 and admits the last 3 through the chunked path as
+    // slots free up.
+    let rt = runtime();
+    let mut wave_engine =
         HloEngine::new(rt.clone(), EngineConfig::new("dense", "bf16"))
             .unwrap();
-    // wave path: submit while engine is empty
-    let wave = engine.generate(requests(3, 5, 0.0)).unwrap();
-    // chunked path: occupy a slot first so the wave fast path is skipped
-    // for the later arrivals (they admit via decode-prefill)
-    let mut mixed_reqs = requests(3, 5, 0.0);
-    mixed_reqs.insert(
-        0,
-        Request {
-            id: 99,
-            prompt: vec![12, 1, 10, 1, 11],
-            params: SamplingParams {
-                temperature: 0.0,
-                max_new_tokens: 12,
-                ..Default::default()
-            },
-        },
+    let wave = wave_engine.generate(requests_range(8, 11, 5, 0.0)).unwrap();
+
+    let mut mixed_engine =
+        HloEngine::new(rt.clone(), EngineConfig::new("dense", "bf16"))
+            .unwrap();
+    let mixed = mixed_engine.generate(requests_range(0, 11, 5, 0.0)).unwrap();
+    assert_eq!(mixed.len(), 11);
+    assert!(
+        mixed_engine.stats.prefill_waves >= 1,
+        "first 8 should go through the wave"
     );
-    let mixed = engine.generate(mixed_reqs).unwrap();
     for c in &wave {
         let m = mixed.iter().find(|x| x.id == c.id).unwrap();
         assert_eq!(
@@ -134,10 +129,102 @@ fn prefill_wave_matches_decode_prefill() {
 }
 
 #[test]
+fn engine_stall_fails_fast_with_diagnostic() {
+    // regression: a head-of-line request that can never fit used to
+    // spin 200k no-op iterations before erroring; it must now fail
+    // immediately and name the stuck request + its block requirement
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("dense", "bf16");
+    // exactly one 16-token block: a 16-token prompt (+1 growth) needs 2
+    cfg.kv_budget_bytes = Some(4096);
+    let mut engine = HloEngine::new(rt, cfg).unwrap();
+    let req = Request {
+        id: 7,
+        prompt: vec![1; 16],
+        params: SamplingParams::default(),
+    };
+    let t0 = std::time::Instant::now();
+    let err = engine.generate(vec![req]).unwrap_err().to_string();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "stall detection must be immediate"
+    );
+    assert!(err.contains("request 7"), "{err}");
+    assert!(err.contains("can never be admitted"), "{err}");
+    assert!(err.contains("2 KV blocks"), "{err}");
+}
+
+#[test]
+fn engine_self_preempt_thrash_fails_fast() {
+    // regression: a request whose prompt fits but whose
+    // prompt+generation footprint exceeds TOTAL capacity used to admit,
+    // grow, self-preempt and restart forever (until the 200k guard);
+    // it must now error after a bounded number of recompute attempts
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("dense", "bf16");
+    cfg.kv_budget_bytes = Some(4096); // 1 block = 16 tokens
+    let mut engine = HloEngine::new(rt, cfg).unwrap();
+    let req = Request {
+        id: 9,
+        prompt: vec![12, 2, 10, 3, 11],
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 32,
+            eos: -1, // never terminates early
+            ..Default::default()
+        },
+    };
+    let err = engine.generate(vec![req]).unwrap_err().to_string();
+    assert!(err.contains("request 9"), "{err}");
+    assert!(err.contains("self-preempted"), "{err}");
+    assert!(
+        engine.stats.decode_steps < 1000,
+        "thrash not bounded: {} steps",
+        engine.stats.decode_steps
+    );
+}
+
+#[test]
+fn engine_preemption_accounting() {
+    // a KV budget tight enough that two growing sequences fight over
+    // the last block: the newest is preempted (recompute) and both
+    // still finish, with the eviction counted on the victim
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("dense", "bf16");
+    cfg.kv_budget_bytes = Some(3 * 4096); // 3 blocks = 48 tokens
+    let mut engine = HloEngine::new(rt, cfg).unwrap();
+    let reqs: Vec<Request> = (0..2)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![12, i as i32, 10, 3, 11],
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 32,
+                eos: -1, // never matches: force long generations
+                ..Default::default()
+            },
+        })
+        .collect();
+    let done = engine.generate(reqs).unwrap();
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.finish, FinishReason::MaxTokens);
+        assert_eq!(c.tokens.len(), 32);
+        assert_eq!(c.logprobs.len(), 32);
+    }
+    assert!(
+        engine.stats.preemptions >= 1,
+        "expected preemption under a 3-block budget"
+    );
+    let victim = done.iter().find(|c| c.preemptions > 0);
+    assert!(victim.is_some(), "some completion must record evictions");
+}
+
+#[test]
 fn fp8_rollout_diverges_but_tis_sees_it() {
     // the paper's core mechanism: pi_fp8 != pi_theta, measured by the
     // trainer's logprobs on the engine's sampled tokens
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut engine =
         HloEngine::new(rt.clone(), EngineConfig::new("dense", "fp8lin"))
             .unwrap();
@@ -180,20 +267,24 @@ fn fp8_rollout_diverges_but_tis_sees_it() {
 #[test]
 fn train_step_learns_on_fixed_batch() {
     // repeating the same advantage-weighted batch must increase the
-    // selected tokens' likelihood => loss (negative objective) decreases
-    let Some(rt) = runtime() else { return };
-    let mut trainer =
-        Trainer::new(rt.clone(), TrainerConfig::new("dense", "bf16"))
-            .unwrap();
+    // selected tokens' likelihood
+    let rt = runtime();
+    let mut trainer = Trainer::new(
+        rt.clone(),
+        TrainerConfig {
+            lr: 1e-2,
+            ..TrainerConfig::new("dense", "bf16")
+        },
+    )
+    .unwrap();
     let problem = make_problem(2, 3);
     let c = rt.manifest.constants.clone();
-    // a hand-built "good" sample: the correct answer, positive advantage
     let completion = fp8_rl::rollout::Completion {
         id: 0,
         prompt: problem.prompt.clone(),
         tokens: problem.answer.clone(),
         logprobs: vec![-1.0; problem.answer.len()],
-        finish: fp8_rl::rollout::FinishReason::Eos,
+        finish: FinishReason::Eos,
         preemptions: 0,
     };
     let bad = fp8_rl::rollout::Completion {
@@ -219,19 +310,20 @@ fn train_step_learns_on_fixed_batch() {
         TrainBatch::assemble(&samples, c.b_train, c.t_train, 1e-4, false);
     let (lp0, _) = trainer.eval_logprobs(&batch.tokens).unwrap();
     for _ in 0..8 {
-        trainer.train_step(&batch).unwrap();
+        let m = trainer.train_step(&batch).unwrap();
+        assert!(m.get("loss").is_finite());
+        assert!(m.get("grad_norm") > 0.0);
     }
+    assert_eq!(trainer.step_count(), 8.0);
     let (lp1, _) = trainer.eval_logprobs(&batch.tokens).unwrap();
-    // the good row's response tokens must have gained probability
     let plen = problem.prompt.len();
-    let t = c.t_train;
     let before: f32 =
         (0..problem.answer.len()).map(|k| lp0[plen - 1 + k]).sum();
     let after: f32 =
         (0..problem.answer.len()).map(|k| lp1[plen - 1 + k]).sum();
     assert!(
         after > before,
-        "good answer logprob should rise: {before} -> {after} (T={t})"
+        "good answer logprob should rise: {before} -> {after}"
     );
 }
 
@@ -239,12 +331,14 @@ fn train_step_learns_on_fixed_batch() {
 fn calibration_strategies_roughly_agree() {
     // both Fig-7 strategies calibrate against the same policy; on
     // similar data their scales should land within 2x of each other
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let trainer =
         Trainer::new(rt.clone(), TrainerConfig::new("dense", "bf16"))
             .unwrap();
-    let rows: Vec<Vec<i32>> =
-        (0..8).map(|i| vec![12, i, 10, (9 - i), 11]).collect();
+    let inf_rows: Vec<Vec<i32>> =
+        (0..8).map(|i| vec![12, i, 10, 9 - i, 11]).collect();
+    let trn_rows: Vec<Vec<i32>> =
+        (0..8).map(|i| vec![12, 9 - i, 10, i, 11, i, 13]).collect();
     let inf = Calibrator::new(
         rt.clone(),
         "dense",
@@ -254,8 +348,10 @@ fn calibration_strategies_roughly_agree() {
     let trn =
         Calibrator::new(rt.clone(), "dense", CalibStrategy::TrainerSide)
             .unwrap();
-    let (k1, v1) = inf.recalibrate(trainer.params(), &rows, 14).unwrap();
-    let (k2, v2) = trn.recalibrate(trainer.params(), &rows, 14).unwrap();
+    let (k1, v1) =
+        inf.recalibrate(trainer.params(), &inf_rows, 14).unwrap();
+    let (k2, v2) =
+        trn.recalibrate(trainer.params(), &trn_rows, 14).unwrap();
     assert!(k1 > 0.0 && v1 > 0.0);
     assert!((k1 / k2) < 2.0 && (k2 / k1) < 2.0);
     assert!((v1 / v2) < 2.0 && (v2 / v1) < 2.0);
@@ -264,8 +360,8 @@ fn calibration_strategies_roughly_agree() {
 #[test]
 fn kv_scales_affect_fp8_kv_decode_only() {
     // installing absurd KV scales must change fp8-kv generation (the
-    // scales are live) — and a sane recalibration must restore sanity
-    let Some(rt) = runtime() else { return };
+    // scales are live) — and restoring them must restore the output
+    let rt = runtime();
     let mut engine =
         HloEngine::new(rt.clone(), EngineConfig::new("dense", "kvfp8"))
             .unwrap();
@@ -274,16 +370,74 @@ fn kv_scales_affect_fp8_kv_decode_only() {
     let bad = engine.generate(requests(2, 6, 0.0)).unwrap();
     engine.install_kv_scales(1.0, 1.0);
     let restored = engine.generate(requests(2, 6, 0.0)).unwrap();
-    // restored == first run (scales were 1.0 by default)
     for (a, b) in good.iter().zip(&restored) {
         assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.logprobs, b.logprobs);
     }
-    // catastrophic scales change *something*
     let changed = good
         .iter()
         .zip(&bad)
-        .any(|(a, b)| a.tokens != b.tokens);
+        .any(|(a, b)| a.tokens != b.tokens || a.logprobs != b.logprobs);
     assert!(changed, "kv scales appear dead");
+}
+
+#[test]
+fn rl_loop_end_to_end_hermetic() {
+    // the acceptance path: RlLoop::step drives engine generate ->
+    // weight-sync quantize/install -> KV-scale recalibration ->
+    // train_step, fully offline on the RefBackend
+    let rt = runtime();
+    let mut cfg =
+        ExperimentConfig::new("hermetic_e2e", "dense", "fullfp8", "bf16");
+    cfg.steps = 2;
+    cfg.prompts_per_step = 4;
+    cfg.samples_per_prompt = 4; // 16 rows == b_train
+    cfg.max_digits = 1;
+    cfg.max_sum = Some(9);
+    cfg.max_new_tokens = 4;
+    cfg.validate_every = 1;
+    let mut rl = RlLoop::new(rt, cfg).unwrap();
+    for step in 0..2 {
+        let rec = rl.step(step).unwrap();
+        // metric extraction
+        let reward = rec.get("reward");
+        assert!((0.0..=1.0).contains(&reward), "reward {reward}");
+        assert!(rec.get("response_len") > 0.0, "no completions assembled");
+        let kl = rec.get("mismatch_kl");
+        assert!(kl.is_finite() && kl >= 0.0, "mismatch_kl {kl}");
+        assert!(rec.get("loss").is_finite());
+        assert!(rec.get("entropy").is_finite());
+        let acc = rec.get("val_accuracy");
+        assert!((0.0..=1.0).contains(&acc), "val_accuracy {acc}");
+        // preemption accounting is extracted every step (zero under an
+        // unconstrained KV budget)
+        assert_eq!(rec.get("preemptions"), 0.0);
+        rl.recorder.push(rec);
+    }
+    let stats = rl.engine_stats();
+    assert!(stats.tokens_generated > 0);
+    assert!(stats.prefill_waves >= 1);
+    assert!(stats.decode_steps >= 1);
+    assert_eq!(rl.recorder.steps.len(), 2);
+    assert!(rl.recorder.tail_mean("reward", 2).is_finite());
+}
+
+#[test]
+fn rl_loop_runs_moe_arch_too() {
+    let rt = runtime();
+    let mut cfg =
+        ExperimentConfig::new("hermetic_moe", "moe", "fp8lin", "bf16");
+    cfg.steps = 1;
+    cfg.prompts_per_step = 4;
+    cfg.samples_per_prompt = 4;
+    cfg.max_digits = 1;
+    cfg.max_sum = Some(9);
+    cfg.max_new_tokens = 3;
+    cfg.validate_every = 1;
+    let mut rl = RlLoop::new(rt, cfg).unwrap();
+    let rec = rl.step(0).unwrap();
+    assert!(rec.get("loss").is_finite());
+    assert!(rec.get("mismatch_kl").is_finite());
 }
 
 #[test]
@@ -298,7 +452,9 @@ fn task_end_to_end_reward_shapes() {
         let p = task.sample();
         assert!(p.a + p.b <= 9);
         assert_eq!(Task::reward(&p, &p.answer), 1.0);
-        assert!(Task::reward(&p, &[((p.a + p.b + 1) % 10) as i32, 13]) < 0.5);
+        assert!(
+            Task::reward(&p, &[((p.a + p.b + 1) % 10) as i32, 13]) < 0.5
+        );
     }
 }
 
@@ -326,9 +482,6 @@ fn config_file_roundtrip() {
     assert_eq!(cfg.steps, 7);
     assert_eq!(cfg.max_sum, Some(9));
     assert_eq!(cfg.scale_fmt, fp8_rl::fp8::ScaleFormat::Ue8m0);
-    assert_eq!(
-        cfg.calib,
-        fp8_rl::sync::CalibStrategy::TrainerSide
-    );
+    assert_eq!(cfg.calib, fp8_rl::sync::CalibStrategy::TrainerSide);
     std::fs::remove_dir_all(dir).ok();
 }
