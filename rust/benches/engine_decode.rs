@@ -1,22 +1,29 @@
-//! End-to-end engine bench: real HLO decode throughput per rollout
-//! variant on the tiny policy (the L3+runtime hot path the §Perf pass
-//! optimizes). Requires `make artifacts`.
+//! End-to-end engine bench: real decode throughput per rollout variant
+//! on the tiny policy (the L3+runtime hot path the §Perf pass
+//! optimizes), plus the per-step host-traffic counter that the
+//! device-resident KV threading is measured by. Runs hermetically on
+//! the synthetic manifest + RefBackend when `make artifacts` has not
+//! been run, and emits `BENCH_engine_decode.json` (tokens/s, host
+//! bytes/step) so CI tracks the perf trajectory across PRs.
 //!
 //! Run: `cargo bench --bench engine_decode`
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use fp8_rl::rollout::{EngineConfig, HloEngine, Request, SamplingParams};
 use fp8_rl::runtime::Runtime;
+use fp8_rl::util::json::Json;
 use fp8_rl::util::rng::Pcg64;
 
 fn main() {
     let Ok(rt) = Runtime::new("artifacts") else {
-        eprintln!("skipping engine bench: run `make artifacts` first");
+        eprintln!("skipping engine bench: no runtime available");
         return;
     };
     let rt = Arc::new(rt);
+    let mut variants: BTreeMap<String, Json> = BTreeMap::new();
     for variant in ["bf16", "fp8lin", "kvfp8", "fullfp8"] {
         let mut engine = match HloEngine::new(
             rt.clone(),
@@ -47,15 +54,48 @@ fn main() {
             .collect();
         // warm (compiles cached in-process)
         let _ = engine.generate(reqs.clone()).unwrap();
+        let steps0 = engine.stats.decode_steps;
+        let bytes0 = engine.stats.host_bytes_moved;
         let t0 = Instant::now();
         let done = engine.generate(reqs).unwrap();
         let dt = t0.elapsed().as_secs_f64();
+        let steps = (engine.stats.decode_steps - steps0).max(1);
+        let run_bytes = engine.stats.host_bytes_moved - bytes0;
         let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+        let tok_s = tokens as f64 / dt;
+        // the tracked hot-path metric is the steady-state decode step
+        // (token/pos uploads + logits download); the whole-run figure
+        // additionally amortizes the prefill wave's O(B·L·V) logits,
+        // so it is reported separately rather than mixed in
+        let step_bytes = engine.stats.host_bytes_last_step;
         println!(
             "bench engine/decode[{variant:8}]: {tokens} tokens in \
-             {dt:.2}s = {:.1} tok/s ({:.2} ms/token/step batched)",
-            tokens as f64 / dt,
-            dt * 1e3 / engine.stats.decode_steps.max(1) as f64,
+             {dt:.2}s = {tok_s:.1} tok/s ({:.2} ms/token/step batched, \
+             {step_bytes} host B/decode-step, {run_bytes} B whole run)",
+            dt * 1e3 / steps as f64,
         );
+        let mut v: BTreeMap<String, Json> = BTreeMap::new();
+        v.insert("tokens".into(), Json::Num(tokens as f64));
+        v.insert("seconds".into(), Json::Num(dt));
+        v.insert("tokens_per_s".into(), Json::Num(tok_s));
+        v.insert("decode_steps".into(), Json::Num(steps as f64));
+        v.insert(
+            "host_bytes_per_step".into(),
+            Json::Num(step_bytes as f64),
+        );
+        v.insert(
+            "host_bytes_whole_run".into(),
+            Json::Num(run_bytes as f64),
+        );
+        variants.insert(variant.to_string(), Json::Obj(v));
+    }
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("engine_decode".into()));
+    root.insert("backend".into(), Json::Str(rt.backend_name().into()));
+    root.insert("variants".into(), Json::Obj(variants));
+    let path = "BENCH_engine_decode.json";
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

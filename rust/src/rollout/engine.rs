@@ -80,8 +80,58 @@ struct Slot {
 pub struct EngineStats {
     pub decode_steps: u64,
     pub prefill_waves: u64,
+    /// tokens DELIVERED in completions (recompute-preemption discards
+    /// are subtracted back out — see `tokens_discarded`)
     pub tokens_generated: u64,
+    /// sampled tokens later thrown away by recompute preemption or an
+    /// aborted `generate` — they are re-generated after readmission,
+    /// so counting them as generated would inflate throughput
+    pub tokens_discarded: u64,
     pub preemptions: u64,
+    /// host<->device bytes the engine moved across the runtime
+    /// boundary (uploads + logit downloads); with device-resident KV
+    /// threading this is O(B·V) per decode step, independent of the
+    /// cache size
+    pub host_bytes_moved: u64,
+    /// host<->device bytes moved during the most recent decode step
+    /// of the current `generate` call (0 until its first decode step)
+    pub host_bytes_last_step: u64,
+}
+
+impl EngineStats {
+    /// Move `n` sampled-but-undelivered tokens from `tokens_generated`
+    /// to `tokens_discarded` (recompute preemption or an aborted
+    /// `generate`).
+    fn discard_tokens(&mut self, n: u64) {
+        self.tokens_generated = self.tokens_generated.saturating_sub(n);
+        self.tokens_discarded += n;
+    }
+}
+
+/// Upload `a` into an existing device buffer when the backend supports
+/// in-place writes, else replace it with a fresh upload; counts the
+/// host->device traffic either way.
+fn upload_into(
+    rt: &Runtime,
+    stats: &mut EngineStats,
+    buf: &mut DeviceBuffer,
+    a: &HostArray,
+) -> Result<()> {
+    stats.host_bytes_moved += a.nbytes() as u64;
+    if !buf.write_from_host(a)? {
+        *buf = rt.to_device(a)?;
+    }
+    Ok(())
+}
+
+/// Download a device buffer, counting the device->host traffic.
+fn download(
+    stats: &mut EngineStats,
+    b: &DeviceBuffer,
+) -> Result<HostArray> {
+    let a = b.to_host()?;
+    stats.host_bytes_moved += a.nbytes() as u64;
+    Ok(a)
 }
 
 pub struct HloEngine {
@@ -90,11 +140,22 @@ pub struct HloEngine {
     prefill: Arc<Executable>,
     decode: Arc<Executable>,
     param_bufs: Vec<DeviceBuffer>,
-    /// dense KV cache state threaded through decode calls
-    kc: HostArray,
-    vc: HostArray,
+    /// dense KV cache state threaded through decode calls — DEVICE
+    /// resident: the full cache never crosses the host boundary on the
+    /// hot path (the RefBackend mutates it in place; PJRT degrades to
+    /// the run+re-upload fallback)
+    kc: DeviceBuffer,
+    vc: DeviceBuffer,
+    /// pre-sized reusable per-step input buffers (tokens, positions,
+    /// k/v scales) — recycled via `write_from_host` where supported
+    tok_buf: DeviceBuffer,
+    pos_buf: DeviceBuffer,
+    ks_buf: DeviceBuffer,
+    vs_buf: DeviceBuffer,
     kscale: f32,
     vscale: f32,
+    /// true when kscale/vscale changed since ks_buf/vs_buf were staged
+    scales_dirty: bool,
     slots: Vec<Option<Slot>>,
     sched: Scheduler,
     rng: Pcg64,
@@ -143,8 +204,15 @@ impl HloEngine {
             geo.d_head,
         ];
         let n: usize = kv_shape.iter().product();
-        let kc = HostArray::f32(kv_shape.clone(), vec![0.0; n]);
-        let vc = HostArray::f32(kv_shape, vec![0.0; n]);
+        let kc = rt
+            .to_device(&HostArray::f32(kv_shape.clone(), vec![0.0; n]))?;
+        let vc = rt.to_device(&HostArray::f32(kv_shape, vec![0.0; n]))?;
+        let tok_buf =
+            rt.to_device(&HostArray::i32(vec![b, 1], vec![0; b]))?;
+        let pos_buf =
+            rt.to_device(&HostArray::i32(vec![b, 1], vec![0; b]))?;
+        let ks_buf = rt.to_device(&HostArray::scalar_f32(1.0))?;
+        let vs_buf = rt.to_device(&HostArray::scalar_f32(1.0))?;
         // initial weights: the aot dump; weight-sync replaces them
         let init = rt.manifest.load_initial_params(&cfg.arch)?;
         let params: Vec<HostArray> = init
@@ -162,8 +230,13 @@ impl HloEngine {
             param_bufs,
             kc,
             vc,
+            tok_buf,
+            pos_buf,
+            ks_buf,
+            vs_buf,
             kscale: 1.0,
             vscale: 1.0,
+            scales_dirty: false,
             slots: (0..b).map(|_| None).collect(),
             sched,
             rng: Pcg64::new(seed),
@@ -180,17 +253,52 @@ impl HloEngine {
         &self.cfg
     }
 
-    /// Install freshly synchronized weights (called by sync::Pipeline at
-    /// every RL step — paper Fig 1 "weight synchronization phase").
+    /// Install freshly synchronized weights (called by the weight-sync
+    /// pipeline at every RL step — paper Fig 1 "weight synchronization
+    /// phase"). The persistent device buffers are reused in place when
+    /// the backend supports it: the upload is O(params) per sync either
+    /// way, but no new device allocations are made.
     pub fn install_weights(&mut self, params: &[HostArray]) -> Result<()> {
-        self.param_bufs = self.rt.to_device_all(params)?;
+        if self.param_bufs.len() != params.len() {
+            for a in params {
+                self.stats.host_bytes_moved += a.nbytes() as u64;
+            }
+            self.param_bufs = self.rt.to_device_all(params)?;
+            return Ok(());
+        }
+        for (buf, a) in self.param_bufs.iter_mut().zip(params) {
+            upload_into(&self.rt, &mut self.stats, buf, a)?;
+        }
         Ok(())
     }
 
-    /// Install recalibrated QKV scales (paper §2.3.1).
+    /// Install recalibrated QKV scales (paper §2.3.1). The device
+    /// copies are refreshed lazily on the next prefill/decode.
     pub fn install_kv_scales(&mut self, kscale: f32, vscale: f32) {
         self.kscale = kscale;
         self.vscale = vscale;
+        self.scales_dirty = true;
+    }
+
+    /// Re-stage the k/v scale device buffers if the scales changed.
+    fn refresh_scales(&mut self) -> Result<()> {
+        if !self.scales_dirty {
+            return Ok(());
+        }
+        upload_into(
+            &self.rt,
+            &mut self.stats,
+            &mut self.ks_buf,
+            &HostArray::scalar_f32(self.kscale),
+        )?;
+        upload_into(
+            &self.rt,
+            &mut self.stats,
+            &mut self.vs_buf,
+            &HostArray::scalar_f32(self.vscale),
+        )?;
+        self.scales_dirty = false;
+        Ok(())
     }
 
     pub fn kv_scales(&self) -> (f32, f32) {
@@ -198,10 +306,46 @@ impl HloEngine {
     }
 
     /// Generate completions for a batch of requests (runs to drain).
+    /// On error every submitted request — running or still queued — is
+    /// dropped, so the next `generate` starts from a clean scheduler
+    /// (a failed call must not leak ghost requests into later calls).
     pub fn generate(
         &mut self,
         requests: Vec<Request>,
     ) -> Result<Vec<Completion>> {
+        self.stats.host_bytes_last_step = 0; // per-call semantics
+        let mut done: Vec<Completion> = Vec::new();
+        match self.generate_inner(requests, &mut done) {
+            Ok(()) => Ok(done),
+            Err(e) => {
+                // completions finished before the failure are dropped
+                // with it — their tokens were never delivered either
+                for c in &done {
+                    self.stats.discard_tokens(c.tokens.len() as u64);
+                }
+                self.abort_in_flight();
+                Err(e)
+            }
+        }
+    }
+
+    /// Drop all queued and running work (the `generate` error path).
+    fn abort_in_flight(&mut self) {
+        for s in self.slots.iter_mut() {
+            if let Some(slot) = s.take() {
+                self.stats
+                    .discard_tokens(slot.generated.len() as u64);
+            }
+        }
+        self.sched.drain();
+        self.preempt_counts.clear();
+    }
+
+    fn generate_inner(
+        &mut self,
+        requests: Vec<Request>,
+        done: &mut Vec<Completion>,
+    ) -> Result<()> {
         for r in &requests {
             if r.prompt.is_empty() || r.prompt.len() > self.prompt_len {
                 bail!(
@@ -212,10 +356,9 @@ impl HloEngine {
             }
             self.sched.submit(r.clone());
         }
-        let mut done: Vec<Completion> = Vec::new();
         // fast path: empty engine + batch start => batched prefill wave
         if self.slots.iter().all(|s| s.is_none()) {
-            self.prefill_wave(&mut done)?;
+            self.prefill_wave(done)?;
         }
         let mut guard = 0usize;
         while !self.sched.is_idle() {
@@ -239,7 +382,7 @@ impl HloEngine {
                     self.sched.kv.total_blocks()
                 );
             }
-            self.decode_step(&mut done)?;
+            self.decode_step(done)?;
             guard += 1;
             if guard > 200_000 {
                 bail!("engine livelock: {} running", self.sched.n_running());
@@ -247,7 +390,7 @@ impl HloEngine {
         }
         // stable output order by request id
         done.sort_by_key(|c| c.id);
-        Ok(done)
+        Ok(())
     }
 
     /// Admit waiting requests into free slots.
@@ -289,20 +432,25 @@ impl HloEngine {
                     *req.prompt.last().unwrap();
             }
         }
-        let mut inputs: Vec<HostArray> = Vec::new();
-        let tok =
-            HostArray::i32(vec![self.b, self.prompt_len], tokens);
-        let ks = HostArray::scalar_f32(self.kscale);
-        let vs = HostArray::scalar_f32(self.vscale);
-        inputs.push(tok);
-        inputs.push(ks);
-        inputs.push(vs);
-        let in_bufs = self.rt.to_device_all(&inputs)?;
-        let mut all: Vec<&DeviceBuffer> =
-            self.param_bufs.iter().collect();
-        all.extend(in_bufs.iter());
-        let out = self.prefill.run_buffers(&all)?;
-        let (logits, kc, vc) = (&out[0], out[1].clone(), out[2].clone());
+        self.refresh_scales()?;
+        let tok = HostArray::i32(vec![self.b, self.prompt_len], tokens);
+        self.stats.host_bytes_moved += tok.nbytes() as u64;
+        let tok_buf = self.rt.to_device(&tok)?;
+        let mut out = {
+            let mut all: Vec<&DeviceBuffer> =
+                self.param_bufs.iter().collect();
+            all.push(&tok_buf);
+            all.push(&self.ks_buf);
+            all.push(&self.vs_buf);
+            self.prefill.run_to_device(&all)?
+        };
+        if out.len() != 3 {
+            bail!("prefill returned {} outputs, want 3", out.len());
+        }
+        // the caches stay device-resident; only the logits come back
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits = download(&mut self.stats, &out[0])?;
         self.kc = kc;
         self.vc = vc;
         // install slots; prompt tokens 0..plen-1 are already in cache;
@@ -338,12 +486,15 @@ impl HloEngine {
         Ok(())
     }
 
-    /// One decode step over all active slots.
+    /// One decode step over all active slots. The KV cache stays
+    /// device-resident end to end: the only host traffic is the (B,1)
+    /// token/position uploads and the (B,V) logits download.
     fn decode_step(&mut self, done: &mut Vec<Completion>) -> Result<()> {
         if self.slots.iter().all(|s| s.is_none()) {
             return Ok(());
         }
         self.stats.decode_steps += 1;
+        let bytes0 = self.stats.host_bytes_moved;
         let mut tokens = vec![0i32; self.b];
         let mut pos = vec![0i32; self.b];
         // sequences consuming a token BEYOND their preallocated prompt
@@ -358,22 +509,41 @@ impl HloEngine {
                 }
             }
         }
-        let inputs = [
-            self.kc.clone(),
-            self.vc.clone(),
-            HostArray::i32(vec![self.b, 1], tokens),
-            HostArray::i32(vec![self.b, 1], pos),
-            HostArray::scalar_f32(self.kscale),
-            HostArray::scalar_f32(self.vscale),
-        ];
-        let in_bufs = self.rt.to_device_all(&inputs)?;
-        let mut all: Vec<&DeviceBuffer> =
-            self.param_bufs.iter().collect();
-        all.extend(in_bufs.iter());
-        let out = self.decode.run_buffers(&all)?;
-        let logits = out[0].as_f32()?.to_vec();
-        self.kc = out[1].clone();
-        self.vc = out[2].clone();
+        self.refresh_scales()?;
+        upload_into(
+            &self.rt,
+            &mut self.stats,
+            &mut self.tok_buf,
+            &HostArray::i32(vec![self.b, 1], tokens),
+        )?;
+        upload_into(
+            &self.rt,
+            &mut self.stats,
+            &mut self.pos_buf,
+            &HostArray::i32(vec![self.b, 1], pos),
+        )?;
+        let mut out = {
+            let mut all: Vec<&DeviceBuffer> =
+                self.param_bufs.iter().collect();
+            all.push(&self.kc);
+            all.push(&self.vc);
+            all.push(&self.tok_buf);
+            all.push(&self.pos_buf);
+            all.push(&self.ks_buf);
+            all.push(&self.vs_buf);
+            self.decode.run_to_device(&all)?
+        };
+        if out.len() != 3 {
+            bail!("decode returned {} outputs, want 3", out.len());
+        }
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits_arr = download(&mut self.stats, &out[0])?;
+        self.kc = kc;
+        self.vc = vc;
+        let logits = logits_arr.as_f32()?;
+        self.stats.host_bytes_last_step =
+            self.stats.host_bytes_moved - bytes0;
 
         // grow bookkeeping + preemption
         let report = self.sched.extend_all(&grow_ids);
@@ -382,7 +552,13 @@ impl HloEngine {
             *self.preempt_counts.entry(*victim).or_insert(0) += 1;
             for s in self.slots.iter_mut() {
                 if s.as_ref().map(|x| x.req.id) == Some(*victim) {
-                    *s = None;
+                    if let Some(x) = s.take() {
+                        // recompute-preemption discards these tokens;
+                        // they re-run after readmission, so counting
+                        // them as generated would double-count
+                        self.stats
+                            .discard_tokens(x.generated.len() as u64);
+                    }
                 }
             }
         }

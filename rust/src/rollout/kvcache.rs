@@ -121,6 +121,15 @@ impl KvBlockManager {
         tokens.div_ceil(self.geometry.block_tokens)
     }
 
+    /// True when the sequence's allocation is exactly full — its next
+    /// appended token will need a fresh block. The scheduler counts
+    /// these into its admission growth reserve.
+    pub fn at_block_boundary(&self, id: u64) -> bool {
+        self.seqs.get(&id).is_some_and(|s| {
+            s.tokens == s.blocks.len() * self.geometry.block_tokens
+        })
+    }
+
     /// Can a new sequence of `tokens` tokens be admitted right now?
     pub fn can_allocate(&self, tokens: usize) -> bool {
         self.blocks_for(tokens) <= self.free.len()

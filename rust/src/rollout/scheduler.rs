@@ -87,27 +87,61 @@ impl Scheduler {
     /// re-admission reserves (prompt + preserved generation) atomically,
     /// so a preempted sequence waits at the queue head until its whole
     /// footprint fits (no admit/evict thrash).
+    ///
+    /// Growth reserves are CUMULATIVE across the whole admission round:
+    /// the old `can_allocate(tokens + 1)` check was per-request, so two
+    /// same-round admissions could each consume the other's +1 growth
+    /// block and preempt-thrash on their very first generated token.
+    /// The reserve also covers every already-running sequence whose
+    /// allocation is exactly full (it takes a fresh block on its next
+    /// append), so a sequence admitted in round N is never preempted by
+    /// the `extend_all` of round N. This is deliberately pessimistic
+    /// about non-growing runners: a re-admitted sequence still
+    /// replaying its prompt sits at a boundary without appending for a
+    /// few rounds, and we reserve for it anyway — a small throughput
+    /// cost for a thrash-freedom guarantee that needs no caller hints.
     pub fn admit_with<F: Fn(u64) -> usize>(
         &mut self,
         extra: F,
     ) -> Vec<Request> {
         let mut out = Vec::new();
+        let mut reserve: usize = self
+            .running
+            .iter()
+            .filter(|id| self.kv.at_block_boundary(**id))
+            .count();
         while self.running.len() < self.max_batch {
             let Some(front) = self.waiting.front() else { break };
+            let tokens =
+                (front.prompt.len() + extra(front.id)).max(1);
+            let need_now = self.kv.blocks_for(tokens);
             // +1 growth reserve so a fresh admission can't instantly
             // deadlock the running set
-            let tokens = front.prompt.len() + extra(front.id);
-            if !self.kv.can_allocate(tokens + 1) {
+            let need_grown = self.kv.blocks_for(tokens + 1);
+            if need_grown + reserve > self.kv.free_blocks() {
                 break;
             }
             let req = self.waiting.pop_front().unwrap();
             assert!(self.kv.allocate(req.id, tokens));
+            reserve += need_grown - need_now;
             self.running.push(req.id);
             self.bodies.insert(req.id, req.clone());
             self.stats.admitted += 1;
             out.push(req);
         }
         out
+    }
+
+    /// Drop every queued and running request (the engine's error
+    /// path): KV blocks are released, bodies cleared, the waiting
+    /// queue emptied. Drained work counts as neither finished nor
+    /// preempted.
+    pub fn drain(&mut self) {
+        for id in std::mem::take(&mut self.running) {
+            self.kv.release(id);
+        }
+        self.bodies.clear();
+        self.waiting.clear();
     }
 
     /// Grow the given running sequences by one token each, preempting
@@ -238,17 +272,68 @@ mod tests {
         s.submit(req(1, 4));
         s.submit(req(2, 4));
         s.submit(req(3, 4));
-        assert_eq!(s.admit().len(), 3); // 3 blocks used, 1 free
-        // grow until exhaustion: each seq fills its block after 0 appends
-        // (4-token prompts exactly fill blocks), so extends need blocks
+        // the cumulative growth reserve admits only 2 of the 3
+        // block-filling prompts: 2 prompt blocks + 2 reserved = 4
+        assert_eq!(s.admit().len(), 2);
+        let ids = s.running_ids().to_vec();
+        // first extend consumes exactly the reserved blocks: no thrash
+        let rep = s.extend_all(&ids);
+        assert!(rep.preempted.is_empty());
+        s.check_invariants().unwrap();
+        // grow until exhaustion (cache full at 8 tokens each): the
+        // NEWEST sequence is evicted and requeued at the front
+        let mut preempted = Vec::new();
+        for _ in 0..4 {
+            preempted.extend(s.extend_all(&ids).preempted);
+        }
+        assert_eq!(preempted, vec![2]);
+        assert_eq!(s.n_running(), 1);
+        assert_eq!(s.n_waiting(), 2);
+        assert_eq!(s.stats.preemptions, 1);
+        assert_eq!(s.head_of_line().unwrap().id, 2, "requeued at front");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn same_round_admissions_reserve_growth_cumulatively() {
+        // regression: `admit` used to check can_allocate(tokens + 1)
+        // per request but allocate only `tokens`, so two exactly-
+        // block-filling prompts admitted in the same round shared ONE
+        // free growth block and preempt-thrashed on their first
+        // generated token. With the cumulative reserve the second
+        // admission waits; nobody is preempted in its admission round.
+        let mut s = mk(3, 4); // 3 blocks of 4 tokens
+        s.submit(req(1, 4)); // exactly fills a block
+        s.submit(req(2, 4)); // exactly fills a block
+        let admitted = s.admit();
+        assert_eq!(admitted.len(), 1, "one growth block can't serve two");
         let ids = s.running_ids().to_vec();
         let rep = s.extend_all(&ids);
-        // seq1 takes the last free block; seq2's extend evicts newest (3);
-        // seq2 takes the freed block; seq3 is gone.
-        assert_eq!(rep.preempted, vec![3]);
-        assert_eq!(s.n_running(), 2);
-        assert_eq!(s.n_waiting(), 1);
-        assert_eq!(s.stats.preemptions, 1);
+        assert!(
+            rep.preempted.is_empty(),
+            "no same-step preemption after admission"
+        );
+        s.check_invariants().unwrap();
+        // the head-of-line request is admitted once capacity frees up
+        s.finish(1);
+        assert_eq!(s.admit().len(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_clears_queued_and_running() {
+        let mut s = mk(100, 2);
+        s.submit(req(1, 4));
+        s.submit(req(2, 4));
+        s.submit(req(3, 4));
+        assert_eq!(s.admit().len(), 2);
+        s.drain();
+        assert!(s.is_idle());
+        assert_eq!(s.kv.used_blocks(), 0);
+        s.check_invariants().unwrap();
+        // the scheduler is immediately reusable
+        s.submit(req(4, 4));
+        assert_eq!(s.admit().len(), 1);
         s.check_invariants().unwrap();
     }
 

@@ -30,6 +30,17 @@ pub trait DeviceBufferImpl {
     /// to keep weights device-resident across calls instead of
     /// round-tripping through the host).
     fn as_any(&self) -> &dyn std::any::Any;
+
+    /// Overwrite the buffer contents in place from a host array with
+    /// the same shape/dtype. Returns `Ok(false)` when the backend
+    /// cannot update in place (or the shapes differ) — callers then
+    /// fall back to uploading a fresh buffer via `Backend::to_device`.
+    /// The engine uses this to recycle its small pre-sized per-step
+    /// buffers (tokens, positions, scales) and the persistent weight
+    /// buffers across weight syncs.
+    fn write_from_host(&self, _a: &HostArray) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 /// A device-resident input buffer (backend-erased).
@@ -46,8 +57,30 @@ impl DeviceBuffer {
         self.imp.to_host()
     }
 
+    /// In-place update; `Ok(false)` means "unsupported, re-upload".
+    pub fn write_from_host(&self, a: &HostArray) -> Result<bool> {
+        self.imp.write_from_host(a)
+    }
+
     pub fn imp(&self) -> &dyn DeviceBufferImpl {
         self.imp.as_ref()
+    }
+}
+
+/// A host array masquerading as a device buffer — what the default
+/// [`ExecutableImpl::run_to_device`] fallback wraps its outputs in.
+/// Backends that override `run_buffers` with a downcast must accept
+/// foreign buffers like this one by degrading to the host path
+/// (`to_host` always works).
+pub struct HostStagedBuffer(pub HostArray);
+
+impl DeviceBufferImpl for HostStagedBuffer {
+    fn to_host(&self) -> Result<HostArray> {
+        Ok(self.0.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 
@@ -67,6 +100,23 @@ pub trait ExecutableImpl {
         let hosts: Result<Vec<HostArray>> =
             inputs.iter().map(|b| b.to_host()).collect();
         self.run(&hosts?)
+    }
+
+    /// Execute keeping the outputs device-resident — the decode hot
+    /// path: the engine threads KV state buffers through successive
+    /// calls without ever round-tripping the cache through the host.
+    /// The default runs the buffer path and re-wraps the outputs as
+    /// host-staged buffers (run + re-upload): correct for every
+    /// backend, zero-copy only where natively overridden (RefBackend).
+    fn run_to_device(
+        &self,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        Ok(self
+            .run_buffers(inputs)?
+            .into_iter()
+            .map(|a| DeviceBuffer::new(Box::new(HostStagedBuffer(a))))
+            .collect())
     }
 }
 

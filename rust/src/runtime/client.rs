@@ -42,6 +42,16 @@ impl Executable {
         self.imp.run_buffers(inputs)
     }
 
+    /// Execute with device buffers in AND out (the decode hot path):
+    /// outputs stay backend-resident, so state threaded between calls
+    /// — the KV cache above all — never crosses the host boundary.
+    pub fn run_to_device(
+        &self,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        self.imp.run_to_device(inputs)
+    }
+
     fn check_inputs(&self, inputs: &[HostArray]) -> Result<()> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(

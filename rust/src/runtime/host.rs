@@ -47,6 +47,12 @@ impl HostArray {
         self.shape().iter().product()
     }
 
+    /// Payload bytes (both supported dtypes are 4 bytes/element) —
+    /// the unit of the engine's host-traffic accounting.
+    pub fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+
     pub fn dtype(&self) -> DType {
         match self {
             HostArray::F32(..) => DType::F32,

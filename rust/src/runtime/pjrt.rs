@@ -73,10 +73,16 @@ impl ExecutableImpl for PjrtExecutable {
             let Some(p) =
                 b.imp().as_any().downcast_ref::<PjrtDeviceBuffer>()
             else {
-                bail!(
-                    "{}: device buffer from a different backend",
-                    self.spec.name
-                );
+                // a host-staged buffer (e.g. from the default
+                // `run_to_device` fallback threading state between
+                // calls): fetch everything and take the host path.
+                // This round-trips the native inputs (params) too — a
+                // native run_to_device holding a client handle to
+                // re-stage foreign buffers is the planned fix (see
+                // DESIGN.md "Device-resident KV threading").
+                let hosts: Result<Vec<HostArray>> =
+                    inputs.iter().map(|b| b.to_host()).collect();
+                return self.run(&hosts?);
             };
             bufs.push(&p.buf);
         }

@@ -37,6 +37,9 @@
 //! executor small. See DESIGN.md "RefBackend numerics" for the full
 //! contract and divergence from PJRT.
 
+use std::cell::{Ref, RefCell};
+use std::rc::Rc;
+
 use crate::fp8::{ScaleFormat, E4M3};
 use crate::util::error::{bail, Context, Result};
 
@@ -70,15 +73,47 @@ impl Default for RefBackend {
     }
 }
 
-struct RefBuffer(HostArray);
+/// "Device" memory for the reference backend is host memory behind a
+/// shared cell: `run_to_device` mutates threaded state (the KV cache)
+/// in place and hands back aliases, so the decode hot loop moves zero
+/// cache bytes per step.
+struct RefBuffer(Rc<RefCell<HostArray>>);
+
+impl RefBuffer {
+    fn alias(&self) -> DeviceBuffer {
+        DeviceBuffer::new(Box::new(RefBuffer(self.0.clone())))
+    }
+}
+
+/// Wrap a freshly computed host array as a ref-backend device buffer.
+fn ref_device(a: HostArray) -> DeviceBuffer {
+    DeviceBuffer::new(Box::new(RefBuffer(Rc::new(RefCell::new(a)))))
+}
 
 impl DeviceBufferImpl for RefBuffer {
     fn to_host(&self) -> Result<HostArray> {
-        Ok(self.0.clone())
+        Ok(self.0.borrow().clone())
     }
 
     fn as_any(&self) -> &dyn std::any::Any {
         self
+    }
+
+    fn write_from_host(&self, a: &HostArray) -> Result<bool> {
+        let mut dst = self.0.borrow_mut();
+        if dst.shape() != a.shape() || dst.dtype() != a.dtype() {
+            return Ok(false); // caller uploads a fresh buffer
+        }
+        match (&mut *dst, a) {
+            (HostArray::F32(_, d), HostArray::F32(_, s)) => {
+                d.copy_from_slice(s)
+            }
+            (HostArray::I32(_, d), HostArray::I32(_, s)) => {
+                d.copy_from_slice(s)
+            }
+            _ => return Ok(false),
+        }
+        Ok(true)
     }
 }
 
@@ -103,7 +138,7 @@ impl Backend for RefBackend {
     }
 
     fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
-        Ok(DeviceBuffer::new(Box::new(RefBuffer(a.clone()))))
+        Ok(ref_device(a.clone()))
     }
 }
 
@@ -236,7 +271,7 @@ impl<'a> RefModel<'a> {
     fn new(
         spec: &ModelSpec,
         geo: Geometry,
-        params: &'a [HostArray],
+        params: &[&'a HostArray],
     ) -> Result<RefModel<'a>> {
         let find = |name: &str| {
             spec.params
@@ -311,6 +346,11 @@ impl<'a> RefModel<'a> {
     }
 }
 
+/// Borrow the leading `n` host inputs as the flat parameter list.
+fn borrow_params(inputs: &[HostArray], n: usize) -> Vec<&HostArray> {
+    inputs[..n].iter().collect()
+}
+
 /// Read the state stored at `pos` back out of the caches (mean of the
 /// K and V copies — both carry the state, each under its own scale).
 fn read_state(
@@ -380,6 +420,30 @@ impl ExecutableImpl for RefExecutable {
             }
         }
     }
+
+    fn run_to_device(
+        &self,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        let refs: Option<Vec<&RefBuffer>> = inputs
+            .iter()
+            .map(|b| b.imp().as_any().downcast_ref::<RefBuffer>())
+            .collect();
+        if let Some(bufs) = refs {
+            match self.spec.kind.as_str() {
+                "decode" => return self.run_decode_device(&bufs),
+                "prefill" => return self.run_prefill_device(&bufs),
+                _ => {}
+            }
+        }
+        // cold kinds / foreign buffers: host round-trip, re-wrapped so
+        // later device-path calls can still consume the outputs
+        Ok(self
+            .run_buffers(inputs)?
+            .into_iter()
+            .map(ref_device)
+            .collect())
+    }
 }
 
 impl RefExecutable {
@@ -390,16 +454,15 @@ impl RefExecutable {
         Ok(())
     }
 
-    fn run_prefill(
+    /// Prefill compute shared by the host and device entrypoints:
+    /// returns (logits, kc, vc) as freshly allocated flat vecs.
+    fn prefill_core(
         &self,
-        inputs: &[HostArray],
-    ) -> Result<Vec<HostArray>> {
-        let n = self.model.params.len();
-        self.check_arity(inputs.len(), n + 3)?;
-        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
-        let tokens = inputs[n].as_i32()?;
-        let ks = inputs[n + 1].as_f32()?[0];
-        let vs = inputs[n + 2].as_f32()?[0];
+        model: &RefModel,
+        tokens: &[i32],
+        ks: f32,
+        vs: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let flags = variant_flags(&self.spec.variant);
         let geo = self.geo;
         let (b_roll, plen) =
@@ -435,29 +498,89 @@ impl RefExecutable {
                 );
             }
         }
+        (logits, kc, vc)
+    }
+
+    fn run_prefill(
+        &self,
+        inputs: &[HostArray],
+    ) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), n + 3)?;
+        let model =
+            RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
+        let tokens = inputs[n].as_i32()?;
+        let ks = inputs[n + 1].as_f32()?[0];
+        let vs = inputs[n + 2].as_f32()?[0];
+        let (logits, kc, vc) = self.prefill_core(&model, tokens, ks, vs);
+        let geo = self.geo;
+        let (b_roll, plen) =
+            (self.constants.b_rollout, self.constants.prompt_len);
         Ok(vec![
-            HostArray::f32(vec![b_roll, plen, v], logits),
+            HostArray::f32(vec![b_roll, plen, geo.vocab], logits),
             HostArray::f32(geo.kv_shape(b_roll), kc),
             HostArray::f32(geo.kv_shape(b_roll), vc),
         ])
     }
 
-    fn run_decode(
+    /// Native device-resident prefill: parameters are read in place
+    /// (no per-call clone) and the fresh KV caches come back as
+    /// backend-owned buffers the decode path consumes directly.
+    fn run_prefill_device(
         &self,
-        inputs: &[HostArray],
-    ) -> Result<Vec<HostArray>> {
+        bufs: &[&RefBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
         let n = self.model.params.len();
-        self.check_arity(inputs.len(), n + 6)?;
-        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
-        let mut kc = inputs[n].as_f32()?.to_vec();
-        let mut vc = inputs[n + 1].as_f32()?.to_vec();
-        let tokens = inputs[n + 2].as_i32()?;
-        let pos = inputs[n + 3].as_i32()?;
-        let ks = inputs[n + 4].as_f32()?[0];
-        let vs = inputs[n + 5].as_f32()?[0];
+        self.check_arity(bufs.len(), n + 3)?;
+        let (logits, kc, vc) = {
+            let guards: Vec<Ref<HostArray>> =
+                bufs.iter().map(|b| b.0.borrow()).collect();
+            let refs: Vec<&HostArray> =
+                guards.iter().map(|g| &**g).collect();
+            let model =
+                RefModel::new(&self.model, self.geo, &refs[..n])?;
+            let tokens = refs[n].as_i32()?;
+            let ks = refs[n + 1].as_f32()?[0];
+            let vs = refs[n + 2].as_f32()?[0];
+            self.prefill_core(&model, tokens, ks, vs)
+        };
+        let geo = self.geo;
+        let (b_roll, plen) =
+            (self.constants.b_rollout, self.constants.prompt_len);
+        Ok(vec![
+            ref_device(HostArray::f32(
+                vec![b_roll, plen, geo.vocab],
+                logits,
+            )),
+            ref_device(HostArray::f32(geo.kv_shape(b_roll), kc)),
+            ref_device(HostArray::f32(geo.kv_shape(b_roll), vc)),
+        ])
+    }
+
+    /// Decode compute shared by the host and device entrypoints; the
+    /// caches are updated IN PLACE, logits are returned fresh.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_core(
+        &self,
+        model: &RefModel,
+        kc: &mut [f32],
+        vc: &mut [f32],
+        tokens: &[i32],
+        pos: &[i32],
+        ks: f32,
+        vs: f32,
+    ) -> Result<Vec<f32>> {
         let flags = variant_flags(&self.spec.variant);
         let geo = self.geo;
         let b_roll = self.constants.b_rollout;
+        if kc.len() != geo.cache_len(b_roll) || vc.len() != kc.len() {
+            bail!(
+                "{}: cache length {} != expected {}",
+                self.spec.name,
+                kc.len(),
+                geo.cache_len(b_roll)
+            );
+        }
         let v = geo.vocab;
         let mut logits = vec![0.0f32; b_roll * v];
         for b in 0..b_roll {
@@ -472,7 +595,7 @@ impl RefExecutable {
             let prev = if p == 0 {
                 vec![0.0f32; geo.d]
             } else {
-                read_state(geo, &kc, &vc, b_roll, b, p - 1)
+                read_state(geo, kc, vc, b_roll, b, p - 1)
             };
             let c = model.state_update(&prev, tokens[b]);
             let mut h = model.features(&c);
@@ -485,8 +608,8 @@ impl RefExecutable {
             }
             store_state(
                 geo,
-                &mut kc,
-                &mut vc,
+                kc,
+                vc,
                 b_roll,
                 b,
                 p,
@@ -496,10 +619,76 @@ impl RefExecutable {
                 vs,
             );
         }
+        Ok(logits)
+    }
+
+    fn run_decode(
+        &self,
+        inputs: &[HostArray],
+    ) -> Result<Vec<HostArray>> {
+        let n = self.model.params.len();
+        self.check_arity(inputs.len(), n + 6)?;
+        let model =
+            RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
+        let mut kc = inputs[n].as_f32()?.to_vec();
+        let mut vc = inputs[n + 1].as_f32()?.to_vec();
+        let tokens = inputs[n + 2].as_i32()?;
+        let pos = inputs[n + 3].as_i32()?;
+        let ks = inputs[n + 4].as_f32()?[0];
+        let vs = inputs[n + 5].as_f32()?[0];
+        let logits = self
+            .decode_core(&model, &mut kc, &mut vc, tokens, pos, ks, vs)?;
+        let geo = self.geo;
+        let b_roll = self.constants.b_rollout;
         Ok(vec![
-            HostArray::f32(vec![b_roll, v], logits),
+            HostArray::f32(vec![b_roll, geo.vocab], logits),
             HostArray::f32(geo.kv_shape(b_roll), kc),
             HostArray::f32(geo.kv_shape(b_roll), vc),
+        ])
+    }
+
+    /// Native device-resident decode — the engine hot path. The KV
+    /// caches are mutated IN PLACE inside their backend cells and
+    /// returned as aliases: zero cache bytes move per step; only the
+    /// (B, V) logits ever cross back to the host.
+    fn run_decode_device(
+        &self,
+        bufs: &[&RefBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        let n = self.model.params.len();
+        self.check_arity(bufs.len(), n + 6)?;
+        let logits = {
+            let guards: Vec<Ref<HostArray>> =
+                bufs[..n].iter().map(|b| b.0.borrow()).collect();
+            let refs: Vec<&HostArray> =
+                guards.iter().map(|g| &**g).collect();
+            let model = RefModel::new(&self.model, self.geo, &refs)?;
+            let mut kcg = bufs[n].0.borrow_mut();
+            let mut vcg = bufs[n + 1].0.borrow_mut();
+            let tokg = bufs[n + 2].0.borrow();
+            let posg = bufs[n + 3].0.borrow();
+            let ksg = bufs[n + 4].0.borrow();
+            let vsg = bufs[n + 5].0.borrow();
+            let ks = ksg.as_f32()?[0];
+            let vs = vsg.as_f32()?[0];
+            self.decode_core(
+                &model,
+                kcg.as_f32_mut()?,
+                vcg.as_f32_mut()?,
+                tokg.as_i32()?,
+                posg.as_i32()?,
+                ks,
+                vs,
+            )?
+        };
+        let b_roll = self.constants.b_rollout;
+        Ok(vec![
+            ref_device(HostArray::f32(
+                vec![b_roll, self.geo.vocab],
+                logits,
+            )),
+            bufs[n].alias(),
+            bufs[n + 1].alias(),
         ])
     }
 
@@ -566,7 +755,8 @@ impl RefExecutable {
         let hp = inputs[3 * n + 5].as_f32()?;
         let (lr, tis_c, ent_coef, mis) = (hp[0], hp[1], hp[2], hp[3]);
 
-        let model = RefModel::new(&self.model, self.geo, params)?;
+        let model =
+            RefModel::new(&self.model, self.geo, &borrow_params(params, n))?;
         let fwd = self.train_forward(&model, tokens);
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
         let (d, v) = (self.geo.d, self.geo.vocab);
@@ -718,7 +908,8 @@ impl RefExecutable {
     ) -> Result<Vec<HostArray>> {
         let n = self.model.params.len();
         self.check_arity(inputs.len(), n + 1)?;
-        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
+        let model =
+            RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
         let tokens = inputs[n].as_i32()?;
         let fwd = self.train_forward(&model, tokens);
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
@@ -737,7 +928,8 @@ impl RefExecutable {
     ) -> Result<Vec<HostArray>> {
         let n = self.model.params.len();
         self.check_arity(inputs.len(), n + 1)?;
-        let model = RefModel::new(&self.model, self.geo, &inputs[..n])?;
+        let model =
+            RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
         let tokens = inputs[n].as_i32()?;
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
         let mut amax_even = 0.0f32;

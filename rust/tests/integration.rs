@@ -221,6 +221,132 @@ fn engine_preemption_accounting() {
 }
 
 #[test]
+fn tokens_generated_counts_only_delivered_tokens() {
+    // regression: tokens later discarded by recompute preemption used
+    // to stay in `tokens_generated` and then be counted AGAIN when
+    // re-generated, inflating the throughput figures the experiments
+    // read. Force one preemption and check the counter equals the sum
+    // of the delivered completion lengths exactly.
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("dense", "bf16");
+    cfg.kv_budget_bytes = Some(3 * 4096); // 3 blocks = 48 tokens
+    let mut engine = HloEngine::new(rt, cfg).unwrap();
+    let reqs: Vec<Request> = (0..2)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![12, i as i32, 10, 3, 11],
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 32,
+                eos: -1, // never matches: force long generations
+                ..Default::default()
+            },
+        })
+        .collect();
+    let done = engine.generate(reqs).unwrap();
+    assert!(engine.stats.preemptions >= 1, "scenario must preempt");
+    let delivered: usize = done.iter().map(|c| c.tokens.len()).sum();
+    assert_eq!(
+        engine.stats.tokens_generated, delivered as u64,
+        "tokens_generated must count only delivered tokens"
+    );
+    assert!(
+        engine.stats.tokens_discarded > 0,
+        "preempted work must show up as discarded"
+    );
+}
+
+#[test]
+fn generate_error_drains_scheduler_state() {
+    // regression: when `generate` bailed on an unadmittable request,
+    // the other submitted requests stayed queued in the scheduler, so
+    // the NEXT generate call silently re-ran ghost requests — or
+    // stalled forever on the same stuck head-of-line request
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("dense", "bf16");
+    cfg.kv_budget_bytes = Some(4096); // 1 block of 16 tokens
+    let mut engine = HloEngine::new(rt, cfg).unwrap();
+    let stuck = Request {
+        id: 1,
+        // 16-token prompt + growth reserve needs 2 blocks: never fits
+        prompt: vec![1; 16],
+        params: SamplingParams::default(),
+    };
+    let companion = Request {
+        id: 2,
+        prompt: vec![12, 2, 10, 3, 11],
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 4,
+            ..Default::default()
+        },
+    };
+    assert!(engine.generate(vec![stuck, companion]).is_err());
+    // the failed call must leave nothing behind: this call must see
+    // exactly its own request, not ghost re-runs of the stall batch
+    let fresh = Request {
+        id: 3,
+        prompt: vec![12, 4, 10, 5, 11],
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 4,
+            ..Default::default()
+        },
+    };
+    let done = engine.generate(vec![fresh]).unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 3);
+}
+
+#[test]
+fn decode_keeps_kv_cache_device_resident() {
+    // the device-resident threading contract: per-decode-step host
+    // traffic is the (B,1) token/pos uploads plus the (B,V) logits
+    // download — independent of (and far below) the KV cache size
+    let rt = runtime();
+    let mut engine =
+        HloEngine::new(rt.clone(), EngineConfig::new("dense", "bf16"))
+            .unwrap();
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![12, i as i32, 10, 3, 11],
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 8,
+                eos: -1, // keep every slot decoding for the full run
+                ..Default::default()
+            },
+        })
+        .collect();
+    let done = engine.generate(reqs).unwrap();
+    assert_eq!(done.len(), 4);
+    assert!(engine.stats.decode_steps > 0);
+    let m = rt.manifest.model("dense").unwrap();
+    let c = &rt.manifest.constants;
+    let cache_bytes = 2 // k and v
+        * m.cfg("n_layers")
+        * c.b_rollout
+        * m.cfg("n_kv_heads")
+        * m.cfg("max_seq")
+        * m.cfg("d_head")
+        * 4;
+    let step = engine.stats.host_bytes_last_step as usize;
+    let step_bound =
+        c.b_rollout * m.cfg("vocab") * 4 + 2 * c.b_rollout * 4;
+    assert!(
+        step <= step_bound,
+        "decode step moved {step} host bytes, want <= {step_bound} \
+         (O(B·V) logits + O(B) tokens/pos)"
+    );
+    assert!(
+        step < cache_bytes,
+        "per-step host traffic {step} must be far below the dense \
+         cache size {cache_bytes}"
+    );
+}
+
+#[test]
 fn fp8_rollout_diverges_but_tis_sees_it() {
     // the paper's core mechanism: pi_fp8 != pi_theta, measured by the
     // trainer's logprobs on the engine's sampled tokens

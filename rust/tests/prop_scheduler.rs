@@ -170,6 +170,80 @@ fn no_request_starves_with_capacity() {
 }
 
 #[test]
+fn admissions_survive_their_admission_round() {
+    // cumulative-reserve invariant: a sequence admitted in round N is
+    // never preempted by the `extend_all` of round N — the admission
+    // reserve covers both the same-round co-admissions' growth blocks
+    // and every running sequence sitting at a block boundary
+    check(
+        105,
+        300,
+        |r| {
+            let blocks = 2 + r.below(24) as usize;
+            let max_batch = 1 + r.below(8) as usize;
+            let plens =
+                vec_of(r, 1, 40, |rr| 1 + rr.below(12) as usize);
+            (blocks, (max_batch, plens))
+        },
+        |(blocks, (max_batch, plens))| {
+            let mut sched = Scheduler::new(
+                KvBlockManager::new(geo(4), *blocks),
+                *max_batch,
+            );
+            let mut next_id = 0u64;
+            let mut queue: Vec<usize> = plens.clone();
+            let mut round = 0usize;
+            while !queue.is_empty() || !sched.is_idle() {
+                // feed one new request per round while any remain
+                if let Some(plen) = queue.pop() {
+                    sched.submit(Request {
+                        id: next_id,
+                        prompt: vec![0; plen],
+                        params: SamplingParams::default(),
+                    });
+                    next_id += 1;
+                }
+                let admitted: Vec<u64> =
+                    sched.admit().iter().map(|r| r.id).collect();
+                if admitted.is_empty()
+                    && sched.n_running() == 0
+                    && queue.is_empty()
+                {
+                    // the head-of-line request can never fit this
+                    // cache even when it is completely empty
+                    break;
+                }
+                // finish the oldest seq periodically so workloads
+                // drain — BEFORE the extend, so progress is guaranteed
+                // even when a lone sequence self-preempts at the end
+                // of every admit/grow cycle
+                if round % 3 == 2 {
+                    if let Some(&id) = sched.running_ids().first() {
+                        sched.finish(id);
+                    }
+                }
+                let ids = sched.running_ids().to_vec();
+                let rep = sched.extend_all(&ids);
+                for id in &admitted {
+                    if rep.preempted.contains(id) {
+                        return Err(format!(
+                            "seq {id} admitted AND preempted in \
+                             round {round}"
+                        ));
+                    }
+                }
+                sched.check_invariants()?;
+                round += 1;
+                if round > 10_000 {
+                    return Err("workload failed to drain".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn group_advantages_zero_mean_per_group() {
     check(
         104,
