@@ -60,11 +60,14 @@ fn main() -> Result<()> {
             .collect();
         let done = engine.generate(reqs)?;
         for c in &done {
+            // greedy behavior logprobs are the point-mass 0, so show
+            // the full-vocab diagnostic — that is where the BF16-vs-FP8
+            // policy difference is visible
             println!(
                 "[{variant}] prompt {:?} -> {:?} (logp {:?})",
                 c.prompt,
                 c.tokens,
-                c.logprobs
+                c.logprobs_full
                     .iter()
                     .map(|l| (l * 100.0).round() / 100.0)
                     .collect::<Vec<_>>()

@@ -1,20 +1,23 @@
-//! Rollout serving example: a router in front of HLO engines serving a
-//! batched request stream under KV pressure, reporting latency /
-//! throughput / preemption — the vLLM-style serving shape of the stack.
+//! Rollout serving example: a thread-per-replica engine pool behind
+//! the router serving a batched request stream under KV pressure,
+//! reporting latency / throughput / preemption — the vLLM-style
+//! serving shape of the stack, now actually multicore (each replica
+//! owns its own runtime + engine on its own OS thread).
 //!
-//! The engine runs with a deliberately small KV budget so the paged
-//! allocator preempts (recompute-style) and the BF16-vs-FP8-KV capacity
-//! difference is visible with *real* compute, not the cost model.
+//! Every engine runs with a deliberately small KV budget so the paged
+//! allocator preempts (recompute-style) and the BF16-vs-FP8-KV
+//! capacity difference is visible with *real* compute, not the cost
+//! model.
 //!
-//! Run: `cargo run --release --example rollout_server [-- --requests 64]`
+//! Run: `cargo run --release --example rollout_server \
+//!       [-- --requests 64 --replicas 4]`
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use fp8_rl::rollout::{
-    EngineConfig, HloEngine, Request, RoutePolicy, Router, SamplingParams,
+    runtime_factory, EngineConfig, EnginePool, PoolConfig, Request,
+    RoutePolicy, SamplingParams,
 };
-use fp8_rl::runtime::Runtime;
 use fp8_rl::util::cli::Args;
 use fp8_rl::util::error::Result;
 use fp8_rl::util::rng::Pcg64;
@@ -22,50 +25,68 @@ use fp8_rl::util::rng::Pcg64;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let n_requests = args.usize_or("requests", 48)?;
-    let rt = Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?);
+    let n_replicas = args.usize_or("replicas", 4)?;
+    let factory = runtime_factory(args.str_or("artifacts", "artifacts"));
 
     for variant in ["bf16", "kvfp8"] {
         // a KV budget tight enough to preempt under BF16 storage:
-        // ~14 max-length sequences at bf16 (28 at fp8)
+        // ~14 max-length sequences at bf16 (28 at fp8) per replica
         let mut cfg = EngineConfig::new("dense", variant);
         let bytes_per_token_bf16 = 2 * 4 * 2 * 32 * 2; // 2*L*Hkv*Dh*2B
         cfg.kv_budget_bytes = Some(14 * 64 * bytes_per_token_bf16);
-        let mut engine = HloEngine::new(rt.clone(), cfg)?;
+        let mut pool = EnginePool::new(
+            PoolConfig {
+                n_replicas,
+                policy: RoutePolicy::LeastLoaded,
+                engine: cfg,
+            },
+            factory.clone(),
+        )?;
 
-        // two logical engines behind a least-loaded router (the second
-        // is simulated by round-tripping ids; one process, one core)
-        let mut router = Router::new(RoutePolicy::LeastLoaded, 2);
         let mut rng = Pcg64::new(7);
-        let mut requests = Vec::new();
-        for i in 0..n_requests {
-            let a = rng.below(10) as i32;
-            let b = rng.below(10) as i32;
-            let req = Request {
+        let requests: Vec<Request> = (0..n_requests)
+            .map(|i| Request {
                 id: i as u64,
-                prompt: vec![12, a, 10, b, 11],
+                prompt: vec![
+                    12,
+                    rng.below(10) as i32,
+                    10,
+                    rng.below(10) as i32,
+                    11,
+                ],
                 params: SamplingParams {
                     max_new_tokens: 40, // long responses stress the cache
                     ..Default::default()
                 },
-            };
-            let _engine_idx = router.route(&req);
-            requests.push(req);
-        }
+            })
+            .collect();
 
         let t0 = Instant::now();
-        let done = engine.generate(requests)?;
+        let done = pool.generate(requests)?;
         let dt = t0.elapsed().as_secs_f64();
         let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
         let preempted: u32 = done.iter().map(|c| c.preemptions).sum();
+        let per: Vec<u64> = pool
+            .per_replica_stats()?
+            .iter()
+            .map(|s| s.tokens_generated)
+            .collect();
         println!(
             "[{variant:6}] {} reqs, {tokens} tokens in {dt:.1}s \
-             ({:.1} tok/s) | engine preemptions={} | router loads={:?}",
+             ({:.1} tok/s aggregate over {n_replicas} replicas) | \
+             preemptions={preempted} | per-replica tokens={per:?}",
             done.len(),
             tokens as f64 / dt,
-            preempted,
-            router.loads(),
+        );
+        assert!(
+            pool.loads().iter().all(|&l| l == 0),
+            "router load must drain after the batch: {:?}",
+            pool.loads()
         );
     }
-    println!("rollout_server OK (FP8 KV doubles the same-budget capacity)");
+    println!(
+        "rollout_server OK (FP8 KV doubles the same-budget capacity; \
+         replicas scale tokens/s)"
+    );
     Ok(())
 }

@@ -1,0 +1,102 @@
+//! End-to-end pool bench: aggregate decode throughput vs replica count
+//! on the thread-per-replica engine pool (the multicore serving hot
+//! path). Runs hermetically on the synthetic manifest + RefBackend when
+//! `make artifacts` has not been run, and emits `BENCH_engine_pool.json`
+//! (tokens/s per replica count, scaling efficiency) so CI tracks the
+//! scaling trajectory across PRs. The acceptance bar for the pool is
+//! >= 2x aggregate tokens/s at 4 replicas vs 1 on a multicore host.
+//!
+//! Run: `cargo bench --bench engine_pool`
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use fp8_rl::rollout::{
+    runtime_factory, EngineConfig, EnginePool, PoolConfig, Request,
+    RoutePolicy, SamplingParams,
+};
+use fp8_rl::util::json::Json;
+use fp8_rl::util::rng::Pcg64;
+
+fn requests(n: usize) -> Vec<Request> {
+    let mut rng = Pcg64::new(3);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: vec![
+                12,
+                rng.below(10) as i32,
+                10,
+                rng.below(10) as i32,
+                11,
+            ],
+            params: SamplingParams {
+                max_new_tokens: 32,
+                eos: -1, // fixed-length decode: comparable work per run
+                ..Default::default()
+            },
+        })
+        .collect()
+}
+
+fn main() {
+    let factory = runtime_factory("artifacts");
+    let n_requests = 64;
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let mut base_tok_s = 0.0f64;
+    for replicas in [1usize, 2, 4] {
+        let mut pool = match EnginePool::new(
+            PoolConfig {
+                n_replicas: replicas,
+                policy: RoutePolicy::RoundRobin,
+                engine: EngineConfig::new("dense", "bf16"),
+            },
+            factory.clone(),
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("skip {replicas} replicas: {e}");
+                continue;
+            }
+        };
+        // warm: every replica compiles its entrypoints in-process
+        let _ = pool.generate(requests(n_requests)).unwrap();
+        let t0 = Instant::now();
+        let done = pool.generate(requests(n_requests)).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+        let tok_s = tokens as f64 / dt;
+        if replicas == 1 {
+            base_tok_s = tok_s;
+        }
+        let speedup = if base_tok_s > 0.0 { tok_s / base_tok_s } else { 0.0 };
+        let efficiency = speedup / replicas as f64;
+        println!(
+            "bench engine/pool[replicas={replicas}]: {tokens} tokens in \
+             {dt:.2}s = {tok_s:.1} tok/s aggregate (speedup {speedup:.2}x, \
+             scaling efficiency {:.0}%)",
+            efficiency * 100.0,
+        );
+        let mut v: BTreeMap<String, Json> = BTreeMap::new();
+        v.insert("requests".into(), Json::Num(n_requests as f64));
+        v.insert("tokens".into(), Json::Num(tokens as f64));
+        v.insert("seconds".into(), Json::Num(dt));
+        v.insert("tokens_per_s".into(), Json::Num(tok_s));
+        v.insert("speedup_vs_1".into(), Json::Num(speedup));
+        v.insert("scaling_efficiency".into(), Json::Num(efficiency));
+        results.insert(replicas.to_string(), Json::Obj(v));
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(0);
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("engine_pool".into()));
+    root.insert("backend".into(), Json::Str("ref".into()));
+    root.insert("host_cores".into(), Json::Num(cores as f64));
+    root.insert("replicas".into(), Json::Obj(results));
+    let path = "BENCH_engine_pool.json";
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

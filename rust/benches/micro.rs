@@ -82,7 +82,9 @@ fn main() {
     Bench::new("sampler/sample vocab=32 (temp=1)")
         .target(Duration::from_millis(300))
         .run(|| {
-            black_box(sampler::sample(&logits, &params, &mut srng));
+            black_box(
+                sampler::sample(&logits, &params, &mut srng).unwrap(),
+            );
         });
     // serving-scale vocab
     let logits_big: Vec<f32> =
@@ -95,7 +97,9 @@ fn main() {
                 top_k: 50,
                 ..Default::default()
             };
-            black_box(sampler::sample(&logits_big, &p, &mut srng));
+            black_box(
+                sampler::sample(&logits_big, &p, &mut srng).unwrap(),
+            );
         });
 
     // ---- JSON manifest parse (runtime startup path) ----

@@ -25,6 +25,11 @@ pub struct ExperimentConfig {
     pub ent_coef: f32,
     pub validate_every: usize,
     pub max_new_tokens: usize,
+    /// rollout engine replicas; 1 = single in-process engine, >1 =
+    /// thread-per-replica pool behind the router (outputs are
+    /// bit-identical either way — see rollout::pool; replicas always
+    /// load from the same manifest source as the loop's runtime)
+    pub rollout_replicas: usize,
     pub seed: u64,
     /// task difficulty
     pub max_digits: u32,
@@ -70,6 +75,8 @@ impl ExperimentConfig {
             getf("validate_every", c.validate_every as f64) as usize;
         c.max_new_tokens =
             getf("max_new_tokens", c.max_new_tokens as f64) as usize;
+        c.rollout_replicas =
+            getf("rollout_replicas", c.rollout_replicas as f64) as usize;
         c.seed = getf("seed", c.seed as f64) as u64;
         c.max_digits = getf("max_digits", c.max_digits as f64) as u32;
         if let Some(ms) = j.opt("max_sum") {
@@ -105,6 +112,7 @@ impl ExperimentConfig {
             ent_coef: 0.02,
             validate_every: 5,
             max_new_tokens: 8,
+            rollout_replicas: 1,
             seed: 1234,
             max_digits: 2,
             max_sum: None,

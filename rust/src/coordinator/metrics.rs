@@ -23,6 +23,8 @@ pub const CURVE_COLUMNS: &[&str] = &[
     "exceed_other",
     "exceed_p99",
     "preemptions",
+    "rollout_replicas",
+    "rollout_tokens",
     "rollout_s",
     "sync_s",
     "train_s",

@@ -8,6 +8,14 @@
 //! the sync pipeline quantizes (and with which scale format), whether
 //! TIS corrects the mismatch, and which calibration strategy refreshes
 //! the KV scales.
+//!
+//! The rollout phase runs behind the [`Rollout`] backend: a single
+//! in-process engine by default, or — at `rollout_replicas > 1` — the
+//! thread-per-replica [`rollout::pool`](crate::rollout::pool) behind
+//! the router, with weights quantized once per step and broadcast to
+//! every replica. Outputs are bit-identical either way (per-request
+//! sampling streams + deterministic merge), so the serving topology is
+//! purely a throughput knob.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -17,11 +25,12 @@ use crate::rl::dapo::{Sample, TrainBatch};
 use crate::rl::task::{Task, TaskConfig, TOK_PAD};
 use crate::rl::trainer::{Trainer, TrainerConfig};
 use crate::rollout::{
-    EngineConfig, HloEngine, Request, SamplingParams,
+    factory_like, EngineConfig, EnginePool, HloEngine, PoolConfig,
+    Request, Rollout, RoutePolicy, SamplingParams,
 };
 use crate::runtime::Runtime;
 use crate::sync::{CalibStrategy, Calibrator, WeightSync, WeightSyncConfig};
-use crate::util::error::Result;
+use crate::util::error::{bail, Result};
 
 use super::config::ExperimentConfig;
 use super::metrics::{Recorder, StepRecord};
@@ -40,7 +49,7 @@ pub struct RlLoop {
     pub cfg: ExperimentConfig,
     rt: Arc<Runtime>,
     task: Task,
-    engine: HloEngine,
+    rollout: Rollout,
     trainer: Trainer,
     sync: WeightSync,
     calib: Calibrator,
@@ -53,13 +62,34 @@ pub struct RlLoop {
 
 impl RlLoop {
     pub fn new(rt: Arc<Runtime>, cfg: ExperimentConfig) -> Result<RlLoop> {
-        let engine = HloEngine::new(
-            rt.clone(),
-            EngineConfig {
-                seed: cfg.seed,
-                ..EngineConfig::new(&cfg.arch, &cfg.rollout_variant)
-            },
-        )?;
+        if cfg.rollout_replicas == 0 {
+            // don't silently coerce a nonsense config to a single
+            // engine — EnginePool::new rejects 0 too
+            bail!("rollout_replicas must be >= 1, got 0");
+        }
+        let engine_cfg = EngineConfig {
+            seed: cfg.seed,
+            ..EngineConfig::new(&cfg.arch, &cfg.rollout_variant)
+        };
+        let rollout = if cfg.rollout_replicas > 1 {
+            Rollout::Pool(EnginePool::new(
+                PoolConfig {
+                    n_replicas: cfg.rollout_replicas,
+                    policy: RoutePolicy::LeastLoaded,
+                    engine: engine_cfg,
+                },
+                // replicas MUST load from the same manifest source as
+                // `rt` (which the trainer shares) — a second config
+                // knob here could silently train one model while
+                // sampling from another
+                factory_like(&rt),
+            )?)
+        } else {
+            Rollout::Single(Box::new(HloEngine::new(
+                rt.clone(),
+                engine_cfg,
+            )?))
+        };
         let trainer = Trainer::new(
             rt.clone(),
             TrainerConfig {
@@ -84,7 +114,7 @@ impl RlLoop {
             seed: cfg.seed ^ 0xABCD,
         });
         Ok(RlLoop {
-            engine,
+            rollout,
             trainer,
             sync: WeightSync::new(sync_cfg),
             calib,
@@ -122,11 +152,13 @@ impl RlLoop {
         rec.set("step", step as f64);
 
         // ---- phase 1: weight synchronization (paper Fig 1) ----
+        // quantized ONCE, then broadcast: every pool replica installs
+        // the same Arc'd parameter list
         let t0 = Instant::now();
         let spec = self.rt.manifest.model(&self.cfg.arch)?.clone();
         let (weights, _report) =
-            self.sync.run(&spec, self.trainer.params())?;
-        self.engine.install_weights(&weights)?;
+            self.sync.run_shared(&spec, self.trainer.params())?;
+        self.rollout.install_weights(weights)?;
 
         // sample this step's problems first: inference-side calibration
         // uses the upcoming prompts (vLLM forced-recalibration style)
@@ -152,7 +184,7 @@ impl RlLoop {
                 &rows,
                 TOK_PAD,
             )?;
-            self.engine.install_kv_scales(ks, vs);
+            self.rollout.install_kv_scales(ks, vs)?;
         }
         rec.set("sync_s", t0.elapsed().as_secs_f64());
 
@@ -178,12 +210,18 @@ impl RlLoop {
             }
         }
         debug_assert_eq!(origin.len(), requests.len());
-        let pre_preempt = self.engine.stats.preemptions;
-        let completions = self.engine.generate(requests)?;
+        let pre = self.rollout.stats()?;
+        let completions = self.rollout.generate(requests)?;
+        let post = self.rollout.stats()?;
         rec.set(
             "preemptions",
-            (self.engine.stats.preemptions - pre_preempt) as f64,
+            (post.preemptions - pre.preemptions) as f64,
         );
+        rec.set(
+            "rollout_tokens",
+            (post.tokens_generated - pre.tokens_generated) as f64,
+        );
+        rec.set("rollout_replicas", self.rollout.n_replicas() as f64);
         rec.set("rollout_s", t1.elapsed().as_secs_f64());
 
         // map completions back to (problem, group)
@@ -264,7 +302,7 @@ impl RlLoop {
                 },
             });
         }
-        let completions = self.engine.generate(requests)?;
+        let completions = self.rollout.generate(requests)?;
         let mut correct = 0usize;
         for c in &completions {
             let idx = origin[&c.id];
@@ -275,8 +313,9 @@ impl RlLoop {
         Ok(correct as f64 / problems.len() as f64)
     }
 
-    pub fn engine_stats(&self) -> &crate::rollout::EngineStats {
-        &self.engine.stats
+    /// Aggregate rollout-engine counters (summed across pool replicas).
+    pub fn engine_stats(&self) -> Result<crate::rollout::EngineStats> {
+        self.rollout.stats()
     }
 }
 

@@ -3,8 +3,9 @@
 //! Subcommands:
 //!   smoke                         load artifacts, run one decode + one
 //!                                 train step, print sanity numbers
-//!   train   [--arch --rollout --train-variant --steps --no-tis ...]
-//!                                 run one RL experiment config
+//!   train   [--arch --rollout --train-variant --steps --no-tis
+//!            --replicas N ...]    run one RL experiment config
+//!                                 (--replicas > 1 = engine pool)
 //!   reproduce --figure figN       regenerate a paper figure's CSVs
 //!   perf    --figure figN         print a perf figure's table rows
 //!   list                          list artifacts and experiment configs
@@ -145,6 +146,11 @@ fn train(args: &Args) -> Result<()> {
     cfg.mis = args.bool("mis");
     cfg.max_digits = args.usize_or("digits", 2)? as u32;
     cfg.validate_every = args.usize_or("validate-every", 5)?;
+    // data-parallel rollout: N thread-confined engine replicas behind
+    // the router (bit-identical outputs, multicore throughput; the
+    // replicas load from the same --artifacts source as `rt`)
+    cfg.rollout_replicas =
+        args.usize_or("replicas", cfg.rollout_replicas)?;
     let rt = Arc::new(Runtime::new(artifacts_dir(args))?);
     let mut rl = RlLoop::new(rt, cfg)?;
     rl.run()?;

@@ -188,7 +188,8 @@ mod tests {
                 id: 0,
                 prompt: problem.prompt.clone(),
                 tokens: resp,
-                logprobs: lp,
+                logprobs: lp.clone(),
+                logprobs_full: lp,
                 finish: FinishReason::Eos,
                 preemptions: 0,
             },

@@ -72,7 +72,15 @@ struct Slot {
     /// token to feed this step (last sampled, once prompt is exhausted)
     next_feed: i32,
     generated: Vec<i32>,
+    /// behavior-policy logprobs (truncated+renormalized — pi_fp8)
     logprobs: Vec<f32>,
+    /// full-vocab temperature-1 logprobs (trainer convention)
+    logprobs_full: Vec<f32>,
+    /// the request's PRIVATE sampling stream, derived purely from
+    /// (engine seed, request id): samples do not depend on batch
+    /// composition, replica assignment, or recompute preemption — the
+    /// invariant the engine pool's bit-identical merge rests on
+    rng: Pcg64,
 }
 
 /// Aggregate counters the experiments read.
@@ -99,10 +107,23 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
+    /// Merge another engine's counters into this one (the pool's
+    /// aggregate view across replicas).
+    pub fn merge(&mut self, o: &EngineStats) {
+        self.decode_steps += o.decode_steps;
+        self.prefill_waves += o.prefill_waves;
+        self.tokens_generated += o.tokens_generated;
+        self.tokens_discarded += o.tokens_discarded;
+        self.preemptions += o.preemptions;
+        self.host_bytes_moved += o.host_bytes_moved;
+        self.host_bytes_last_step += o.host_bytes_last_step;
+    }
+
     /// Move `n` sampled-but-undelivered tokens from `tokens_generated`
-    /// to `tokens_discarded` (recompute preemption or an aborted
-    /// `generate`).
-    fn discard_tokens(&mut self, n: u64) {
+    /// to `tokens_discarded` (recompute preemption, an aborted
+    /// `generate`, or a pool-level all-or-nothing failure dropping this
+    /// replica's delivered completions).
+    pub(crate) fn discard_tokens(&mut self, n: u64) {
         self.tokens_generated = self.tokens_generated.saturating_sub(n);
         self.tokens_discarded += n;
     }
@@ -158,7 +179,6 @@ pub struct HloEngine {
     scales_dirty: bool,
     slots: Vec<Option<Slot>>,
     sched: Scheduler,
-    rng: Pcg64,
     preempt_counts: std::collections::BTreeMap<u64, u32>,
     pub stats: EngineStats,
     // geometry
@@ -221,7 +241,6 @@ impl HloEngine {
             .map(|(v, p)| HostArray::f32(p.shape.clone(), v))
             .collect();
         let param_bufs = rt.to_device_all(&params)?;
-        let seed = cfg.seed;
         Ok(HloEngine {
             rt,
             cfg,
@@ -239,7 +258,6 @@ impl HloEngine {
             scales_dirty: false,
             slots: (0..b).map(|_| None).collect(),
             sched,
-            rng: Pcg64::new(seed),
             preempt_counts: std::collections::BTreeMap::new(),
             stats: EngineStats::default(),
             b,
@@ -393,6 +411,13 @@ impl HloEngine {
         Ok(())
     }
 
+    /// The request's private sampling stream (see `Slot::rng`). Re-
+    /// derived from scratch on recompute readmission, so a preempted
+    /// request regenerates exactly the tokens it lost.
+    fn slot_rng(&self, req_id: u64) -> Pcg64 {
+        Pcg64::new(sampler::request_seed(self.cfg.seed, req_id))
+    }
+
     /// Admit waiting requests into free slots.
     fn admit_into_slots(&mut self) {
         let admitted = self.sched.admit();
@@ -403,12 +428,15 @@ impl HloEngine {
                 .position(|s| s.is_none())
                 .expect("scheduler admitted beyond slot capacity");
             let first = req.prompt[0];
+            let rng = self.slot_rng(req.id);
             self.slots[slot_idx] = Some(Slot {
                 next_feed: first,
                 cursor: 1,
                 pos: 0,
                 generated: Vec::new(),
                 logprobs: Vec::new(),
+                logprobs_full: Vec::new(),
+                rng,
                 req,
             });
         }
@@ -462,20 +490,23 @@ impl HloEngine {
             let row = &lg[(i * self.prompt_len + plen - 1) * self.vocab
                 ..(i * self.prompt_len + plen - 1) * self.vocab
                     + self.vocab];
-            let (tok, lp) = sampler::sample(row, &req.params, &mut self.rng);
+            let mut rng = self.slot_rng(req.id);
+            let s = sampler::sample(row, &req.params, &mut rng)?;
             let mut slot = Slot {
-                next_feed: tok,
+                next_feed: s.token,
                 cursor: plen, // prompt fully consumed
                 pos: plen,
-                generated: vec![tok],
-                logprobs: vec![lp],
+                generated: vec![s.token],
+                logprobs: vec![s.logprob],
+                logprobs_full: vec![s.logprob_full],
+                rng,
                 req,
             };
             // prefill wrote positions 0..plen-1; positions beyond plen-1
             // hold pad junk that is never attended (causal mask) and is
             // overwritten as decoding proceeds.
             self.stats.tokens_generated += 1;
-            if self.maybe_finish(&mut slot, tok, done) {
+            if self.maybe_finish(&mut slot, s.token, done) {
                 continue;
             }
             // the prefill artifact put sequence i's KV in cache row i,
@@ -594,14 +625,15 @@ impl HloEngine {
                 continue;
             }
             let row = &logits[i * self.vocab..(i + 1) * self.vocab];
-            let (tok, lp) =
-                sampler::sample(row, &slot.req.params, &mut self.rng);
-            slot.generated.push(tok);
-            slot.logprobs.push(lp);
-            slot.next_feed = tok;
+            let s =
+                sampler::sample(row, &slot.req.params, &mut slot.rng)?;
+            slot.generated.push(s.token);
+            slot.logprobs.push(s.logprob);
+            slot.logprobs_full.push(s.logprob_full);
+            slot.next_feed = s.token;
             self.stats.tokens_generated += 1;
             let mut taken = self.slots[i].take().unwrap();
-            if !self.maybe_finish(&mut taken, tok, done) {
+            if !self.maybe_finish(&mut taken, s.token, done) {
                 self.slots[i] = Some(taken);
             }
         }
@@ -631,6 +663,7 @@ impl HloEngine {
                 prompt: slot.req.prompt.clone(),
                 tokens: slot.generated.clone(),
                 logprobs: slot.logprobs.clone(),
+                logprobs_full: slot.logprobs_full.clone(),
                 finish: reason,
                 preemptions: self
                     .preempt_counts

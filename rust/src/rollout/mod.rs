@@ -1,9 +1,11 @@
 //! The rollout (inference) engine — the vLLM-role component: paged
 //! KV-cache block manager, continuous-batching scheduler with
-//! preemption, token sampler, request router, and the HLO-backed
-//! generation engine the RL loop drives.
+//! preemption, token sampler, request router, the HLO-backed
+//! generation engine, and the thread-per-replica engine pool the RL
+//! loop drives at `rollout_replicas > 1`.
 pub mod engine;
 pub mod kvcache;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod sampler;
@@ -11,6 +13,11 @@ pub mod scheduler;
 
 pub use engine::{EngineConfig, EngineStats, HloEngine};
 pub use kvcache::{KvBlockManager, KvGeometry, KvPrecision};
+pub use pool::{
+    factory_like, hermetic_runtime_factory, runtime_factory, EnginePool,
+    PoolConfig, Rollout, RuntimeFactory,
+};
 pub use request::{Completion, FinishReason, Request, SamplingParams};
 pub use router::{RoutePolicy, Router};
+pub use sampler::SampleOut;
 pub use scheduler::Scheduler;

@@ -1,0 +1,614 @@
+//! Data-parallel rollout pool: one OS thread per engine replica behind
+//! the [`Router`] — the serving-shaped, multicore-scaling front end the
+//! ROADMAP's multi-engine item asks for.
+//!
+//! ## Threading model
+//!
+//! The RefBackend's device buffers are `Rc<RefCell<_>>` cells, so a
+//! `Runtime` (and everything holding its buffers) is deliberately
+//! **not** `Send`. The pool therefore never moves an engine between
+//! threads: each worker thread calls the [`RuntimeFactory`] and builds
+//! its own `Runtime` + [`HloEngine`] *inside* the thread, and all
+//! coordination happens over `mpsc` channels carrying only `Send` data
+//! (requests, completions, host arrays, stats). Engines are
+//! thread-confined for their whole life.
+//!
+//! ## Determinism
+//!
+//! N-replica output is bit-identical to a single engine with the same
+//! seed, for any routing policy and any replica count:
+//!
+//! * every request samples from its own RNG stream derived purely from
+//!   (engine seed, request id) — see `sampler::request_seed` — so the
+//!   stream does not depend on which replica, batch, or slot the
+//!   request lands in;
+//! * the RefBackend computes each batch row independently and its
+//!   chunked prefill reproduces the wave bit-exactly, so logits for a
+//!   request do not depend on its batch neighbors;
+//! * results are merged by sorting on request id — the same stable
+//!   order a single engine returns.
+//!
+//! ## Weight sync
+//!
+//! `install_weights` broadcasts ONE `Arc`'d quantized parameter list to
+//! every replica (see `WeightSync::run_shared`): quantization happens
+//! once per sync regardless of replica count; each worker then uploads
+//! into its own persistent device buffers. `install_kv_scales`
+//! broadcasts the recalibrated scales the same way. Channel FIFO order
+//! guarantees a subsequent `generate` on any replica sees the install.
+//!
+//! ## Failure semantics
+//!
+//! `generate` is all-or-nothing, matching `HloEngine::generate`: if any
+//! replica fails, the pool drains EVERY routed id from the router as
+//! aborted — including ids a healthy replica completed, since their
+//! results are dropped with the batch (a failed engine already drained
+//! its own scheduler) — tells those replicas to count the dropped
+//! tokens as discarded (preserving the "tokens_generated counts only
+//! delivered tokens" invariant), and returns the first error. Router
+//! settlement happens only once the batch outcome is known, so the
+//! `completed`/`aborted` counters describe what the caller actually
+//! received.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::runtime::{HostArray, Runtime};
+use crate::util::error::{anyhow, bail, Context, Error, Result};
+
+use super::engine::{EngineConfig, EngineStats, HloEngine};
+use super::request::{Completion, Request};
+use super::router::{RoutePolicy, Router};
+
+/// Builds one thread-confined `Runtime` per replica, called inside the
+/// worker thread (runtimes are not `Send` — see the module docs).
+pub type RuntimeFactory = Arc<dyn Fn() -> Result<Runtime> + Send + Sync>;
+
+/// The default factory: real artifacts when `<dir>/manifest.json`
+/// exists, else the hermetic synthetic runtime — `Runtime::new_quiet`,
+/// so N replicas don't log N missing-manifest warnings.
+pub fn runtime_factory(artifacts_dir: impl Into<String>) -> RuntimeFactory {
+    let dir: String = artifacts_dir.into();
+    Arc::new(move || Runtime::new_quiet(dir.clone()))
+}
+
+/// A factory that always builds the hermetic synthetic runtime,
+/// independent of what exists on disk (what the test suites use).
+pub fn hermetic_runtime_factory() -> RuntimeFactory {
+    Arc::new(|| Ok(Runtime::hermetic()))
+}
+
+/// A factory mirroring an existing runtime's manifest source: replicas
+/// load the same artifacts directory the caller's runtime did, or get
+/// the hermetic synthetic runtime when that manifest was built
+/// in-process (`Manifest::is_synthetic`). This is what keeps pool
+/// replicas and the
+/// trainer serving the SAME model — never derive the replica source
+/// from a second, separately-configured path. If the on-disk manifest
+/// has vanished since the parent runtime loaded it, replica
+/// construction FAILS instead of silently falling back to the
+/// synthetic toy model (which would be exactly the
+/// train-one-model/sample-another divergence this factory prevents).
+pub fn factory_like(rt: &Runtime) -> RuntimeFactory {
+    let dir = rt.manifest.dir.clone();
+    if rt.manifest.is_synthetic() {
+        hermetic_runtime_factory()
+    } else {
+        Arc::new(move || {
+            if !dir.join("manifest.json").exists() {
+                bail!(
+                    "replica runtime source {dir:?} has no \
+                     manifest.json (it existed when the parent \
+                     runtime loaded) — refusing the synthetic fallback"
+                );
+            }
+            Runtime::new_quiet(dir.clone())
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    pub n_replicas: usize,
+    pub policy: RoutePolicy,
+    /// per-replica engine configuration (every replica gets the same
+    /// seed — request streams are keyed by request id, not replica)
+    pub engine: EngineConfig,
+}
+
+enum ToWorker {
+    Generate(Vec<Request>, Sender<(usize, Result<Vec<Completion>>)>),
+    InstallWeights(Arc<Vec<HostArray>>, Sender<(usize, Result<()>)>),
+    InstallKvScales(f32, f32),
+    /// Count `n` delivered-then-dropped tokens as discarded (pool-level
+    /// all-or-nothing failure).
+    Discard(u64),
+    Stats(Sender<(usize, EngineStats)>),
+    Shutdown,
+}
+
+fn worker_main(
+    replica: usize,
+    cfg: EngineConfig,
+    factory: RuntimeFactory,
+    rx: Receiver<ToWorker>,
+    init: Sender<(usize, Result<()>)>,
+) {
+    let built =
+        factory().and_then(|rt| HloEngine::new(Arc::new(rt), cfg));
+    let mut engine = match built {
+        Ok(e) => {
+            let _ = init.send((replica, Ok(())));
+            e
+        }
+        Err(e) => {
+            let _ = init.send((replica, Err(e)));
+            return;
+        }
+    };
+    drop(init);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Generate(reqs, reply) => {
+                let res = engine.generate(reqs);
+                let _ = reply.send((replica, res));
+            }
+            ToWorker::InstallWeights(w, reply) => {
+                let _ = reply.send((replica, engine.install_weights(&w)));
+            }
+            ToWorker::InstallKvScales(k, v) => {
+                engine.install_kv_scales(k, v);
+            }
+            ToWorker::Discard(n) => {
+                engine.stats.discard_tokens(n);
+            }
+            ToWorker::Stats(reply) => {
+                let _ = reply.send((replica, engine.stats.clone()));
+            }
+            ToWorker::Shutdown => break,
+        }
+    }
+}
+
+pub struct EnginePool {
+    cfg: PoolConfig,
+    router: Router,
+    workers: Vec<Sender<ToWorker>>,
+    handles: Vec<Option<JoinHandle<()>>>,
+}
+
+impl EnginePool {
+    pub fn new(cfg: PoolConfig, factory: RuntimeFactory) -> Result<Self> {
+        if cfg.n_replicas == 0 {
+            bail!("engine pool needs at least one replica");
+        }
+        let mut workers = Vec::with_capacity(cfg.n_replicas);
+        let mut handles = Vec::with_capacity(cfg.n_replicas);
+        let (init_tx, init_rx) = channel();
+        for replica in 0..cfg.n_replicas {
+            let (tx, rx) = channel::<ToWorker>();
+            let f = factory.clone();
+            let ecfg = cfg.engine.clone();
+            let itx = init_tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("engine-pool-{replica}"))
+                .spawn(move || worker_main(replica, ecfg, f, rx, itx));
+            let handle = match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    // same cleanup as the init-failure path below:
+                    // closing the channels unblocks the workers we
+                    // already spawned, and joining bounds their life
+                    drop(workers);
+                    drop(init_tx);
+                    for h in handles.iter_mut() {
+                        if let Some(h) = h.take() {
+                            let _ = h.join();
+                        }
+                    }
+                    return Err(Error::from(e).wrap(format!(
+                        "spawning pool worker {replica}"
+                    )));
+                }
+            };
+            workers.push(tx);
+            handles.push(Some(handle));
+        }
+        drop(init_tx);
+        let mut failed: Option<Error> = None;
+        for _ in 0..cfg.n_replicas {
+            match init_rx.recv() {
+                Ok((_, Ok(()))) => {}
+                Ok((replica, Err(e))) => {
+                    failed.get_or_insert(
+                        e.wrap(format!("replica {replica} failed to start")),
+                    );
+                }
+                Err(_) => {
+                    failed.get_or_insert_with(|| {
+                        anyhow!("a pool worker died during startup")
+                    });
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failed {
+            // closing the channels unblocks surviving workers' recv
+            drop(workers);
+            for h in handles.iter_mut() {
+                if let Some(h) = h.take() {
+                    let _ = h.join();
+                }
+            }
+            return Err(e);
+        }
+        let router = Router::new(cfg.policy, cfg.n_replicas);
+        Ok(EnginePool {
+            cfg,
+            router,
+            workers,
+            handles,
+        })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    /// Outstanding router load per replica (drains to zero once every
+    /// request has completed or been aborted).
+    pub fn loads(&self) -> &[u64] {
+        self.router.loads()
+    }
+
+    /// Generate completions for a batch: route every request through
+    /// the router, fan the shards out to the worker threads, run them
+    /// concurrently, and merge deterministically by request id.
+    pub fn generate(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<Vec<Completion>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = self.workers.len();
+        let mut shards: Vec<Vec<Request>> =
+            (0..n).map(|_| Vec::new()).collect();
+        for r in requests {
+            let e = self.router.route(&r);
+            shards[e].push(r);
+        }
+        let (tx, rx) = channel();
+        // ids routed to each replica but not yet settled with the router
+        let mut pending: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut delivered: Vec<u64> = vec![0; n];
+        let mut dispatched = 0usize;
+        let mut first_err: Option<Error> = None;
+        for (e, shard) in shards.into_iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            pending[e] = shard.iter().map(|r| r.id).collect();
+            if self.workers[e]
+                .send(ToWorker::Generate(shard, tx.clone()))
+                .is_err()
+            {
+                first_err.get_or_insert_with(|| {
+                    anyhow!("replica {e} worker thread is gone")
+                });
+                continue; // its pending ids are aborted below
+            }
+            dispatched += 1;
+        }
+        drop(tx);
+        let mut out: Vec<Completion> = Vec::new();
+        for _ in 0..dispatched {
+            match rx.recv() {
+                Ok((replica, Ok(cs))) => {
+                    delivered[replica] =
+                        cs.iter().map(|c| c.tokens.len() as u64).sum();
+                    out.extend(cs);
+                }
+                Ok((replica, Err(e))) => {
+                    first_err.get_or_insert_with(|| {
+                        e.wrap(format!("replica {replica} generate failed"))
+                    });
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(|| {
+                        anyhow!("a pool worker exited mid-generate")
+                    });
+                    break;
+                }
+            }
+        }
+        // settle the router only once the batch OUTCOME is known, so
+        // the completed/aborted diagnostics describe what the caller
+        // actually received: all-or-nothing means a failed batch
+        // counts every id as aborted — including ids a successful
+        // replica generated but whose results we are about to drop.
+        // Either way the charge drains fully: phantom load must never
+        // leak into the next least-loaded pick.
+        if let Some(e) = first_err {
+            for ids in &pending {
+                for id in ids {
+                    self.router.abort(*id);
+                }
+            }
+            // keep the delivered-tokens invariant honest on the
+            // replicas whose work we are discarding
+            for (replica, &tokens) in delivered.iter().enumerate() {
+                if tokens > 0 {
+                    let _ = self.workers[replica]
+                        .send(ToWorker::Discard(tokens));
+                }
+            }
+            return Err(e);
+        }
+        for ids in &pending {
+            for id in ids {
+                self.router.complete(*id);
+            }
+        }
+        out.sort_by_key(|c| c.id);
+        Ok(out)
+    }
+
+    /// Send one message (built per replica) to every worker, failing
+    /// loudly if a worker thread has died.
+    fn broadcast<F: Fn() -> ToWorker>(&self, mk: F) -> Result<()> {
+        for (e, w) in self.workers.iter().enumerate() {
+            w.send(mk()).map_err(|_| {
+                anyhow!("replica {e} worker thread is gone")
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Install one quantized parameter set into every replica (the
+    /// weight-sync broadcast: quantize once, upload per replica).
+    pub fn install_weights(
+        &mut self,
+        weights: Arc<Vec<HostArray>>,
+    ) -> Result<()> {
+        let (tx, rx) = channel();
+        self.broadcast(|| {
+            ToWorker::InstallWeights(weights.clone(), tx.clone())
+        })?;
+        drop(tx);
+        self.collect_acks(rx, "weight install")
+    }
+
+    /// Broadcast recalibrated KV scales to every replica. Channel FIFO
+    /// order guarantees the next `generate` sees them.
+    pub fn install_kv_scales(&mut self, k: f32, v: f32) -> Result<()> {
+        self.broadcast(|| ToWorker::InstallKvScales(k, v))
+    }
+
+    /// Aggregate engine counters across all replicas.
+    pub fn stats(&self) -> Result<EngineStats> {
+        let mut total = EngineStats::default();
+        for s in self.per_replica_stats()? {
+            total.merge(&s);
+        }
+        Ok(total)
+    }
+
+    /// Per-replica engine counters, indexed by replica.
+    pub fn per_replica_stats(&self) -> Result<Vec<EngineStats>> {
+        let (tx, rx) = channel();
+        self.broadcast(|| ToWorker::Stats(tx.clone()))?;
+        drop(tx);
+        let n = self.workers.len();
+        let mut out = vec![EngineStats::default(); n];
+        let mut got = 0usize;
+        while let Ok((replica, s)) = rx.recv() {
+            out[replica] = s;
+            got += 1;
+        }
+        if got != n {
+            bail!("only {got}/{n} replicas reported stats");
+        }
+        Ok(out)
+    }
+
+    fn collect_acks(
+        &self,
+        rx: Receiver<(usize, Result<()>)>,
+        what: &str,
+    ) -> Result<()> {
+        let n = self.workers.len();
+        let mut got = 0usize;
+        while let Ok((replica, res)) = rx.recv() {
+            res.with_context(|| format!("replica {replica} {what}"))?;
+            got += 1;
+        }
+        if got != n {
+            bail!("only {got}/{n} replicas acknowledged {what}");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.send(ToWorker::Shutdown);
+        }
+        for h in self.handles.iter_mut() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The RL loop's rollout backend: a single in-process engine (the
+/// default) or the thread-per-replica pool, behind one surface so the
+/// coordinator is agnostic to the serving topology.
+pub enum Rollout {
+    Single(Box<HloEngine>),
+    Pool(EnginePool),
+}
+
+impl Rollout {
+    pub fn generate(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<Vec<Completion>> {
+        match self {
+            Rollout::Single(e) => e.generate(requests),
+            Rollout::Pool(p) => p.generate(requests),
+        }
+    }
+
+    /// Install synced weights; the pool broadcasts the shared list to
+    /// every replica (quantized once upstream).
+    pub fn install_weights(
+        &mut self,
+        weights: Arc<Vec<HostArray>>,
+    ) -> Result<()> {
+        match self {
+            Rollout::Single(e) => e.install_weights(&weights),
+            Rollout::Pool(p) => p.install_weights(weights),
+        }
+    }
+
+    pub fn install_kv_scales(&mut self, k: f32, v: f32) -> Result<()> {
+        match self {
+            Rollout::Single(e) => {
+                e.install_kv_scales(k, v);
+                Ok(())
+            }
+            Rollout::Pool(p) => p.install_kv_scales(k, v),
+        }
+    }
+
+    /// Aggregate engine counters (summed across replicas for a pool).
+    pub fn stats(&self) -> Result<EngineStats> {
+        match self {
+            Rollout::Single(e) => Ok(e.stats.clone()),
+            Rollout::Pool(p) => p.stats(),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        match self {
+            Rollout::Single(_) => 1,
+            Rollout::Pool(p) => p.n_replicas(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rollout::request::SamplingParams;
+
+    fn reqs(lo: u64, hi: u64) -> Vec<Request> {
+        (lo..hi)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![12, (i % 10) as i32, 10, 3, 11],
+                params: SamplingParams {
+                    temperature: 1.0,
+                    max_new_tokens: 4,
+                    ..Default::default()
+                },
+            })
+            .collect()
+    }
+
+    fn pool(n: usize) -> EnginePool {
+        EnginePool::new(
+            PoolConfig {
+                n_replicas: n,
+                policy: RoutePolicy::RoundRobin,
+                engine: EngineConfig::new("dense", "bf16"),
+            },
+            hermetic_runtime_factory(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut p = pool(2);
+        assert!(p.generate(Vec::new()).unwrap().is_empty());
+        assert_eq!(p.loads(), &[0, 0]);
+    }
+
+    #[test]
+    fn merge_is_sorted_by_id_and_loads_drain() {
+        let mut p = pool(3);
+        let done = p.generate(reqs(0, 9)).unwrap();
+        assert_eq!(done.len(), 9);
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..9).collect::<Vec<_>>());
+        assert_eq!(p.loads(), &[0, 0, 0], "router load must drain");
+        let stats = p.stats().unwrap();
+        let delivered: usize =
+            done.iter().map(|c| c.tokens.len()).sum();
+        assert_eq!(stats.tokens_generated, delivered as u64);
+    }
+
+    #[test]
+    fn failed_shard_fails_the_call_but_leaks_nothing() {
+        let mut p = pool(2);
+        let mut batch = reqs(0, 3);
+        // prompt_len is 16 in the synthetic manifest: a 64-token prompt
+        // can never be admitted, so its replica's generate fails
+        batch.push(Request {
+            id: 99,
+            prompt: vec![1; 64],
+            params: SamplingParams::default(),
+        });
+        assert!(p.generate(batch).is_err());
+        assert_eq!(p.loads(), &[0, 0], "no phantom router load");
+        // the delivered-tokens invariant survives the dropped results
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.tokens_generated, 0);
+        // the pool stays serviceable
+        let done = p.generate(reqs(10, 14)).unwrap();
+        assert_eq!(done.len(), 4);
+        let delivered: usize =
+            done.iter().map(|c| c.tokens.len()).sum();
+        assert_eq!(
+            p.stats().unwrap().tokens_generated,
+            delivered as u64
+        );
+    }
+
+    #[test]
+    fn bad_replica_count_is_rejected() {
+        let r = EnginePool::new(
+            PoolConfig {
+                n_replicas: 0,
+                policy: RoutePolicy::RoundRobin,
+                engine: EngineConfig::new("dense", "bf16"),
+            },
+            hermetic_runtime_factory(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn startup_failure_names_the_replica() {
+        let err = EnginePool::new(
+            PoolConfig {
+                n_replicas: 2,
+                policy: RoutePolicy::RoundRobin,
+                engine: EngineConfig::new("dense", "no_such_variant"),
+            },
+            hermetic_runtime_factory(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("failed to start"), "{err}");
+    }
+}

@@ -48,9 +48,18 @@ pub struct Completion {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub tokens: Vec<i32>,
-    /// rollout-policy logprob of each generated token (pi_fp8 in the
-    /// paper's eq. 2 — measured from the engine's own logits)
+    /// behavior-policy logprob of each generated token (pi_fp8 in the
+    /// paper's eq. 2 — measured from the engine's own logits): the
+    /// probability under the distribution the token was ACTUALLY drawn
+    /// from (temperature-scaled, top-k/top-p truncated, renormalized).
+    /// This is the TIS/MIS denominator.
     pub logprobs: Vec<f32>,
+    /// full-vocabulary temperature-1 log-softmax at each generated
+    /// token — the convention the trainer evaluates pi_theta in.
+    /// Identical to `logprobs` when sampling is untruncated at
+    /// temperature 1 (the RL-loop default); kept separately so the
+    /// trainer can diagnose truncation skew.
+    pub logprobs_full: Vec<f32>,
     pub finish: FinishReason,
     /// decode steps this request waited due to preemption
     pub preemptions: u32,

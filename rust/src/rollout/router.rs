@@ -1,8 +1,22 @@
 //! Request router across multiple rollout engines (the vllm-router-style
-//! front door used by `examples/rollout_server.rs`).
+//! front door used by the engine pool and `examples/rollout_server.rs`).
 //!
-//! Policies: round-robin and least-loaded (by queued prompt tokens). The
-//! router only decides placement; each engine runs its own scheduler.
+//! Policies: round-robin and least-loaded (by outstanding prompt +
+//! expected decode tokens). The router only decides placement; each
+//! engine runs its own scheduler.
+//!
+//! Load accounting is tracked **per request id**: `route` charges the
+//! chosen engine, and either [`Router::complete`] or [`Router::abort`]
+//! drains exactly what was charged. The old interface recomputed the
+//! cost from the request at completion time and was never called on the
+//! abort/drain path, so failed `generate` calls leaked phantom load
+//! until `LeastLoaded` degenerated into routing everything to whichever
+//! engine had failed least; a double `complete` (masked by
+//! `saturating_sub`) silently skewed loads the other way. Both are
+//! structurally impossible now: settling an unknown (or already
+//! settled) id is an inert no-op that returns `None`.
+
+use std::collections::BTreeMap;
 
 use super::request::Request;
 
@@ -18,6 +32,11 @@ pub struct Router {
     next: usize,
     /// outstanding token load per engine (prompt + expected decode)
     load: Vec<u64>,
+    /// request id -> (engine, charged cost); settling removes the entry
+    /// and drains exactly the charged amount
+    outstanding: BTreeMap<u64, (usize, u64)>,
+    pub completed: u64,
+    pub aborted: u64,
 }
 
 impl Router {
@@ -28,13 +47,22 @@ impl Router {
             n_engines,
             next: 0,
             load: vec![0; n_engines],
+            outstanding: BTreeMap::new(),
+            completed: 0,
+            aborted: 0,
         }
     }
 
-    /// Pick an engine for the request and account its load.
+    fn cost(req: &Request) -> u64 {
+        (req.prompt.len() + req.params.max_new_tokens) as u64
+    }
+
+    /// Pick an engine for the request and account its load. Re-routing
+    /// an id that is still outstanding (a caller re-submitting after a
+    /// failure) first drains the stale charge.
     pub fn route(&mut self, req: &Request) -> usize {
-        let cost =
-            (req.prompt.len() + req.params.max_new_tokens) as u64;
+        self.settle(req.id);
+        let cost = Self::cost(req);
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
                 let i = self.next;
@@ -52,18 +80,45 @@ impl Router {
             }
         };
         self.load[idx] += cost;
+        self.outstanding.insert(req.id, (idx, cost));
         idx
     }
 
-    /// Report completion so load drains.
-    pub fn complete(&mut self, engine: usize, req: &Request) {
-        let cost =
-            (req.prompt.len() + req.params.max_new_tokens) as u64;
-        self.load[engine] = self.load[engine].saturating_sub(cost);
+    /// Report completion so load drains. Returns the engine the request
+    /// was routed to, or `None` if the id is unknown / already settled
+    /// (double-complete is an inert no-op).
+    pub fn complete(&mut self, id: u64) -> Option<usize> {
+        let e = self.settle(id);
+        if e.is_some() {
+            self.completed += 1;
+        }
+        e
+    }
+
+    /// Drain an aborted / failed request (the `generate`-error and
+    /// scheduler-drain path). Same accounting as `complete`; tracked
+    /// separately for diagnostics.
+    pub fn abort(&mut self, id: u64) -> Option<usize> {
+        let e = self.settle(id);
+        if e.is_some() {
+            self.aborted += 1;
+        }
+        e
+    }
+
+    fn settle(&mut self, id: u64) -> Option<usize> {
+        let (engine, cost) = self.outstanding.remove(&id)?;
+        // cannot underflow: `cost` is exactly what `route` charged
+        self.load[engine] -= cost;
+        Some(engine)
     }
 
     pub fn loads(&self) -> &[u64] {
         &self.load
+    }
+
+    pub fn n_outstanding(&self) -> usize {
+        self.outstanding.len()
     }
 }
 
@@ -71,6 +126,7 @@ impl Router {
 mod tests {
     use super::*;
     use crate::rollout::request::SamplingParams;
+    use crate::util::rng::Pcg64;
 
     fn req(id: u64, plen: usize) -> Request {
         Request {
@@ -104,7 +160,125 @@ mod tests {
         let q = req(1, 50);
         let e = r.route(&q);
         assert!(r.loads()[e] > 0);
-        r.complete(e, &q);
+        assert_eq!(r.complete(q.id), Some(e));
         assert_eq!(r.loads()[e], 0);
+    }
+
+    #[test]
+    fn abort_drains_like_complete() {
+        // regression: the scheduler-drain path never told the router,
+        // so failed generates accumulated phantom load forever
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let q = req(7, 30);
+        let e = r.route(&q);
+        assert!(r.loads()[e] > 0);
+        assert_eq!(r.abort(q.id), Some(e));
+        assert_eq!(r.loads(), &[0, 0]);
+        assert_eq!(r.aborted, 1);
+        assert_eq!(r.completed, 0);
+    }
+
+    #[test]
+    fn double_settle_is_inert() {
+        // regression: a second complete used to subtract the cost again
+        // (masked by saturating_sub), so the engine looked idle while
+        // it still carried work
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let a = req(1, 50);
+        let b = req(2, 50);
+        let ea = r.route(&a);
+        let eb = r.route(&b);
+        assert_ne!(ea, eb);
+        assert_eq!(r.complete(a.id), Some(ea));
+        assert_eq!(r.complete(a.id), None); // double complete
+        assert_eq!(r.abort(a.id), None); // complete-then-abort
+        assert_eq!(r.loads()[ea], 0);
+        assert!(r.loads()[eb] > 0, "b's load must survive a's double");
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.aborted, 0);
+    }
+
+    #[test]
+    fn reroute_of_outstanding_id_drains_stale_charge() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2);
+        let q = req(5, 40);
+        r.route(&q); // engine 0
+        r.route(&q); // resubmitted: engine 1, stale charge drained
+        assert_eq!(r.loads()[0], 0);
+        assert!(r.loads()[1] > 0);
+        assert_eq!(r.n_outstanding(), 1);
+        r.complete(q.id);
+        assert_eq!(r.loads(), &[0, 0]);
+    }
+
+    #[test]
+    fn prop_loads_return_to_zero_under_any_settle_mix() {
+        // property: after ANY interleaving of route / complete / abort /
+        // double-settle / unknown-settle, per-engine load equals the sum
+        // of outstanding charges, and settling everything returns every
+        // engine to exactly zero
+        for seed in 0..20u64 {
+            let mut rng = Pcg64::new(0xA0B0 + seed);
+            let n_engines = 1 + (seed as usize % 4);
+            let policy = if seed % 2 == 0 {
+                RoutePolicy::RoundRobin
+            } else {
+                RoutePolicy::LeastLoaded
+            };
+            let mut r = Router::new(policy, n_engines);
+            // model: id -> (engine, cost) for outstanding requests
+            let mut model: BTreeMap<u64, (usize, u64)> = BTreeMap::new();
+            let mut next_id = 0u64;
+            for _ in 0..300 {
+                match rng.below(10) {
+                    0..=4 => {
+                        next_id += 1;
+                        let q = req(next_id, 1 + rng.below(64) as usize);
+                        let e = r.route(&q);
+                        assert!(e < n_engines);
+                        model.insert(next_id, (e, Router::cost(&q)));
+                    }
+                    5..=6 => {
+                        // settle a random outstanding id (complete)
+                        if let Some(&id) =
+                            model.keys().next()
+                        {
+                            let (e, _) = model.remove(&id).unwrap();
+                            assert_eq!(r.complete(id), Some(e));
+                        }
+                    }
+                    7 => {
+                        // settle a random outstanding id (abort)
+                        if let Some(&id) = model.keys().last() {
+                            let (e, _) = model.remove(&id).unwrap();
+                            assert_eq!(r.abort(id), Some(e));
+                        }
+                    }
+                    _ => {
+                        // unknown / already-settled ids are inert
+                        assert_eq!(r.complete(next_id + 1000), None);
+                        assert_eq!(r.abort(u64::MAX), None);
+                    }
+                }
+                // invariant: router load == sum of model costs per engine
+                let mut want = vec![0u64; n_engines];
+                for (e, c) in model.values() {
+                    want[*e] += c;
+                }
+                assert_eq!(r.loads(), &want[..], "seed {seed}");
+                assert_eq!(r.n_outstanding(), model.len());
+            }
+            // drain everything: loads must return to exactly zero
+            let ids: Vec<u64> = model.keys().copied().collect();
+            for (i, id) in ids.iter().enumerate() {
+                if i % 2 == 0 {
+                    assert!(r.complete(*id).is_some());
+                } else {
+                    assert!(r.abort(*id).is_some());
+                }
+            }
+            assert_eq!(r.loads(), &vec![0u64; n_engines][..]);
+            assert_eq!(r.n_outstanding(), 0);
+        }
     }
 }

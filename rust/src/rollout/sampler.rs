@@ -1,21 +1,72 @@
-//! Token sampler: temperature / top-k / top-p over a logit row, returning
-//! the sampled token AND its logprob under the *untruncated* softmax of
-//! the **raw** (temperature-free) logits — the rollout-policy logprob
-//! pi_fp8 that the trainer's TIS/MIS correction consumes.
+//! Token sampler: temperature / top-k / top-p over a logit row.
 //!
-//! Convention: temperature/top-k/top-p shape the *exploration*
-//! distribution only. The returned logprob is always evaluated at
-//! temperature 1 over the full vocabulary, because the trainer's
-//! logprobs path evaluates pi_theta the same way and the TIS ratio
-//! pi_theta/pi_fp8 must compare same-temperature quantities. (verl
-//! computes pi_fp8 identically: full-vocabulary log-softmax of the
-//! engine logits at the sampled token.) The greedy and sampled paths
-//! used to disagree here — greedy returned raw-logit logprobs while
-//! sampling returned temperature-scaled ones, silently skewing TIS.
+//! ## Behavior-policy logprob convention (the TIS/MIS denominator)
+//!
+//! [`sample`] returns the sampled token together with TWO logprobs:
+//!
+//! * `logprob` — the probability of the token under the distribution it
+//!   was **actually drawn from**: temperature-scaled, top-k/top-p
+//!   truncated, renormalized. This is pi_fp8 in paper eq. (2) — the
+//!   quantity the trainer's TIS/MIS correction divides by. Returning
+//!   anything else biases every importance weight whenever truncation
+//!   is active: the old code returned the full-vocabulary temperature-1
+//!   log-softmax, so with top-k/top-p on, `pi_theta / pi_fp8` collapsed
+//!   to 1 for kept tokens instead of `pi_theta / (pi / kept_mass)`,
+//!   silently under-correcting exactly the rollouts truncation skews
+//!   most. For greedy decoding (temperature <= 0) the sampling law is a
+//!   point mass, so `logprob` is 0.
+//! * `logprob_full` — the full-vocabulary temperature-1 log-softmax at
+//!   the sampled token, i.e. the same convention the trainer evaluates
+//!   pi_theta in. Kept as a diagnostic companion; when sampling is
+//!   untruncated at temperature 1 (the RL loop's default) `logprob` is
+//!   evaluated through the same log-softmax route and is BIT-equal to
+//!   it (and to the pre-fix convention) — for a given sampled token the
+//!   convention change is invisible on that path. (Same-seed runs still
+//!   produce different token *sequences* than pre-PR builds, because
+//!   sampling also moved onto per-request RNG streams — see below.)
+//!
+//! ## Robustness
+//!
+//! `sample` is total over garbage logits: NaN / +inf rows (a broken
+//! upstream kernel) surface as an `Err` instead of the old
+//! `partial_cmp().unwrap()` panic in the greedy path.
+//!
+//! ## Determinism
+//!
+//! [`request_seed`] derives the per-request RNG stream the engine
+//! samples with: a pure function of (engine seed, request id), so a
+//! request's samples do not depend on batch composition, replica
+//! assignment, or recompute preemption — the invariant that makes an
+//! N-replica pool bit-identical to a single engine.
 
-use crate::util::rng::Pcg64;
+use crate::util::error::{bail, Result};
+use crate::util::rng::{Pcg64, SplitMix64};
 
 use super::request::SamplingParams;
+
+/// One sampled token with its logprob under the distribution it was
+/// actually drawn from (`logprob`) and under the full-vocabulary
+/// temperature-1 softmax (`logprob_full`) — see the module docs.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleOut {
+    pub token: i32,
+    /// behavior-policy logprob: truncated + temperature-scaled +
+    /// renormalized (pi_fp8, the TIS/MIS denominator)
+    pub logprob: f32,
+    /// full-vocab temperature-1 log-softmax at `token` (the trainer's
+    /// pi_theta convention; diagnostic)
+    pub logprob_full: f32,
+}
+
+/// Seed for a request's private sampling stream — pure in
+/// (engine seed, request id), so every replica derives the same stream
+/// for the same request.
+pub fn request_seed(engine_seed: u64, request_id: u64) -> u64 {
+    let mut sm = SplitMix64::new(
+        engine_seed ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    sm.next_u64()
+}
 
 /// log-softmax value of index `idx` under logits (natural log).
 pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
@@ -24,28 +75,54 @@ pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
     (logits[idx] - m) as f64 as f32 - (z.ln() as f32)
 }
 
-/// Sample one token. Returns (token, logprob under the full softmax of
-/// the raw logits — see the module docs for the convention).
+/// Reject logit rows no sampling law can be defined over.
+fn check_logits(logits: &[f32]) -> Result<()> {
+    if logits.is_empty() {
+        bail!("sampler: empty logit row");
+    }
+    if let Some(i) = logits
+        .iter()
+        .position(|l| l.is_nan() || *l == f32::INFINITY)
+    {
+        bail!(
+            "sampler: non-finite logit {} at index {i} — upstream \
+             kernel produced garbage",
+            logits[i]
+        );
+    }
+    if logits.iter().all(|&l| l == f32::NEG_INFINITY) {
+        bail!("sampler: every logit is -inf (empty support)");
+    }
+    Ok(())
+}
+
+/// Sample one token. See the module docs for the logprob convention.
 pub fn sample(
     logits: &[f32],
     params: &SamplingParams,
     rng: &mut Pcg64,
-) -> (i32, f32) {
+) -> Result<SampleOut> {
+    check_logits(logits)?;
     if params.temperature <= 0.0 {
-        // greedy
+        // greedy: a point mass — the token's probability under the
+        // sampling law is exactly 1
         let (idx, _) = logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        return (idx as i32, log_softmax_at(logits, idx));
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .expect("non-empty checked above");
+        return Ok(SampleOut {
+            token: idx as i32,
+            logprob: 0.0,
+            logprob_full: log_softmax_at(logits, idx),
+        });
     }
     let scaled: Vec<f32> =
         logits.iter().map(|&l| l / params.temperature).collect();
 
     // candidate set after top-k / top-p truncation
     let mut order: Vec<usize> = (0..scaled.len()).collect();
-    order.sort_by(|&a, &b| scaled[b].partial_cmp(&scaled[a]).unwrap());
+    order.sort_by(|&a, &b| scaled[b].total_cmp(&scaled[a]));
     let mut keep = order.len();
     if params.top_k > 0 {
         keep = keep.min(params.top_k);
@@ -69,7 +146,9 @@ pub fn sample(
         keep = np.max(1);
     }
 
-    // sample within the kept set
+    // sample within the kept set; the behavior logprob is evaluated
+    // against the SAME weights the draw uses, so it is exactly
+    // log(weight_i / sum(kept weights)) for the categorical below
     let m = scaled[order[0]];
     let weights: Vec<f32> = order[..keep]
         .iter()
@@ -77,7 +156,23 @@ pub fn sample(
         .collect();
     let pick = rng.categorical(&weights);
     let idx = order[pick];
-    (idx as i32, log_softmax_at(logits, idx))
+    let logprob_full = log_softmax_at(logits, idx);
+    // untruncated at temperature 1, renormalization is the identity:
+    // evaluate through the same log-softmax route as the full-vocab
+    // diagnostic so the two are BIT-equal — the RL-loop default path
+    // stays bit-identical to the pre-fix convention
+    let logprob = if keep == scaled.len() && params.temperature == 1.0 {
+        logprob_full
+    } else {
+        let z: f64 = weights.iter().map(|&w| w as f64).sum();
+        let wi = (weights[pick] as f64).max(f64::MIN_POSITIVE);
+        (wi.ln() - z.ln()) as f32
+    };
+    Ok(SampleOut {
+        token: idx as i32,
+        logprob,
+        logprob_full,
+    })
 }
 
 #[cfg(test)]
@@ -95,9 +190,11 @@ mod tests {
     fn greedy_picks_argmax() {
         let logits = vec![0.1, 2.0, -1.0, 1.9];
         let mut rng = Pcg64::new(1);
-        let (tok, lp) = sample(&logits, &params(0.0), &mut rng);
-        assert_eq!(tok, 1);
-        assert!(lp < 0.0);
+        let s = sample(&logits, &params(0.0), &mut rng).unwrap();
+        assert_eq!(s.token, 1);
+        // point mass: probability 1 under the actual sampling law
+        assert_eq!(s.logprob, 0.0);
+        assert!(s.logprob_full < 0.0);
     }
 
     #[test]
@@ -113,8 +210,8 @@ mod tests {
         let mut rng = Pcg64::new(2);
         let mut counts = [0usize; 3];
         for _ in 0..70_000 {
-            let (t, _) = sample(&logits, &params(1.0), &mut rng);
-            counts[t as usize] += 1;
+            let s = sample(&logits, &params(1.0), &mut rng).unwrap();
+            counts[s.token as usize] += 1;
         }
         let total = 70_000f64;
         assert!((counts[0] as f64 / total - 1.0 / 7.0).abs() < 0.01);
@@ -131,8 +228,8 @@ mod tests {
             ..Default::default()
         };
         for _ in 0..200 {
-            let (t, _) = sample(&logits, &p, &mut rng);
-            assert!(t == 0 || t == 1);
+            let s = sample(&logits, &p, &mut rng).unwrap();
+            assert!(s.token == 0 || s.token == 1);
         }
     }
 
@@ -146,43 +243,141 @@ mod tests {
         };
         let mut rng = Pcg64::new(4);
         for _ in 0..200 {
-            let (t, _) = sample(&logits, &p, &mut rng);
-            assert_eq!(t, 0); // head token alone has >90% mass
+            let s = sample(&logits, &p, &mut rng).unwrap();
+            assert_eq!(s.token, 0); // head token alone has >90% mass
+            // nucleus of one: the behavior distribution is a point mass
+            assert!(s.logprob.abs() < 1e-6);
+            assert!(s.logprob_full < 0.0);
         }
     }
 
     #[test]
-    fn logprob_convention_is_temperature_free() {
-        // regression: the sampled path used to return the log-softmax
-        // of the temperature-SCALED logits while greedy used the raw
-        // ones; both must report pi at temperature 1
+    fn truncated_logprob_is_renormalized() {
+        // regression (the headline PR-3 bugfix): after top-k truncation
+        // the returned behavior logprob must be
+        // log(weight_i / sum(kept weights)) under the temperature-scaled
+        // weights the categorical draw used — NOT the full-vocabulary
+        // log-softmax the old code returned
+        let logits = vec![2.0f32, 1.0, 0.0, -1.0];
+        let temp = 0.7f32;
+        let p = SamplingParams {
+            temperature: temp,
+            top_k: 2,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(21);
+        for _ in 0..200 {
+            let s = sample(&logits, &p, &mut rng).unwrap();
+            assert!(s.token == 0 || s.token == 1);
+            // recompute the exact kept-set weights the sampler used
+            let scaled: Vec<f32> =
+                logits.iter().map(|&l| l / temp).collect();
+            let m = scaled[0];
+            let w: Vec<f64> = [0usize, 1]
+                .iter()
+                .map(|&i| (((scaled[i] - m) as f64).exp() as f32) as f64)
+                .collect();
+            let want =
+                ((w[s.token as usize] / (w[0] + w[1])).ln()) as f32;
+            assert!(
+                (s.logprob - want).abs() < 1e-5,
+                "behavior logprob {} != renormalized {}",
+                s.logprob,
+                want
+            );
+            let full = log_softmax_at(&logits, s.token as usize);
+            assert!((s.logprob_full - full).abs() < 1e-6);
+            assert!(
+                (s.logprob - full).abs() > 1e-3,
+                "truncated logprob must differ from the full-vocab one"
+            );
+        }
+    }
+
+    #[test]
+    fn tis_weights_unbiased_under_truncation() {
+        // importance-sampling identity: drawing from the truncated
+        // distribution q with weights w = pi_full/q, E_q[w] must equal
+        // the kept-set mass under pi_full (sum over supp(q) of pi).
+        // With the old full-vocab behavior logprob every weight was
+        // exactly 1 and the estimate degenerated to 1.0 — the bias that
+        // skewed every TIS/MIS correction under truncation.
+        let logits = vec![1.5f32, 0.7, 0.2, -0.4, -1.0];
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(31);
+        let n = 50_000;
+        let mut sum_w = 0.0f64;
+        for _ in 0..n {
+            let s = sample(&logits, &p, &mut rng).unwrap();
+            sum_w += ((s.logprob_full - s.logprob) as f64).exp();
+        }
+        let est = sum_w / n as f64;
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        let kept = ((1.5f64).exp() + (0.7f64).exp()) / z;
+        assert!(
+            (est - kept).abs() < 1e-3,
+            "IS estimate {est} vs true kept mass {kept}"
+        );
+        assert!(
+            (est - 1.0).abs() > 0.05,
+            "weights degenerate to 1: behavior logprob is not the \
+             sampling distribution"
+        );
+    }
+
+    #[test]
+    fn untruncated_temp1_behavior_equals_full_bitwise() {
+        // the RL loop samples at temperature 1 with no truncation:
+        // there the behavior logprob is routed through the same
+        // log-softmax computation as the full-vocab diagnostic, so TIS
+        // is BIT-identical for the paper's training runs (every weight
+        // exactly exp(0) = 1 on-policy)
         let logits = vec![2.0, 0.5, -1.0, 0.0];
         let mut rng = Pcg64::new(11);
-        for temp in [0.0f32, 0.25, 1.0, 4.0] {
-            for _ in 0..50 {
-                let (tok, lp) = sample(&logits, &params(temp), &mut rng);
-                let want = log_softmax_at(&logits, tok as usize);
-                assert!(
-                    (lp - want).abs() < 1e-6,
-                    "temp {temp}: token {tok} logprob {lp} != {want}"
-                );
-            }
+        for _ in 0..200 {
+            let s = sample(&logits, &params(1.0), &mut rng).unwrap();
+            assert_eq!(
+                s.logprob, s.logprob_full,
+                "untruncated temp-1 must share the log-softmax route"
+            );
+            let want = log_softmax_at(&logits, s.token as usize);
+            assert_eq!(s.logprob, want, "pre-fix convention preserved");
         }
     }
 
     #[test]
-    fn greedy_and_sampled_paths_agree() {
-        // a near-deterministic distribution: the low-temperature sample
-        // picks the argmax, and its logprob must equal the greedy one
-        let logits = vec![8.0, 0.0, 0.0, 0.0];
-        let mut rng = Pcg64::new(12);
-        let (g_tok, g_lp) = sample(&logits, &params(0.0), &mut rng);
-        let (s_tok, s_lp) = sample(&logits, &params(0.05), &mut rng);
-        assert_eq!(g_tok, s_tok);
-        assert!(
-            (g_lp - s_lp).abs() < 1e-6,
-            "paths disagree: {g_lp} vs {s_lp}"
-        );
+    fn nan_logits_error_instead_of_panic() {
+        // regression: the greedy path used to panic inside
+        // partial_cmp().unwrap() on a NaN logit
+        let nan = vec![0.0f32, f32::NAN, 1.0];
+        let mut rng = Pcg64::new(41);
+        assert!(sample(&nan, &params(0.0), &mut rng).is_err());
+        assert!(sample(&nan, &params(1.0), &mut rng).is_err());
+        let inf = vec![0.0f32, f32::INFINITY];
+        assert!(sample(&inf, &params(1.0), &mut rng).is_err());
+        let empty: Vec<f32> = Vec::new();
+        assert!(sample(&empty, &params(1.0), &mut rng).is_err());
+        let all_masked = vec![f32::NEG_INFINITY; 4];
+        assert!(sample(&all_masked, &params(1.0), &mut rng).is_err());
+        // -inf mixed with finite logits is a legal mask, not an error
+        let masked = vec![f32::NEG_INFINITY, 1.0, 0.0];
+        let s = sample(&masked, &params(1.0), &mut rng).unwrap();
+        assert!(s.token == 1 || s.token == 2);
+    }
+
+    #[test]
+    fn request_seed_is_pure_and_spreads() {
+        assert_eq!(request_seed(7, 42), request_seed(7, 42));
+        assert_ne!(request_seed(7, 42), request_seed(7, 43));
+        assert_ne!(request_seed(7, 42), request_seed(8, 42));
+        // consecutive ids must yield decorrelated streams
+        let mut a = Pcg64::new(request_seed(1234, 1));
+        let mut b = Pcg64::new(request_seed(1234, 2));
+        assert_ne!(a.next_u64(), b.next_u64());
     }
 
     #[test]
@@ -192,10 +387,13 @@ mod tests {
         let mut hot = 0;
         let mut cold = 0;
         for _ in 0..20_000 {
-            if sample(&logits, &params(2.0), &mut rng).0 == 0 {
+            if sample(&logits, &params(2.0), &mut rng).unwrap().token == 0
+            {
                 hot += 1;
             }
-            if sample(&logits, &params(0.25), &mut rng).0 == 0 {
+            if sample(&logits, &params(0.25), &mut rng).unwrap().token
+                == 0
+            {
                 cold += 1;
             }
         }

@@ -94,15 +94,29 @@ impl Runtime {
     /// `make artifacts` (the hermetic mode `cargo test` exercises).
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
         let dir = artifacts_dir.into();
-        let manifest = if dir.join("manifest.json").exists() {
-            Manifest::load(&dir)?
-        } else {
+        let rt = Runtime::new_quiet(dir.clone())?;
+        // warn off the loaded manifest itself, so the warning can
+        // never desync from the fallback criterion new_quiet applies
+        if rt.manifest.is_synthetic() {
             crate::log_warn!(
                 "no manifest under {dir:?} — falling back to the \
                  SYNTHETIC hermetic manifest (toy model, seeded \
                  weights); run `make artifacts` for the real AOT \
                  artifacts"
             );
+        }
+        Ok(rt)
+    }
+
+    /// [`Runtime::new`] without the missing-manifest warning — the
+    /// engine pool's per-replica factories use this so N replicas do
+    /// not log N copies of the synthetic-fallback notice. The fallback
+    /// criterion lives only here.
+    pub fn new_quiet(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = artifacts_dir.into();
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(&dir)?
+        } else {
             Manifest::synthetic()
         };
         Runtime::with_backend(manifest, default_backend()?)

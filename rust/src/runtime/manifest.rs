@@ -210,6 +210,15 @@ impl Manifest {
         })
     }
 
+    /// True for the in-process synthetic manifest ([`Manifest::
+    /// synthetic`]) as opposed to one loaded from an artifacts dir —
+    /// the reliable flag callers must use instead of sniffing `dir`
+    /// (an on-disk manifest can legitimately live at an empty/relative
+    /// path).
+    pub fn is_synthetic(&self) -> bool {
+        self.params_seed.is_some()
+    }
+
     pub fn model(&self, arch: &str) -> Result<&ModelSpec> {
         self.models
             .get(arch)

@@ -1,5 +1,12 @@
 //! The weight-sync pipeline: trainer params -> blockwise FP8 -> engine.
+//!
+//! With a multi-replica rollout pool the pipeline still quantizes
+//! exactly ONCE per RL step: [`WeightSync::run_shared`] wraps the
+//! installable list in an `Arc` that the pool broadcast hands to every
+//! replica, so replica count scales the per-replica device upload but
+//! never the quantization work.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::error::Result;
@@ -124,6 +131,17 @@ impl WeightSync {
         }
         rep.elapsed_s = t0.elapsed().as_secs_f64();
         Ok((out, rep))
+    }
+
+    /// Quantize once and share: the returned `Arc` is what the engine
+    /// pool broadcasts, so N replicas cost one quantization pass.
+    pub fn run_shared(
+        &self,
+        spec: &ModelSpec,
+        params: &[HostArray],
+    ) -> Result<(Arc<Vec<HostArray>>, SyncReport)> {
+        let (out, rep) = self.run(spec, params)?;
+        Ok((Arc::new(out), rep))
     }
 }
 

@@ -93,6 +93,9 @@ fn engine_greedy_is_deterministic() {
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.tokens, y.tokens, "greedy decode must be stable");
         assert_eq!(x.logprobs, y.logprobs);
+        // greedy behavior logprobs are the point-mass 0; the full-vocab
+        // diagnostic carries the numeric signal
+        assert_eq!(x.logprobs_full, y.logprobs_full);
     }
 }
 
@@ -410,6 +413,7 @@ fn train_step_learns_on_fixed_batch() {
         prompt: problem.prompt.clone(),
         tokens: problem.answer.clone(),
         logprobs: vec![-1.0; problem.answer.len()],
+        logprobs_full: vec![-1.0; problem.answer.len()],
         finish: FinishReason::Eos,
         preemptions: 0,
     };
@@ -499,11 +503,11 @@ fn kv_scales_affect_fp8_kv_decode_only() {
     for (a, b) in good.iter().zip(&restored) {
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.logprobs, b.logprobs);
+        assert_eq!(a.logprobs_full, b.logprobs_full);
     }
-    let changed = good
-        .iter()
-        .zip(&bad)
-        .any(|(a, b)| a.tokens != b.tokens || a.logprobs != b.logprobs);
+    let changed = good.iter().zip(&bad).any(|(a, b)| {
+        a.tokens != b.tokens || a.logprobs_full != b.logprobs_full
+    });
     assert!(changed, "kv scales appear dead");
 }
 
@@ -540,12 +544,59 @@ fn rl_loop_end_to_end_hermetic() {
         assert_eq!(rec.get("preemptions"), 0.0);
         rl.recorder.push(rec);
     }
-    let stats = rl.engine_stats();
+    let stats = rl.engine_stats().unwrap();
     assert!(stats.tokens_generated > 0);
     assert!(stats.prefill_waves >= 1);
     assert!(stats.decode_steps >= 1);
     assert_eq!(rl.recorder.steps.len(), 2);
     assert!(rl.recorder.tail_mean("reward", 2).is_finite());
+}
+
+#[test]
+fn rl_loop_on_engine_pool_matches_single_engine() {
+    // the serving topology is a pure throughput knob: the SAME
+    // experiment run on 1 in-process engine and on a 2-replica
+    // thread-per-replica pool must produce identical training metrics
+    // (bit-identical rollouts -> identical batches -> identical step)
+    let mk_cfg = |name: &str, replicas: usize| {
+        let mut cfg =
+            ExperimentConfig::new(name, "dense", "fullfp8", "bf16");
+        cfg.steps = 2;
+        cfg.prompts_per_step = 4;
+        cfg.samples_per_prompt = 4; // 16 rows == b_train
+        cfg.max_digits = 1;
+        cfg.max_sum = Some(9);
+        cfg.max_new_tokens = 4;
+        cfg.validate_every = 1;
+        cfg.rollout_replicas = replicas;
+        cfg
+    };
+    let mut single = RlLoop::new(runtime(), mk_cfg("pool_ref", 1)).unwrap();
+    let mut pooled = RlLoop::new(runtime(), mk_cfg("pool_2x", 2)).unwrap();
+    for step in 0..2 {
+        let a = single.step(step).unwrap();
+        let b = pooled.step(step).unwrap();
+        assert_eq!(b.get("rollout_replicas"), 2.0);
+        for key in [
+            "reward",
+            "response_len",
+            "loss",
+            "mismatch_kl",
+            "entropy",
+            "tis_mean",
+            "val_accuracy",
+            "rollout_tokens",
+        ] {
+            let (x, y) = (a.get(key), b.get(key));
+            assert!(
+                x == y || (x.is_nan() && y.is_nan()),
+                "step {step} {key}: single {x} vs pool {y}"
+            );
+        }
+    }
+    let s = single.engine_stats().unwrap();
+    let p = pooled.engine_stats().unwrap();
+    assert_eq!(s.tokens_generated, p.tokens_generated);
 }
 
 #[test]

@@ -1,0 +1,276 @@
+//! Pool-vs-single-engine determinism and serving-shape integration
+//! tests (hermetic: synthetic manifest + RefBackend in every thread).
+//!
+//! The contract under test: an N-replica pool is a pure throughput
+//! knob. For the same request ids and engine seed it must produce
+//! BYTE-identical tokens, behavior logprobs, full-vocab logprobs and
+//! TIS weights as one engine — across routing policies, replica
+//! counts, a mid-run weight sync, and a KV-scale recalibration.
+
+use std::sync::Arc;
+
+use fp8_rl::rollout::{
+    EngineConfig, EnginePool, HloEngine, PoolConfig, Request, RoutePolicy,
+    SamplingParams,
+};
+use fp8_rl::runtime::{HostArray, Runtime};
+use fp8_rl::sync::{WeightSync, WeightSyncConfig};
+
+const TIS_C: f32 = 2.0;
+
+/// Requests exercising truncated sampling (top-k / top-p / plain / a
+/// greedy row), so the determinism claim covers every sampler path.
+fn requests(lo: u64, hi: u64) -> Vec<Request> {
+    (lo..hi)
+        .map(|i| {
+            let params = match i % 4 {
+                0 => SamplingParams {
+                    temperature: 1.0,
+                    max_new_tokens: 6,
+                    ..Default::default()
+                },
+                1 => SamplingParams {
+                    temperature: 1.0,
+                    top_k: 5,
+                    max_new_tokens: 6,
+                    ..Default::default()
+                },
+                2 => SamplingParams {
+                    temperature: 1.0,
+                    top_p: 0.9,
+                    max_new_tokens: 6,
+                    ..Default::default()
+                },
+                _ => SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: 6,
+                    ..Default::default()
+                },
+            };
+            Request {
+                id: i,
+                prompt: vec![12, (i % 10) as i32, 10, ((i + 3) % 10) as i32, 11],
+                params,
+            }
+        })
+        .collect()
+}
+
+fn single_engine(variant: &str) -> HloEngine {
+    let rt = Arc::new(Runtime::hermetic());
+    HloEngine::new(rt, EngineConfig::new("dense", variant)).unwrap()
+}
+
+fn pool(n: usize, variant: &str, policy: RoutePolicy) -> EnginePool {
+    EnginePool::new(
+        PoolConfig {
+            n_replicas: n,
+            policy,
+            engine: EngineConfig::new("dense", variant),
+        },
+        // explicitly hermetic: must not depend on whether an artifacts
+        // dir happens to exist in the test cwd
+        fp8_rl::rollout::hermetic_runtime_factory(),
+    )
+    .unwrap()
+}
+
+/// Per-token TIS weights as the trainer would compute them against the
+/// SAME policy: exp(clip(pi_full - pi_behavior)) — equal logprobs imply
+/// equal weights, asserted explicitly because the acceptance criterion
+/// names them.
+fn tis_weights(c: &fp8_rl::rollout::Completion) -> Vec<f32> {
+    c.logprobs_full
+        .iter()
+        .zip(&c.logprobs)
+        .map(|(&full, &behave)| {
+            ((full - behave) as f64).exp().min(TIS_C as f64) as f32
+        })
+        .collect()
+}
+
+fn assert_identical(
+    a: &[fp8_rl::rollout::Completion],
+    b: &[fp8_rl::rollout::Completion],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: completion count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{what}: merge order");
+        assert_eq!(x.tokens, y.tokens, "{what}: tokens for req {}", x.id);
+        assert_eq!(
+            x.logprobs, y.logprobs,
+            "{what}: behavior logprobs for req {}",
+            x.id
+        );
+        assert_eq!(
+            x.logprobs_full, y.logprobs_full,
+            "{what}: full logprobs for req {}",
+            x.id
+        );
+        assert_eq!(
+            tis_weights(x),
+            tis_weights(y),
+            "{what}: TIS weights for req {}",
+            x.id
+        );
+        assert_eq!(x.finish, y.finish, "{what}: finish for req {}", x.id);
+    }
+}
+
+/// Perturbed-then-FP8-quantized weights standing in for one trainer
+/// step (quantized once; installed everywhere).
+fn synced_weights(rt: &Runtime) -> Arc<Vec<HostArray>> {
+    let spec = rt.manifest.model("dense").unwrap().clone();
+    let init = rt.manifest.load_initial_params("dense").unwrap();
+    let params: Vec<HostArray> = init
+        .into_iter()
+        .zip(&spec.params)
+        .map(|(mut v, p)| {
+            for x in v.iter_mut() {
+                *x *= 1.01;
+            }
+            HostArray::f32(p.shape.clone(), v)
+        })
+        .collect();
+    let sync = WeightSync::new(WeightSyncConfig::fp8());
+    let (w, rep) = sync.run_shared(&spec, &params).unwrap();
+    assert!(rep.n_quantized > 0);
+    w
+}
+
+#[test]
+fn four_replica_pool_is_bit_identical_to_single_engine() {
+    // kvfp8 so the KV-scale broadcast below is numerically live
+    let variant = "kvfp8";
+    let mut single = single_engine(variant);
+    let mut pool4 = pool(4, variant, RoutePolicy::RoundRobin);
+
+    // ---- phase 1: plain generation (8 = one wave on the single
+    // engine; 2-request waves per replica on the pool) ----
+    let a_single = single.generate(requests(0, 8)).unwrap();
+    let a_pool = pool4.generate(requests(0, 8)).unwrap();
+    assert_identical(&a_single, &a_pool, "phase 1");
+
+    // ---- mid-run weight sync: quantize once, install everywhere ----
+    let rt = Arc::new(Runtime::hermetic());
+    let w = synced_weights(&rt);
+    single.install_weights(&w).unwrap();
+    pool4.install_weights(w).unwrap();
+
+    // ---- KV-scale recalibration broadcast ----
+    single.install_kv_scales(0.7, 1.3);
+    pool4.install_kv_scales(0.7, 1.3).unwrap();
+
+    // ---- phase 2: same contract under the new weights + scales ----
+    let b_single = single.generate(requests(100, 108)).unwrap();
+    let b_pool = pool4.generate(requests(100, 108)).unwrap();
+    assert_identical(&b_single, &b_pool, "phase 2");
+
+    // the sync must actually have changed generation (guard against a
+    // dead broadcast path vacuously passing the comparison). Only the
+    // greedy rows are comparable across phases: request 100+i has the
+    // same prompt and params as request i, and greedy ignores the
+    // (id-keyed) sampling stream, so any difference comes from the new
+    // weights / KV scales alone.
+    let changed = a_single
+        .iter()
+        .filter(|c| c.id % 4 == 3)
+        .any(|c| {
+            let d = b_single.iter().find(|d| d.id == c.id + 100).unwrap();
+            c.tokens != d.tokens || c.logprobs_full != d.logprobs_full
+        });
+    assert!(changed, "weight sync + kv scales appear dead");
+}
+
+#[test]
+fn replica_count_and_policy_do_not_change_outputs() {
+    let reference = {
+        let mut e = single_engine("bf16");
+        e.generate(requests(0, 12)).unwrap()
+    };
+    for (n, policy) in [
+        (1, RoutePolicy::RoundRobin),
+        (2, RoutePolicy::LeastLoaded),
+        (3, RoutePolicy::RoundRobin),
+        (4, RoutePolicy::LeastLoaded),
+    ] {
+        let mut p = pool(n, "bf16", policy);
+        let done = p.generate(requests(0, 12)).unwrap();
+        assert_identical(
+            &reference,
+            &done,
+            &format!("{n} replicas / {policy:?}"),
+        );
+        assert_eq!(
+            p.loads(),
+            vec![0u64; n].as_slice(),
+            "router load must drain at {n} replicas"
+        );
+    }
+}
+
+#[test]
+fn pool_aggregates_stats_across_replicas() {
+    let mut p = pool(4, "bf16", RoutePolicy::RoundRobin);
+    let done = p.generate(requests(0, 16)).unwrap();
+    assert_eq!(done.len(), 16);
+    let delivered: usize = done.iter().map(|c| c.tokens.len()).sum();
+    let total = p.stats().unwrap();
+    assert_eq!(total.tokens_generated, delivered as u64);
+    let per = p.per_replica_stats().unwrap();
+    assert_eq!(per.len(), 4);
+    assert!(
+        per.iter().all(|s| s.tokens_generated > 0),
+        "round-robin must spread work over every replica: {:?}",
+        per.iter().map(|s| s.tokens_generated).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        per.iter().map(|s| s.tokens_generated).sum::<u64>(),
+        total.tokens_generated
+    );
+}
+
+#[test]
+fn behavior_logprob_is_renormalized_in_completions() {
+    // end-to-end check of the headline sampler fix: truncated requests
+    // must come back with behavior logprobs that differ from the
+    // full-vocab ones (kept-set renormalization), while untruncated
+    // temp-1 requests agree between the two
+    let mut e = single_engine("bf16");
+    let done = e.generate(requests(0, 8)).unwrap();
+    for c in &done {
+        assert_eq!(c.logprobs.len(), c.tokens.len());
+        assert_eq!(c.logprobs_full.len(), c.tokens.len());
+        match c.id % 4 {
+            0 => {
+                // untruncated temp 1: conventions coincide bit-exactly
+                // (shared log-softmax route)
+                for (a, b) in c.logprobs.iter().zip(&c.logprobs_full) {
+                    assert_eq!(a, b, "req {}", c.id);
+                }
+            }
+            1 | 2 => {
+                // truncation renormalizes: every kept token is at least
+                // as likely under the behavior law, and the TIS weight
+                // exp(full - behavior) is <= 1 per token
+                for (a, b) in c.logprobs.iter().zip(&c.logprobs_full) {
+                    assert!(
+                        *a >= *b - 1e-5,
+                        "req {}: behavior {a} < full {b}",
+                        c.id
+                    );
+                }
+            }
+            _ => {
+                // greedy: point mass
+                for a in &c.logprobs {
+                    assert_eq!(*a, 0.0, "req {}", c.id);
+                }
+                for b in &c.logprobs_full {
+                    assert!(*b < 0.0, "req {}", c.id);
+                }
+            }
+        }
+    }
+}

@@ -269,6 +269,7 @@ fn group_advantages_zero_mean_per_group() {
                             prompt: problem.prompt.clone(),
                             tokens: vec![3, 13],
                             logprobs: vec![-0.1, -0.1],
+                            logprobs_full: vec![-0.1, -0.1],
                             finish: FinishReason::Eos,
                             preemptions: 0,
                         },
