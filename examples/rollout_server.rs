@@ -1,8 +1,10 @@
-//! Rollout serving example: a thread-per-replica engine pool behind
-//! the router serving a batched request stream under KV pressure,
-//! reporting latency / throughput / preemption — the vLLM-style
-//! serving shape of the stack, now actually multicore (each replica
-//! owns its own runtime + engine on its own OS thread).
+//! Rollout serving example: a streaming engine pool behind the router,
+//! serving requests AS THEY ARRIVE — submit one request at a time,
+//! collect completions the moment any replica finishes one, and push a
+//! weight-epoch fence through mid-stream without ever stopping the
+//! pool. This is the vLLM-style continuous-admission serving shape of
+//! the stack: no batch barriers, per-request latency, live queue-depth
+//! routing.
 //!
 //! Every engine runs with a deliberately small KV budget so the paged
 //! allocator preempts (recompute-style) and the BF16-vs-FP8-KV
@@ -15,11 +17,11 @@
 use std::time::Instant;
 
 use fp8_rl::rollout::{
-    runtime_factory, EngineConfig, EnginePool, PoolConfig, Request,
-    RoutePolicy, SamplingParams,
+    runtime_factory, Completed, EngineConfig, EnginePool, PoolConfig,
+    Request, RoutePolicy, SamplingParams,
 };
 use fp8_rl::util::cli::Args;
-use fp8_rl::util::error::Result;
+use fp8_rl::util::error::{anyhow, Result};
 use fp8_rl::util::rng::Pcg64;
 
 fn main() -> Result<()> {
@@ -44,8 +46,12 @@ fn main() -> Result<()> {
         )?;
 
         let mut rng = Pcg64::new(7);
-        let requests: Vec<Request> = (0..n_requests)
-            .map(|i| Request {
+        let mut done = Vec::new();
+        let t0 = Instant::now();
+        for i in 0..n_requests {
+            // the arrival stream: requests trickle in one at a time and
+            // are admitted into replicas that are already mid-decode
+            pool.submit(Request {
                 id: i as u64,
                 prompt: vec![
                     12,
@@ -58,14 +64,37 @@ fn main() -> Result<()> {
                     max_new_tokens: 40, // long responses stress the cache
                     ..Default::default()
                 },
-            })
-            .collect();
-
-        let t0 = Instant::now();
-        let done = pool.generate(requests)?;
+            })?;
+            // halfway through the arrivals, a recalibration lands as an
+            // epoch fence: in-flight sequences finish under the old
+            // scales, later arrivals use the new ones — the pool never
+            // stops serving
+            if i + 1 == n_requests / 2 {
+                let epoch = pool.sync_kv_scales(1.1, 0.9)?;
+                println!(
+                    "[{variant:6}] mid-stream KV-scale fence -> \
+                     epoch {epoch} ({} requests in flight)",
+                    pool.n_outstanding()
+                );
+            }
+            // completions stream back while we are still submitting
+            while let Some(c) = pool.poll() {
+                done.push(finished(c)?);
+            }
+        }
+        // run the stream dry (next_resolved returns None only once
+        // nothing is outstanding AND the ready queue is empty, and it
+        // surfaces fence failures instead of swallowing them)
+        while let Some(c) = pool.next_resolved()? {
+            done.push(finished(c)?);
+        }
         let dt = t0.elapsed().as_secs_f64();
+
         let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
         let preempted: u32 = done.iter().map(|c| c.preemptions).sum();
+        let old_epoch =
+            done.iter().filter(|c| c.epoch == 0).count();
+        let new_epoch = done.len() - old_epoch;
         let per: Vec<u64> = pool
             .per_replica_stats()?
             .iter()
@@ -73,20 +102,39 @@ fn main() -> Result<()> {
             .collect();
         println!(
             "[{variant:6}] {} reqs, {tokens} tokens in {dt:.1}s \
-             ({:.1} tok/s aggregate over {n_replicas} replicas) | \
-             preemptions={preempted} | per-replica tokens={per:?}",
+             ({:.1} tok/s aggregate over {n_replicas} replicas, \
+             streaming admission) | preemptions={preempted} | \
+             epochs: {old_epoch} old / {new_epoch} new | \
+             per-replica tokens={per:?}",
             done.len(),
             tokens as f64 / dt,
         );
         assert!(
             pool.loads().iter().all(|&l| l == 0),
-            "router load must drain after the batch: {:?}",
+            "router load must drain once the stream is dry: {:?}",
             pool.loads()
         );
     }
     println!(
-        "rollout_server OK (FP8 KV doubles the same-budget capacity; \
-         replicas scale tokens/s)"
+        "rollout_server OK (continuous admission keeps every replica \
+         busy; FP8 KV doubles the same-budget capacity; epoch fences \
+         swap scales without stopping the pool)"
     );
     Ok(())
+}
+
+/// Unwrap a streamed resolution into its completion (this example
+/// never aborts, so only `Done` is expected).
+fn finished(
+    c: Completed,
+) -> Result<fp8_rl::rollout::Completion> {
+    match c {
+        Completed::Done(c) => Ok(c),
+        Completed::Aborted(id) => {
+            Err(anyhow!("request {id} unexpectedly aborted"))
+        }
+        Completed::Failed(id, msg) => {
+            Err(anyhow!("request {id} failed: {msg}"))
+        }
+    }
 }

@@ -1,10 +1,15 @@
 //! End-to-end pool bench: aggregate decode throughput vs replica count
 //! on the thread-per-replica engine pool (the multicore serving hot
-//! path). Runs hermetically on the synthetic manifest + RefBackend when
-//! `make artifacts` has not been run, and emits `BENCH_engine_pool.json`
-//! (tokens/s per replica count, scaling efficiency) so CI tracks the
-//! scaling trajectory across PRs. The acceptance bar for the pool is
-//! >= 2x aggregate tokens/s at 4 replicas vs 1 on a multicore host.
+//! path), plus the `stream_admission` config comparing barrier-mode
+//! waves against continuous streaming admission under skewed output
+//! lengths (the tail-latency shape where a barrier parks every
+//! finished replica behind the straggler). Runs hermetically on the
+//! synthetic manifest + RefBackend when `make artifacts` has not been
+//! run, and emits `BENCH_engine_pool.json` (tokens/s per replica
+//! count, scaling efficiency, barrier-vs-streaming speedup) so CI
+//! tracks both trajectories across PRs. Acceptance bars: >= 2x
+//! aggregate tokens/s at 4 replicas vs 1, and streaming >= barrier
+//! under skew, on a multicore host.
 //!
 //! Run: `cargo bench --bench engine_pool`
 
@@ -86,6 +91,104 @@ fn main() {
         v.insert("scaling_efficiency".into(), Json::Num(efficiency));
         results.insert(replicas.to_string(), Json::Obj(v));
     }
+    // ---- stream_admission: barrier waves vs continuous admission ----
+    // Skewed output lengths: 1 in 8 requests decodes 8x longer. Under
+    // barrier mode each 16-request wave blocks on its straggler (and
+    // the whole pool idles before the next wave starts); streaming
+    // admission backfills the idle replicas immediately. Same request
+    // set, same pool, same total tokens — only the admission model
+    // differs.
+    let mut stream_admission: BTreeMap<String, Json> = BTreeMap::new();
+    let skewed = |base: u64| -> Vec<Request> {
+        let mut rng = Pcg64::new(11);
+        (0..64u64)
+            .map(|i| Request {
+                id: base + i,
+                prompt: vec![
+                    12,
+                    rng.below(10) as i32,
+                    10,
+                    rng.below(10) as i32,
+                    11,
+                ],
+                params: SamplingParams {
+                    max_new_tokens: if i % 8 == 0 { 64 } else { 8 },
+                    eos: -1, // fixed-length decode: comparable work
+                    ..Default::default()
+                },
+            })
+            .collect()
+    };
+    match EnginePool::new(
+        PoolConfig {
+            n_replicas: 4,
+            policy: RoutePolicy::LeastLoaded,
+            engine: EngineConfig::new("dense", "bf16"),
+        },
+        factory.clone(),
+    ) {
+        Err(e) => eprintln!("skip stream_admission: {e}"),
+        Ok(mut pool) => {
+            // warm: every replica compiles its entrypoints in-process
+            let _ = pool.generate(skewed(0)).unwrap();
+            let t0 = Instant::now();
+            let mut barrier_tokens = 0usize;
+            let waves = skewed(1000);
+            for chunk in waves.chunks(16) {
+                let done = pool.generate(chunk.to_vec()).unwrap();
+                barrier_tokens +=
+                    done.iter().map(|c| c.tokens.len()).sum::<usize>();
+            }
+            let barrier_s = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            for r in skewed(2000) {
+                pool.submit(r).unwrap();
+            }
+            let done = pool.drain().unwrap();
+            let stream_s = t1.elapsed().as_secs_f64();
+            let stream_tokens: usize =
+                done.iter().map(|c| c.tokens.len()).sum();
+            assert_eq!(
+                stream_tokens, barrier_tokens,
+                "same requests must decode the same tokens"
+            );
+            let barrier_tok_s = barrier_tokens as f64 / barrier_s;
+            let stream_tok_s = stream_tokens as f64 / stream_s;
+            let speedup = if barrier_tok_s > 0.0 {
+                stream_tok_s / barrier_tok_s
+            } else {
+                0.0
+            };
+            println!(
+                "bench engine/pool[stream_admission]: barrier \
+                 {barrier_tok_s:.1} tok/s vs streaming \
+                 {stream_tok_s:.1} tok/s under skewed lengths \
+                 (speedup {speedup:.2}x over 4 replicas)"
+            );
+            stream_admission
+                .insert("requests".into(), Json::Num(64.0));
+            stream_admission
+                .insert("replicas".into(), Json::Num(4.0));
+            stream_admission
+                .insert("tokens".into(), Json::Num(barrier_tokens as f64));
+            stream_admission
+                .insert("barrier_seconds".into(), Json::Num(barrier_s));
+            stream_admission.insert(
+                "barrier_tokens_per_s".into(),
+                Json::Num(barrier_tok_s),
+            );
+            stream_admission
+                .insert("streaming_seconds".into(), Json::Num(stream_s));
+            stream_admission.insert(
+                "streaming_tokens_per_s".into(),
+                Json::Num(stream_tok_s),
+            );
+            stream_admission.insert(
+                "streaming_speedup".into(),
+                Json::Num(speedup),
+            );
+        }
+    }
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(0);
@@ -94,6 +197,10 @@ fn main() {
     root.insert("backend".into(), Json::Str("ref".into()));
     root.insert("host_cores".into(), Json::Num(cores as f64));
     root.insert("replicas".into(), Json::Obj(results));
+    root.insert(
+        "stream_admission".into(),
+        Json::Obj(stream_admission),
+    );
     let path = "BENCH_engine_pool.json";
     match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
         Ok(()) => eprintln!("wrote {path}"),

@@ -30,6 +30,14 @@ pub struct ExperimentConfig {
     /// bit-identical either way — see rollout::pool; replicas always
     /// load from the same manifest source as the loop's runtime)
     pub rollout_replicas: usize,
+    /// continuous streaming admission: requests are submitted into the
+    /// running pool as they are built and weight/KV-scale installs
+    /// become asynchronous epoch fences, instead of the batch-barrier
+    /// generate + ack'd broadcast. Outputs are bit-identical either
+    /// way (the epoch fence pins every completion to its submit-time
+    /// weights — see rollout::pool); this is purely a throughput /
+    /// latency knob. Forces the pool topology even at 1 replica.
+    pub rollout_streaming: bool,
     pub seed: u64,
     /// task difficulty
     pub max_digits: u32,
@@ -77,6 +85,8 @@ impl ExperimentConfig {
             getf("max_new_tokens", c.max_new_tokens as f64) as usize;
         c.rollout_replicas =
             getf("rollout_replicas", c.rollout_replicas as f64) as usize;
+        c.rollout_streaming =
+            getb("rollout_streaming", c.rollout_streaming);
         c.seed = getf("seed", c.seed as f64) as u64;
         c.max_digits = getf("max_digits", c.max_digits as f64) as u32;
         if let Some(ms) = j.opt("max_sum") {
@@ -113,6 +123,7 @@ impl ExperimentConfig {
             validate_every: 5,
             max_new_tokens: 8,
             rollout_replicas: 1,
+            rollout_streaming: false,
             seed: 1234,
             max_digits: 2,
             max_sum: None,

@@ -24,6 +24,8 @@ pub const CURVE_COLUMNS: &[&str] = &[
     "exceed_p99",
     "preemptions",
     "rollout_replicas",
+    "rollout_streaming",
+    "rollout_epoch",
     "rollout_tokens",
     "rollout_s",
     "sync_s",

@@ -10,12 +10,22 @@
 //! the KV scales.
 //!
 //! The rollout phase runs behind the [`Rollout`] backend: a single
-//! in-process engine by default, or — at `rollout_replicas > 1` — the
-//! thread-per-replica [`rollout::pool`](crate::rollout::pool) behind
-//! the router, with weights quantized once per step and broadcast to
-//! every replica. Outputs are bit-identical either way (per-request
-//! sampling streams + deterministic merge), so the serving topology is
-//! purely a throughput knob.
+//! in-process engine by default, or — at `rollout_replicas > 1` or
+//! `rollout_streaming` — the streaming
+//! [`rollout::pool`](crate::rollout::pool) behind the router, with
+//! weights quantized once per step and broadcast to every replica.
+//! Outputs are bit-identical either way (per-request sampling streams
+//! + deterministic merge), so the serving topology is purely a
+//! throughput knob.
+//!
+//! In streaming mode the weight sync and KV-scale recalibration go out
+//! as asynchronous **epoch fences** (`EnginePool::sync_weights` /
+//! `sync_kv_scales`) and requests are submitted into the running pool
+//! one by one; the loop then checks every completion's epoch tag
+//! against the epoch it synced, which is what guarantees the
+//! `Completion::logprobs` used as the TIS/MIS denominator were
+//! measured under THIS step's behavior policy and not a torn or stale
+//! one. A mismatched tag is a hard error, not a silent bias.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -71,7 +81,10 @@ impl RlLoop {
             seed: cfg.seed,
             ..EngineConfig::new(&cfg.arch, &cfg.rollout_variant)
         };
-        let rollout = if cfg.rollout_replicas > 1 {
+        // streaming admission needs the pool's session API, so the
+        // knob forces the pool topology even at one replica
+        let rollout = if cfg.rollout_replicas > 1 || cfg.rollout_streaming
+        {
             Rollout::Pool(EnginePool::new(
                 PoolConfig {
                     n_replicas: cfg.rollout_replicas,
@@ -148,6 +161,7 @@ impl RlLoop {
 
     /// One full RL iteration (public so figures can interleave probes).
     pub fn step(&mut self, step: usize) -> Result<StepRecord> {
+        let streaming = self.cfg.rollout_streaming;
         let mut rec = StepRecord::default();
         rec.set("step", step as f64);
 
@@ -158,7 +172,15 @@ impl RlLoop {
         let spec = self.rt.manifest.model(&self.cfg.arch)?.clone();
         let (weights, _report) =
             self.sync.run_shared(&spec, self.trainer.params())?;
-        self.rollout.install_weights(weights)?;
+        match &mut self.rollout {
+            Rollout::Pool(p) if streaming => {
+                // asynchronous epoch fence: replicas finish any
+                // in-flight work under the old weights; this step's
+                // submissions are stamped with the new epoch
+                p.sync_weights(weights)?;
+            }
+            r => r.install_weights(weights)?,
+        }
 
         // sample this step's problems first: inference-side calibration
         // uses the upcoming prompts (vLLM forced-recalibration style)
@@ -184,7 +206,12 @@ impl RlLoop {
                 &rows,
                 TOK_PAD,
             )?;
-            self.rollout.install_kv_scales(ks, vs)?;
+            match &mut self.rollout {
+                Rollout::Pool(p) if streaming => {
+                    p.sync_kv_scales(ks, vs)?;
+                }
+                r => r.install_kv_scales(ks, vs)?,
+            }
         }
         rec.set("sync_s", t0.elapsed().as_secs_f64());
 
@@ -211,8 +238,35 @@ impl RlLoop {
         }
         debug_assert_eq!(origin.len(), requests.len());
         let pre = self.rollout.stats()?;
+        // the pool's `generate` IS continuous admission since the
+        // streaming rewrite (submit-all + mid-decode injection +
+        // drain, with all-or-nothing failure accounting) — what the
+        // streaming knob changes in this loop is the asynchronous
+        // epoch fences above, not the generation call
         let completions = self.rollout.generate(requests)?;
         let post = self.rollout.stats()?;
+        // the epoch tag is what makes the TIS/MIS denominator honest:
+        // every completion must have been generated under THE weights
+        // this step synced — a mismatch means a torn/stale behavior
+        // policy, which must fail loudly instead of biasing the
+        // importance weights
+        let epoch = self.rollout.epoch();
+        for c in &completions {
+            if c.epoch != epoch {
+                bail!(
+                    "completion {} is tagged weight epoch {} but the \
+                     loop synced epoch {epoch}: its behavior logprobs \
+                     would be off-policy for TIS/MIS",
+                    c.id,
+                    c.epoch
+                );
+            }
+        }
+        rec.set("rollout_epoch", epoch as f64);
+        rec.set(
+            "rollout_streaming",
+            self.cfg.rollout_streaming as u8 as f64,
+        );
         rec.set(
             "preemptions",
             (post.preemptions - pre.preemptions) as f64,

@@ -4,8 +4,11 @@
 //!   smoke                         load artifacts, run one decode + one
 //!                                 train step, print sanity numbers
 //!   train   [--arch --rollout --train-variant --steps --no-tis
-//!            --replicas N ...]    run one RL experiment config
-//!                                 (--replicas > 1 = engine pool)
+//!            --replicas N --streaming ...]
+//!                                 run one RL experiment config
+//!                                 (--replicas > 1 = engine pool;
+//!                                 --streaming = continuous admission
+//!                                 + epoch-fenced weight sync)
 //!   reproduce --figure figN       regenerate a paper figure's CSVs
 //!   perf    --figure figN         print a perf figure's table rows
 //!   list                          list artifacts and experiment configs
@@ -151,6 +154,9 @@ fn train(args: &Args) -> Result<()> {
     // replicas load from the same --artifacts source as `rt`)
     cfg.rollout_replicas =
         args.usize_or("replicas", cfg.rollout_replicas)?;
+    // continuous streaming admission + epoch-fenced weight sync
+    // (bit-identical outputs — a pure throughput/latency knob)
+    cfg.rollout_streaming = args.bool("streaming") || cfg.rollout_streaming;
     let rt = Arc::new(Runtime::new(artifacts_dir(args))?);
     let mut rl = RlLoop::new(rt, cfg)?;
     rl.run()?;

@@ -192,6 +192,7 @@ mod tests {
                 logprobs_full: lp,
                 finish: FinishReason::Eos,
                 preemptions: 0,
+                epoch: 0,
             },
             reward,
             group,

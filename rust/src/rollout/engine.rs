@@ -11,6 +11,21 @@
 //! continuous-batching server. A whole-batch fast path uses the prefill
 //! artifact when the engine starts empty (the common RL-rollout shape).
 //!
+//! Streaming entry points: [`HloEngine::enqueue`] queues a request
+//! without running, [`HloEngine::step`] runs ONE admission + decode
+//! round (admitting queued work into free slots mid-decode), and
+//! [`HloEngine::cancel`] aborts a queued/running request. `generate`
+//! is now just enqueue-all + step-to-drain, so the batch and streaming
+//! paths share one scheduler loop — and the chunked-prefill/wave
+//! bit-exactness means outputs do not depend on WHEN a request was
+//! admitted, only on (engine seed, request id, prompt, weight epoch).
+//!
+//! Every completed request is tagged with the engine's *weight epoch*
+//! (bumped by each successful `install_weights` / `install_kv_scales`),
+//! so the trainer can verify which behavior policy a completion's
+//! logprobs were measured under (the pool's epoch fence guarantees no
+//! completion spans an install).
+//!
 //! Weights are persistent device buffers; the per-step KV state rides
 //! through each execution. The engine's weights are the *quantized* ones
 //! installed by the weight-sync pipeline (sync/), so sampled-token
@@ -180,6 +195,9 @@ pub struct HloEngine {
     slots: Vec<Option<Slot>>,
     sched: Scheduler,
     preempt_counts: std::collections::BTreeMap<u64, u32>,
+    /// bumped by every successful weight / KV-scale install; stamps
+    /// every completion (see the module docs)
+    weight_epoch: u64,
     pub stats: EngineStats,
     // geometry
     b: usize,
@@ -259,6 +277,7 @@ impl HloEngine {
             slots: (0..b).map(|_| None).collect(),
             sched,
             preempt_counts: std::collections::BTreeMap::new(),
+            weight_epoch: 0,
             stats: EngineStats::default(),
             b,
             max_seq,
@@ -282,20 +301,34 @@ impl HloEngine {
                 self.stats.host_bytes_moved += a.nbytes() as u64;
             }
             self.param_bufs = self.rt.to_device_all(params)?;
+            self.weight_epoch += 1;
             return Ok(());
         }
         for (buf, a) in self.param_bufs.iter_mut().zip(params) {
             upload_into(&self.rt, &mut self.stats, buf, a)?;
         }
+        // bumped only on SUCCESS: a failed install leaves the epoch
+        // behind, which the pool's submit-time epoch check turns into a
+        // loud per-request failure instead of silently mis-tagging
+        self.weight_epoch += 1;
         Ok(())
     }
 
     /// Install recalibrated QKV scales (paper §2.3.1). The device
-    /// copies are refreshed lazily on the next prefill/decode.
+    /// copies are refreshed lazily on the next prefill/decode. Bumps
+    /// the weight epoch: the behavior policy's numerics changed.
     pub fn install_kv_scales(&mut self, kscale: f32, vscale: f32) {
         self.kscale = kscale;
         self.vscale = vscale;
         self.scales_dirty = true;
+        self.weight_epoch += 1;
+    }
+
+    /// The current weight epoch (see the module docs): number of
+    /// successful weight / KV-scale installs so far. Every completion
+    /// is stamped with the epoch it was generated under.
+    pub fn weight_epoch(&self) -> u64 {
+        self.weight_epoch
     }
 
     /// Re-stage the k/v scale device buffers if the scales changed.
@@ -347,8 +380,12 @@ impl HloEngine {
         }
     }
 
-    /// Drop all queued and running work (the `generate` error path).
-    fn abort_in_flight(&mut self) {
+    /// Drop all queued and running work, counting sampled-but-
+    /// undelivered tokens as discarded. Callers of [`HloEngine::step`]
+    /// MUST invoke this after a step error (exactly what `generate`'s
+    /// internal error path does) so the next round starts from a clean
+    /// scheduler.
+    pub fn abort_in_flight(&mut self) {
         for s in self.slots.iter_mut() {
             if let Some(slot) = s.take() {
                 self.stats
@@ -359,33 +396,83 @@ impl HloEngine {
         self.preempt_counts.clear();
     }
 
-    fn generate_inner(
-        &mut self,
-        requests: Vec<Request>,
-        done: &mut Vec<Completion>,
-    ) -> Result<()> {
-        for r in &requests {
-            if r.prompt.is_empty() || r.prompt.len() > self.prompt_len {
-                bail!(
-                    "prompt length {} outside 1..={}",
-                    r.prompt.len(),
-                    self.prompt_len
-                );
+    /// Queue one request without running anything — the streaming
+    /// admission entry point ([`step`](HloEngine::step) picks it up
+    /// between decode rounds, mid-flight work and all). Rejects at the
+    /// door both malformed prompts and prompts that could never be
+    /// admitted even with the whole KV cache free, so a queued request
+    /// is guaranteed to eventually reach a slot.
+    pub fn enqueue(&mut self, req: Request) -> Result<()> {
+        if req.prompt.is_empty() || req.prompt.len() > self.prompt_len {
+            bail!(
+                "prompt length {} outside 1..={}",
+                req.prompt.len(),
+                self.prompt_len
+            );
+        }
+        let need = self.sched.kv.blocks_for(req.prompt.len() + 1);
+        if need > self.sched.kv.total_blocks() {
+            bail!(
+                "request {} can never be admitted — its {}-token prompt \
+                 (+1 growth reserve) needs {} KV blocks but the cache \
+                 has only {} blocks total",
+                req.id,
+                req.prompt.len(),
+                need,
+                self.sched.kv.total_blocks()
+            );
+        }
+        self.sched.submit(req);
+        Ok(())
+    }
+
+    /// True when the engine owes no completions (nothing queued or
+    /// running). The streaming worker blocks for new work when idle.
+    pub fn is_idle(&self) -> bool {
+        self.sched.is_idle()
+    }
+
+    /// Every request id still queued or running (what a streaming
+    /// caller must fail/settle when a step errors out).
+    pub fn outstanding_ids(&self) -> Vec<u64> {
+        self.sched.outstanding_ids()
+    }
+
+    /// Abort one queued or running request (the streaming cancel
+    /// path): its sampled-but-undelivered tokens count as discarded.
+    /// Returns `false` when the engine no longer knows the id (it
+    /// already completed).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        for s in self.slots.iter_mut() {
+            if s.as_ref().map(|x| x.req.id) == Some(id) {
+                if let Some(x) = s.take() {
+                    self.stats
+                        .discard_tokens(x.generated.len() as u64);
+                }
             }
-            self.sched.submit(r.clone());
         }
-        // fast path: empty engine + batch start => batched prefill wave
+        self.preempt_counts.remove(&id);
+        self.sched.cancel(id)
+    }
+
+    /// One scheduling round: admit queued work (a batched prefill wave
+    /// when the engine is empty, mid-decode slot injection otherwise)
+    /// and advance every running sequence one token. A no-op when
+    /// idle; finished requests are appended to `done` in completion
+    /// order (NOT id-sorted — streaming callers ship them as they
+    /// come). On `Err` the caller must call
+    /// [`abort_in_flight`](HloEngine::abort_in_flight).
+    pub fn step(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        if self.sched.is_idle() {
+            return Ok(());
+        }
         if self.slots.iter().all(|s| s.is_none()) {
-            self.prefill_wave(done)?;
-        }
-        let mut guard = 0usize;
-        while !self.sched.is_idle() {
-            self.admit_into_slots();
-            if self.sched.n_running() == 0 {
-                // Nothing is running and admission produced nothing, so
-                // no KV block can ever be freed: the head-of-line
-                // request can never fit. Fail fast with a diagnostic
-                // instead of spinning 200k no-op iterations.
+            // nothing running => every KV block is free, so this can
+            // only admit nothing if the head-of-line request can never
+            // fit — which `enqueue` rejects up front. Defensive bail so
+            // a violated invariant can't spin the caller forever.
+            let admitted = self.prefill_wave(done)?;
+            if admitted == 0 && !self.sched.is_idle() {
                 let head = self
                     .sched
                     .head_of_line()
@@ -400,7 +487,25 @@ impl HloEngine {
                     self.sched.kv.total_blocks()
                 );
             }
-            self.decode_step(done)?;
+            return Ok(());
+        }
+        // occupied slots == running sequences, so admission can rely on
+        // the block-boundary growth reserve and decode always has work
+        self.admit_into_slots();
+        self.decode_step(done)
+    }
+
+    fn generate_inner(
+        &mut self,
+        requests: Vec<Request>,
+        done: &mut Vec<Completion>,
+    ) -> Result<()> {
+        for r in requests {
+            self.enqueue(r)?;
+        }
+        let mut guard = 0usize;
+        while !self.sched.is_idle() {
+            self.step(done)?;
             guard += 1;
             if guard > 200_000 {
                 bail!("engine livelock: {} running", self.sched.n_running());
@@ -442,11 +547,15 @@ impl HloEngine {
         }
     }
 
-    /// Whole-batch prefill fast path (engine must be empty).
-    fn prefill_wave(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+    /// Whole-batch prefill fast path (engine must be empty). Returns
+    /// how many requests were admitted into the wave.
+    fn prefill_wave(
+        &mut self,
+        done: &mut Vec<Completion>,
+    ) -> Result<usize> {
         let admitted = self.sched.admit();
         if admitted.is_empty() {
-            return Ok(());
+            return Ok(0);
         }
         self.stats.prefill_waves += 1;
         let mut tokens = vec![0i32; self.b * self.prompt_len];
@@ -485,6 +594,7 @@ impl HloEngine {
         // the scheduler allocated plen tokens. sample the first response
         // token from logits[:, plen-1].
         let lg = logits.as_f32()?;
+        let n_admitted = admitted.len();
         for (i, req) in admitted.into_iter().enumerate() {
             let plen = req.prompt.len();
             let row = &lg[(i * self.prompt_len + plen - 1) * self.vocab
@@ -514,7 +624,7 @@ impl HloEngine {
             debug_assert!(self.slots[i].is_none());
             self.slots[i] = Some(slot);
         }
-        Ok(())
+        Ok(n_admitted)
     }
 
     /// One decode step over all active slots. The KV cache stays
@@ -669,6 +779,7 @@ impl HloEngine {
                     .preempt_counts
                     .remove(&slot.req.id)
                     .unwrap_or(0),
+                epoch: self.weight_epoch,
             });
             return true;
         }

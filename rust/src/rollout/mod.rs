@@ -1,8 +1,10 @@
 //! The rollout (inference) engine — the vLLM-role component: paged
 //! KV-cache block manager, continuous-batching scheduler with
 //! preemption, token sampler, request router, the HLO-backed
-//! generation engine, and the thread-per-replica engine pool the RL
-//! loop drives at `rollout_replicas > 1`.
+//! generation engine, and the thread-per-replica engine pool with
+//! continuous streaming admission (submit/poll/drain sessions plus
+//! epoch-fenced weight sync) the RL loop drives at
+//! `rollout_replicas > 1` or `rollout_streaming = true`.
 pub mod engine;
 pub mod kvcache;
 pub mod pool;
@@ -14,8 +16,8 @@ pub mod scheduler;
 pub use engine::{EngineConfig, EngineStats, HloEngine};
 pub use kvcache::{KvBlockManager, KvGeometry, KvPrecision};
 pub use pool::{
-    factory_like, hermetic_runtime_factory, runtime_factory, EnginePool,
-    PoolConfig, Rollout, RuntimeFactory,
+    factory_like, hermetic_runtime_factory, runtime_factory, Completed,
+    EnginePool, PoolConfig, Rollout, RuntimeFactory, TicketId,
 };
 pub use request::{Completion, FinishReason, Request, SamplingParams};
 pub use router::{RoutePolicy, Router};

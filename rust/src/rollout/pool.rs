@@ -1,6 +1,8 @@
-//! Data-parallel rollout pool: one OS thread per engine replica behind
-//! the [`Router`] — the serving-shaped, multicore-scaling front end the
-//! ROADMAP's multi-engine item asks for.
+//! Data-parallel rollout pool with **continuous streaming admission**:
+//! one OS thread per engine replica behind the [`Router`], each running
+//! a persistent scheduler loop that admits new requests *between decode
+//! steps* — no batch barriers, the serving-shaped front end the
+//! ROADMAP's streaming-admission item asks for.
 //!
 //! ## Threading model
 //!
@@ -13,49 +15,85 @@
 //! (requests, completions, host arrays, stats). Engines are
 //! thread-confined for their whole life.
 //!
+//! ## Streaming protocol
+//!
+//! The caller drives a session API: [`EnginePool::submit`] routes one
+//! request (on LIVE per-replica queue depth — completions are pumped
+//! off the event channel before every pick) and returns its
+//! [`TicketId`]; [`EnginePool::poll`] / [`EnginePool::recv`] /
+//! [`EnginePool::next_resolved`] deliver results ([`Completed`]) as
+//! replicas finish them (`next_resolved` is the run-to-dry loop);
+//! [`EnginePool::drain`] runs the pool dry and returns everything
+//! id-sorted; [`EnginePool::abort`] cancels an in-flight ticket. Each
+//! worker loop: pull every queued message (admitting requests into the
+//! running engine mid-decode), run ONE engine step, ship finished
+//! completions, repeat; it blocks only when idle.
+//!
+//! ## Epoch fences
+//!
+//! Weight syncs and KV-scale installs are **epoch-fenced control
+//! messages** ([`EnginePool::sync_weights`] /
+//! [`EnginePool::sync_kv_scales`]): the fence rides the per-replica
+//! FIFO channel behind every already-submitted request, and a worker
+//! applies it only once its engine is idle — in-flight sequences
+//! finish under the OLD weights, requests submitted after the fence
+//! run entirely under the NEW ones, and no completion ever spans an
+//! install (no torn-weights generation). Every completion is tagged
+//! with the weight epoch it ran under (`Completion::epoch`), which is
+//! deterministic: the pool stamps submissions with its epoch counter,
+//! and channel FIFO order makes the stamp equal the engine's epoch at
+//! admission (checked — a replica left behind by a failed install
+//! fails subsequent submissions loudly instead of mis-tagging them).
+//! The trainer uses the tag to match behavior-policy logprobs (pi_fp8,
+//! the TIS/MIS denominator) to the right policy version.
+//!
 //! ## Determinism
 //!
-//! N-replica output is bit-identical to a single engine with the same
-//! seed, for any routing policy and any replica count:
+//! N-replica streaming output is bit-identical to sequential
+//! single-engine execution with the same seed, for any routing policy,
+//! replica count, and admission interleaving:
 //!
 //! * every request samples from its own RNG stream derived purely from
-//!   (engine seed, request id) — see `sampler::request_seed` — so the
-//!   stream does not depend on which replica, batch, or slot the
-//!   request lands in;
-//! * the RefBackend computes each batch row independently and its
-//!   chunked prefill reproduces the wave bit-exactly, so logits for a
-//!   request do not depend on its batch neighbors;
-//! * results are merged by sorting on request id — the same stable
-//!   order a single engine returns.
+//!   (engine seed, request id) — see `sampler::request_seed`;
+//! * the RefBackend computes each batch row independently and chunked
+//!   prefill reproduces the wave bit-exactly, so logits do not depend
+//!   on batch neighbors or on WHEN a request was admitted;
+//! * weights are piecewise-constant in epochs and the fence pins every
+//!   request to the epoch it was submitted under;
+//! * `drain` merges by sorting on request id.
 //!
-//! ## Weight sync
-//!
-//! `install_weights` broadcasts ONE `Arc`'d quantized parameter list to
-//! every replica (see `WeightSync::run_shared`): quantization happens
-//! once per sync regardless of replica count; each worker then uploads
-//! into its own persistent device buffers. `install_kv_scales`
-//! broadcasts the recalibrated scales the same way. Channel FIFO order
-//! guarantees a subsequent `generate` on any replica sees the install.
+//! `rust/tests/prop_stream.rs` replays 256+ seeded interleavings
+//! (submit / poll / weight-sync / abort, via `testkit::interleave`)
+//! against the sequential reference to prove it.
 //!
 //! ## Failure semantics
 //!
-//! `generate` is all-or-nothing, matching `HloEngine::generate`: if any
-//! replica fails, the pool drains EVERY routed id from the router as
-//! aborted — including ids a healthy replica completed, since their
-//! results are dropped with the batch (a failed engine already drained
-//! its own scheduler) — tells those replicas to count the dropped
-//! tokens as discarded (preserving the "tokens_generated counts only
-//! delivered tokens" invariant), and returns the first error. Router
-//! settlement happens only once the batch outcome is known, so the
-//! `completed`/`aborted` counters describe what the caller actually
-//! received.
+//! Failures are per-ticket in streaming mode: a rejected admission or
+//! a failed engine step resolves the affected tickets as
+//! [`Completed::Failed`] (the step's other, already-finished
+//! completions are real and still delivered); the router settles every
+//! charge either way, so loads always drain to zero. A replica that
+//! fails a fence or whose thread dies is QUARANTINED from placement
+//! (its instantly-failing admissions would otherwise keep its load
+//! near zero and make `LeastLoaded` funnel traffic into it); a dead
+//! replica's unresolved tickets and owed fence acks are written off
+//! by a reaper so blocking waits terminate. The barrier-era
+//! [`EnginePool::generate`] survives as submit-all + drain with
+//! all-or-nothing semantics: any failed ticket fails the call, drops
+//! the delivered results, and tells their replicas to count the
+//! dropped tokens as discarded (preserving the "tokens_generated
+//! counts only delivered tokens" invariant).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::runtime::{HostArray, Runtime};
-use crate::util::error::{anyhow, bail, Context, Error, Result};
+use crate::util::error::{anyhow, bail, Error, Result};
 
 use super::engine::{EngineConfig, EngineStats, HloEngine};
 use super::request::{Completion, Request};
@@ -117,15 +155,134 @@ pub struct PoolConfig {
     pub engine: EngineConfig,
 }
 
+/// Handle for one streamed request (== its request id).
+pub type TicketId = u64;
+
+/// One resolved ticket from the streaming pool: every submitted
+/// request resolves exactly once as one of these.
+#[derive(Debug)]
+pub enum Completed {
+    /// A finished, epoch-tagged completion.
+    Done(Completion),
+    /// The ticket was cancelled by [`EnginePool::abort`] before it
+    /// finished (a ticket whose abort lost the race resolves as
+    /// `Done` instead).
+    Aborted(TicketId),
+    /// The replica failed this ticket: an admission rejection, or an
+    /// engine-step error that dropped it mid-flight.
+    Failed(TicketId, String),
+}
+
 enum ToWorker {
-    Generate(Vec<Request>, Sender<(usize, Result<Vec<Completion>>)>),
-    InstallWeights(Arc<Vec<HostArray>>, Sender<(usize, Result<()>)>),
-    InstallKvScales(f32, f32),
-    /// Count `n` delivered-then-dropped tokens as discarded (pool-level
-    /// all-or-nothing failure).
+    /// Streaming admission; the `u64` is the pool epoch at submit
+    /// time, which channel FIFO order guarantees equals the engine's
+    /// weight epoch at admission (checked — see the module docs).
+    Submit(Request, u64),
+    /// Cancel a streamed request if it has not completed yet.
+    Abort(u64),
+    /// Epoch fence: finish all in-flight work under the current
+    /// weights, then install and acknowledge the target epoch.
+    SyncWeights(Arc<Vec<HostArray>>, u64),
+    /// Epoch fence for recalibrated KV scales.
+    SyncKvScales(f32, f32, u64),
+    /// Count `n` delivered-then-dropped tokens as discarded (the
+    /// barrier `generate`'s all-or-nothing failure path).
     Discard(u64),
     Stats(Sender<(usize, EngineStats)>),
     Shutdown,
+}
+
+/// Worker -> pool notifications, merged over one shared channel.
+enum Event {
+    Done(usize, Completion),
+    Aborted(usize, u64),
+    Failed(usize, u64, String),
+    /// Fence acknowledgement: (replica, target epoch, install result).
+    Fence(usize, u64, Result<()>),
+}
+
+struct FenceAck {
+    replica: usize,
+    epoch: u64,
+    result: Result<()>,
+}
+
+struct ReadyItem {
+    replica: usize,
+    item: Completed,
+}
+
+impl ReadyItem {
+    fn ticket(&self) -> u64 {
+        match &self.item {
+            Completed::Done(c) => c.id,
+            Completed::Aborted(id) | Completed::Failed(id, _) => *id,
+        }
+    }
+}
+
+/// Apply a deferred epoch fence on an idle engine and acknowledge it.
+/// A successful install must land exactly on the target epoch (the
+/// engine bumps once per install); drift means the fence protocol was
+/// violated and is reported as an error rather than papered over.
+fn apply_fence(
+    replica: usize,
+    engine: &mut HloEngine,
+    fence: ToWorker,
+    events: &Sender<Event>,
+) {
+    let (target, mut res) = match fence {
+        ToWorker::SyncWeights(w, target) => {
+            (target, engine.install_weights(&w))
+        }
+        ToWorker::SyncKvScales(k, v, target) => {
+            engine.install_kv_scales(k, v);
+            (target, Ok(()))
+        }
+        _ => unreachable!("only sync messages are fences"),
+    };
+    if res.is_ok() && engine.weight_epoch() != target {
+        res = Err(anyhow!(
+            "weight-epoch drift: engine at {} after a fence to {target}",
+            engine.weight_epoch()
+        ));
+    }
+    let _ = events.send(Event::Fence(replica, target, res));
+}
+
+/// Process one epoch-ORDERED message (a submission or a fence). These
+/// are the messages whose relative order defines which weights a
+/// request runs under; order-insensitive control never comes here.
+fn handle_ordered(
+    replica: usize,
+    engine: &mut HloEngine,
+    msg: ToWorker,
+    fence: &mut Option<ToWorker>,
+    events: &Sender<Event>,
+) {
+    match msg {
+        ToWorker::Submit(req, epoch) => {
+            let id = req.id;
+            if epoch != engine.weight_epoch() {
+                let _ = events.send(Event::Failed(
+                    replica,
+                    id,
+                    format!(
+                        "stamped for weight epoch {epoch} but the \
+                         engine is at {} (a failed install left this \
+                         replica behind the fence)",
+                        engine.weight_epoch()
+                    ),
+                ));
+            } else if let Err(e) = engine.enqueue(req) {
+                let _ =
+                    events.send(Event::Failed(replica, id, e.to_string()));
+            }
+        }
+        msg @ ToWorker::SyncWeights(..) => *fence = Some(msg),
+        msg @ ToWorker::SyncKvScales(..) => *fence = Some(msg),
+        _ => unreachable!("only epoch-ordered messages come here"),
+    }
 }
 
 fn worker_main(
@@ -133,6 +290,7 @@ fn worker_main(
     cfg: EngineConfig,
     factory: RuntimeFactory,
     rx: Receiver<ToWorker>,
+    events: Sender<Event>,
     init: Sender<(usize, Result<()>)>,
 ) {
     let built =
@@ -148,25 +306,104 @@ fn worker_main(
         }
     };
     drop(init);
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            ToWorker::Generate(reqs, reply) => {
-                let res = engine.generate(reqs);
-                let _ = reply.send((replica, res));
+    let mut done: Vec<Completion> = Vec::new();
+    // a fence waiting for the engine to drain. While it is pending,
+    // epoch-ordered messages (submits, further fences) are parked in
+    // `backlog` in arrival order — they belong to the post-fence
+    // epochs — but order-insensitive control (abort/stats/discard/
+    // shutdown) is still handled immediately: an abort must be able
+    // to cancel the very straggler a fence is waiting on, and stats
+    // must not stall behind an in-flight drain.
+    let mut fence: Option<ToWorker> = None;
+    let mut backlog: VecDeque<ToWorker> = VecDeque::new();
+    'serve: loop {
+        // ---- ingest the channel ----
+        loop {
+            let blocked_on_new_work = engine.is_idle()
+                && fence.is_none()
+                && backlog.is_empty();
+            let msg = if blocked_on_new_work {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break 'serve,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'serve,
+                }
+            };
+            match msg {
+                ToWorker::Abort(id) => {
+                    // jumps any pending fence. If the target is still
+                    // parked in the backlog, the cancel simply loses
+                    // (the ticket resolves Done later) — exactly-once
+                    // either way. Unknown ids: the completion already
+                    // crossed (or is about to cross) the event channel.
+                    if engine.cancel(id) {
+                        let _ = events.send(Event::Aborted(replica, id));
+                    }
+                }
+                ToWorker::Discard(n) => engine.stats.discard_tokens(n),
+                ToWorker::Stats(reply) => {
+                    let _ = reply.send((replica, engine.stats.clone()));
+                }
+                ToWorker::Shutdown => break 'serve,
+                ordered => {
+                    if fence.is_some() {
+                        backlog.push_back(ordered);
+                    } else {
+                        handle_ordered(
+                            replica,
+                            &mut engine,
+                            ordered,
+                            &mut fence,
+                            &events,
+                        );
+                    }
+                }
             }
-            ToWorker::InstallWeights(w, reply) => {
-                let _ = reply.send((replica, engine.install_weights(&w)));
+        }
+        // ---- apply a due fence, then replay the parked backlog ----
+        if engine.is_idle() {
+            if let Some(f) = fence.take() {
+                apply_fence(replica, &mut engine, f, &events);
             }
-            ToWorker::InstallKvScales(k, v) => {
-                engine.install_kv_scales(k, v);
+            while fence.is_none() {
+                let Some(m) = backlog.pop_front() else { break };
+                handle_ordered(
+                    replica,
+                    &mut engine,
+                    m,
+                    &mut fence,
+                    &events,
+                );
             }
-            ToWorker::Discard(n) => {
-                engine.stats.discard_tokens(n);
+            continue;
+        }
+        // ---- one admission + decode round; completions stream out
+        // as they finish instead of waiting for a batch to drain ----
+        match engine.step(&mut done) {
+            Ok(()) => {
+                for c in done.drain(..) {
+                    let _ = events.send(Event::Done(replica, c));
+                }
             }
-            ToWorker::Stats(reply) => {
-                let _ = reply.send((replica, engine.stats.clone()));
+            Err(e) => {
+                // completions that finished before the error are real
+                // and already counted as delivered — ship them
+                for c in done.drain(..) {
+                    let _ = events.send(Event::Done(replica, c));
+                }
+                let failed = engine.outstanding_ids();
+                engine.abort_in_flight();
+                let msg = e.to_string();
+                for id in failed {
+                    let _ =
+                        events.send(Event::Failed(replica, id, msg.clone()));
+                }
             }
-            ToWorker::Shutdown => break,
         }
     }
 }
@@ -176,6 +413,26 @@ pub struct EnginePool {
     router: Router,
     workers: Vec<Sender<ToWorker>>,
     handles: Vec<Option<JoinHandle<()>>>,
+    events: Receiver<Event>,
+    /// results pumped off the event channel, awaiting the caller
+    ready: VecDeque<ReadyItem>,
+    /// tickets of the `ready` items (submit's O(log n) duplicate-id
+    /// guard — the whole queue is never scanned on the hot path)
+    ready_ids: BTreeSet<u64>,
+    /// ticket -> replica for unresolved streamed requests (the abort /
+    /// discard targeting map; the router holds the load charges)
+    outstanding: BTreeMap<u64, usize>,
+    /// pool weight epoch: bumped by every sync fence; submissions are
+    /// stamped with it
+    epoch: u64,
+    /// fence acknowledgements each replica still owes (incremented
+    /// per fence sent, decremented per ack) — `drain` waits for this
+    /// debt too, so an un-awaited fence cannot fail silently; a dead
+    /// replica's debt is written off by the reaper as a fence failure
+    fence_acks_owed: Vec<usize>,
+    /// first failure reported by an un-awaited (streaming) fence;
+    /// surfaced by the next `drain` / fence wait
+    fence_failure: Option<Error>,
 }
 
 impl EnginePool {
@@ -186,14 +443,18 @@ impl EnginePool {
         let mut workers = Vec::with_capacity(cfg.n_replicas);
         let mut handles = Vec::with_capacity(cfg.n_replicas);
         let (init_tx, init_rx) = channel();
+        let (event_tx, event_rx) = channel();
         for replica in 0..cfg.n_replicas {
             let (tx, rx) = channel::<ToWorker>();
             let f = factory.clone();
             let ecfg = cfg.engine.clone();
             let itx = init_tx.clone();
+            let etx = event_tx.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("engine-pool-{replica}"))
-                .spawn(move || worker_main(replica, ecfg, f, rx, itx));
+                .spawn(move || {
+                    worker_main(replica, ecfg, f, rx, etx, itx)
+                });
             let handle = match spawned {
                 Ok(h) => h,
                 Err(e) => {
@@ -244,11 +505,19 @@ impl EnginePool {
             return Err(e);
         }
         let router = Router::new(cfg.policy, cfg.n_replicas);
+        let n = cfg.n_replicas;
         Ok(EnginePool {
             cfg,
             router,
             workers,
             handles,
+            events: event_rx,
+            ready: VecDeque::new(),
+            ready_ids: BTreeSet::new(),
+            outstanding: BTreeMap::new(),
+            epoch: 0,
+            fence_acks_owed: vec![0; n],
+            fence_failure: None,
         })
     }
 
@@ -261,14 +530,400 @@ impl EnginePool {
     }
 
     /// Outstanding router load per replica (drains to zero once every
-    /// request has completed or been aborted).
+    /// request has completed or been aborted). Pump first if you need
+    /// it live mid-stream — `submit` does.
     pub fn loads(&self) -> &[u64] {
         self.router.loads()
     }
 
-    /// Generate completions for a batch: route every request through
-    /// the router, fan the shards out to the worker threads, run them
-    /// concurrently, and merge deterministically by request id.
+    /// Streamed tickets not yet resolved (results already pumped into
+    /// the ready queue count as resolved).
+    pub fn n_outstanding(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// The pool's current weight epoch (== every replica's, once its
+    /// fences drain).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    // ---- event plumbing ----
+
+    /// Queue a resolved ticket for the caller (tracking its id for
+    /// the duplicate-submit guard).
+    fn push_ready(&mut self, item: ReadyItem) {
+        self.ready_ids.insert(item.ticket());
+        self.ready.push_back(item);
+    }
+
+    /// Hand the next resolved ticket to the caller.
+    fn pop_ready(&mut self) -> Option<ReadyItem> {
+        let item = self.ready.pop_front()?;
+        self.ready_ids.remove(&item.ticket());
+        Some(item)
+    }
+
+    /// Settle one worker event against the router / outstanding map;
+    /// fence acks are returned to the caller instead of queued.
+    /// Resolution events are gated on the ticket still being
+    /// outstanding: a worker that sends its last event and THEN
+    /// panics can race the reaper (which already settled the ticket
+    /// as failed), and tickets must resolve exactly once.
+    fn handle_event(&mut self, ev: Event) -> Option<FenceAck> {
+        match ev {
+            Event::Done(replica, c) => {
+                if self.outstanding.remove(&c.id).is_none() {
+                    return None; // already resolved (reap race)
+                }
+                self.router.complete(c.id);
+                self.push_ready(ReadyItem {
+                    replica,
+                    item: Completed::Done(c),
+                });
+                None
+            }
+            Event::Aborted(replica, id) => {
+                if self.outstanding.remove(&id).is_none() {
+                    return None; // already resolved (reap race)
+                }
+                self.router.abort(id);
+                self.push_ready(ReadyItem {
+                    replica,
+                    item: Completed::Aborted(id),
+                });
+                None
+            }
+            Event::Failed(replica, id, msg) => {
+                if self.outstanding.remove(&id).is_none() {
+                    return None; // already resolved (reap race)
+                }
+                self.router.abort(id);
+                self.push_ready(ReadyItem {
+                    replica,
+                    item: Completed::Failed(
+                        id,
+                        format!("replica {replica}: {msg}"),
+                    ),
+                });
+                None
+            }
+            Event::Fence(replica, epoch, result) => {
+                self.fence_acks_owed[replica] =
+                    self.fence_acks_owed[replica].saturating_sub(1);
+                Some(FenceAck { replica, epoch, result })
+            }
+        }
+    }
+
+    fn note_fence(&mut self, ack: FenceAck) {
+        if let Err(e) = ack.result {
+            // the replica is stranded on old weights: new submissions
+            // to it would fail the epoch check instantly, and those
+            // instant failures would keep its router load near zero —
+            // under LeastLoaded it would become a traffic black hole.
+            // Quarantine it from placement (it still settles what it
+            // owes); there is no un-quarantine: later fences land it
+            // one epoch short again by construction.
+            self.router.set_quarantined(ack.replica, true);
+            self.fence_failure.get_or_insert(e.wrap(format!(
+                "replica {} failed the epoch-{} fence",
+                ack.replica, ack.epoch
+            )));
+        }
+    }
+
+    /// Non-blocking: settle everything already on the event channel,
+    /// so routing decisions and `loads()` reads are live.
+    fn pump(&mut self) {
+        while let Ok(ev) = self.events.try_recv() {
+            if let Some(ack) = self.handle_event(ev) {
+                self.note_fence(ack);
+            }
+        }
+    }
+
+    /// A worker thread only exits during pool teardown, so a finished
+    /// handle mid-session means the thread PANICKED. Its outstanding
+    /// tickets would otherwise never resolve (the shared event channel
+    /// stays open while any sibling lives), hanging every blocking
+    /// wait — resolve them as failed instead. Returns true if anything
+    /// was reaped. Callers pump first, so resolutions the thread DID
+    /// send before dying are honored.
+    fn reap_dead_workers(&mut self) -> bool {
+        let mut reaped = false;
+        for r in 0..self.handles.len() {
+            let dead = self.handles[r]
+                .as_ref()
+                .map_or(true, |h| h.is_finished());
+            if !dead {
+                continue;
+            }
+            // a dead replica must stop attracting placements
+            self.router.set_quarantined(r, true);
+            // write off its fence debt (it can never ack) so drains
+            // don't wait forever, and record the broken fence
+            if self.fence_acks_owed[r] > 0 {
+                self.fence_acks_owed[r] = 0;
+                self.fence_failure.get_or_insert(anyhow!(
+                    "replica {r} worker thread died before \
+                     acknowledging a fence"
+                ));
+                reaped = true;
+            }
+            let ids: Vec<u64> = self
+                .outstanding
+                .iter()
+                .filter(|&(_, &rep)| rep == r)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in ids {
+                self.router.abort(id);
+                self.outstanding.remove(&id);
+                self.push_ready(ReadyItem {
+                    replica: r,
+                    item: Completed::Failed(
+                        id,
+                        format!("replica {r} worker thread died"),
+                    ),
+                });
+                reaped = true;
+            }
+        }
+        reaped
+    }
+
+    // ---- streaming session API ----
+
+    /// Admit one request into the running pool: picks the replica with
+    /// the lowest LIVE queue depth (completions already reported are
+    /// settled first), stamps the request with the current weight
+    /// epoch, and returns its ticket (== the request id). The request
+    /// starts decoding mid-flight on the replica's next step — no
+    /// batch boundary involved.
+    pub fn submit(&mut self, req: Request) -> Result<TicketId> {
+        self.pump();
+        // a duplicate of an unresolved ticket would corrupt the
+        // id-keyed merge — and "unresolved" includes results already
+        // pumped into the ready queue but not yet consumed
+        if self.outstanding.contains_key(&req.id)
+            || self.ready_ids.contains(&req.id)
+        {
+            bail!(
+                "request id {} is already in flight or awaiting \
+                 consumption — streamed ids must be unique",
+                req.id
+            );
+        }
+        let id = req.id;
+        // a send failure means the routed replica's thread is dead:
+        // quarantine it and re-route, so the pool keeps limping on
+        // its healthy replicas instead of failing every submit at
+        // the first corpse (bounded: each retry disqualifies one
+        // replica from placement). The request rides the SendError
+        // back out, so the common path moves it — no clone.
+        let mut req = req;
+        for _ in 0..self.workers.len() {
+            let replica = self.router.route(&req);
+            match self.workers[replica]
+                .send(ToWorker::Submit(req, self.epoch))
+            {
+                Ok(()) => {
+                    self.outstanding.insert(id, replica);
+                    return Ok(id);
+                }
+                Err(e) => {
+                    match e.0 {
+                        ToWorker::Submit(r, _) => req = r,
+                        _ => unreachable!("a Submit was sent"),
+                    }
+                    self.router.abort(id);
+                    self.router.set_quarantined(replica, true);
+                }
+            }
+        }
+        // settle the corpses' tickets before reporting total loss
+        self.reap_dead_workers();
+        bail!("no live replica accepted request {id}");
+    }
+
+    /// Block (bounded) for ONE worker event: ticket resolutions are
+    /// settled into the ready queue, a fence ack is handed back to
+    /// the caller. `Ok(None)` is an inconclusive timeout tick — a
+    /// panicked worker is reaped there so its tickets resolve as
+    /// `Failed` instead of hanging the wait. `Err` means every worker
+    /// is gone (all remaining tickets settled as aborted first).
+    fn wait_event(&mut self) -> Result<Option<FenceAck>> {
+        match self.events.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => Ok(self.handle_event(ev)),
+            Err(RecvTimeoutError::Timeout) => {
+                self.reap_dead_workers();
+                Ok(None)
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let n = self.settle_all_as_aborted();
+                bail!(
+                    "every pool worker exited with {n} tickets \
+                     outstanding"
+                );
+            }
+        }
+    }
+
+    /// Non-blocking: the next resolved ticket, if any replica has
+    /// finished one.
+    pub fn poll(&mut self) -> Option<Completed> {
+        self.pump();
+        self.pop_ready().map(|r| r.item)
+    }
+
+    /// Blocking iterator-style receive: the next resolved ticket, or
+    /// `None` once the stream is dry (nothing outstanding AND nothing
+    /// waiting in the ready queue). This is the run-to-dry loop —
+    /// `while let Some(c) = pool.next_resolved()? { ... }` — without
+    /// the footgun of polling `n_outstanding` yourself: a blocking
+    /// receive's internal pump can resolve the LAST tickets into the
+    /// ready queue before the caller re-checks the count, and a
+    /// count-guarded loop then exits with results unconsumed. Also
+    /// surfaces streaming fence failures (a degraded pool must not
+    /// look like a successful session to poll/recv-style consumers).
+    pub fn next_resolved(&mut self) -> Result<Option<Completed>> {
+        loop {
+            self.pump();
+            if let Some(e) = self.fence_failure.take() {
+                return Err(e.wrap(
+                    "a weight-sync fence failed (pool degraded)",
+                ));
+            }
+            if let Some(r) = self.pop_ready() {
+                return Ok(Some(r.item));
+            }
+            // "dry" = no unresolved tickets AND no fence acks still
+            // owed (mirrors drain): returning None while an async
+            // fence is mid-apply would let a failed install slip out
+            // as a clean-looking session
+            let fence_debt: usize =
+                self.fence_acks_owed.iter().sum();
+            if self.outstanding.is_empty() && fence_debt == 0 {
+                return Ok(None);
+            }
+            if let Some(ack) = self.wait_event()? {
+                self.note_fence(ack);
+            }
+        }
+    }
+
+    /// Block until the next ticket resolves. Errors when nothing is
+    /// outstanding (nothing can ever arrive), when every worker is
+    /// gone, or when a streaming fence has failed.
+    pub fn recv(&mut self) -> Result<Completed> {
+        match self.next_resolved()? {
+            Some(c) => Ok(c),
+            None => bail!("recv with no outstanding tickets"),
+        }
+    }
+
+    /// Cancel an outstanding ticket. Resolution still arrives through
+    /// `poll`/`recv`/`drain`: as [`Completed::Aborted`], or as
+    /// [`Completed::Done`] if the completion won the race. Unknown /
+    /// already-resolved tickets are an inert no-op.
+    pub fn abort(&mut self, ticket: TicketId) -> Result<()> {
+        let Some(&replica) = self.outstanding.get(&ticket) else {
+            return Ok(());
+        };
+        self.workers[replica]
+            .send(ToWorker::Abort(ticket))
+            .map_err(|_| anyhow!("replica {replica} worker thread is gone"))
+    }
+
+    /// Run the pool dry: block until every outstanding ticket
+    /// resolves, then return all completions sorted by request id
+    /// (aborted tickets are simply absent). Any failed ticket or fence
+    /// failure turns the whole call into an `Err` — after everything
+    /// has settled, with delivered results dropped and their tokens
+    /// discarded, preserving the barrier `generate`'s all-or-nothing
+    /// accounting.
+    pub fn drain(&mut self) -> Result<Vec<Completion>> {
+        self.drain_with(None)
+    }
+
+    fn drain_with(
+        &mut self,
+        mut first_err: Option<Error>,
+    ) -> Result<Vec<Completion>> {
+        let mut out: Vec<(usize, Completion)> = Vec::new();
+        loop {
+            self.pump();
+            while let Some(r) = self.pop_ready() {
+                match r.item {
+                    Completed::Done(c) => out.push((r.replica, c)),
+                    Completed::Aborted(_) => {}
+                    Completed::Failed(id, msg) => {
+                        first_err.get_or_insert(anyhow!(
+                            "request {id} failed: {msg}"
+                        ));
+                    }
+                }
+            }
+            // run dry = no unresolved tickets AND no fence acks still
+            // owed: an un-awaited sync fence must not be able to fail
+            // after drain reported success
+            let fence_debt: usize =
+                self.fence_acks_owed.iter().sum();
+            if self.outstanding.is_empty() && fence_debt == 0 {
+                break;
+            }
+            match self.wait_event() {
+                Ok(Some(ack)) => self.note_fence(ack),
+                Ok(None) => {}
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    break;
+                }
+            }
+        }
+        if first_err.is_none() {
+            first_err = self.fence_failure.take();
+        }
+        if let Some(e) = first_err {
+            // all-or-nothing: the delivered results are dropped with
+            // the error, so their replicas must stop counting those
+            // tokens as generated — and the router's diagnostics must
+            // keep describing what the caller actually received
+            // (everything aborted), not what crossed the channel
+            for (replica, c) in &out {
+                let _ = self.workers[*replica]
+                    .send(ToWorker::Discard(c.tokens.len() as u64));
+            }
+            self.router
+                .reclassify_completed_as_aborted(out.len() as u64);
+            return Err(e);
+        }
+        let mut done: Vec<Completion> =
+            out.into_iter().map(|(_, c)| c).collect();
+        done.sort_by_key(|c| c.id);
+        Ok(done)
+    }
+
+    /// Settle every outstanding ticket as aborted (worker-death path)
+    /// so router loads cannot leak; returns how many there were.
+    fn settle_all_as_aborted(&mut self) -> usize {
+        let ids: Vec<u64> = self.outstanding.keys().copied().collect();
+        for id in &ids {
+            self.router.abort(*id);
+        }
+        self.outstanding.clear();
+        ids.len()
+    }
+
+    // ---- barrier compatibility ----
+
+    /// Generate completions for a batch with barrier semantics:
+    /// submit everything, run the pool dry, merge by request id.
+    /// All-or-nothing like `HloEngine::generate` — any failed request
+    /// fails the call and the delivered results are dropped (and
+    /// discounted). Mixing with an in-progress streaming session is
+    /// rejected: drain first.
     pub fn generate(
         &mut self,
         requests: Vec<Request>,
@@ -276,87 +931,22 @@ impl EnginePool {
         if requests.is_empty() {
             return Ok(Vec::new());
         }
-        let n = self.workers.len();
-        let mut shards: Vec<Vec<Request>> =
-            (0..n).map(|_| Vec::new()).collect();
-        for r in requests {
-            let e = self.router.route(&r);
-            shards[e].push(r);
+        self.pump();
+        if !self.outstanding.is_empty() || !self.ready.is_empty() {
+            bail!(
+                "barrier generate on a pool with {} streamed tickets \
+                 unresolved — drain first",
+                self.outstanding.len() + self.ready.len()
+            );
         }
-        let (tx, rx) = channel();
-        // ids routed to each replica but not yet settled with the router
-        let mut pending: Vec<Vec<u64>> = vec![Vec::new(); n];
-        let mut delivered: Vec<u64> = vec![0; n];
-        let mut dispatched = 0usize;
         let mut first_err: Option<Error> = None;
-        for (e, shard) in shards.into_iter().enumerate() {
-            if shard.is_empty() {
-                continue;
-            }
-            pending[e] = shard.iter().map(|r| r.id).collect();
-            if self.workers[e]
-                .send(ToWorker::Generate(shard, tx.clone()))
-                .is_err()
-            {
-                first_err.get_or_insert_with(|| {
-                    anyhow!("replica {e} worker thread is gone")
-                });
-                continue; // its pending ids are aborted below
-            }
-            dispatched += 1;
-        }
-        drop(tx);
-        let mut out: Vec<Completion> = Vec::new();
-        for _ in 0..dispatched {
-            match rx.recv() {
-                Ok((replica, Ok(cs))) => {
-                    delivered[replica] =
-                        cs.iter().map(|c| c.tokens.len() as u64).sum();
-                    out.extend(cs);
-                }
-                Ok((replica, Err(e))) => {
-                    first_err.get_or_insert_with(|| {
-                        e.wrap(format!("replica {replica} generate failed"))
-                    });
-                }
-                Err(_) => {
-                    first_err.get_or_insert_with(|| {
-                        anyhow!("a pool worker exited mid-generate")
-                    });
-                    break;
-                }
+        for r in requests {
+            if let Err(e) = self.submit(r) {
+                first_err = Some(e);
+                break;
             }
         }
-        // settle the router only once the batch OUTCOME is known, so
-        // the completed/aborted diagnostics describe what the caller
-        // actually received: all-or-nothing means a failed batch
-        // counts every id as aborted — including ids a successful
-        // replica generated but whose results we are about to drop.
-        // Either way the charge drains fully: phantom load must never
-        // leak into the next least-loaded pick.
-        if let Some(e) = first_err {
-            for ids in &pending {
-                for id in ids {
-                    self.router.abort(*id);
-                }
-            }
-            // keep the delivered-tokens invariant honest on the
-            // replicas whose work we are discarding
-            for (replica, &tokens) in delivered.iter().enumerate() {
-                if tokens > 0 {
-                    let _ = self.workers[replica]
-                        .send(ToWorker::Discard(tokens));
-                }
-            }
-            return Err(e);
-        }
-        for ids in &pending {
-            for id in ids {
-                self.router.complete(*id);
-            }
-        }
-        out.sort_by_key(|c| c.id);
-        Ok(out)
+        self.drain_with(first_err)
     }
 
     /// Send one message (built per replica) to every worker, failing
@@ -370,25 +960,134 @@ impl EnginePool {
         Ok(())
     }
 
-    /// Install one quantized parameter set into every replica (the
-    /// weight-sync broadcast: quantize once, upload per replica).
+    // ---- epoch-fenced installs ----
+
+    /// Asynchronous weight-sync fence (the streaming path): broadcast
+    /// one `Arc`'d quantized parameter list (quantize once, upload per
+    /// replica) and return the NEW epoch immediately. Each replica
+    /// finishes its in-flight sequences under the old weights first;
+    /// requests submitted from now on run under the new ones. Fence
+    /// failures surface on the next `drain` / awaited install.
+    pub fn sync_weights(
+        &mut self,
+        weights: Arc<Vec<HostArray>>,
+    ) -> Result<u64> {
+        self.send_fence(|target| {
+            ToWorker::SyncWeights(weights.clone(), target)
+        })
+        .map(|_| self.epoch)
+    }
+
+    /// Asynchronous KV-scale fence (recalibration broadcast), same
+    /// epoch semantics as [`EnginePool::sync_weights`].
+    pub fn sync_kv_scales(&mut self, k: f32, v: f32) -> Result<u64> {
+        self.send_fence(|target| ToWorker::SyncKvScales(k, v, target))
+            .map(|_| self.epoch)
+    }
+
+    /// Broadcast one fence message and advance the pool epoch —
+    /// UNCONDITIONALLY, and to every replica a send can still reach:
+    /// replicas that receive the fence move to the new epoch, so the
+    /// pool's submission stamp must move with them even if a dead
+    /// replica makes the broadcast partial (bailing between the two
+    /// would permanently desync the HEALTHY replicas from the stamp,
+    /// wedging every later submission). A dead replica owes no ack
+    /// (the reaper writes off its tickets) and is reported as the
+    /// error, but the pool keeps limping per-ticket.
+    fn send_fence<F: Fn(u64) -> ToWorker>(
+        &mut self,
+        mk: F,
+    ) -> Result<()> {
+        let target = self.epoch + 1;
+        self.epoch = target;
+        let mut first_err: Option<Error> = None;
+        for r in 0..self.workers.len() {
+            if self.workers[r].send(mk(target)).is_err() {
+                first_err.get_or_insert(anyhow!(
+                    "replica {r} worker thread is gone"
+                ));
+                continue;
+            }
+            self.fence_acks_owed[r] += 1;
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Install one quantized parameter set into every replica and WAIT
+    /// for every fence to apply (the barrier-mode weight sync; workers
+    /// still drain their in-flight work first).
     pub fn install_weights(
         &mut self,
         weights: Arc<Vec<HostArray>>,
     ) -> Result<()> {
-        let (tx, rx) = channel();
-        self.broadcast(|| {
-            ToWorker::InstallWeights(weights.clone(), tx.clone())
-        })?;
-        drop(tx);
-        self.collect_acks(rx, "weight install")
+        let epoch = self.sync_weights(weights)?;
+        self.wait_fences(epoch, "weight install")
     }
 
-    /// Broadcast recalibrated KV scales to every replica. Channel FIFO
-    /// order guarantees the next `generate` sees them.
+    /// Broadcast recalibrated KV scales to every replica and wait for
+    /// the fences (barrier mode).
     pub fn install_kv_scales(&mut self, k: f32, v: f32) -> Result<()> {
-        self.broadcast(|| ToWorker::InstallKvScales(k, v))
+        let epoch = self.sync_kv_scales(k, v)?;
+        self.wait_fences(epoch, "kv-scale install")
     }
+
+    /// Block until every replica acknowledges the given fence epoch,
+    /// settling streamed completions that arrive in the meantime.
+    fn wait_fences(&mut self, epoch: u64, what: &str) -> Result<()> {
+        let n = self.workers.len();
+        let mut got = 0usize;
+        while got < n {
+            match self.wait_event() {
+                Ok(Some(ack)) => {
+                    if ack.epoch == epoch {
+                        if let Err(e) = ack.result {
+                            self.router
+                                .set_quarantined(ack.replica, true);
+                            return Err(e.wrap(format!(
+                                "replica {} {what}",
+                                ack.replica
+                            )));
+                        }
+                        got += 1;
+                    } else {
+                        self.note_fence(ack);
+                    }
+                }
+                Ok(None) => {
+                    // a replica that died with this fence's ack still
+                    // owed had its debt written off by the reaper
+                    // (inside wait_event), recording a failure — that
+                    // is the ONLY dead-worker case that can block this
+                    // wait; one that already acknowledged blocks
+                    // nothing and must not fail a successful install
+                    if let Some(e) = self.fence_failure.take() {
+                        return Err(e.wrap(format!(
+                            "while waiting for {what} acks"
+                        )));
+                    }
+                }
+                Err(e) => {
+                    return Err(e.wrap(format!(
+                        "only {got}/{n} replicas acknowledged {what}"
+                    )))
+                }
+            }
+        }
+        // a previously un-awaited fence that failed surfaces here too
+        // (the field's contract: next drain OR fence wait reports it)
+        if let Some(e) = self.fence_failure.take() {
+            return Err(e.wrap(format!(
+                "an earlier fence had failed (noticed while waiting \
+                 for {what})"
+            )));
+        }
+        Ok(())
+    }
+
+    // ---- stats ----
 
     /// Aggregate engine counters across all replicas.
     pub fn stats(&self) -> Result<EngineStats> {
@@ -399,7 +1098,10 @@ impl EnginePool {
         Ok(total)
     }
 
-    /// Per-replica engine counters, indexed by replica.
+    /// Per-replica engine counters, indexed by replica. (Stats
+    /// requests jump pending fences — they never stall behind an
+    /// in-flight drain — so mid-stream reads are snapshots; for exact
+    /// end-of-stream numbers, drain first.)
     pub fn per_replica_stats(&self) -> Result<Vec<EngineStats>> {
         let (tx, rx) = channel();
         self.broadcast(|| ToWorker::Stats(tx.clone()))?;
@@ -415,23 +1117,6 @@ impl EnginePool {
             bail!("only {got}/{n} replicas reported stats");
         }
         Ok(out)
-    }
-
-    fn collect_acks(
-        &self,
-        rx: Receiver<(usize, Result<()>)>,
-        what: &str,
-    ) -> Result<()> {
-        let n = self.workers.len();
-        let mut got = 0usize;
-        while let Ok((replica, res)) = rx.recv() {
-            res.with_context(|| format!("replica {replica} {what}"))?;
-            got += 1;
-        }
-        if got != n {
-            bail!("only {got}/{n} replicas acknowledged {what}");
-        }
-        Ok(())
     }
 }
 
@@ -449,7 +1134,7 @@ impl Drop for EnginePool {
 }
 
 /// The RL loop's rollout backend: a single in-process engine (the
-/// default) or the thread-per-replica pool, behind one surface so the
+/// default) or the streaming engine pool, behind one surface so the
 /// coordinator is agnostic to the serving topology.
 pub enum Rollout {
     Single(Box<HloEngine>),
@@ -467,8 +1152,8 @@ impl Rollout {
         }
     }
 
-    /// Install synced weights; the pool broadcasts the shared list to
-    /// every replica (quantized once upstream).
+    /// Install synced weights with barrier semantics; the pool fences
+    /// every replica and waits (quantized once upstream, `Arc`'d out).
     pub fn install_weights(
         &mut self,
         weights: Arc<Vec<HostArray>>,
@@ -486,6 +1171,15 @@ impl Rollout {
                 Ok(())
             }
             Rollout::Pool(p) => p.install_kv_scales(k, v),
+        }
+    }
+
+    /// The current weight epoch (bumped by every weight / KV-scale
+    /// install; completions are tagged with it).
+    pub fn epoch(&self) -> u64 {
+        match self {
+            Rollout::Single(e) => e.weight_epoch(),
+            Rollout::Pool(p) => p.epoch(),
         }
     }
 
@@ -509,6 +1203,7 @@ impl Rollout {
 mod tests {
     use super::*;
     use crate::rollout::request::SamplingParams;
+    use std::collections::BTreeSet;
 
     fn reqs(lo: u64, hi: u64) -> Vec<Request> {
         (lo..hi)
@@ -558,11 +1253,81 @@ mod tests {
     }
 
     #[test]
+    fn streaming_tickets_resolve_exactly_once() {
+        let mut p = pool(2);
+        let mut tickets = BTreeSet::new();
+        for r in reqs(0, 6) {
+            tickets.insert(p.submit(r).unwrap());
+        }
+        assert_eq!(tickets.len(), 6);
+        let mut resolved = BTreeSet::new();
+        while resolved.len() < 6 {
+            match p.recv().unwrap() {
+                Completed::Done(c) => {
+                    assert!(resolved.insert(c.id), "double-resolve");
+                    assert_eq!(c.epoch, 0);
+                }
+                Completed::Aborted(id) => panic!("spurious abort of {id}"),
+                Completed::Failed(id, msg) => {
+                    panic!("ticket {id} failed: {msg}")
+                }
+            }
+        }
+        assert_eq!(resolved, tickets);
+        assert_eq!(p.n_outstanding(), 0);
+        assert_eq!(p.loads(), &[0, 0], "live settlement drains loads");
+        assert!(
+            p.recv().is_err(),
+            "recv with nothing outstanding must error, not hang"
+        );
+    }
+
+    #[test]
+    fn abort_resolves_tickets_without_leaking_load() {
+        let mut p = pool(2);
+        let tickets: Vec<u64> = reqs(0, 6)
+            .into_iter()
+            .map(|r| p.submit(r).unwrap())
+            .collect();
+        for t in &tickets {
+            p.abort(*t).unwrap();
+        }
+        let mut resolved = BTreeSet::new();
+        while resolved.len() < tickets.len() {
+            match p.recv().unwrap() {
+                // an abort can lose the race to a real completion;
+                // either way the ticket resolves exactly once
+                Completed::Done(c) => assert!(resolved.insert(c.id)),
+                Completed::Aborted(id) => assert!(resolved.insert(id)),
+                Completed::Failed(id, msg) => {
+                    panic!("ticket {id} failed: {msg}")
+                }
+            }
+        }
+        assert_eq!(p.n_outstanding(), 0);
+        assert_eq!(p.loads(), &[0, 0], "aborts must settle the router");
+        // the pool stays serviceable after a fully-aborted stream
+        assert_eq!(p.generate(reqs(10, 14)).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn barrier_generate_rejects_mixing_with_live_stream() {
+        let mut p = pool(2);
+        p.submit(reqs(0, 1).pop().unwrap()).unwrap();
+        let err = p.generate(reqs(1, 3)).unwrap_err().to_string();
+        assert!(err.contains("drain first"), "{err}");
+        // the streamed ticket still resolves
+        let done = p.drain().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 0);
+    }
+
+    #[test]
     fn failed_shard_fails_the_call_but_leaks_nothing() {
         let mut p = pool(2);
         let mut batch = reqs(0, 3);
         // prompt_len is 16 in the synthetic manifest: a 64-token prompt
-        // can never be admitted, so its replica's generate fails
+        // can never be admitted, so its replica rejects the enqueue
         batch.push(Request {
             id: 99,
             prompt: vec![1; 64],
@@ -582,6 +1347,16 @@ mod tests {
             p.stats().unwrap().tokens_generated,
             delivered as u64
         );
+    }
+
+    #[test]
+    fn duplicate_outstanding_id_is_rejected() {
+        let mut p = pool(2);
+        let r = reqs(0, 1).pop().unwrap();
+        p.submit(r.clone()).unwrap();
+        assert!(p.submit(r).is_err(), "dup id would corrupt the merge");
+        let done = p.drain().unwrap();
+        assert_eq!(done.len(), 1);
     }
 
     #[test]

@@ -63,4 +63,11 @@ pub struct Completion {
     pub finish: FinishReason,
     /// decode steps this request waited due to preemption
     pub preemptions: u32,
+    /// weight epoch the whole completion was generated under (bumped by
+    /// every weight / KV-scale install — see `HloEngine::weight_epoch`).
+    /// The streaming pool's epoch fence guarantees no completion spans
+    /// an install, so this single tag identifies the behavior policy
+    /// (pi_fp8) its `logprobs` were measured from — the TIS/MIS
+    /// denominator the trainer must match.
+    pub epoch: u64,
 }

@@ -15,6 +15,19 @@
 //! `saturating_sub`) silently skewed loads the other way. Both are
 //! structurally impossible now: settling an unknown (or already
 //! settled) id is an inert no-op that returns `None`.
+//!
+//! **Liveness.** A `LeastLoaded` pick is only as good as the charges
+//! are fresh. The barrier-era pool settled a whole batch at once, so
+//! within a batch the router saw a batch-time snapshot and a replica
+//! stuck on a long completion looked exactly as loaded as it did at
+//! fan-out time — fine under a barrier (nothing routes mid-batch),
+//! WRONG under continuous admission. The streaming pool therefore
+//! settles ids the moment their completion/abort crosses the event
+//! channel and pumps that channel *before every `route` call*, so
+//! [`Router::loads`] (outstanding + queued charge per replica) is live:
+//! a replica grinding through a long completion keeps its charge and
+//! stops receiving new work while its peers drain
+//! (`slow_replica_stops_receiving_new_work` below).
 
 use std::collections::BTreeMap;
 
@@ -35,6 +48,12 @@ pub struct Router {
     /// request id -> (engine, charged cost); settling removes the entry
     /// and drains exactly the charged amount
     outstanding: BTreeMap<u64, (usize, u64)>,
+    /// engines excluded from placement (dead, or stranded behind a
+    /// failed weight-epoch fence). A quarantined engine still settles
+    /// the charges it holds; it just receives no new work — otherwise
+    /// its instantly-failing admissions keep its load near zero and
+    /// `LeastLoaded` turns it into a traffic black hole.
+    quarantined: Vec<bool>,
     pub completed: u64,
     pub aborted: u64,
 }
@@ -48,9 +67,15 @@ impl Router {
             next: 0,
             load: vec![0; n_engines],
             outstanding: BTreeMap::new(),
+            quarantined: vec![false; n_engines],
             completed: 0,
             aborted: 0,
         }
+    }
+
+    /// Exclude an engine from (or readmit it to) placement.
+    pub fn set_quarantined(&mut self, engine: usize, q: bool) {
+        self.quarantined[engine] = q;
     }
 
     fn cost(req: &Request) -> u64 {
@@ -65,8 +90,17 @@ impl Router {
         let cost = Self::cost(req);
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.next;
-                self.next = (self.next + 1) % self.n_engines;
+                // skip quarantined engines; if everything is
+                // quarantined the scan wraps back to the plain pick
+                // (placement must still terminate)
+                let mut i = self.next;
+                for _ in 0..self.n_engines {
+                    if !self.quarantined[i] {
+                        break;
+                    }
+                    i = (i + 1) % self.n_engines;
+                }
+                self.next = (i + 1) % self.n_engines;
                 i
             }
             RoutePolicy::LeastLoaded => {
@@ -74,8 +108,16 @@ impl Router {
                     .load
                     .iter()
                     .enumerate()
+                    .filter(|(i, _)| !self.quarantined[*i])
                     .min_by_key(|(_, &l)| l)
-                    .unwrap();
+                    .unwrap_or_else(|| {
+                        // everything quarantined: fall back to plain
+                        self.load
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, &l)| l)
+                            .unwrap()
+                    });
                 i
             }
         };
@@ -113,12 +155,30 @@ impl Router {
         Some(engine)
     }
 
+    /// Live token-load per engine: every charge routed and not yet
+    /// settled — i.e. work queued at or running on each replica. This
+    /// is what `LeastLoaded` compares, so keeping it fresh (settle
+    /// completions BEFORE routing) is what makes a slow replica stop
+    /// receiving new work.
     pub fn loads(&self) -> &[u64] {
         &self.load
     }
 
     pub fn n_outstanding(&self) -> usize {
         self.outstanding.len()
+    }
+
+    /// Move `n` settlements from `completed` to `aborted` — the
+    /// pool's all-or-nothing failure path, where results that crossed
+    /// the event channel (and were settled as completed the moment
+    /// they arrived) are dropped before delivery. Pure diagnostics:
+    /// the load charges drained at settlement and stay drained.
+    /// Clamped so the counters can never underflow or disagree with
+    /// the number of settlements that actually happened.
+    pub fn reclassify_completed_as_aborted(&mut self, n: u64) {
+        let n = n.min(self.completed);
+        self.completed -= n;
+        self.aborted += n;
     }
 }
 
@@ -209,6 +269,82 @@ mod tests {
         assert_eq!(r.n_outstanding(), 1);
         r.complete(q.id);
         assert_eq!(r.loads(), &[0, 0]);
+    }
+
+    #[test]
+    fn quarantined_engine_stops_receiving_placements() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_quarantined(0, true);
+        for id in 0..10u64 {
+            assert_eq!(r.route(&req(id, 4)), 1, "placement on healthy");
+        }
+        // everything quarantined: placement falls back rather than
+        // panicking (degraded, but still terminates)
+        r.set_quarantined(1, true);
+        assert!(r.route(&req(100, 4)) < 2);
+        // round-robin skips quarantined engines too
+        let mut rr = Router::new(RoutePolicy::RoundRobin, 3);
+        rr.set_quarantined(1, true);
+        let picks: Vec<usize> =
+            (0..4).map(|i| rr.route(&req(200 + i, 4))).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn reclassify_moves_completed_to_aborted_without_touching_load() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2);
+        for id in 0..3u64 {
+            r.route(&req(id, 4));
+            r.complete(id);
+        }
+        assert_eq!((r.completed, r.aborted), (3, 0));
+        r.reclassify_completed_as_aborted(2);
+        assert_eq!((r.completed, r.aborted), (1, 2));
+        // clamped: can't reclassify settlements that never happened
+        r.reclassify_completed_as_aborted(10);
+        assert_eq!((r.completed, r.aborted), (0, 3));
+        assert_eq!(r.loads(), &[0, 0], "loads untouched");
+    }
+
+    #[test]
+    fn slow_replica_stops_receiving_new_work() {
+        // the streaming-admission liveness property: with completions
+        // settled as they arrive (live depth), a replica stuck on one
+        // long completion receives NO new work while its peer keeps
+        // absorbing the stream. Under the old batch-time snapshot
+        // (settle everything at the end), the fast replica's charges
+        // piled up un-drained until it looked MORE loaded than the
+        // stuck one, and new work started landing behind the straggler.
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let mut slow_req = req(0, 8);
+        slow_req.params.max_new_tokens = 500; // a long completion
+        let slow = r.route(&slow_req);
+        let fast = 1 - slow;
+        // a stream of short requests, each completing before the next
+        // arrives (the live-settlement regime)
+        for id in 1..=50u64 {
+            let q = req(id, 8);
+            assert_eq!(
+                r.route(&q),
+                fast,
+                "request {id} must avoid the stuck replica"
+            );
+            assert_eq!(r.complete(id), Some(fast));
+        }
+        assert_eq!(r.loads()[fast], 0, "fast replica drains live");
+        assert!(r.loads()[slow] > 0, "straggler keeps its charge");
+        // demonstrate the stale-snapshot failure mode the streaming
+        // pool must avoid: stop settling, and the fast replica's
+        // accumulated charges eventually exceed the straggler's
+        let mut sent_to_slow = false;
+        for id in 100..200u64 {
+            sent_to_slow |= r.route(&req(id, 8)) == slow;
+        }
+        assert!(
+            sent_to_slow,
+            "without live settlement the straggler would attract work \
+             again — the property the streaming pump exists to prevent"
+        );
     }
 
     #[test]

@@ -187,6 +187,35 @@ impl Scheduler {
         self.stats.preemptions += 1;
     }
 
+    /// Remove one queued or running request entirely (the streaming
+    /// abort path): KV blocks released, body dropped, waiting entry
+    /// removed. Cancelled work counts as neither finished nor
+    /// preempted. Returns `false` when the id is unknown (it already
+    /// finished or was never submitted).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.running.contains(&id) {
+            self.kv.release(id);
+            self.running.retain(|&r| r != id);
+            self.bodies.remove(&id);
+            return true;
+        }
+        let before = self.waiting.len();
+        self.waiting.retain(|r| r.id != id);
+        before != self.waiting.len()
+    }
+
+    /// Every id the scheduler still owes a completion for: waiting
+    /// (including preempted-and-requeued) plus running. The streaming
+    /// worker reports these as failed when a step errors out.
+    pub fn outstanding_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.waiting.iter().map(|r| r.id).collect();
+        ids.extend_from_slice(&self.running);
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
     /// Mark a sequence finished and release its blocks.
     pub fn finish(&mut self, id: u64) {
         self.kv.release(id);
@@ -344,6 +373,27 @@ mod tests {
         let admitted = s.admit();
         // needs prompt+1 growable -> cannot admit at all
         assert!(admitted.is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancel_removes_queued_and_running_without_stats() {
+        let mut s = mk(100, 2);
+        s.submit(req(1, 4));
+        s.submit(req(2, 4));
+        s.submit(req(3, 4)); // stays waiting (max_batch 2)
+        assert_eq!(s.admit().len(), 2);
+        assert_eq!(s.outstanding_ids(), vec![1, 2, 3]);
+        assert!(s.cancel(1), "running request cancels");
+        assert!(s.cancel(3), "waiting request cancels");
+        assert!(!s.cancel(99), "unknown id is inert");
+        assert_eq!(s.outstanding_ids(), vec![2]);
+        assert_eq!(s.stats.finished, 0);
+        assert_eq!(s.stats.preemptions, 0);
+        s.check_invariants().unwrap();
+        // capacity came back: a fresh request admits immediately
+        s.submit(req(4, 4));
+        assert_eq!(s.admit().len(), 1);
         s.check_invariants().unwrap();
     }
 

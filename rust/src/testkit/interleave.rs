@@ -1,0 +1,259 @@
+//! Deterministic-interleaving driver for the streaming pool suites.
+//!
+//! A [`Plan`] is a totally ordered script of session events — submit /
+//! poll / weight-sync / abort — derived from a PCG64 stream, so any
+//! failing interleaving is reproducible from a single `u64` seed (the
+//! property tests print it on failure, like `testkit::check` prints
+//! its seed). The generator enforces the well-formedness constraints a
+//! real session has:
+//!
+//! * every request index is submitted exactly once;
+//! * sync fences keep their numbering order (fence j happens before
+//!   fence j+1 — they model successive RL steps' weight versions);
+//! * an abort always lands after its target's submit (you cannot
+//!   cancel a ticket you do not hold).
+//!
+//! Everything else — where the fences fall relative to submits, how
+//! polls interleave, which tickets get aborted — is shuffled by the
+//! seed, which is exactly the space of admission interleavings the
+//! streaming pool must stay bit-identical to the sequential reference
+//! over.
+//!
+//! [`run`] replays a plan against anything implementing
+//! [`InterleaveTarget`]; `rust/tests/prop_stream.rs` implements it for
+//! both the streaming `EnginePool` session and the single-engine
+//! sequential reference and compares the two.
+
+use crate::util::rng::Pcg64;
+
+/// One session event in a deterministic interleaving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Submit request #i (each index appears exactly once per plan).
+    Submit(usize),
+    /// A non-blocking completion-drain opportunity.
+    Poll,
+    /// Weight-sync fence #j (numbered in plan order).
+    Sync(usize),
+    /// Abort request #i (always placed after `Submit(i)`).
+    Abort(usize),
+}
+
+/// Shape of a session to interleave.
+#[derive(Clone, Copy, Debug)]
+pub struct InterleaveSpec {
+    pub n_requests: usize,
+    /// weight-sync fences (>= 1 gives every plan an epoch boundary)
+    pub n_syncs: usize,
+    /// how many distinct requests get an abort event
+    pub n_aborts: usize,
+    /// extra poll points scattered through the plan (drain points
+    /// exist implicitly at the end of every session anyway)
+    pub n_polls: usize,
+}
+
+/// A concrete, replayable event order.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub seed: u64,
+    pub events: Vec<Event>,
+}
+
+impl InterleaveSpec {
+    /// Derive the plan for `seed` — pure: the same (spec, seed) pair
+    /// always yields the same event order.
+    pub fn plan(&self, seed: u64) -> Plan {
+        let mut rng = Pcg64::new(seed);
+        let mut events: Vec<Event> =
+            (0..self.n_requests).map(Event::Submit).collect();
+        events.extend((0..self.n_polls).map(|_| Event::Poll));
+        rng.shuffle(&mut events);
+        // syncs keep their relative order: each lands at a uniform
+        // position after its predecessor
+        let mut min_pos = 0usize;
+        for j in 0..self.n_syncs {
+            let span = (events.len() - min_pos + 1) as u64;
+            let pos = min_pos + rng.below(span) as usize;
+            events.insert(pos, Event::Sync(j));
+            min_pos = pos + 1;
+        }
+        // aborts target distinct requests and land after their submit
+        let mut targets: Vec<usize> = (0..self.n_requests).collect();
+        rng.shuffle(&mut targets);
+        for &i in targets.iter().take(self.n_aborts.min(self.n_requests))
+        {
+            let at = events
+                .iter()
+                .position(|e| *e == Event::Submit(i))
+                .expect("every request index has a submit");
+            let pos =
+                at + 1 + rng.below((events.len() - at) as u64) as usize;
+            events.insert(pos, Event::Abort(i));
+        }
+        Plan { seed, events }
+    }
+}
+
+impl Plan {
+    /// Assert the well-formedness constraints the generator promises
+    /// (used by the module's own tests; cheap enough to call from a
+    /// property test before trusting a plan).
+    pub fn check_well_formed(&self, spec: &InterleaveSpec) {
+        let mut submitted = vec![false; spec.n_requests];
+        let mut next_sync = 0usize;
+        let mut n_aborts = 0usize;
+        for ev in &self.events {
+            match *ev {
+                Event::Submit(i) => {
+                    assert!(!submitted[i], "request {i} submitted twice");
+                    submitted[i] = true;
+                }
+                Event::Sync(j) => {
+                    assert_eq!(j, next_sync, "sync fences out of order");
+                    next_sync += 1;
+                }
+                Event::Abort(i) => {
+                    assert!(
+                        submitted[i],
+                        "abort of request {i} before its submit"
+                    );
+                    n_aborts += 1;
+                }
+                Event::Poll => {}
+            }
+        }
+        assert!(
+            submitted.iter().all(|&s| s),
+            "every request must be submitted"
+        );
+        assert_eq!(next_sync, spec.n_syncs, "missing sync fences");
+        assert_eq!(
+            n_aborts,
+            spec.n_aborts.min(spec.n_requests),
+            "wrong abort count"
+        );
+    }
+}
+
+/// What a plan drives — implemented by the streaming-pool session and
+/// the single-engine sequential reference in the property suite.
+pub trait InterleaveTarget {
+    type Err;
+    /// Submit request #i.
+    fn submit(&mut self, request: usize) -> Result<(), Self::Err>;
+    /// Apply weight-sync fence #j.
+    fn sync(&mut self, sync: usize) -> Result<(), Self::Err>;
+    /// Non-blocking drain opportunity.
+    fn poll(&mut self) -> Result<(), Self::Err>;
+    /// Abort request #i (may be a no-op if it already resolved).
+    fn abort(&mut self, request: usize) -> Result<(), Self::Err>;
+}
+
+/// Replay a plan's events, in order, against a target.
+pub fn run<T: InterleaveTarget>(
+    plan: &Plan,
+    target: &mut T,
+) -> Result<(), T::Err> {
+    for ev in &plan.events {
+        match *ev {
+            Event::Submit(i) => target.submit(i)?,
+            Event::Poll => target.poll()?,
+            Event::Sync(j) => target.sync(j)?,
+            Event::Abort(i) => target.abort(i)?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: InterleaveSpec = InterleaveSpec {
+        n_requests: 6,
+        n_syncs: 2,
+        n_aborts: 2,
+        n_polls: 3,
+    };
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        for seed in 0..50u64 {
+            let a = SPEC.plan(seed);
+            let b = SPEC.plan(seed);
+            assert_eq!(a.events, b.events, "seed {seed} not reproducible");
+        }
+    }
+
+    #[test]
+    fn plans_are_well_formed_for_many_seeds() {
+        for seed in 0..200u64 {
+            SPEC.plan(seed).check_well_formed(&SPEC);
+        }
+    }
+
+    #[test]
+    fn seeds_explore_different_interleavings() {
+        let base = SPEC.plan(0);
+        let differing = (1..40u64)
+            .filter(|&s| SPEC.plan(s).events != base.events)
+            .count();
+        assert!(
+            differing > 30,
+            "only {differing}/39 seeds changed the event order"
+        );
+    }
+
+    #[test]
+    fn degenerate_specs_work() {
+        // no aborts / no polls / single request — the edges a shrunk
+        // counterexample lands on
+        let spec = InterleaveSpec {
+            n_requests: 1,
+            n_syncs: 1,
+            n_aborts: 0,
+            n_polls: 0,
+        };
+        for seed in 0..20u64 {
+            spec.plan(seed).check_well_formed(&spec);
+        }
+        // more aborts than requests clamps instead of panicking
+        let greedy = InterleaveSpec {
+            n_requests: 2,
+            n_syncs: 1,
+            n_aborts: 5,
+            n_polls: 1,
+        };
+        for seed in 0..20u64 {
+            greedy.plan(seed).check_well_formed(&greedy);
+        }
+    }
+
+    #[test]
+    fn run_replays_in_order() {
+        struct Tape(Vec<Event>);
+        impl InterleaveTarget for Tape {
+            type Err = ();
+            fn submit(&mut self, i: usize) -> Result<(), ()> {
+                self.0.push(Event::Submit(i));
+                Ok(())
+            }
+            fn sync(&mut self, j: usize) -> Result<(), ()> {
+                self.0.push(Event::Sync(j));
+                Ok(())
+            }
+            fn poll(&mut self) -> Result<(), ()> {
+                self.0.push(Event::Poll);
+                Ok(())
+            }
+            fn abort(&mut self, i: usize) -> Result<(), ()> {
+                self.0.push(Event::Abort(i));
+                Ok(())
+            }
+        }
+        let plan = SPEC.plan(7);
+        let mut tape = Tape(Vec::new());
+        run(&plan, &mut tape).unwrap();
+        assert_eq!(tape.0, plan.events);
+    }
+}

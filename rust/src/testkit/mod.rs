@@ -7,6 +7,12 @@
 //!
 //! Used by the coordinator/rollout invariant suites
 //! (`rust/tests/prop_*.rs`).
+//!
+//! [`interleave`] adds the deterministic-interleaving driver the
+//! streaming-pool suite replays seeded submit/poll/sync/abort event
+//! orders with.
+
+pub mod interleave;
 
 use crate::util::rng::Pcg64;
 

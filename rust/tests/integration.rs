@@ -416,6 +416,7 @@ fn train_step_learns_on_fixed_batch() {
         logprobs_full: vec![-1.0; problem.answer.len()],
         finish: FinishReason::Eos,
         preemptions: 0,
+        epoch: 0,
     };
     let bad = fp8_rl::rollout::Completion {
         tokens: vec![9, 9, 13],
@@ -573,10 +574,24 @@ fn rl_loop_on_engine_pool_matches_single_engine() {
     };
     let mut single = RlLoop::new(runtime(), mk_cfg("pool_ref", 1)).unwrap();
     let mut pooled = RlLoop::new(runtime(), mk_cfg("pool_2x", 2)).unwrap();
+    // continuous streaming admission + epoch-fenced sync: the SAME
+    // metrics again — streaming is a latency/throughput knob only
+    let mut streaming = {
+        let mut cfg = mk_cfg("pool_stream", 2);
+        cfg.rollout_streaming = true;
+        RlLoop::new(runtime(), cfg).unwrap()
+    };
     for step in 0..2 {
         let a = single.step(step).unwrap();
         let b = pooled.step(step).unwrap();
+        let c = streaming.step(step).unwrap();
         assert_eq!(b.get("rollout_replicas"), 2.0);
+        assert_eq!(c.get("rollout_streaming"), 1.0);
+        // fullfp8 installs weights AND kv scales each step: 2 epochs
+        // per step, identically across topologies
+        assert_eq!(a.get("rollout_epoch"), (2 * (step + 1)) as f64);
+        assert_eq!(b.get("rollout_epoch"), a.get("rollout_epoch"));
+        assert_eq!(c.get("rollout_epoch"), a.get("rollout_epoch"));
         for key in [
             "reward",
             "response_len",
@@ -587,16 +602,23 @@ fn rl_loop_on_engine_pool_matches_single_engine() {
             "val_accuracy",
             "rollout_tokens",
         ] {
-            let (x, y) = (a.get(key), b.get(key));
+            let (x, y, z) =
+                (a.get(key), b.get(key), c.get(key));
             assert!(
                 x == y || (x.is_nan() && y.is_nan()),
                 "step {step} {key}: single {x} vs pool {y}"
+            );
+            assert!(
+                x == z || (x.is_nan() && z.is_nan()),
+                "step {step} {key}: single {x} vs streaming {z}"
             );
         }
     }
     let s = single.engine_stats().unwrap();
     let p = pooled.engine_stats().unwrap();
+    let t = streaming.engine_stats().unwrap();
     assert_eq!(s.tokens_generated, p.tokens_generated);
+    assert_eq!(s.tokens_generated, t.tokens_generated);
 }
 
 #[test]

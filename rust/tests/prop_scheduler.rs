@@ -272,6 +272,7 @@ fn group_advantages_zero_mean_per_group() {
                             logprobs_full: vec![-0.1, -0.1],
                             finish: FinishReason::Eos,
                             preemptions: 0,
+                            epoch: 0,
                         },
                         reward: *rew,
                         group: *g,

@@ -1,0 +1,344 @@
+//! Streaming-pool determinism property suite (hermetic: synthetic
+//! manifest + RefBackend in every thread).
+//!
+//! The contract under test — the streaming tentpole's headline
+//! invariant: for ANY admission interleaving of submit / poll /
+//! weight-sync / abort events, an N-replica streaming pool's
+//! completions (tokens, behavior logprobs, full-vocab logprobs, epoch
+//! tags, finish reasons) are bit-equal to a sequential single-engine
+//! reference that processes the same event order one request at a
+//! time, and the router's live load accounting drains to zero.
+//!
+//! Interleavings come from `testkit::interleave`: each case is fully
+//! reproducible from the single `u64` seed printed on failure. Every
+//! case contains at least one weight-sync epoch boundary (the spec
+//! pins `n_syncs >= 1`), so the epoch-fence argument — in-flight
+//! sequences finish under the old weights, later submissions use the
+//! new ones, tags match — is exercised 256+ times.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use fp8_rl::rollout::{
+    hermetic_runtime_factory, Completed, Completion, EngineConfig,
+    EnginePool, HloEngine, PoolConfig, Request, RoutePolicy,
+    SamplingParams,
+};
+use fp8_rl::runtime::{HostArray, Runtime};
+use fp8_rl::sync::{WeightSync, WeightSyncConfig};
+use fp8_rl::testkit::interleave::{
+    run, InterleaveSpec, InterleaveTarget,
+};
+use fp8_rl::util::rng::Pcg64;
+
+const CASES: u64 = 256;
+
+/// Perturbed-then-FP8-quantized weights standing in for trainer step
+/// `j` (quantized once; the SAME `Arc` list is installed into every
+/// pool replica and the reference engine).
+fn synced_weights(rt: &Runtime, j: usize) -> Arc<Vec<HostArray>> {
+    let spec = rt.manifest.model("dense").unwrap().clone();
+    let init = rt.manifest.load_initial_params("dense").unwrap();
+    let scale = 1.0 + 0.01 * (j as f32 + 1.0);
+    let params: Vec<HostArray> = init
+        .into_iter()
+        .zip(&spec.params)
+        .map(|(mut v, p)| {
+            for x in v.iter_mut() {
+                *x *= scale;
+            }
+            HostArray::f32(p.shape.clone(), v)
+        })
+        .collect();
+    let sync = WeightSync::new(WeightSyncConfig::fp8());
+    let (w, _) = sync.run_shared(&spec, &params).unwrap();
+    w
+}
+
+/// A request set exercising every sampler path (plain / top-k / top-p /
+/// greedy) with seed-varied prompts and lengths.
+fn gen_requests(rng: &mut Pcg64, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let params = match i % 4 {
+                0 => SamplingParams {
+                    temperature: 1.0,
+                    max_new_tokens: 2 + rng.below(3) as usize,
+                    ..Default::default()
+                },
+                1 => SamplingParams {
+                    temperature: 1.0,
+                    top_k: 5,
+                    max_new_tokens: 2 + rng.below(3) as usize,
+                    ..Default::default()
+                },
+                2 => SamplingParams {
+                    temperature: 1.0,
+                    top_p: 0.9,
+                    max_new_tokens: 2 + rng.below(3) as usize,
+                    ..Default::default()
+                },
+                _ => SamplingParams {
+                    temperature: 0.0,
+                    max_new_tokens: 3,
+                    ..Default::default()
+                },
+            };
+            let mut prompt = vec![12, rng.below(10) as i32, 10];
+            for _ in 0..rng.below(3) {
+                prompt.push(rng.below(10) as i32);
+            }
+            prompt.push(11);
+            Request {
+                id: 1 + i as u64,
+                prompt,
+                params,
+            }
+        })
+        .collect()
+}
+
+/// The streaming session: drives a live `EnginePool` and records how
+/// every ticket resolved.
+struct StreamSession {
+    pool: EnginePool,
+    requests: Vec<Request>,
+    syncs: Vec<Arc<Vec<HostArray>>>,
+    completions: BTreeMap<u64, Completion>,
+    aborted: BTreeSet<u64>,
+    submitted: BTreeSet<u64>,
+}
+
+impl StreamSession {
+    fn record(&mut self, c: Completed) -> Result<(), String> {
+        match c {
+            Completed::Done(c) => {
+                if self.completions.insert(c.id, c).is_some() {
+                    return Err("ticket resolved twice (done)".into());
+                }
+            }
+            Completed::Aborted(id) => {
+                if !self.aborted.insert(id) {
+                    return Err(format!(
+                        "ticket {id} resolved twice (aborted)"
+                    ));
+                }
+            }
+            Completed::Failed(id, msg) => {
+                return Err(format!("ticket {id} failed: {msg}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until every outstanding ticket resolves.
+    fn finish(&mut self) -> Result<(), String> {
+        while let Some(c) =
+            self.pool.next_resolved().map_err(|e| e.to_string())?
+        {
+            self.record(c)?;
+        }
+        Ok(())
+    }
+}
+
+impl InterleaveTarget for StreamSession {
+    type Err = String;
+
+    fn submit(&mut self, i: usize) -> Result<(), String> {
+        let req = self.requests[i].clone();
+        self.submitted.insert(req.id);
+        self.pool
+            .submit(req)
+            .map(|_| ())
+            .map_err(|e| e.to_string())
+    }
+
+    fn sync(&mut self, j: usize) -> Result<(), String> {
+        self.pool
+            .sync_weights(self.syncs[j].clone())
+            .map(|_| ())
+            .map_err(|e| e.to_string())
+    }
+
+    fn poll(&mut self) -> Result<(), String> {
+        while let Some(c) = self.pool.poll() {
+            self.record(c)?;
+        }
+        Ok(())
+    }
+
+    fn abort(&mut self, i: usize) -> Result<(), String> {
+        self.pool
+            .abort(self.requests[i].id)
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// The sequential reference: one engine, one request at a time, in
+/// plan order — installs land exactly at their fence position, so
+/// request k's weights are determined by how many syncs precede its
+/// submit, which is precisely what the pool's epoch fence promises.
+struct SeqReference {
+    engine: HloEngine,
+    requests: Vec<Request>,
+    syncs: Vec<Arc<Vec<HostArray>>>,
+    completions: BTreeMap<u64, Completion>,
+}
+
+impl InterleaveTarget for SeqReference {
+    type Err = String;
+
+    fn submit(&mut self, i: usize) -> Result<(), String> {
+        let done = self
+            .engine
+            .generate(vec![self.requests[i].clone()])
+            .map_err(|e| e.to_string())?;
+        for c in done {
+            self.completions.insert(c.id, c);
+        }
+        Ok(())
+    }
+
+    fn sync(&mut self, j: usize) -> Result<(), String> {
+        self.engine
+            .install_weights(&self.syncs[j])
+            .map_err(|e| e.to_string())
+    }
+
+    fn poll(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn abort(&mut self, _i: usize) -> Result<(), String> {
+        // the reference generates everything; comparison is restricted
+        // to the tickets the stream actually completed
+        Ok(())
+    }
+}
+
+fn case(seed: u64) -> Result<(), String> {
+    let mut rng = Pcg64::new(seed ^ 0xD15E_A5E0);
+    let n_requests = 3 + rng.below(4) as usize; // 3..6
+    let spec = InterleaveSpec {
+        n_requests,
+        n_syncs: 1 + rng.below(2) as usize, // >= 1 epoch boundary
+        n_aborts: rng.below(2) as usize,
+        n_polls: 3,
+    };
+    let plan = spec.plan(rng.next_u64());
+    plan.check_well_formed(&spec);
+    let replicas = 2 + (seed % 3) as usize; // 2..4
+    let policy = if seed % 2 == 0 {
+        RoutePolicy::RoundRobin
+    } else {
+        RoutePolicy::LeastLoaded
+    };
+    let requests = gen_requests(&mut rng, n_requests);
+    let rt = Runtime::hermetic();
+    let syncs: Vec<Arc<Vec<HostArray>>> =
+        (0..spec.n_syncs).map(|j| synced_weights(&rt, j)).collect();
+
+    let pool = EnginePool::new(
+        PoolConfig {
+            n_replicas: replicas,
+            policy,
+            engine: EngineConfig::new("dense", "bf16"),
+        },
+        hermetic_runtime_factory(),
+    )
+    .map_err(|e| e.to_string())?;
+    let mut stream = StreamSession {
+        pool,
+        requests: requests.clone(),
+        syncs: syncs.clone(),
+        completions: BTreeMap::new(),
+        aborted: BTreeSet::new(),
+        submitted: BTreeSet::new(),
+    };
+    run(&plan, &mut stream)?;
+    stream.finish()?;
+
+    // --- session accounting: every ticket resolved exactly once and
+    // the router's live loads drained to zero ---
+    if stream.pool.n_outstanding() != 0 {
+        return Err(format!(
+            "{} tickets left outstanding",
+            stream.pool.n_outstanding()
+        ));
+    }
+    if !stream.pool.loads().iter().all(|&l| l == 0) {
+        return Err(format!(
+            "router loads did not drain: {:?}",
+            stream.pool.loads()
+        ));
+    }
+    let done_ids: BTreeSet<u64> =
+        stream.completions.keys().copied().collect();
+    if !done_ids.is_disjoint(&stream.aborted) {
+        return Err("a ticket resolved both done and aborted".into());
+    }
+    let resolved: BTreeSet<u64> =
+        done_ids.union(&stream.aborted).copied().collect();
+    if resolved != stream.submitted {
+        return Err(format!(
+            "resolved {:?} != submitted {:?}",
+            resolved, stream.submitted
+        ));
+    }
+
+    // --- the bit-equality claim against the sequential reference ---
+    let mut reference = SeqReference {
+        engine: HloEngine::new(
+            Arc::new(Runtime::hermetic()),
+            EngineConfig::new("dense", "bf16"),
+        )
+        .map_err(|e| e.to_string())?,
+        requests,
+        syncs,
+        completions: BTreeMap::new(),
+    };
+    run(&plan, &mut reference)?;
+    for (id, c) in &stream.completions {
+        let r = reference
+            .completions
+            .get(id)
+            .ok_or(format!("reference never completed request {id}"))?;
+        if c.tokens != r.tokens {
+            return Err(format!("tokens diverge for request {id}"));
+        }
+        if c.logprobs != r.logprobs {
+            return Err(format!(
+                "behavior logprobs diverge for request {id}"
+            ));
+        }
+        if c.logprobs_full != r.logprobs_full {
+            return Err(format!(
+                "full-vocab logprobs diverge for request {id}"
+            ));
+        }
+        if c.epoch != r.epoch {
+            return Err(format!(
+                "epoch tag diverges for request {id}: stream {} vs \
+                 reference {} — a completion spanned a weight install",
+                c.epoch, r.epoch
+            ));
+        }
+        if c.finish != r.finish {
+            return Err(format!("finish reason diverges for request {id}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn streaming_pool_matches_sequential_reference_over_256_interleavings() {
+    for seed in 0..CASES {
+        if let Err(msg) = case(seed) {
+            panic!(
+                "streaming-vs-reference property failed \
+                 (replay with seed {seed}): {msg}"
+            );
+        }
+    }
+}
