@@ -11,7 +11,15 @@
 //! results/e2e_example.csv. ~3-4 s/step on one CPU core.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_rl_training
-//!       [-- --steps 50 --rollout fp8lin --train-variant bf16]`
+//!       [-- --steps 50 --rollout fp8lin --train-variant bf16
+//!           --replicas 2 --pipeline 1]`
+//!
+//! `--pipeline D` switches to the cross-step pipelined driver
+//! (DESIGN.md §6): the next D steps' rollout waves decode inside the
+//! streaming pool while the current step trains, with TIS/MIS
+//! correcting the one-step-stale behavior policy exactly like it
+//! corrects precision mismatch (the staleness window defaults to the
+//! schedule's lag).
 
 use std::sync::Arc;
 
@@ -39,10 +47,25 @@ fn main() -> Result<()> {
     cfg.samples_per_prompt = 8;
     cfg.prompts_per_step = 8;
     cfg.max_new_tokens = 6;
+    cfg.rollout_replicas = args.usize_or("replicas", 1)?;
+    cfg.pipeline_depth = args.usize_or("pipeline", 0)?;
+    if cfg.pipeline_depth > 0 {
+        // pipelining rides the streaming pool; the staleness window
+        // defaults to exactly the schedule's lag
+        cfg.rollout_streaming = true;
+        cfg.max_epoch_staleness =
+            cfg.pipeline_depth as u64 * cfg.epochs_per_step();
+    }
 
     println!(
-        "e2e RL: arch={} rollout={} train={} steps={}",
-        cfg.arch, cfg.rollout_variant, cfg.train_variant, cfg.steps
+        "e2e RL: arch={} rollout={} train={} steps={} replicas={} \
+         pipeline={}",
+        cfg.arch,
+        cfg.rollout_variant,
+        cfg.train_variant,
+        cfg.steps,
+        cfg.rollout_replicas,
+        cfg.pipeline_depth
     );
     let rt = Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?);
     let mut rl = RlLoop::new(rt, cfg)?;
@@ -50,7 +73,8 @@ fn main() -> Result<()> {
         let rec = rl.step(step)?;
         println!(
             "step {step:3}: reward={:.3} acc={:.3} len={:.1} \
-             kl={:.2e} ent={:.2} [{:.1}s rollout, {:.1}s train]",
+             kl={:.2e} ent={:.2} [{:.1}s rollout, {:.1}s train, \
+             {:.1}s overlapped, staleness {:.1}]",
             rec.get("reward"),
             rec.get("val_accuracy"),
             rec.get("response_len"),
@@ -58,6 +82,8 @@ fn main() -> Result<()> {
             rec.get("entropy"),
             rec.get("rollout_s"),
             rec.get("train_s"),
+            rec.get("pipeline_overlap_s"),
+            rec.get("staleness_mean"),
         );
         rl.recorder.push(rec);
     }

@@ -1,0 +1,145 @@
+//! End-to-end RL-step bench: the sequential loop (pipeline_depth=0)
+//! vs the cross-step pipelined loop (pipeline_depth=1,
+//! max_epoch_staleness=1) on the SAME streaming 2-replica pool and the
+//! same skewed workload (temperature-1 sampling with a live EOS gives
+//! response lengths anywhere in 1..max_new_tokens, the tail shape
+//! where overlap pays). The pipelined driver submits step N+1's wave
+//! before step N trains, so its per-step wall time should approach
+//! max(rollout, train) while the sequential loop pays rollout + train
+//! — the acceptance comparison reported here is
+//! `pipelined step_s_mean < sequential rollout_s_mean + train_s_mean`.
+//!
+//! Runs hermetically on the synthetic manifest + RefBackend when
+//! `make artifacts` has not been run, and emits `BENCH_rl_step.json`
+//! so CI tracks the trajectory across PRs (the committed root baseline
+//! stays placeholder-labeled until a toolchain-bearing run overwrites
+//! it). Numbers from shared runners are noisy — the CI job informs,
+//! it never gates.
+//!
+//! Run: `cargo bench --bench rl_step`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fp8_rl::coordinator::{ExperimentConfig, RlLoop};
+use fp8_rl::runtime::Runtime;
+use fp8_rl::util::json::Json;
+
+const STEPS: usize = 6; // step 0 (warm-up compile + prologue) untimed
+
+fn cfg(name: &str, depth: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(name, "dense", "fp8lin", "bf16");
+    c.steps = STEPS;
+    c.prompts_per_step = 8;
+    c.samples_per_prompt = 2; // 16 rows == b_train
+    c.max_digits = 1;
+    c.max_sum = Some(9);
+    // long budget + live EOS = skewed response lengths (stragglers)
+    c.max_new_tokens = 24;
+    // keep the 64-probe validation sweep out of the timed steps
+    c.validate_every = 1_000_000;
+    c.rollout_replicas = 2;
+    c.rollout_streaming = true;
+    c.pipeline_depth = depth;
+    c.max_epoch_staleness = depth as u64 * c.epochs_per_step();
+    c
+}
+
+struct RunStats {
+    step_s_mean: f64,
+    rollout_s_mean: f64,
+    train_s_mean: f64,
+    sync_s_mean: f64,
+    overlap_s_mean: f64,
+    staleness_mean: f64,
+    tokens: f64,
+}
+
+fn run(cfg: ExperimentConfig) -> RunStats {
+    let rt = Arc::new(
+        Runtime::new_quiet("artifacts")
+            .expect("runtime construction is hermetic"),
+    );
+    let mut rl = RlLoop::new(rt, cfg).unwrap();
+    let mut step_s = Vec::new();
+    let mut recs = Vec::new();
+    for step in 0..STEPS {
+        let t0 = Instant::now();
+        let rec = rl.step(step).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        if step > 0 {
+            step_s.push(dt);
+            recs.push(rec);
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let col = |k: &str| {
+        mean(&recs.iter().map(|r| r.get(k)).collect::<Vec<f64>>())
+    };
+    RunStats {
+        step_s_mean: mean(&step_s),
+        rollout_s_mean: col("rollout_s"),
+        train_s_mean: col("train_s"),
+        sync_s_mean: col("sync_s"),
+        overlap_s_mean: col("pipeline_overlap_s"),
+        staleness_mean: col("staleness_mean"),
+        tokens: recs.iter().map(|r| r.get("rollout_tokens")).sum(),
+    }
+}
+
+fn main() {
+    let seq = run(cfg("rl_step_sequential", 0));
+    let pipe = run(cfg("rl_step_pipelined", 1));
+    let budget = seq.rollout_s_mean + seq.train_s_mean;
+    let speedup = if pipe.step_s_mean > 0.0 {
+        seq.step_s_mean / pipe.step_s_mean
+    } else {
+        0.0
+    };
+    println!(
+        "bench rl_step: sequential {:.3}s/step (rollout {:.3}s + \
+         train {:.3}s + sync {:.3}s) vs pipelined {:.3}s/step \
+         (overlap {:.3}s, staleness {:.2}) — speedup {speedup:.2}x, \
+         pipelined < rollout+train: {}",
+        seq.step_s_mean,
+        seq.rollout_s_mean,
+        seq.train_s_mean,
+        seq.sync_s_mean,
+        pipe.step_s_mean,
+        pipe.overlap_s_mean,
+        pipe.staleness_mean,
+        pipe.step_s_mean < budget,
+    );
+    let obj = |s: &RunStats| {
+        let mut v: BTreeMap<String, Json> = BTreeMap::new();
+        v.insert("step_s_mean".into(), Json::Num(s.step_s_mean));
+        v.insert("rollout_s_mean".into(), Json::Num(s.rollout_s_mean));
+        v.insert("train_s_mean".into(), Json::Num(s.train_s_mean));
+        v.insert("sync_s_mean".into(), Json::Num(s.sync_s_mean));
+        v.insert("overlap_s_mean".into(), Json::Num(s.overlap_s_mean));
+        v.insert("staleness_mean".into(), Json::Num(s.staleness_mean));
+        v.insert("rollout_tokens".into(), Json::Num(s.tokens));
+        Json::Obj(v)
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(0);
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("rl_step".into()));
+    root.insert("backend".into(), Json::Str("ref".into()));
+    root.insert("host_cores".into(), Json::Num(cores as f64));
+    root.insert("timed_steps".into(), Json::Num((STEPS - 1) as f64));
+    root.insert("sequential".into(), obj(&seq));
+    root.insert("pipelined".into(), obj(&pipe));
+    root.insert("pipelined_speedup".into(), Json::Num(speedup));
+    root.insert(
+        "pipelined_lt_rollout_plus_train".into(),
+        Json::Bool(pipe.step_s_mean < budget),
+    );
+    let path = "BENCH_rl_step.json";
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

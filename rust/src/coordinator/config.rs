@@ -38,6 +38,26 @@ pub struct ExperimentConfig {
     /// weights — see rollout::pool); this is purely a throughput /
     /// latency knob. Forces the pool topology even at 1 replica.
     pub rollout_streaming: bool,
+    /// cross-step pipelining: number of NEXT-step rollout waves kept in
+    /// flight inside the streaming pool while the current step trains.
+    /// 0 (default) is the strictly sequential sync->rollout->train loop
+    /// (bit-identical to the pre-pipelining driver); >= 1 overlaps
+    /// rollout and training so step time approaches max(rollout, train)
+    /// instead of their sum. Requires `rollout_streaming` (the session
+    /// API) and a `max_epoch_staleness` wide enough for the depth —
+    /// `RlLoop::new` checks both up front. NOTE: epoch fences serialize
+    /// waves on each replica (a wave decodes only after its
+    /// predecessor drains), so depth > 1 buys NO extra overlap over
+    /// depth 1 in steady state while linearly increasing staleness —
+    /// `RlLoop::new` warns. See DESIGN.md §6.
+    pub pipeline_depth: usize,
+    /// bounded-staleness window for the TIS/MIS epoch check: a training
+    /// batch may contain completions whose behavior-policy epoch tag is
+    /// up to this many weight epochs BEHIND the epoch the loop last
+    /// synced (never ahead). 0 (default) is the hard same-epoch error
+    /// the sequential loop has always enforced; cross-step pipelining
+    /// at depth d with e epoch bumps per step needs >= d*e.
+    pub max_epoch_staleness: u64,
     pub seed: u64,
     /// task difficulty
     pub max_digits: u32,
@@ -87,6 +107,12 @@ impl ExperimentConfig {
             getf("rollout_replicas", c.rollout_replicas as f64) as usize;
         c.rollout_streaming =
             getb("rollout_streaming", c.rollout_streaming);
+        c.pipeline_depth =
+            getf("pipeline_depth", c.pipeline_depth as f64) as usize;
+        c.max_epoch_staleness = getf(
+            "max_epoch_staleness",
+            c.max_epoch_staleness as f64,
+        ) as u64;
         c.seed = getf("seed", c.seed as f64) as u64;
         c.max_digits = getf("max_digits", c.max_digits as f64) as u32;
         if let Some(ms) = j.opt("max_sum") {
@@ -124,6 +150,8 @@ impl ExperimentConfig {
             max_new_tokens: 8,
             rollout_replicas: 1,
             rollout_streaming: false,
+            pipeline_depth: 0,
+            max_epoch_staleness: 0,
             seed: 1234,
             max_digits: 2,
             max_sum: None,
@@ -139,5 +167,14 @@ impl ExperimentConfig {
     pub fn rollout_fp8_kv(&self) -> bool {
         self.rollout_variant.contains("kvfp8")
             || self.rollout_variant.contains("fullfp8")
+    }
+
+    /// Weight epochs the rollout engine advances per RL step: one for
+    /// the weight sync, plus one when FP8-KV recalibration installs
+    /// fresh scales. Cross-step pipelining at depth d therefore trains
+    /// on completions exactly `d * epochs_per_step()` epochs stale,
+    /// which is the floor `max_epoch_staleness` must cover.
+    pub fn epochs_per_step(&self) -> u64 {
+        1 + self.rollout_fp8_kv() as u64
     }
 }

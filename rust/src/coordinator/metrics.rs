@@ -26,6 +26,11 @@ pub const CURVE_COLUMNS: &[&str] = &[
     "rollout_replicas",
     "rollout_streaming",
     "rollout_epoch",
+    "staleness_mean",
+    "behavior_epoch_min",
+    "behavior_epoch_max",
+    "pipeline_depth",
+    "pipeline_overlap_s",
     "rollout_tokens",
     "rollout_s",
     "sync_s",

@@ -24,19 +24,39 @@
 //! one by one; the loop then checks every completion's epoch tag
 //! against the epoch it synced, which is what guarantees the
 //! `Completion::logprobs` used as the TIS/MIS denominator were
-//! measured under THIS step's behavior policy and not a torn or stale
-//! one. A mismatched tag is a hard error, not a silent bias.
+//! measured under a behavior policy inside the allowed staleness
+//! window. At the default `max_epoch_staleness = 0` a mismatched tag
+//! is a hard error, not a silent bias.
+//!
+//! ## Cross-step pipelining (`pipeline_depth >= 1`, DESIGN.md §6)
+//!
+//! With streaming on and `pipeline_depth = d`, the loop keeps the next
+//! `d` steps' rollout waves IN FLIGHT inside the pool while the current
+//! step trains: step N's `train_step` runs concurrently with step
+//! N+1's decoding, so wall time per step approaches
+//! `max(rollout, train)` instead of `rollout + train`. The wave
+//! consumed at step N was submitted after step N-d's fences, so its
+//! completions are tagged `d * epochs_per_step` weight epochs behind
+//! the epoch the loop just synced — temporal off-policyness that
+//! TIS/MIS corrects exactly like precision mismatch, because every
+//! completion's `logprobs` ARE the behavior policy of its own tagged
+//! epoch (the epoch fence pins them; no completion spans an install).
+//! The bounded-staleness check (`epoch ∈ [synced - max_epoch_staleness,
+//! synced]`) turns anything outside that window into a hard error.
+//! `pipeline_depth = 0` takes the exact sequential code path and stays
+//! bit-identical to the pre-pipelining driver.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::rl::dapo::{Sample, TrainBatch};
-use crate::rl::task::{Task, TaskConfig, TOK_PAD};
+use crate::rl::task::{Problem, Task, TaskConfig, TOK_PAD};
 use crate::rl::trainer::{Trainer, TrainerConfig};
 use crate::rollout::{
-    factory_like, EngineConfig, EnginePool, HloEngine, PoolConfig,
-    Request, Rollout, RoutePolicy, SamplingParams,
+    factory_like, Completed, Completion, EngineConfig, EnginePool,
+    HloEngine, PoolConfig, Request, Rollout, RoutePolicy,
+    SamplingParams,
 };
 use crate::runtime::Runtime;
 use crate::sync::{CalibStrategy, Calibrator, WeightSync, WeightSyncConfig};
@@ -55,6 +75,26 @@ fn next_request_id(counter: &mut u64) -> u64 {
     *counter
 }
 
+/// One rollout wave submitted into the streaming pool but not yet
+/// consumed by a training step (the cross-step pipeline's unit of
+/// in-flight work).
+struct PendingWave {
+    problems: Vec<Problem>,
+    /// request id -> flat (problem, sample) slot
+    origin: BTreeMap<u64, usize>,
+    /// pool weight epoch the wave's requests were stamped with
+    submitted_epoch: u64,
+    /// when the wave became ELIGIBLE to decode: at submission for the
+    /// front of an empty pipeline, else when the previous wave
+    /// finished collection (a non-front wave sits parked behind its
+    /// epoch fence until the replicas drain, so counting from
+    /// submission would overstate concurrency). The gap from here to
+    /// collection start is the time the wave decoded concurrently
+    /// with sync/train/validation work — the `pipeline_overlap_s`
+    /// metric.
+    eligible_at: Instant,
+}
+
 pub struct RlLoop {
     pub cfg: ExperimentConfig,
     rt: Arc<Runtime>,
@@ -68,6 +108,13 @@ pub struct RlLoop {
     last_train_rows: Vec<Vec<i32>>,
     req_counter: u64,
     last_val_acc: f64,
+    /// waves in flight ahead of training (empty at pipeline_depth 0)
+    inflight: VecDeque<PendingWave>,
+    /// completions that arrived while collecting a different id set
+    /// (a later wave finishing early) — consumed by their own wave
+    early: BTreeMap<u64, Completion>,
+    /// next wave index to submit == the RL step that will train on it
+    next_wave: usize,
 }
 
 impl RlLoop {
@@ -76,6 +123,46 @@ impl RlLoop {
             // don't silently coerce a nonsense config to a single
             // engine — EnginePool::new rejects 0 too
             bail!("rollout_replicas must be >= 1, got 0");
+        }
+        if cfg.pipeline_depth > 0 {
+            // fail at construction, not at step d+1: pipelining rides
+            // the pool's session API (partial collection while later
+            // waves decode), and the staleness window must admit the
+            // exact lag the schedule will produce
+            if !cfg.rollout_streaming {
+                bail!(
+                    "pipeline_depth {} requires rollout_streaming: \
+                     cross-step overlap submits into the running pool \
+                     while training (enable --streaming / \
+                     rollout_streaming)",
+                    cfg.pipeline_depth
+                );
+            }
+            if cfg.pipeline_depth > 1 {
+                // each wave is submitted behind its step's epoch
+                // fence, and a fence applies only once the replicas
+                // drain — waves serialize, so extra depth parks more
+                // work without adding concurrency
+                crate::log_warn!(
+                    "pipeline_depth {} > 1: epoch fences serialize \
+                     waves, so this adds staleness without adding \
+                     overlap beyond depth 1",
+                    cfg.pipeline_depth
+                );
+            }
+            let need =
+                cfg.pipeline_depth as u64 * cfg.epochs_per_step();
+            if cfg.max_epoch_staleness < need {
+                bail!(
+                    "pipeline_depth {} with {} weight epoch(s) per \
+                     step trains on completions {need} epoch(s) stale \
+                     — max_epoch_staleness {} would reject every \
+                     steady-state batch (set it to at least {need})",
+                    cfg.pipeline_depth,
+                    cfg.epochs_per_step(),
+                    cfg.max_epoch_staleness
+                );
+            }
         }
         let engine_cfg = EngineConfig {
             seed: cfg.seed,
@@ -138,6 +225,9 @@ impl RlLoop {
             last_train_rows: Vec::new(),
             req_counter: 0,
             last_val_acc: f64::NAN,
+            inflight: VecDeque::new(),
+            early: BTreeMap::new(),
+            next_wave: 0,
         })
     }
 
@@ -160,7 +250,13 @@ impl RlLoop {
     }
 
     /// One full RL iteration (public so figures can interleave probes).
+    /// At `pipeline_depth >= 1` this is the cross-step pipelined
+    /// driver; at 0 it is the sequential loop, bit-identical to the
+    /// pre-pipelining behavior.
     pub fn step(&mut self, step: usize) -> Result<StepRecord> {
+        if self.cfg.pipeline_depth > 0 {
+            return self.step_pipelined(step);
+        }
         let streaming = self.cfg.rollout_streaming;
         let mut rec = StepRecord::default();
         rec.set("step", step as f64);
@@ -189,18 +285,7 @@ impl RlLoop {
             .collect();
 
         if self.cfg.rollout_fp8_kv() {
-            let rows: Vec<Vec<i32>> = match self.calib.strategy() {
-                CalibStrategy::InferenceSide => {
-                    problems.iter().map(|p| p.prompt.clone()).collect()
-                }
-                CalibStrategy::TrainerSide => {
-                    if self.last_train_rows.is_empty() {
-                        problems.iter().map(|p| p.prompt.clone()).collect()
-                    } else {
-                        self.last_train_rows.clone()
-                    }
-                }
-            };
+            let rows = self.calib_rows(&problems);
             let (ks, vs) = self.calib.recalibrate(
                 self.trainer.params(),
                 &rows,
@@ -217,25 +302,7 @@ impl RlLoop {
 
         // ---- phase 2: rollout (generation) ----
         let t1 = Instant::now();
-        let n = self.cfg.samples_per_prompt;
-        let mut requests = Vec::new();
-        // id -> flat (problem, sample) slot, for completion mapping
-        let mut origin: BTreeMap<u64, usize> = BTreeMap::new();
-        for (pi, p) in problems.iter().enumerate() {
-            for si in 0..n {
-                let id = next_request_id(&mut self.req_counter);
-                origin.insert(id, pi * n + si);
-                requests.push(Request {
-                    id,
-                    prompt: p.prompt.clone(),
-                    params: SamplingParams {
-                        temperature: 1.0,
-                        max_new_tokens: self.cfg.max_new_tokens,
-                        ..Default::default()
-                    },
-                });
-            }
-        }
+        let (requests, origin) = self.build_wave(&problems);
         debug_assert_eq!(origin.len(), requests.len());
         let pre = self.rollout.stats()?;
         // the pool's `generate` IS continuous admission since the
@@ -246,23 +313,19 @@ impl RlLoop {
         let completions = self.rollout.generate(requests)?;
         let post = self.rollout.stats()?;
         // the epoch tag is what makes the TIS/MIS denominator honest:
-        // every completion must have been generated under THE weights
-        // this step synced — a mismatch means a torn/stale behavior
-        // policy, which must fail loudly instead of biasing the
-        // importance weights
+        // every completion must have been generated under weights
+        // inside the bounded-staleness window ending at THE epoch this
+        // step synced (the window is [synced, synced] at the default
+        // max_epoch_staleness of 0) — anything outside means a torn or
+        // too-stale behavior policy, which must fail loudly instead of
+        // biasing the importance weights
         let epoch = self.rollout.epoch();
-        for c in &completions {
-            if c.epoch != epoch {
-                bail!(
-                    "completion {} is tagged weight epoch {} but the \
-                     loop synced epoch {epoch}: its behavior logprobs \
-                     would be off-policy for TIS/MIS",
-                    c.id,
-                    c.epoch
-                );
-            }
-        }
+        let staleness =
+            Self::check_epoch_window(&self.cfg, &completions, epoch)?;
         rec.set("rollout_epoch", epoch as f64);
+        rec.set("staleness_mean", staleness);
+        rec.set("pipeline_depth", 0.0);
+        rec.set("pipeline_overlap_s", 0.0);
         rec.set(
             "rollout_streaming",
             self.cfg.rollout_streaming as u8 as f64,
@@ -278,7 +341,346 @@ impl RlLoop {
         rec.set("rollout_replicas", self.rollout.n_replicas() as f64);
         rec.set("rollout_s", t1.elapsed().as_secs_f64());
 
-        // map completions back to (problem, group)
+        // ---- phase 3: training (DAPO + TIS) ----
+        self.train_phase(&mut rec, &problems, &origin, completions)?;
+
+        // ---- validation probe (through the rollout engine, like the
+        // paper's online AIME24 eval) ----
+        if step % self.cfg.validate_every == 0 {
+            self.last_val_acc = self.validate()?;
+        }
+        rec.set("val_accuracy", self.last_val_acc);
+        Ok(rec)
+    }
+
+    /// One pipelined RL iteration (DESIGN.md §6): the sync fences
+    /// advance the weight epoch, this step's wave(s) are submitted
+    /// into the running pool BEHIND those fences, and then the OLDEST
+    /// in-flight wave — which has been decoding since an earlier step,
+    /// concurrently with that step's training — is collected and
+    /// trained on under the bounded-staleness window. Rollout and
+    /// training overlap, so step wall time approaches
+    /// max(rollout, train) instead of their sum.
+    fn step_pipelined(&mut self, step: usize) -> Result<StepRecord> {
+        let mut rec = StepRecord::default();
+        rec.set("step", step as f64);
+
+        // ---- phase 1: weight synchronization (asynchronous epoch
+        // fences: in-flight waves finish under the weights they were
+        // submitted under — the pipeline's whole premise) ----
+        let t0 = Instant::now();
+        let spec = self.rt.manifest.model(&self.cfg.arch)?.clone();
+        let (weights, _report) =
+            self.sync.run_shared(&spec, self.trainer.params())?;
+        self.pool_mut()?.sync_weights(weights)?;
+
+        // sample the problems for every wave submitted this step: one
+        // in steady state, pipeline_depth+1 on the first call (the
+        // prologue fill), zero once the tail of the run needs no more
+        // waves. Sampling order matches the sequential loop: wave k's
+        // problems are the k-th batch drawn from the task stream.
+        let mut new_waves: Vec<Vec<Problem>> = Vec::new();
+        while self.inflight.len() + new_waves.len()
+            < self.cfg.pipeline_depth + 1
+            && self.next_wave < self.cfg.steps
+        {
+            new_waves.push(
+                (0..self.cfg.prompts_per_step)
+                    .map(|_| self.task.sample())
+                    .collect(),
+            );
+            self.next_wave += 1;
+        }
+
+        // recalibrate only when fresh waves will run under the new
+        // scales: at the tail of the run (no submissions left) the
+        // only consumer would be greedy validation, and inference-side
+        // calibration would otherwise see an empty (all-PAD) prompt
+        // set. Skipping shrinks the epoch increment, which can only
+        // tighten — never violate — the staleness window.
+        if self.cfg.rollout_fp8_kv() && !new_waves.is_empty() {
+            let rows =
+                self.calib_rows(new_waves.iter().flatten());
+            let (ks, vs) = self.calib.recalibrate(
+                self.trainer.params(),
+                &rows,
+                TOK_PAD,
+            )?;
+            self.pool_mut()?.sync_kv_scales(ks, vs)?;
+        }
+        rec.set("sync_s", t0.elapsed().as_secs_f64());
+
+        // ---- phase 2a: submit this step's wave(s) behind the fences ----
+        for problems in new_waves {
+            self.submit_wave(problems)?;
+        }
+
+        // ---- phase 2b: collect the oldest in-flight wave ----
+        let wave = match self.inflight.pop_front() {
+            Some(w) => w,
+            // only reachable when step() is driven past cfg.steps
+            None => bail!(
+                "pipelined step {step} has no wave to train on — the \
+                 configured {} steps are exhausted",
+                self.cfg.steps
+            ),
+        };
+        // how long the wave decoded in the background before the loop
+        // needed it (sync/train/validation work it overlapped with)
+        rec.set(
+            "pipeline_overlap_s",
+            wave.eligible_at.elapsed().as_secs_f64(),
+        );
+        let t1 = Instant::now();
+        let ids: BTreeSet<u64> = wave.origin.keys().copied().collect();
+        let completions = self.collect_ids(&ids)?;
+        // this wave has drained, so its epoch fence has applied on
+        // every replica and the NEXT wave starts decoding about now —
+        // that is the moment its overlap clock must start from
+        if let Some(front) = self.inflight.front_mut() {
+            front.eligible_at = Instant::now();
+        }
+        // the fence stamping contract: every completion's tag equals
+        // the pool epoch its wave was submitted under
+        for c in &completions {
+            if c.epoch != wave.submitted_epoch {
+                bail!(
+                    "completion {} is tagged epoch {} but its wave was \
+                     submitted under epoch {} — the pool's fence \
+                     stamping contract was violated",
+                    c.id,
+                    c.epoch,
+                    wave.submitted_epoch
+                );
+            }
+        }
+        let synced = self.rollout.epoch();
+        let staleness =
+            Self::check_epoch_window(&self.cfg, &completions, synced)?;
+        rec.set("rollout_epoch", synced as f64);
+        rec.set("staleness_mean", staleness);
+        rec.set("pipeline_depth", self.cfg.pipeline_depth as f64);
+        rec.set(
+            "rollout_streaming",
+            self.cfg.rollout_streaming as u8 as f64,
+        );
+        // per-wave accounting from the completions themselves: engine
+        // counter deltas would blend in the concurrently-decoding waves
+        rec.set(
+            "preemptions",
+            completions
+                .iter()
+                .map(|c| c.preemptions as u64)
+                .sum::<u64>() as f64,
+        );
+        rec.set(
+            "rollout_tokens",
+            completions.iter().map(|c| c.tokens.len()).sum::<usize>()
+                as f64,
+        );
+        rec.set("rollout_replicas", self.rollout.n_replicas() as f64);
+        // the visible stall: how long the loop had to WAIT for the
+        // wave on top of what already decoded during earlier phases
+        rec.set("rollout_s", t1.elapsed().as_secs_f64());
+
+        // ---- phase 3: training, overlapped by the next wave's decode ----
+        self.train_phase(
+            &mut rec,
+            &wave.problems,
+            &wave.origin,
+            completions,
+        )?;
+
+        if step % self.cfg.validate_every == 0 {
+            self.last_val_acc = self.validate()?;
+        }
+        rec.set("val_accuracy", self.last_val_acc);
+        Ok(rec)
+    }
+
+    /// Enforce the bounded-staleness epoch window on a training wave:
+    /// every completion's behavior epoch must lie in
+    /// `[synced - max_epoch_staleness, synced]`. Returns the mean
+    /// staleness (`synced - epoch`) over the wave — the
+    /// `staleness_mean` metric.
+    fn check_epoch_window(
+        cfg: &ExperimentConfig,
+        completions: &[Completion],
+        synced: u64,
+    ) -> Result<f64> {
+        let mut stale_sum = 0.0f64;
+        for c in completions {
+            if c.epoch > synced
+                || c.epoch + cfg.max_epoch_staleness < synced
+            {
+                bail!(
+                    "completion {} is tagged weight epoch {} but the \
+                     loop synced epoch {synced} (allowed window \
+                     [{}, {synced}]): its behavior logprobs would be \
+                     off-policy beyond what TIS/MIS is configured to \
+                     correct",
+                    c.id,
+                    c.epoch,
+                    synced.saturating_sub(cfg.max_epoch_staleness),
+                );
+            }
+            stale_sum += (synced - c.epoch) as f64;
+        }
+        Ok(stale_sum / completions.len().max(1) as f64)
+    }
+
+    /// The streaming pool behind the pipelined helpers (construction
+    /// already rejects pipelining on other topologies; this re-checks
+    /// so the helpers cannot be misused).
+    fn pool_mut(&mut self) -> Result<&mut EnginePool> {
+        match &mut self.rollout {
+            Rollout::Pool(p) => Ok(p),
+            Rollout::Single(_) => bail!(
+                "cross-step pipelining requires the streaming engine \
+                 pool"
+            ),
+        }
+    }
+
+    /// Rows fed to a KV-scale recalibration, shared by both drivers:
+    /// the upcoming prompts for inference-side calibration (vLLM
+    /// forced-recalibration style), the last training batch for
+    /// trainer-side — falling back to the prompts before the first
+    /// train step has produced any rows.
+    fn calib_rows<'a>(
+        &self,
+        upcoming: impl IntoIterator<Item = &'a Problem>,
+    ) -> Vec<Vec<i32>> {
+        match self.calib.strategy() {
+            CalibStrategy::TrainerSide
+                if !self.last_train_rows.is_empty() =>
+            {
+                self.last_train_rows.clone()
+            }
+            _ => upcoming
+                .into_iter()
+                .map(|p| p.prompt.clone())
+                .collect(),
+        }
+    }
+
+    /// Build one wave's sampling requests plus its id -> (problem,
+    /// sample)-slot origin map — the SAME construction for the
+    /// sequential and pipelined drivers, so the two cannot drift (the
+    /// depth-0 bit-identity anchor depends on it).
+    fn build_wave(
+        &mut self,
+        problems: &[Problem],
+    ) -> (Vec<Request>, BTreeMap<u64, usize>) {
+        let n = self.cfg.samples_per_prompt;
+        let mut origin: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut requests = Vec::with_capacity(problems.len() * n);
+        for (pi, p) in problems.iter().enumerate() {
+            for si in 0..n {
+                let id = next_request_id(&mut self.req_counter);
+                origin.insert(id, pi * n + si);
+                requests.push(Request {
+                    id,
+                    prompt: p.prompt.clone(),
+                    params: SamplingParams {
+                        temperature: 1.0,
+                        max_new_tokens: self.cfg.max_new_tokens,
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+        (requests, origin)
+    }
+
+    /// Build one wave of sampling requests and submit it into the
+    /// running pool, recording it as in flight. The requests are
+    /// stamped with the pool's current epoch (the fence contract), so
+    /// the wave decodes under exactly the weights most recently synced.
+    fn submit_wave(&mut self, problems: Vec<Problem>) -> Result<()> {
+        let (requests, origin) = self.build_wave(&problems);
+        let pool = self.pool_mut()?;
+        for r in requests {
+            pool.submit(r)?;
+        }
+        let submitted_epoch = pool.epoch();
+        self.inflight.push_back(PendingWave {
+            problems,
+            origin,
+            submitted_epoch,
+            // a non-front wave is parked behind its fence; its clock
+            // is restarted when the wave ahead of it drains
+            eligible_at: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// Pull resolved tickets from the streaming pool until every id in
+    /// `want` has completed, buffering completions that belong to
+    /// other (later) waves for their own collection. Returns the
+    /// wanted completions sorted by request id.
+    fn collect_ids(
+        &mut self,
+        want: &BTreeSet<u64>,
+    ) -> Result<Vec<Completion>> {
+        let mut out: Vec<Completion> = Vec::with_capacity(want.len());
+        let mut missing: BTreeSet<u64> = want.clone();
+        // an earlier collection may already have buffered some of ours
+        let buffered: Vec<u64> = missing
+            .iter()
+            .copied()
+            .filter(|id| self.early.contains_key(id))
+            .collect();
+        for id in buffered {
+            out.push(self.early.remove(&id).unwrap());
+            missing.remove(&id);
+        }
+        while !missing.is_empty() {
+            let resolved = match &mut self.rollout {
+                Rollout::Pool(p) => p.next_resolved()?,
+                Rollout::Single(_) => bail!(
+                    "streaming collection requires the engine pool"
+                ),
+            };
+            match resolved {
+                Some(Completed::Done(c)) => {
+                    if missing.remove(&c.id) {
+                        out.push(c);
+                    } else {
+                        self.early.insert(c.id, c);
+                    }
+                }
+                Some(Completed::Aborted(id)) => bail!(
+                    "request {id} was aborted while the RL loop was \
+                     waiting on it"
+                ),
+                Some(Completed::Failed(id, msg)) => {
+                    bail!("request {id} failed: {msg}")
+                }
+                None => bail!(
+                    "the pool ran dry with {} wave requests unresolved",
+                    missing.len()
+                ),
+            }
+        }
+        out.sort_by_key(|c| c.id);
+        Ok(out)
+    }
+
+    /// Phase 3 shared by both drivers: map completions back onto their
+    /// problems, score, assemble the DAPO batch (threading each
+    /// completion's behavior epoch through `TrainBatch::epochs`, so
+    /// the TIS/MIS denominators stay attributable to the epoch the
+    /// tokens were actually sampled under) and run one train step,
+    /// recording the training metrics.
+    fn train_phase(
+        &mut self,
+        rec: &mut StepRecord,
+        problems: &[Problem],
+        origin: &BTreeMap<u64, usize>,
+        completions: Vec<Completion>,
+    ) -> Result<()> {
+        let n = self.cfg.samples_per_prompt;
         let mut samples: Vec<Sample> = Vec::new();
         for c in completions {
             let idx = *origin
@@ -294,9 +696,8 @@ impl RlLoop {
         }
         crate::rl::dapo::score(&mut samples);
 
-        // ---- phase 3: training (DAPO + TIS) ----
         let t2 = Instant::now();
-        let c = &self.rt.manifest.constants;
+        let c = self.rt.manifest.constants.clone();
         let batch = TrainBatch::assemble(
             &samples,
             c.b_train,
@@ -328,14 +729,15 @@ impl RlLoop {
         rec.set("exceed_fc1", metrics.get("exceed_fc1") as f64);
         rec.set("exceed_other", metrics.get("exceed_other") as f64);
         rec.set("exceed_p99", metrics.get("exceed_p99") as f64);
-
-        // ---- validation probe (through the rollout engine, like the
-        // paper's online AIME24 eval) ----
-        if step % self.cfg.validate_every == 0 {
-            self.last_val_acc = self.validate()?;
-        }
-        rec.set("val_accuracy", self.last_val_acc);
-        Ok(rec)
+        rec.set(
+            "behavior_epoch_min",
+            metrics.get("behavior_epoch_min") as f64,
+        );
+        rec.set(
+            "behavior_epoch_max",
+            metrics.get("behavior_epoch_max") as f64,
+        );
+        Ok(())
     }
 
     /// Greedy decoding over the held-out set; exact-match accuracy.
@@ -356,7 +758,24 @@ impl RlLoop {
                 },
             });
         }
-        let completions = self.rollout.generate(requests)?;
+        // with pipelined waves in flight the barrier generate would
+        // (rightly) refuse to mix with the live stream, so the probes
+        // ride the session API instead — greedy decoding under the
+        // current weights either way, and the wave outputs are
+        // admission-interleaving-independent by the pool's
+        // determinism contract
+        let completions = if self.cfg.pipeline_depth > 0 {
+            let ids: BTreeSet<u64> = origin.keys().copied().collect();
+            {
+                let pool = self.pool_mut()?;
+                for r in requests {
+                    pool.submit(r)?;
+                }
+            }
+            self.collect_ids(&ids)?
+        } else {
+            self.rollout.generate(requests)?
+        };
         let mut correct = 0usize;
         for c in &completions {
             let idx = origin[&c.id];

@@ -4,11 +4,17 @@
 //!   smoke                         load artifacts, run one decode + one
 //!                                 train step, print sanity numbers
 //!   train   [--arch --rollout --train-variant --steps --no-tis
-//!            --replicas N --streaming ...]
+//!            --replicas N --streaming --pipeline D --staleness S ...]
 //!                                 run one RL experiment config
 //!                                 (--replicas > 1 = engine pool;
 //!                                 --streaming = continuous admission
-//!                                 + epoch-fenced weight sync)
+//!                                 + epoch-fenced weight sync;
+//!                                 --pipeline D = cross-step pipelined
+//!                                 loop keeping D next-step waves in
+//!                                 flight during training, implies
+//!                                 --streaming; --staleness S widens
+//!                                 the TIS/MIS epoch window — defaults
+//!                                 to exactly the pipeline's lag)
 //!   reproduce --figure figN       regenerate a paper figure's CSVs
 //!   perf    --figure figN         print a perf figure's table rows
 //!   list                          list artifacts and experiment configs
@@ -157,6 +163,25 @@ fn train(args: &Args) -> Result<()> {
     // continuous streaming admission + epoch-fenced weight sync
     // (bit-identical outputs — a pure throughput/latency knob)
     cfg.rollout_streaming = args.bool("streaming") || cfg.rollout_streaming;
+    // cross-step pipelining: keep D next-step rollout waves decoding
+    // in the pool while the current step trains (DESIGN.md §6)
+    cfg.pipeline_depth = args.usize_or("pipeline", cfg.pipeline_depth)?;
+    cfg.max_epoch_staleness = args
+        .usize_or("staleness", cfg.max_epoch_staleness as usize)?
+        as u64;
+    if cfg.pipeline_depth > 0 {
+        // pipelining rides the streaming session API, and an unset
+        // staleness window defaults to exactly the schedule's lag
+        // (depth * weight-epochs-per-step) so `--pipeline 1` works
+        // out of the box without silently widening a configured value
+        cfg.rollout_streaming = true;
+        if args.get("staleness").is_none()
+            && cfg.max_epoch_staleness == 0
+        {
+            cfg.max_epoch_staleness =
+                cfg.pipeline_depth as u64 * cfg.epochs_per_step();
+        }
+    }
     let rt = Arc::new(Runtime::new(artifacts_dir(args))?);
     let mut rl = RlLoop::new(rt, cfg)?;
     rl.run()?;

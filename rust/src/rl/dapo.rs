@@ -23,6 +23,10 @@ pub struct Sample {
     pub group: usize,
 }
 
+/// Epoch tag carried by padding rows of [`TrainBatch::epochs`] (no
+/// completion backs them; they are fully masked).
+pub const EPOCH_PAD: u64 = u64::MAX;
+
 /// Assembled tensors for one train-step artifact call.
 #[derive(Clone, Debug)]
 pub struct TrainBatch {
@@ -32,6 +36,14 @@ pub struct TrainBatch {
     pub mask: Vec<f32>,         // (B, T-1)
     pub advantages: Vec<f32>,   // (B, T-1)
     pub rollout_logp: Vec<f32>, // (B, T-1)
+    /// per-row behavior-policy weight epoch (`Completion::epoch`) —
+    /// the epoch each row's `rollout_logp` (the TIS/MIS denominator)
+    /// was measured under. Under cross-step pipelining rows may be
+    /// tagged behind the trainer's current epoch; the RL loop bounds
+    /// that staleness, and the trainer reports the batch's
+    /// min/max so it stays auditable. Padding rows carry
+    /// [`EPOCH_PAD`].
+    pub epochs: Vec<u64>, // (B,)
     pub mean_reward: f32,
     pub mean_response_len: f32,
     /// groups dropped by dynamic sampling (zero variance)
@@ -115,11 +127,13 @@ impl TrainBatch {
         let mut mask = vec![0.0f32; b * (t - 1)];
         let mut advantages = vec![0.0f32; b * (t - 1)];
         let mut rollout_logp = vec![0.0f32; b * (t - 1)];
+        let mut epochs = vec![EPOCH_PAD; b];
         let mut total_reward = 0.0f32;
         let mut total_len = 0usize;
 
         for (i, s) in samples.iter().take(b).enumerate() {
             let plen = s.problem.prompt.len();
+            epochs[i] = s.completion.epoch;
             let resp = &s.completion.tokens;
             total_reward += s.reward;
             total_len += resp.len();
@@ -142,8 +156,14 @@ impl TrainBatch {
             // dynamic-sampling statistic.
             // mask/adv/logp at position j predict token j+1: response
             // token r_k sits at absolute index plen + k, so its
-            // prediction slot is plen + k - 1
+            // prediction slot is plen + k - 1 — undefined for the very
+            // first token of an EMPTY prompt (nothing precedes it to
+            // predict from; the old `plen + k - 1` underflowed usize
+            // and panicked there), so that token is skipped
             for (k, _) in resp.iter().enumerate() {
+                if plen + k == 0 {
+                    continue;
+                }
                 let slot = plen + k - 1;
                 if slot >= t - 1 {
                     break;
@@ -166,6 +186,7 @@ impl TrainBatch {
             mask,
             advantages,
             rollout_logp,
+            epochs,
             mean_reward: total_reward / used as f32,
             mean_response_len: total_len as f32 / used as f32,
             dropped_groups,
@@ -177,7 +198,7 @@ impl TrainBatch {
 mod tests {
     use super::*;
     use crate::rollout::request::FinishReason;
-    use crate::rl::task::{make_problem, TOK_EOS};
+    use crate::rl::task::{make_problem, Problem, TOK_EOS};
 
     fn sample(group: usize, reward: f32, resp: Vec<i32>) -> Sample {
         let problem = make_problem(2, 3);
@@ -263,6 +284,69 @@ mod tests {
     fn degenerate_t_panics_with_diagnostic() {
         let samples = vec![sample(0, 1.0, vec![5, TOK_EOS])];
         let _ = TrainBatch::assemble(&samples, 2, 1, 1e-4, false);
+    }
+
+    #[test]
+    fn empty_prompt_does_not_underflow() {
+        // regression: `plen + k - 1` underflowed usize (debug panic)
+        // for the FIRST response token of an empty prompt (plen == 0,
+        // k == 0). That token has no prediction slot — position j
+        // predicts token j+1, and nothing precedes it — so it is
+        // skipped; the SECOND response token lands at slot 0.
+        let problem = Problem {
+            a: 0,
+            b: 0,
+            prompt: Vec::new(),
+            answer: vec![5, TOK_EOS],
+        };
+        let resp = vec![5i32, TOK_EOS];
+        let s = Sample {
+            problem,
+            completion: Completion {
+                id: 0,
+                prompt: Vec::new(),
+                tokens: resp.clone(),
+                logprobs: vec![-0.25; resp.len()],
+                logprobs_full: vec![-0.25; resp.len()],
+                finish: FinishReason::Eos,
+                preemptions: 0,
+                epoch: 0,
+            },
+            reward: 1.0,
+            group: 0,
+        };
+        let batch = TrainBatch::assemble(&[s], 2, 16, 1e-4, false);
+        // the row is response-only
+        assert_eq!(batch.tokens[0], 5);
+        assert_eq!(batch.tokens[1], TOK_EOS);
+        // slot 0 predicts token index 1 (EOS) and carries ITS logprob;
+        // the skipped first token contributed no slot anywhere
+        assert_eq!(batch.mask[0], 1.0);
+        assert_eq!(batch.rollout_logp[0], -0.25);
+        assert_eq!(
+            batch.mask.iter().filter(|&&m| m == 1.0).count(),
+            1,
+            "exactly one predictable response token"
+        );
+    }
+
+    #[test]
+    fn per_row_epochs_thread_through_assembly() {
+        // the cross-step pipelining bookkeeping: each row's behavior
+        // epoch tag (and its rollout_logp denominators) come from that
+        // row's OWN completion, padding rows are EPOCH_PAD
+        let mut s0 = sample(0, 1.0, vec![5, TOK_EOS]);
+        s0.completion.epoch = 3;
+        let mut s1 = sample(0, 0.0, vec![9, TOK_EOS]);
+        s1.completion.epoch = 4;
+        let plen = s0.problem.prompt.len();
+        let batch = TrainBatch::assemble(&[s0, s1], 4, 16, 1e-4, false);
+        assert_eq!(batch.epochs[0], 3);
+        assert_eq!(batch.epochs[1], 4);
+        assert_eq!(batch.epochs[2], EPOCH_PAD);
+        assert_eq!(batch.epochs[3], EPOCH_PAD);
+        // row 0's denominator slots hold row 0's behavior logprobs
+        assert_eq!(batch.rollout_logp[plen - 1], -0.5);
     }
 
     #[test]

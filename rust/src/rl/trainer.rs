@@ -12,7 +12,7 @@ use std::sync::Arc;
 use crate::runtime::{HostArray, Runtime};
 use crate::util::error::{bail, Result};
 
-use super::dapo::TrainBatch;
+use super::dapo::{TrainBatch, EPOCH_PAD};
 
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
@@ -118,6 +118,15 @@ impl Trainer {
                 self.t
             );
         }
+        if batch.epochs.len() != batch.b {
+            bail!(
+                "batch carries {} behavior-epoch tags for {} rows — \
+                 the TIS/MIS denominators would not be attributable \
+                 to their sampling epochs",
+                batch.epochs.len(),
+                batch.b
+            );
+        }
         let exe = self.rt.load(&format!(
             "{}_train_{}",
             self.cfg.arch, self.cfg.variant
@@ -168,6 +177,26 @@ impl Trainer {
         let mut metrics = TrainMetrics::default();
         for (name, &v) in names.iter().zip(metric_vals.iter()) {
             metrics.values.insert(name.clone(), v);
+        }
+        // behavior-epoch provenance: which weight epochs this batch's
+        // rollout_logp (the TIS/MIS denominators) were measured under.
+        // Under cross-step pipelining these run behind the trainer's
+        // epoch by the bounded staleness; reporting min/max keeps the
+        // per-epoch correctness auditable from the metrics alone.
+        let (mut emin, mut emax) = (u64::MAX, 0u64);
+        for &e in &batch.epochs {
+            if e != EPOCH_PAD {
+                emin = emin.min(e);
+                emax = emax.max(e);
+            }
+        }
+        if emin <= emax {
+            metrics
+                .values
+                .insert("behavior_epoch_min".into(), emin as f32);
+            metrics
+                .values
+                .insert("behavior_epoch_max".into(), emax as f32);
         }
         Ok(metrics)
     }

@@ -137,9 +137,16 @@ impl KvBlockManager {
 
     /// Admit a sequence with an initial `tokens` tokens (prompt).
     /// Returns false (and counts a failure) if blocks are unavailable.
+    /// A 0-token allocate is clamped to 1 token *consistently*: the
+    /// old code sized the blocks from `tokens.max(1)` but stored the
+    /// raw 0, leaving a 1-block sequence whose `seq_tokens()` /
+    /// `at_block_boundary()` disagreed with its allocation — it never
+    /// looked block-boundary-full, so it evaded the scheduler's
+    /// admission growth reserve.
     pub fn allocate(&mut self, id: u64, tokens: usize) -> bool {
         assert!(!self.seqs.contains_key(&id), "seq {id} already allocated");
-        let need = self.blocks_for(tokens.max(1));
+        let tokens = tokens.max(1);
+        let need = self.blocks_for(tokens);
         if need > self.free.len() {
             self.alloc_failures += 1;
             return false;
@@ -197,6 +204,16 @@ impl KvBlockManager {
             seen[b] = true;
         }
         for (id, s) in &self.seqs {
+            // every live allocation accounts for at least one token —
+            // a 0-token sequence would hold blocks its own accessors
+            // (`seq_tokens`, `at_block_boundary`) don't account for
+            if s.tokens == 0 {
+                return Err(format!(
+                    "seq {id}: 0 tokens recorded for {} allocated \
+                     block(s)",
+                    s.blocks.len()
+                ));
+            }
             let max_tokens = s.blocks.len() * self.geometry.block_tokens;
             if s.tokens > max_tokens {
                 return Err(format!(
@@ -282,6 +299,33 @@ mod tests {
         assert_eq!(m.alloc_failures, 1);
         assert!(!m.append_token(1));
         assert_eq!(m.alloc_failures, 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zero_token_allocate_is_clamped_consistently() {
+        // regression: allocate(id, 0) used to size its blocks from
+        // max(1) but record 0 tokens, so the sequence's accounting
+        // disagreed with its allocation (and `at_block_boundary` could
+        // never fire, dodging the scheduler's growth reserve)
+        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), 4);
+        assert!(m.allocate(1, 0));
+        assert_eq!(m.seq_tokens(1), 1, "clamped token count is stored");
+        assert_eq!(m.used_blocks(), 1);
+        assert!(!m.at_block_boundary(1));
+        m.check_invariants().unwrap();
+        // growth proceeds from the clamped count: 15 more appends fill
+        // the first block exactly, making the boundary visible
+        for _ in 0..15 {
+            assert!(m.append_token(1));
+        }
+        assert_eq!(m.seq_tokens(1), 16);
+        assert!(m.at_block_boundary(1), "boundary must be observable");
+        assert_eq!(m.used_blocks(), 1);
+        assert!(m.append_token(1));
+        assert_eq!(m.used_blocks(), 2);
+        m.check_invariants().unwrap();
+        m.release(1);
         m.check_invariants().unwrap();
     }
 

@@ -27,7 +27,11 @@
 //! id-sorted; [`EnginePool::abort`] cancels an in-flight ticket. Each
 //! worker loop: pull every queued message (admitting requests into the
 //! running engine mid-decode), run ONE engine step, ship finished
-//! completions, repeat; it blocks only when idle.
+//! completions, repeat; it blocks only when idle. Aborts jump pending
+//! fences both ways: cancelling the straggler a fence is draining
+//! lets the fence apply immediately, and cancelling a submission
+//! still parked BEHIND a fence resolves it `Aborted` without it ever
+//! decoding.
 //!
 //! ## Epoch fences
 //!
@@ -336,12 +340,28 @@ fn worker_main(
             };
             match msg {
                 ToWorker::Abort(id) => {
-                    // jumps any pending fence. If the target is still
-                    // parked in the backlog, the cancel simply loses
-                    // (the ticket resolves Done later) — exactly-once
-                    // either way. Unknown ids: the completion already
-                    // crossed (or is about to cross) the event channel.
+                    // jumps any pending fence: cancelling propagates
+                    // straight into the scheduler, so aborting the
+                    // very straggler a fence is blocked on frees the
+                    // engine and lets the fence apply immediately
+                    // instead of waiting out max_new_tokens. A target
+                    // still PARKED in the backlog (submitted behind a
+                    // pending fence) never reached the engine — pull
+                    // it out of the backlog and resolve it Aborted
+                    // right away rather than letting a cancelled
+                    // request decode its full budget under the
+                    // post-fence epoch. Unknown ids: the completion
+                    // already crossed (or is about to cross) the
+                    // event channel — exactly-once either way.
                     if engine.cancel(id) {
+                        let _ = events.send(Event::Aborted(replica, id));
+                    } else if let Some(pos) =
+                        backlog.iter().position(|m| {
+                            matches!(m, ToWorker::Submit(r, _)
+                                if r.id == id)
+                        })
+                    {
+                        let _ = backlog.remove(pos);
                         let _ = events.send(Event::Aborted(replica, id));
                     }
                 }
@@ -1117,6 +1137,17 @@ impl EnginePool {
             bail!("only {got}/{n} replicas reported stats");
         }
         Ok(out)
+    }
+}
+
+impl std::fmt::Debug for EnginePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EnginePool")
+            .field("n_replicas", &self.workers.len())
+            .field("epoch", &self.epoch)
+            .field("outstanding", &self.outstanding.len())
+            .field("ready", &self.ready.len())
+            .finish_non_exhaustive()
     }
 }
 

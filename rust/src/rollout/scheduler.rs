@@ -398,6 +398,34 @@ mod tests {
     }
 
     #[test]
+    fn cancel_reaches_a_preempted_and_requeued_request() {
+        // abort propagation must cover every place a request can live:
+        // a preempted sequence sits requeued at the FRONT of the
+        // waiting queue (not in `running`), and cancelling it there
+        // must free its place so the fence/drain it was blocking can
+        // proceed
+        let mut s = mk(4, 4);
+        s.submit(req(1, 4));
+        s.submit(req(2, 4));
+        assert_eq!(s.admit().len(), 2);
+        let ids = s.running_ids().to_vec();
+        // grow until the newest (2) is evicted and requeued
+        let mut preempted = Vec::new();
+        for _ in 0..5 {
+            preempted.extend(s.extend_all(&ids).preempted);
+        }
+        assert_eq!(preempted, vec![2]);
+        assert_eq!(s.head_of_line().unwrap().id, 2);
+        assert!(s.cancel(2), "preempted request must cancel");
+        assert_eq!(s.outstanding_ids(), vec![1]);
+        s.check_invariants().unwrap();
+        // and the engine can run dry without ever re-admitting 2
+        s.finish(1);
+        assert!(s.is_idle());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
     fn finish_releases_capacity() {
         let mut s = mk(2, 2);
         s.submit(req(1, 4));

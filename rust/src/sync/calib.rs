@@ -78,3 +78,96 @@ impl Calibrator {
         Ok((k, v))
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::task::TOK_PAD;
+    use crate::rl::trainer::{Trainer, TrainerConfig};
+    use crate::runtime::Runtime;
+
+    /// Hermetic runtime + trainer params + an inference-side
+    /// calibrator over the dense arch (b_train 16, t_train 32 in the
+    /// synthetic manifest).
+    fn setup() -> (Arc<Runtime>, Trainer, Calibrator) {
+        let rt = Arc::new(Runtime::hermetic());
+        let trainer =
+            Trainer::new(rt.clone(), TrainerConfig::new("dense", "bf16"))
+                .unwrap();
+        let calib = Calibrator::new(
+            rt.clone(),
+            "dense",
+            CalibStrategy::InferenceSide,
+        )
+        .unwrap();
+        (rt, trainer, calib)
+    }
+
+    fn rows(n: usize, len: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|i| {
+                (0..len)
+                    .map(|j| ((i + j) % 10) as i32)
+                    .collect::<Vec<i32>>()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn extra_rows_beyond_b_train_are_ignored() {
+        let (rt, trainer, calib) = setup();
+        let b = rt.manifest.constants.b_train;
+        let base = rows(b, 6);
+        let mut extra = base.clone();
+        extra.extend(rows(4, 6)); // rows b..b+4 must not matter
+        let a = calib
+            .recalibrate(trainer.params(), &base, TOK_PAD)
+            .unwrap();
+        let c = calib
+            .recalibrate(trainer.params(), &extra, TOK_PAD)
+            .unwrap();
+        assert!(a.0 > 0.0 && a.1 > 0.0, "scales must be positive");
+        assert_eq!(a, c, "rows beyond b_train must be truncated away");
+    }
+
+    #[test]
+    fn long_rows_are_truncated_to_t_train() {
+        let (rt, trainer, calib) = setup();
+        let t = rt.manifest.constants.t_train;
+        let long = rows(4, t + 10);
+        let pre_cut: Vec<Vec<i32>> =
+            long.iter().map(|r| r[..t].to_vec()).collect();
+        let a = calib
+            .recalibrate(trainer.params(), &long, TOK_PAD)
+            .unwrap();
+        let c = calib
+            .recalibrate(trainer.params(), &pre_cut, TOK_PAD)
+            .unwrap();
+        assert_eq!(a, c, "tokens beyond t_train must be truncated away");
+    }
+
+    #[test]
+    fn short_rows_are_pad_filled() {
+        let (rt, trainer, calib) = setup();
+        let t = rt.manifest.constants.t_train;
+        let short = rows(4, 5);
+        // manually padding every row to the full (b, t) grid must be
+        // the identity: recalibrate pads with the SAME token itself
+        let padded: Vec<Vec<i32>> = short
+            .iter()
+            .map(|r| {
+                let mut row = r.clone();
+                row.resize(t, TOK_PAD);
+                row
+            })
+            .collect();
+        let a = calib
+            .recalibrate(trainer.params(), &short, TOK_PAD)
+            .unwrap();
+        let c = calib
+            .recalibrate(trainer.params(), &padded, TOK_PAD)
+            .unwrap();
+        assert_eq!(a, c, "short rows must be PAD-filled to t_train");
+        assert!(a.0.is_finite() && a.1.is_finite());
+    }
+}

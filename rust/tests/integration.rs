@@ -622,6 +622,177 @@ fn rl_loop_on_engine_pool_matches_single_engine() {
 }
 
 #[test]
+fn rl_loop_pipelined_trains_with_bounded_staleness() {
+    // the cross-step pipelining acceptance path: pipeline_depth=1 with
+    // max_epoch_staleness=1 trains end to end, every batch's
+    // completion epochs sit inside the allowed window, and the TIS
+    // denominators are attributable to exactly the epoch the tokens
+    // were sampled under (the trainer's behavior_epoch_min/max
+    // provenance metrics pin it per step)
+    let mut cfg = ExperimentConfig::new(
+        "pipelined_e2e",
+        "dense",
+        "fp8lin", // weights-only sync: exactly 1 epoch per step
+        "bf16",
+    );
+    cfg.steps = 4;
+    cfg.prompts_per_step = 4;
+    cfg.samples_per_prompt = 4; // 16 rows == b_train
+    cfg.max_digits = 1;
+    cfg.max_sum = Some(9);
+    cfg.max_new_tokens = 4;
+    cfg.validate_every = 1;
+    cfg.rollout_replicas = 2;
+    cfg.rollout_streaming = true;
+    cfg.pipeline_depth = 1;
+    cfg.max_epoch_staleness = 1;
+    let mut rl = RlLoop::new(runtime(), cfg).unwrap();
+    for step in 0..4 {
+        let rec = rl.step(step).unwrap();
+        assert_eq!(rec.get("pipeline_depth"), 1.0);
+        assert!(rec.get("pipeline_overlap_s") >= 0.0);
+        // one weight fence per step: the synced epoch is step+1
+        assert_eq!(rec.get("rollout_epoch"), (step + 1) as f64);
+        // step 0 consumes the prologue wave (submitted after step 0's
+        // own fence: staleness 0); every later step trains on the wave
+        // submitted one step — one epoch — earlier
+        let want_stale = if step == 0 { 0.0 } else { 1.0 };
+        assert_eq!(
+            rec.get("staleness_mean"),
+            want_stale,
+            "step {step}: wrong staleness"
+        );
+        // per-epoch-correct TIS denominators: every row of the batch
+        // came from ONE behavior epoch, exactly `staleness` behind the
+        // synced epoch and inside the allowed window
+        let emin = rec.get("behavior_epoch_min");
+        let emax = rec.get("behavior_epoch_max");
+        assert_eq!(
+            emin, emax,
+            "step {step}: one wave must mean one behavior epoch"
+        );
+        assert_eq!(emax, rec.get("rollout_epoch") - want_stale);
+        // training actually ran on the stale-but-corrected batch
+        let reward = rec.get("reward");
+        assert!((0.0..=1.0).contains(&reward), "reward {reward}");
+        assert!(rec.get("response_len") > 0.0);
+        assert!(rec.get("loss").is_finite());
+        assert!(rec.get("rollout_tokens") > 0.0);
+        let acc = rec.get("val_accuracy");
+        assert!((0.0..=1.0).contains(&acc), "val_accuracy {acc}");
+        rl.recorder.push(rec);
+    }
+    let stats = rl.engine_stats().unwrap();
+    assert!(stats.tokens_generated > 0);
+    assert_eq!(rl.recorder.steps.len(), 4);
+}
+
+#[test]
+fn pipelining_requires_streaming_and_a_wide_enough_window() {
+    // misconfigurations must fail at construction with a diagnostic,
+    // not at step d+1 with a confusing epoch error
+    let mut cfg =
+        ExperimentConfig::new("pipe_bad1", "dense", "bf16", "bf16");
+    cfg.pipeline_depth = 1;
+    cfg.max_epoch_staleness = 1;
+    let err = match RlLoop::new(runtime(), cfg) {
+        Ok(_) => panic!("pipelining without streaming must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("rollout_streaming"), "{err}");
+
+    let mut cfg =
+        ExperimentConfig::new("pipe_bad2", "dense", "fullfp8", "bf16");
+    cfg.rollout_streaming = true;
+    cfg.pipeline_depth = 1;
+    // fullfp8 bumps TWO epochs per step (weights + kv scales): a
+    // window of 1 would reject every steady-state batch
+    cfg.max_epoch_staleness = 1;
+    let err = match RlLoop::new(runtime(), cfg) {
+        Ok(_) => panic!("a too-narrow staleness window must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("max_epoch_staleness"), "{err}");
+}
+
+#[test]
+fn widening_the_staleness_window_alone_changes_nothing() {
+    // the determinism anchor, window edition: at pipeline_depth 0 the
+    // bounded-staleness check is a pure relaxation — a wider window
+    // over the same sequential schedule must leave every metric
+    // bit-identical (staleness stays 0; nothing is ever stale)
+    let mk = |name: &str, staleness: u64| {
+        let mut cfg =
+            ExperimentConfig::new(name, "dense", "fullfp8", "bf16");
+        cfg.steps = 2;
+        cfg.prompts_per_step = 4;
+        cfg.samples_per_prompt = 4;
+        cfg.max_digits = 1;
+        cfg.max_sum = Some(9);
+        cfg.max_new_tokens = 4;
+        cfg.validate_every = 1;
+        cfg.rollout_streaming = true;
+        cfg.max_epoch_staleness = staleness;
+        cfg
+    };
+    let mut tight = RlLoop::new(runtime(), mk("win_0", 0)).unwrap();
+    let mut wide = RlLoop::new(runtime(), mk("win_3", 3)).unwrap();
+    for step in 0..2 {
+        let a = tight.step(step).unwrap();
+        let b = wide.step(step).unwrap();
+        assert_eq!(a.get("staleness_mean"), 0.0);
+        assert_eq!(b.get("staleness_mean"), 0.0);
+        for key in [
+            "reward",
+            "response_len",
+            "loss",
+            "mismatch_kl",
+            "entropy",
+            "tis_mean",
+            "val_accuracy",
+            "rollout_tokens",
+            "rollout_epoch",
+        ] {
+            let (x, y) = (a.get(key), b.get(key));
+            assert!(
+                x == y || (x.is_nan() && y.is_nan()),
+                "step {step} {key}: tight {x} vs wide {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn trainer_side_calibration_first_step_falls_back_to_prompts() {
+    // step 0 has no training rows yet: TrainerSide calibration must
+    // fall back to the upcoming prompts (and step 1 then calibrates
+    // on the recorded training batch) — both branches execute here
+    let rt = runtime();
+    let mut cfg = ExperimentConfig::new(
+        "trainer_side_fallback",
+        "dense",
+        "kvfp8",
+        "bf16",
+    );
+    cfg.calib = CalibStrategy::TrainerSide;
+    cfg.steps = 2;
+    cfg.prompts_per_step = 4;
+    cfg.samples_per_prompt = 4;
+    cfg.max_digits = 1;
+    cfg.max_sum = Some(9);
+    cfg.max_new_tokens = 4;
+    cfg.validate_every = 1;
+    let mut rl = RlLoop::new(rt, cfg).unwrap();
+    for step in 0..2 {
+        let rec = rl.step(step).unwrap();
+        assert!(rec.get("loss").is_finite(), "step {step}");
+        assert!(rec.get("mismatch_kl").is_finite(), "step {step}");
+        // kvfp8 installs weights AND recalibrated scales every step
+        assert_eq!(rec.get("rollout_epoch"), (2 * (step + 1)) as f64);
+    }
+}
+
+#[test]
 fn rl_loop_runs_moe_arch_too() {
     let rt = runtime();
     let mut cfg =

@@ -274,6 +274,106 @@ fn mid_decode_weight_sync_fences_epochs() {
 }
 
 #[test]
+fn abort_unblocks_a_fence_blocked_straggler() {
+    // the abort-propagation ROADMAP follow-up: a pending epoch fence
+    // waits for the in-flight drain, so (a) aborting the straggler it
+    // is blocked on must Scheduler::cancel it immediately and let the
+    // fence apply, and (b) aborting a submission still PARKED behind
+    // the fence must resolve it Aborted without it ever decoding out
+    // its max_new_tokens budget under the new epoch (it used to run
+    // to completion and resolve Done).
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::time::Instant;
+
+    use fp8_rl::rollout::Completed;
+
+    let mut p = pool(1, "bf16", RoutePolicy::RoundRobin);
+    let long = |id: u64| Request {
+        id,
+        prompt: vec![12, (id % 10) as i32, 10, 3, 11],
+        params: SamplingParams {
+            temperature: 1.0,
+            max_new_tokens: 10_000,
+            eos: -1, // never terminates early
+            ..Default::default()
+        },
+    };
+    // the straggler the fence will block on
+    p.submit(long(0)).unwrap();
+    let rt = Arc::new(Runtime::hermetic());
+    let w = synced_weights(&rt);
+    assert_eq!(p.sync_weights(w).unwrap(), 1);
+    // a long post-fence submission: parked in the worker's backlog
+    // until the fence applies
+    p.submit(long(2)).unwrap();
+    // abort both sides of the fence
+    p.abort(0).unwrap();
+    p.abort(2).unwrap();
+    // a fresh post-fence request must run under the new epoch
+    p.submit(Request {
+        id: 3,
+        prompt: vec![12, 4, 10, 3, 11],
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 4,
+            ..Default::default()
+        },
+    })
+    .unwrap();
+
+    let t0 = Instant::now();
+    let mut done: BTreeMap<u64, fp8_rl::rollout::Completion> =
+        BTreeMap::new();
+    let mut aborted = BTreeSet::new();
+    while let Some(c) = p.next_resolved().unwrap() {
+        match c {
+            Completed::Done(c) => {
+                assert!(done.insert(c.id, c).is_none());
+            }
+            Completed::Aborted(id) => {
+                assert!(aborted.insert(id));
+            }
+            Completed::Failed(id, msg) => {
+                panic!("ticket {id} failed: {msg}")
+            }
+        }
+    }
+    // "promptly": nobody waited out a 10_000-token budget
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "fence-blocked abort took {:?}",
+        t0.elapsed()
+    );
+    // the parked submission must NEVER have decoded: the abort pulls
+    // it straight out of the backlog (margins here are deterministic —
+    // its abort is queued behind at most one ingest round while any
+    // run it could get needs dozens of rounds)
+    assert!(
+        aborted.contains(&2),
+        "backlog-parked ticket 2 must resolve Aborted, got {done:?}"
+    );
+    // the straggler resolves exactly once; Aborted in all but
+    // pathological scheduler timings (if the whole decode outran the
+    // abort it legitimately finished under the OLD epoch)
+    if let Some(c) = done.get(&0) {
+        assert_eq!(c.epoch, 0, "straggler ran pre-fence");
+    } else {
+        assert!(aborted.contains(&0), "ticket 0 must resolve");
+    }
+    // the fence applied and post-fence work runs under the new epoch
+    assert_eq!(p.epoch(), 1);
+    let c3 = done.get(&3).expect("post-fence request must complete");
+    assert_eq!(c3.epoch, 1, "post-fence submission on the old epoch");
+    assert_eq!(p.loads(), &[0], "everything settled");
+    // the pool stays serviceable under the new epoch
+    let after = p.generate(requests(10, 12)).unwrap();
+    assert_eq!(after.len(), 2);
+    for c in &after {
+        assert_eq!(c.epoch, 1);
+    }
+}
+
+#[test]
 fn pool_aggregates_stats_across_replicas() {
     let mut p = pool(4, "bf16", RoutePolicy::RoundRobin);
     let done = p.generate(requests(0, 16)).unwrap();
