@@ -66,7 +66,7 @@ fn main() {
             }
             for _ in 0..64 {
                 for id in 0..64u64 {
-                    m.append_token(id);
+                    black_box(m.append_token(id).is_ok());
                 }
             }
             for id in 0..64u64 {

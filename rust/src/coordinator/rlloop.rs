@@ -48,7 +48,6 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::rl::dapo::{Sample, TrainBatch};
 use crate::rl::task::{Problem, Task, TaskConfig, TOK_PAD};
@@ -60,7 +59,8 @@ use crate::rollout::{
 };
 use crate::runtime::Runtime;
 use crate::sync::{CalibStrategy, Calibrator, WeightSync, WeightSyncConfig};
-use crate::util::error::{bail, Result};
+use crate::util::clock::WallTimer;
+use crate::util::error::{bail, Context, Result};
 
 use super::config::ExperimentConfig;
 use super::metrics::{Recorder, StepRecord};
@@ -92,7 +92,7 @@ struct PendingWave {
     /// collection start is the time the wave decoded concurrently
     /// with sync/train/validation work — the `pipeline_overlap_s`
     /// metric.
-    eligible_at: Instant,
+    eligible_at: WallTimer,
 }
 
 pub struct RlLoop {
@@ -264,7 +264,7 @@ impl RlLoop {
         // ---- phase 1: weight synchronization (paper Fig 1) ----
         // quantized ONCE, then broadcast: every pool replica installs
         // the same Arc'd parameter list
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let spec = self.rt.manifest.model(&self.cfg.arch)?.clone();
         let (weights, _report) =
             self.sync.run_shared(&spec, self.trainer.params())?;
@@ -298,10 +298,10 @@ impl RlLoop {
                 r => r.install_kv_scales(ks, vs)?,
             }
         }
-        rec.set("sync_s", t0.elapsed().as_secs_f64());
+        rec.set("sync_s", t0.elapsed_s());
 
         // ---- phase 2: rollout (generation) ----
-        let t1 = Instant::now();
+        let t1 = WallTimer::start();
         let (requests, origin) = self.build_wave(&problems);
         debug_assert_eq!(origin.len(), requests.len());
         let pre = self.rollout.stats()?;
@@ -339,7 +339,7 @@ impl RlLoop {
             (post.tokens_generated - pre.tokens_generated) as f64,
         );
         rec.set("rollout_replicas", self.rollout.n_replicas() as f64);
-        rec.set("rollout_s", t1.elapsed().as_secs_f64());
+        rec.set("rollout_s", t1.elapsed_s());
 
         // ---- phase 3: training (DAPO + TIS) ----
         self.train_phase(&mut rec, &problems, &origin, completions)?;
@@ -368,7 +368,7 @@ impl RlLoop {
         // ---- phase 1: weight synchronization (asynchronous epoch
         // fences: in-flight waves finish under the weights they were
         // submitted under — the pipeline's whole premise) ----
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let spec = self.rt.manifest.model(&self.cfg.arch)?.clone();
         let (weights, _report) =
             self.sync.run_shared(&spec, self.trainer.params())?;
@@ -408,7 +408,7 @@ impl RlLoop {
             )?;
             self.pool_mut()?.sync_kv_scales(ks, vs)?;
         }
-        rec.set("sync_s", t0.elapsed().as_secs_f64());
+        rec.set("sync_s", t0.elapsed_s());
 
         // ---- phase 2a: submit this step's wave(s) behind the fences ----
         for problems in new_waves {
@@ -427,18 +427,15 @@ impl RlLoop {
         };
         // how long the wave decoded in the background before the loop
         // needed it (sync/train/validation work it overlapped with)
-        rec.set(
-            "pipeline_overlap_s",
-            wave.eligible_at.elapsed().as_secs_f64(),
-        );
-        let t1 = Instant::now();
+        rec.set("pipeline_overlap_s", wave.eligible_at.elapsed_s());
+        let t1 = WallTimer::start();
         let ids: BTreeSet<u64> = wave.origin.keys().copied().collect();
         let completions = self.collect_ids(&ids)?;
         // this wave has drained, so its epoch fence has applied on
         // every replica and the NEXT wave starts decoding about now —
         // that is the moment its overlap clock must start from
         if let Some(front) = self.inflight.front_mut() {
-            front.eligible_at = Instant::now();
+            front.eligible_at.restart();
         }
         // the fence stamping contract: every completion's tag equals
         // the pool epoch its wave was submitted under
@@ -481,7 +478,7 @@ impl RlLoop {
         rec.set("rollout_replicas", self.rollout.n_replicas() as f64);
         // the visible stall: how long the loop had to WAIT for the
         // wave on top of what already decoded during earlier phases
-        rec.set("rollout_s", t1.elapsed().as_secs_f64());
+        rec.set("rollout_s", t1.elapsed_s());
 
         // ---- phase 3: training, overlapped by the next wave's decode ----
         self.train_phase(
@@ -610,7 +607,7 @@ impl RlLoop {
             submitted_epoch,
             // a non-front wave is parked behind its fence; its clock
             // is restarted when the wave ahead of it drains
-            eligible_at: Instant::now(),
+            eligible_at: WallTimer::start(),
         });
         Ok(())
     }
@@ -632,8 +629,10 @@ impl RlLoop {
             .filter(|id| self.early.contains_key(id))
             .collect();
         for id in buffered {
-            out.push(self.early.remove(&id).unwrap());
-            missing.remove(&id);
+            if let Some(c) = self.early.remove(&id) {
+                out.push(c);
+                missing.remove(&id);
+            }
         }
         while !missing.is_empty() {
             let resolved = match &mut self.rollout {
@@ -685,10 +684,14 @@ impl RlLoop {
         for c in completions {
             let idx = *origin
                 .get(&c.id)
-                .expect("completion for unknown request");
+                .context("completion for unknown request")?;
             let pi = idx / n;
+            let problem = problems
+                .get(pi)
+                .context("completion origin slot out of range")?
+                .clone();
             samples.push(Sample {
-                problem: problems[pi].clone(),
+                problem,
                 completion: c,
                 reward: 0.0,
                 group: pi,
@@ -696,7 +699,7 @@ impl RlLoop {
         }
         crate::rl::dapo::score(&mut samples);
 
-        let t2 = Instant::now();
+        let t2 = WallTimer::start();
         let c = self.rt.manifest.constants.clone();
         let batch = TrainBatch::assemble(
             &samples,
@@ -712,7 +715,7 @@ impl RlLoop {
             .map(|r| r.to_vec())
             .collect();
         let metrics = self.trainer.train_step(&batch)?;
-        rec.set("train_s", t2.elapsed().as_secs_f64());
+        rec.set("train_s", t2.elapsed_s());
 
         rec.set("reward", batch.mean_reward as f64);
         rec.set("response_len", batch.mean_response_len as f64);
@@ -778,8 +781,13 @@ impl RlLoop {
         };
         let mut correct = 0usize;
         for c in &completions {
-            let idx = origin[&c.id];
-            if Task::is_correct(&problems[idx], &c.tokens) {
+            let idx = *origin
+                .get(&c.id)
+                .context("validation completion for unknown request")?;
+            let p = problems
+                .get(idx)
+                .context("validation origin index out of range")?;
+            if Task::is_correct(p, &c.tokens) {
                 correct += 1;
             }
         }

@@ -60,6 +60,7 @@ impl Fp8Format {
             // saturate (covers inf): max finite code
             return self.max_code() | sign;
         }
+        // lint: allow(D2): exact zero encodes to the zero code
         if ax == 0.0 {
             return sign;
         }
@@ -79,6 +80,7 @@ impl Fp8Format {
         let floor = scaled.floor();
         let frac = scaled - floor;
         let mut n = floor as u64;
+        // lint: allow(D2): exact tie detection for round-half-to-even
         if frac > 0.5 || (frac == 0.5 && n & 1 == 1) {
             n += 1;
         }
@@ -117,6 +119,7 @@ impl Fp8Format {
             }
         } else if exp == 0x1F {
             // e5m2 IEEE: inf / NaN
+            // lint: allow(D2): mantissa-field-is-zero test on a code
             return if mant == 0.0 {
                 sign * f32::INFINITY
             } else {

@@ -167,8 +167,11 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         peak_util = peak_util.max(sched.kv.utilization());
 
         // preempted sequences keep their `generated` progress (recompute
-        // semantics re-prefill it at readmission)
-        let _report = sched.extend_all(&running);
+        // semantics re-prefill it at readmission); an Err means corrupt
+        // kv bookkeeping, which ends the simulation early
+        if sched.extend_all(&running).is_err() {
+            break;
+        }
         // token bookkeeping + completion
         let survivors: Vec<u64> = sched.running_ids().to_vec();
         for id in survivors {

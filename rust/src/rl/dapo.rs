@@ -56,6 +56,14 @@ pub fn score(task_samples: &mut [Sample]) {
     }
 }
 
+/// Running reward moments for one prompt group.
+#[derive(Clone, Copy, Default)]
+struct GroupStat {
+    sum: f64,
+    sq: f64,
+    count: usize,
+}
+
 /// Group-relative advantages. Returns per-sample advantage.
 pub fn group_advantages(samples: &[Sample], eps: f32) -> Vec<f32> {
     let n_groups = samples
@@ -64,20 +72,23 @@ pub fn group_advantages(samples: &[Sample], eps: f32) -> Vec<f32> {
         .max()
         .map(|g| g + 1)
         .unwrap_or(0);
-    let mut sums = vec![0.0f64; n_groups];
-    let mut sqs = vec![0.0f64; n_groups];
-    let mut counts = vec![0usize; n_groups];
+    let mut stats = vec![GroupStat::default(); n_groups];
     for s in samples {
-        sums[s.group] += s.reward as f64;
-        sqs[s.group] += (s.reward as f64) * (s.reward as f64);
-        counts[s.group] += 1;
+        if let Some(g) = stats.get_mut(s.group) {
+            g.sum += s.reward as f64;
+            g.sq += (s.reward as f64) * (s.reward as f64);
+            g.count += 1;
+        }
     }
     samples
         .iter()
         .map(|s| {
-            let n = counts[s.group] as f64;
-            let mean = sums[s.group] / n;
-            let var = (sqs[s.group] / n - mean * mean).max(0.0);
+            let Some(g) = stats.get(s.group) else {
+                return 0.0;
+            };
+            let n = g.count.max(1) as f64;
+            let mean = g.sum / n;
+            let var = (g.sq / n - mean * mean).max(0.0);
             ((s.reward as f64 - mean) / (var.sqrt() + eps as f64)) as f32
         })
         .collect()
@@ -108,14 +119,18 @@ impl TrainBatch {
             .unwrap_or(0);
         let mut group_has_signal = vec![false; n_groups];
         if drop_zero_variance_groups {
-            let mut gmin = vec![f32::INFINITY; n_groups];
-            let mut gmax = vec![f32::NEG_INFINITY; n_groups];
+            let mut bounds =
+                vec![(f32::INFINITY, f32::NEG_INFINITY); n_groups];
             for s in samples {
-                gmin[s.group] = gmin[s.group].min(s.reward);
-                gmax[s.group] = gmax[s.group].max(s.reward);
+                if let Some(bd) = bounds.get_mut(s.group) {
+                    bd.0 = bd.0.min(s.reward);
+                    bd.1 = bd.1.max(s.reward);
+                }
             }
-            for g in 0..n_groups {
-                group_has_signal[g] = gmax[g] - gmin[g] > 1e-6;
+            for (has, (lo, hi)) in
+                group_has_signal.iter_mut().zip(bounds)
+            {
+                *has = hi - lo > 1e-6;
             }
         } else {
             group_has_signal.iter_mut().for_each(|x| *x = true);
@@ -131,22 +146,30 @@ impl TrainBatch {
         let mut total_reward = 0.0f32;
         let mut total_len = 0usize;
 
-        for (i, s) in samples.iter().take(b).enumerate() {
+        let rows = tokens
+            .chunks_mut(t)
+            .zip(epochs.iter_mut())
+            .zip(mask.chunks_mut(t - 1).zip(
+                advantages
+                    .chunks_mut(t - 1)
+                    .zip(rollout_logp.chunks_mut(t - 1)),
+            ));
+        for (
+            (s, &adv),
+            ((row_tok, epoch), (row_mask, (row_adv, row_lp))),
+        ) in samples.iter().zip(&advs).zip(rows)
+        {
             let plen = s.problem.prompt.len();
-            epochs[i] = s.completion.epoch;
+            *epoch = s.completion.epoch;
             let resp = &s.completion.tokens;
             total_reward += s.reward;
             total_len += resp.len();
             // row = prompt ++ response, truncated to t
-            for (j, &tok) in s
-                .problem
-                .prompt
-                .iter()
-                .chain(resp.iter())
-                .take(t)
-                .enumerate()
+            for (dst, &tok) in row_tok
+                .iter_mut()
+                .zip(s.problem.prompt.iter().chain(resp.iter()))
             {
-                tokens[i * t + j] = tok;
+                *dst = tok;
             }
             // NOTE: zero-variance ("dropped") groups keep their mask —
             // their advantage is exactly 0 so they contribute no
@@ -158,20 +181,21 @@ impl TrainBatch {
             // token r_k sits at absolute index plen + k, so its
             // prediction slot is plen + k - 1 — undefined for the very
             // first token of an EMPTY prompt (nothing precedes it to
-            // predict from; the old `plen + k - 1` underflowed usize
-            // and panicked there), so that token is skipped
-            for (k, _) in resp.iter().enumerate() {
-                if plen + k == 0 {
-                    continue;
-                }
-                let slot = plen + k - 1;
-                if slot >= t - 1 {
-                    break;
-                }
-                mask[i * (t - 1) + slot] = 1.0;
-                advantages[i * (t - 1) + slot] = advs[i];
-                rollout_logp[i * (t - 1) + slot] =
-                    s.completion.logprobs[k];
+            // predict from), so that token is skipped
+            let start = plen.saturating_sub(1);
+            let skip_k = usize::from(plen == 0);
+            let slots = row_mask.iter_mut().skip(start).zip(
+                row_adv
+                    .iter_mut()
+                    .skip(start)
+                    .zip(row_lp.iter_mut().skip(start)),
+            );
+            let lps =
+                s.completion.logprobs.iter().take(resp.len());
+            for ((m, (a, l)), &lp) in slots.zip(lps.skip(skip_k)) {
+                *m = 1.0;
+                *a = adv;
+                *l = lp;
             }
         }
         // metrics average over the rows actually assembled: when a step

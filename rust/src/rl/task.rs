@@ -141,7 +141,8 @@ impl Task {
     pub fn reward(problem: &Problem, response: &[i32]) -> f32 {
         let exact = response == problem.answer.as_slice();
         // digit-prefix credit (ignores trailing EOS slot)
-        let want = &problem.answer[..problem.answer.len() - 1];
+        let cut = problem.answer.len().saturating_sub(1);
+        let want = problem.answer.get(..cut).unwrap_or(&[]);
         let mut correct = 0usize;
         for (i, &w) in want.iter().enumerate() {
             if response.get(i) == Some(&w) {
@@ -150,7 +151,7 @@ impl Task {
                 break;
             }
         }
-        let frac = correct as f32 / want.len() as f32;
+        let frac = correct as f32 / want.len().max(1) as f32;
         0.5 * frac + if exact { 0.5 } else { 0.0 }
     }
 

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::runtime::{HostArray, Runtime};
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 
 use super::dapo::{TrainBatch, EPOCH_PAD};
 
@@ -168,11 +168,19 @@ impl Trainer {
         if out.len() != 3 * n + 2 {
             bail!("train artifact returned {} outputs", out.len());
         }
-        self.params = out[..n].to_vec();
-        self.m_state = out[n..2 * n].to_vec();
-        self.v_state = out[2 * n..3 * n].to_vec();
-        self.step = out[3 * n].as_f32()?[0];
-        let metric_vals = out[3 * n + 1].as_f32()?;
+        let mut it = out.into_iter();
+        self.params = it.by_ref().take(n).collect();
+        self.m_state = it.by_ref().take(n).collect();
+        self.v_state = it.by_ref().take(n).collect();
+        let step_arr =
+            it.next().context("train artifact: missing step")?;
+        self.step = *step_arr
+            .as_f32()?
+            .first()
+            .context("train artifact: empty step output")?;
+        let metrics_arr =
+            it.next().context("train artifact: missing metrics")?;
+        let metric_vals = metrics_arr.as_f32()?;
         let names = &self.rt.manifest.constants.metric_names;
         let mut metrics = TrainMetrics::default();
         for (name, &v) in names.iter().zip(metric_vals.iter()) {
@@ -216,9 +224,17 @@ impl Trainer {
             tokens.to_vec(),
         ));
         let out = exe.run(&inputs)?;
-        Ok((
-            out[0].as_f32()?.to_vec(),
-            out[1].as_f32()?.to_vec(),
-        ))
+        let mut it = out.into_iter();
+        let lp = it
+            .next()
+            .context("logprobs artifact: missing logprobs")?
+            .as_f32()?
+            .to_vec();
+        let ent = it
+            .next()
+            .context("logprobs artifact: missing entropy")?
+            .as_f32()?
+            .to_vec();
+        Ok((lp, ent))
     }
 }

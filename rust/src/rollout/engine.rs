@@ -34,7 +34,7 @@
 use std::sync::Arc;
 
 use crate::runtime::{DeviceBuffer, Executable, HostArray, Runtime};
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 use crate::util::rng::Pcg64;
 
 use super::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
@@ -473,10 +473,9 @@ impl HloEngine {
             // a violated invariant can't spin the caller forever.
             let admitted = self.prefill_wave(done)?;
             if admitted == 0 && !self.sched.is_idle() {
-                let head = self
-                    .sched
-                    .head_of_line()
-                    .expect("stalled scheduler with an empty queue");
+                let Some(head) = self.sched.head_of_line() else {
+                    bail!("stalled scheduler with an empty queue");
+                };
                 bail!(
                     "engine stalled: request {} can never be admitted — \
                      its {}-token prompt (+1 growth reserve) needs {} KV \
@@ -491,7 +490,7 @@ impl HloEngine {
         }
         // occupied slots == running sequences, so admission can rely on
         // the block-boundary growth reserve and decode always has work
-        self.admit_into_slots();
+        self.admit_into_slots()?;
         self.decode_step(done)
     }
 
@@ -524,17 +523,20 @@ impl HloEngine {
     }
 
     /// Admit waiting requests into free slots.
-    fn admit_into_slots(&mut self) {
+    fn admit_into_slots(&mut self) -> Result<()> {
         let admitted = self.sched.admit();
         for req in admitted {
-            let slot_idx = self
-                .slots
-                .iter()
-                .position(|s| s.is_none())
-                .expect("scheduler admitted beyond slot capacity");
-            let first = req.prompt[0];
             let rng = self.slot_rng(req.id);
-            self.slots[slot_idx] = Some(Slot {
+            let first = *req
+                .prompt
+                .first()
+                .context("admitted request has an empty prompt")?;
+            let Some(slot) =
+                self.slots.iter_mut().find(|s| s.is_none())
+            else {
+                bail!("scheduler admitted beyond slot capacity");
+            };
+            *slot = Some(Slot {
                 next_feed: first,
                 cursor: 1,
                 pos: 0,
@@ -545,6 +547,7 @@ impl HloEngine {
                 req,
             });
         }
+        Ok(())
     }
 
     /// Whole-batch prefill fast path (engine must be empty). Returns
@@ -559,14 +562,18 @@ impl HloEngine {
         }
         self.stats.prefill_waves += 1;
         let mut tokens = vec![0i32; self.b * self.prompt_len];
-        for (i, req) in admitted.iter().enumerate() {
-            for (j, &t) in req.prompt.iter().enumerate() {
-                tokens[i * self.prompt_len + j] = t;
-            }
+        for (row, req) in
+            tokens.chunks_mut(self.prompt_len).zip(admitted.iter())
+        {
+            let last = *req
+                .prompt
+                .last()
+                .context("admitted request has an empty prompt")?;
             // pad by repeating the last prompt token (never attended)
-            for j in req.prompt.len()..self.prompt_len {
-                tokens[i * self.prompt_len + j] =
-                    *req.prompt.last().unwrap();
+            let fill =
+                req.prompt.iter().chain(std::iter::repeat(&last));
+            for (dst, &t) in row.iter_mut().zip(fill) {
+                *dst = t;
             }
         }
         self.refresh_scales()?;
@@ -585,9 +592,12 @@ impl HloEngine {
             bail!("prefill returned {} outputs, want 3", out.len());
         }
         // the caches stay device-resident; only the logits come back
-        let vc = out.pop().unwrap();
-        let kc = out.pop().unwrap();
-        let logits = download(&mut self.stats, &out[0])?;
+        let mut it = out.into_iter();
+        let logits_buf =
+            it.next().context("prefill: missing logits output")?;
+        let kc = it.next().context("prefill: missing k-cache")?;
+        let vc = it.next().context("prefill: missing v-cache")?;
+        let logits = download(&mut self.stats, &logits_buf)?;
         self.kc = kc;
         self.vc = vc;
         // install slots; prompt tokens 0..plen-1 are already in cache;
@@ -597,9 +607,10 @@ impl HloEngine {
         let n_admitted = admitted.len();
         for (i, req) in admitted.into_iter().enumerate() {
             let plen = req.prompt.len();
-            let row = &lg[(i * self.prompt_len + plen - 1) * self.vocab
-                ..(i * self.prompt_len + plen - 1) * self.vocab
-                    + self.vocab];
+            let base = (i * self.prompt_len + plen - 1) * self.vocab;
+            let row = lg
+                .get(base..base + self.vocab)
+                .context("prefill logits row out of range")?;
             let mut rng = self.slot_rng(req.id);
             let s = sampler::sample(row, &req.params, &mut rng)?;
             let mut slot = Slot {
@@ -621,8 +632,12 @@ impl HloEngine {
             }
             // the prefill artifact put sequence i's KV in cache row i,
             // so the slot index MUST be i
-            debug_assert!(self.slots[i].is_none());
-            self.slots[i] = Some(slot);
+            let dst = self
+                .slots
+                .get_mut(i)
+                .context("prefill wave exceeds slot capacity")?;
+            debug_assert!(dst.is_none());
+            *dst = Some(slot);
         }
         Ok(n_admitted)
     }
@@ -641,10 +656,15 @@ impl HloEngine {
         // sequences consuming a token BEYOND their preallocated prompt
         // this step (those need a KV-block extension)
         let mut grow_ids: Vec<u64> = Vec::new();
-        for (i, s) in self.slots.iter().enumerate() {
+        for ((s, tok), p) in self
+            .slots
+            .iter()
+            .zip(tokens.iter_mut())
+            .zip(pos.iter_mut())
+        {
             if let Some(s) = s {
-                tokens[i] = s.next_feed;
-                pos[i] = s.pos as i32;
+                *tok = s.next_feed;
+                *p = s.pos as i32;
                 if s.pos >= s.req.prompt.len() {
                     grow_ids.push(s.req.id);
                 }
@@ -677,9 +697,12 @@ impl HloEngine {
         if out.len() != 3 {
             bail!("decode returned {} outputs, want 3", out.len());
         }
-        let vc = out.pop().unwrap();
-        let kc = out.pop().unwrap();
-        let logits_arr = download(&mut self.stats, &out[0])?;
+        let mut it = out.into_iter();
+        let logits_buf =
+            it.next().context("decode: missing logits output")?;
+        let kc = it.next().context("decode: missing k-cache")?;
+        let vc = it.next().context("decode: missing v-cache")?;
+        let logits_arr = download(&mut self.stats, &logits_buf)?;
         self.kc = kc;
         self.vc = vc;
         let logits = logits_arr.as_f32()?;
@@ -687,7 +710,7 @@ impl HloEngine {
             self.stats.host_bytes_moved - bytes0;
 
         // grow bookkeeping + preemption
-        let report = self.sched.extend_all(&grow_ids);
+        let report = self.sched.extend_all(&grow_ids)?;
         self.stats.preemptions += report.preempted.len() as u64;
         for victim in &report.preempted {
             *self.preempt_counts.entry(*victim).or_insert(0) += 1;
@@ -726,15 +749,22 @@ impl HloEngine {
 
         // per-slot: advance cursor/sample
         for i in 0..self.b {
-            let Some(slot) = self.slots[i].as_mut() else { continue };
+            let Some(slot) =
+                self.slots.get_mut(i).and_then(|s| s.as_mut())
+            else {
+                continue;
+            };
             slot.pos += 1;
-            if slot.cursor < slot.req.prompt.len() {
-                // still prefilling: feed next prompt token, ignore logits
-                slot.next_feed = slot.req.prompt[slot.cursor];
+            if let Some(&t) = slot.req.prompt.get(slot.cursor) {
+                // still prefilling: feed next prompt token, ignore
+                // logits
+                slot.next_feed = t;
                 slot.cursor += 1;
                 continue;
             }
-            let row = &logits[i * self.vocab..(i + 1) * self.vocab];
+            let row = logits
+                .get(i * self.vocab..(i + 1) * self.vocab)
+                .context("decode logits row out of range")?;
             let s =
                 sampler::sample(row, &slot.req.params, &mut slot.rng)?;
             slot.generated.push(s.token);
@@ -742,9 +772,17 @@ impl HloEngine {
             slot.logprobs_full.push(s.logprob_full);
             slot.next_feed = s.token;
             self.stats.tokens_generated += 1;
-            let mut taken = self.slots[i].take().unwrap();
+            // take only AFTER the sample succeeded: an error path must
+            // leave the slot in place for abort_in_flight's accounting
+            let Some(mut taken) =
+                self.slots.get_mut(i).and_then(|s| s.take())
+            else {
+                continue;
+            };
             if !self.maybe_finish(&mut taken, s.token, done) {
-                self.slots[i] = Some(taken);
+                if let Some(dst) = self.slots.get_mut(i) {
+                    *dst = Some(taken);
+                }
             }
         }
         Ok(())

@@ -12,6 +12,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::error::{bail, Result};
+
 /// Bytes per KV element for each storage precision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KvPrecision {
@@ -151,31 +153,31 @@ impl KvBlockManager {
             self.alloc_failures += 1;
             return false;
         }
-        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let blocks = self.free.split_off(self.free.len() - need);
         self.seqs.insert(id, SeqAlloc { blocks, tokens });
         self.peak_used = self.peak_used.max(self.used_blocks());
         true
     }
 
     /// Extend a sequence by one token; may need a fresh block.
-    /// Returns false if the cache is out of blocks (preemption required).
-    pub fn append_token(&mut self, id: u64) -> bool {
-        let need_block = {
-            let s = self.seqs.get(&id).expect("unknown seq");
-            // capacity exactly filled -> next token needs a fresh block
-            s.tokens == s.blocks.len() * self.geometry.block_tokens
+    /// Returns `Ok(false)` if the cache is out of blocks (preemption
+    /// required), `Err` if the sequence is unknown (caller bug).
+    pub fn append_token(&mut self, id: u64) -> Result<bool> {
+        let block_tokens = self.geometry.block_tokens;
+        let Some(s) = self.seqs.get_mut(&id) else {
+            bail!("append_token on unknown seq {id}");
         };
-        if need_block {
-            if self.free.is_empty() {
+        // capacity exactly filled -> next token needs a fresh block
+        if s.tokens == s.blocks.len() * block_tokens {
+            let Some(b) = self.free.pop() else {
                 self.alloc_failures += 1;
-                return false;
-            }
-            let b = self.free.pop().unwrap();
-            self.seqs.get_mut(&id).unwrap().blocks.push(b);
+                return Ok(false);
+            };
+            s.blocks.push(b);
         }
-        self.seqs.get_mut(&id).unwrap().tokens += 1;
+        s.tokens += 1;
         self.peak_used = self.peak_used.max(self.used_blocks());
-        true
+        Ok(true)
     }
 
     /// Release a sequence entirely (finished or preempted-with-recompute).
@@ -195,13 +197,13 @@ impl KvBlockManager {
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut seen = vec![false; self.total_blocks];
         for &b in &self.free {
-            if b >= self.total_blocks {
+            let Some(slot) = seen.get_mut(b) else {
                 return Err(format!("free block {b} out of range"));
-            }
-            if seen[b] {
+            };
+            if *slot {
                 return Err(format!("block {b} double-listed in free"));
             }
-            seen[b] = true;
+            *slot = true;
         }
         for (id, s) in &self.seqs {
             // every live allocation accounts for at least one token —
@@ -229,13 +231,13 @@ impl KvBlockManager {
                 return Err(format!("seq {id}: over-allocated"));
             }
             for &b in &s.blocks {
-                if b >= self.total_blocks {
+                let Some(slot) = seen.get_mut(b) else {
                     return Err(format!("seq block {b} out of range"));
-                }
-                if seen[b] {
+                };
+                if *slot {
                     return Err(format!("block {b} allocated twice"));
                 }
-                seen[b] = true;
+                *slot = true;
             }
         }
         if !seen.iter().all(|&x| x) {
@@ -282,7 +284,7 @@ mod tests {
         assert_eq!(m.used_blocks(), 1);
         // 16 more tokens => one more block
         for _ in 0..16 {
-            assert!(m.append_token(1));
+            assert!(m.append_token(1).unwrap());
         }
         assert_eq!(m.used_blocks(), 2);
         m.check_invariants().unwrap();
@@ -297,7 +299,7 @@ mod tests {
         assert!(m.allocate(1, 32)); // both blocks
         assert!(!m.allocate(2, 1));
         assert_eq!(m.alloc_failures, 1);
-        assert!(!m.append_token(1));
+        assert!(!m.append_token(1).unwrap());
         assert_eq!(m.alloc_failures, 2);
         m.check_invariants().unwrap();
     }
@@ -317,12 +319,12 @@ mod tests {
         // growth proceeds from the clamped count: 15 more appends fill
         // the first block exactly, making the boundary visible
         for _ in 0..15 {
-            assert!(m.append_token(1));
+            assert!(m.append_token(1).unwrap());
         }
         assert_eq!(m.seq_tokens(1), 16);
         assert!(m.at_block_boundary(1), "boundary must be observable");
         assert_eq!(m.used_blocks(), 1);
-        assert!(m.append_token(1));
+        assert!(m.append_token(1).unwrap());
         assert_eq!(m.used_blocks(), 2);
         m.check_invariants().unwrap();
         m.release(1);

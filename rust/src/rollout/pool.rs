@@ -205,6 +205,29 @@ enum Event {
     Fence(usize, u64, Result<()>),
 }
 
+/// A pending epoch fence, parked worker-side until the engine drains.
+enum Fence {
+    Weights(Arc<Vec<HostArray>>, u64),
+    KvScales(f32, f32, u64),
+}
+
+/// The epoch-ORDERED subset of worker messages: the ones whose
+/// relative order defines which weights a request runs under.
+/// Order-insensitive control (abort/stats/discard/shutdown) never
+/// takes this form.
+enum Ordered {
+    Submit(Request, u64),
+    Fence(Fence),
+}
+
+/// The pool hung up its event receiver (dropped mid-session): the
+/// worker has nobody to report to and must exit its serve loop.
+struct PoolGone;
+
+fn emit(events: &Sender<Event>, ev: Event) -> Result<(), PoolGone> {
+    events.send(ev).map_err(|_| PoolGone)
+}
+
 struct FenceAck {
     replica: usize,
     epoch: u64,
@@ -232,18 +255,17 @@ impl ReadyItem {
 fn apply_fence(
     replica: usize,
     engine: &mut HloEngine,
-    fence: ToWorker,
+    fence: Fence,
     events: &Sender<Event>,
-) {
+) -> Result<(), PoolGone> {
     let (target, mut res) = match fence {
-        ToWorker::SyncWeights(w, target) => {
+        Fence::Weights(w, target) => {
             (target, engine.install_weights(&w))
         }
-        ToWorker::SyncKvScales(k, v, target) => {
+        Fence::KvScales(k, v, target) => {
             engine.install_kv_scales(k, v);
             (target, Ok(()))
         }
-        _ => unreachable!("only sync messages are fences"),
     };
     if res.is_ok() && engine.weight_epoch() != target {
         res = Err(anyhow!(
@@ -251,7 +273,7 @@ fn apply_fence(
             engine.weight_epoch()
         ));
     }
-    let _ = events.send(Event::Fence(replica, target, res));
+    emit(events, Event::Fence(replica, target, res))
 }
 
 /// Process one epoch-ORDERED message (a submission or a fence). These
@@ -260,33 +282,37 @@ fn apply_fence(
 fn handle_ordered(
     replica: usize,
     engine: &mut HloEngine,
-    msg: ToWorker,
-    fence: &mut Option<ToWorker>,
+    msg: Ordered,
+    fence: &mut Option<Fence>,
     events: &Sender<Event>,
-) {
+) -> Result<(), PoolGone> {
     match msg {
-        ToWorker::Submit(req, epoch) => {
+        Ordered::Submit(req, epoch) => {
             let id = req.id;
             if epoch != engine.weight_epoch() {
-                let _ = events.send(Event::Failed(
-                    replica,
-                    id,
-                    format!(
-                        "stamped for weight epoch {epoch} but the \
-                         engine is at {} (a failed install left this \
-                         replica behind the fence)",
-                        engine.weight_epoch()
+                emit(
+                    events,
+                    Event::Failed(
+                        replica,
+                        id,
+                        format!(
+                            "stamped for weight epoch {epoch} but the \
+                             engine is at {} (a failed install left \
+                             this replica behind the fence)",
+                            engine.weight_epoch()
+                        ),
                     ),
-                ));
+                )?;
             } else if let Err(e) = engine.enqueue(req) {
-                let _ =
-                    events.send(Event::Failed(replica, id, e.to_string()));
+                emit(
+                    events,
+                    Event::Failed(replica, id, e.to_string()),
+                )?;
             }
         }
-        msg @ ToWorker::SyncWeights(..) => *fence = Some(msg),
-        msg @ ToWorker::SyncKvScales(..) => *fence = Some(msg),
-        _ => unreachable!("only epoch-ordered messages come here"),
+        Ordered::Fence(f) => *fence = Some(f),
     }
+    Ok(())
 }
 
 fn worker_main(
@@ -301,10 +327,15 @@ fn worker_main(
         factory().and_then(|rt| HloEngine::new(Arc::new(rt), cfg));
     let mut engine = match built {
         Ok(e) => {
-            let _ = init.send((replica, Ok(())));
+            if init.send((replica, Ok(()))).is_err() {
+                return; // the pool constructor already bailed
+            }
             e
         }
         Err(e) => {
+            // this worker is exiting either way; a constructor that
+            // already bailed just misses the failure report
+            // lint: allow(C1): init ack on the worker-exit path
             let _ = init.send((replica, Err(e)));
             return;
         }
@@ -318,8 +349,8 @@ fn worker_main(
     // shutdown) is still handled immediately: an abort must be able
     // to cancel the very straggler a fence is waiting on, and stats
     // must not stall behind an in-flight drain.
-    let mut fence: Option<ToWorker> = None;
-    let mut backlog: VecDeque<ToWorker> = VecDeque::new();
+    let mut fence: Option<Fence> = None;
+    let mut backlog: VecDeque<Ordered> = VecDeque::new();
     'serve: loop {
         // ---- ingest the channel ----
         loop {
@@ -338,7 +369,7 @@ fn worker_main(
                     Err(TryRecvError::Disconnected) => break 'serve,
                 }
             };
-            match msg {
+            let ordered = match msg {
                 ToWorker::Abort(id) => {
                     // jumps any pending fence: cancelling propagates
                     // straight into the scheduler, so aborting the
@@ -354,51 +385,84 @@ fn worker_main(
                     // already crossed (or is about to cross) the
                     // event channel — exactly-once either way.
                     if engine.cancel(id) {
-                        let _ = events.send(Event::Aborted(replica, id));
+                        if emit(&events, Event::Aborted(replica, id))
+                            .is_err()
+                        {
+                            break 'serve;
+                        }
                     } else if let Some(pos) =
                         backlog.iter().position(|m| {
-                            matches!(m, ToWorker::Submit(r, _)
+                            matches!(m, Ordered::Submit(r, _)
                                 if r.id == id)
                         })
                     {
                         let _ = backlog.remove(pos);
-                        let _ = events.send(Event::Aborted(replica, id));
+                        if emit(&events, Event::Aborted(replica, id))
+                            .is_err()
+                        {
+                            break 'serve;
+                        }
                     }
+                    continue;
                 }
-                ToWorker::Discard(n) => engine.stats.discard_tokens(n),
+                ToWorker::Discard(n) => {
+                    engine.stats.discard_tokens(n);
+                    continue;
+                }
                 ToWorker::Stats(reply) => {
+                    // a requester that timed out and dropped its
+                    // receiver just misses the snapshot
+                    // lint: allow(C1): reply to a gone requester
                     let _ = reply.send((replica, engine.stats.clone()));
+                    continue;
                 }
                 ToWorker::Shutdown => break 'serve,
-                ordered => {
-                    if fence.is_some() {
-                        backlog.push_back(ordered);
-                    } else {
-                        handle_ordered(
-                            replica,
-                            &mut engine,
-                            ordered,
-                            &mut fence,
-                            &events,
-                        );
-                    }
+                ToWorker::Submit(req, epoch) => {
+                    Ordered::Submit(req, epoch)
                 }
+                ToWorker::SyncWeights(w, t) => {
+                    Ordered::Fence(Fence::Weights(w, t))
+                }
+                ToWorker::SyncKvScales(k, v, t) => {
+                    Ordered::Fence(Fence::KvScales(k, v, t))
+                }
+            };
+            if fence.is_some() {
+                backlog.push_back(ordered);
+            } else if handle_ordered(
+                replica,
+                &mut engine,
+                ordered,
+                &mut fence,
+                &events,
+            )
+            .is_err()
+            {
+                break 'serve;
             }
         }
         // ---- apply a due fence, then replay the parked backlog ----
         if engine.is_idle() {
             if let Some(f) = fence.take() {
-                apply_fence(replica, &mut engine, f, &events);
+                if apply_fence(replica, &mut engine, f, &events)
+                    .is_err()
+                {
+                    break 'serve;
+                }
             }
             while fence.is_none() {
                 let Some(m) = backlog.pop_front() else { break };
-                handle_ordered(
+                if handle_ordered(
                     replica,
                     &mut engine,
                     m,
                     &mut fence,
                     &events,
-                );
+                )
+                .is_err()
+                {
+                    break 'serve;
+                }
             }
             continue;
         }
@@ -407,21 +471,33 @@ fn worker_main(
         match engine.step(&mut done) {
             Ok(()) => {
                 for c in done.drain(..) {
-                    let _ = events.send(Event::Done(replica, c));
+                    if emit(&events, Event::Done(replica, c)).is_err()
+                    {
+                        break 'serve;
+                    }
                 }
             }
             Err(e) => {
                 // completions that finished before the error are real
                 // and already counted as delivered — ship them
                 for c in done.drain(..) {
-                    let _ = events.send(Event::Done(replica, c));
+                    if emit(&events, Event::Done(replica, c)).is_err()
+                    {
+                        break 'serve;
+                    }
                 }
                 let failed = engine.outstanding_ids();
                 engine.abort_in_flight();
                 let msg = e.to_string();
                 for id in failed {
-                    let _ =
-                        events.send(Event::Failed(replica, id, msg.clone()));
+                    if emit(
+                        &events,
+                        Event::Failed(replica, id, msg.clone()),
+                    )
+                    .is_err()
+                    {
+                        break 'serve;
+                    }
                 }
             }
         }
@@ -629,8 +705,11 @@ impl EnginePool {
                 None
             }
             Event::Fence(replica, epoch, result) => {
-                self.fence_acks_owed[replica] =
-                    self.fence_acks_owed[replica].saturating_sub(1);
+                if let Some(owed) =
+                    self.fence_acks_owed.get_mut(replica)
+                {
+                    *owed = owed.saturating_sub(1);
+                }
                 Some(FenceAck { replica, epoch, result })
             }
         }
@@ -673,8 +752,10 @@ impl EnginePool {
     fn reap_dead_workers(&mut self) -> bool {
         let mut reaped = false;
         for r in 0..self.handles.len() {
-            let dead = self.handles[r]
-                .as_ref()
+            let dead = self
+                .handles
+                .get(r)
+                .and_then(|h| h.as_ref())
                 .map_or(true, |h| h.is_finished());
             if !dead {
                 continue;
@@ -683,8 +764,12 @@ impl EnginePool {
             self.router.set_quarantined(r, true);
             // write off its fence debt (it can never ack) so drains
             // don't wait forever, and record the broken fence
-            if self.fence_acks_owed[r] > 0 {
-                self.fence_acks_owed[r] = 0;
+            let owed = self
+                .fence_acks_owed
+                .get_mut(r)
+                .map(std::mem::take)
+                .unwrap_or(0);
+            if owed > 0 {
                 self.fence_failure.get_or_insert(anyhow!(
                     "replica {r} worker thread died before \
                      acknowledging a fence"
@@ -745,18 +830,19 @@ impl EnginePool {
         let mut req = req;
         for _ in 0..self.workers.len() {
             let replica = self.router.route(&req);
-            match self.workers[replica]
-                .send(ToWorker::Submit(req, self.epoch))
-            {
+            let Some(w) = self.workers.get(replica) else {
+                bail!("router picked replica {replica} out of range");
+            };
+            match w.send(ToWorker::Submit(req, self.epoch)) {
                 Ok(()) => {
                     self.outstanding.insert(id, replica);
                     return Ok(id);
                 }
                 Err(e) => {
-                    match e.0 {
-                        ToWorker::Submit(r, _) => req = r,
-                        _ => unreachable!("a Submit was sent"),
-                    }
+                    let ToWorker::Submit(r, _) = e.0 else {
+                        bail!("send error lost request {id}");
+                    };
+                    req = r;
                     self.router.abort(id);
                     self.router.set_quarantined(replica, true);
                 }
@@ -851,7 +937,12 @@ impl EnginePool {
         let Some(&replica) = self.outstanding.get(&ticket) else {
             return Ok(());
         };
-        self.workers[replica]
+        self.workers
+            .get(replica)
+            .ok_or_else(|| {
+                anyhow!("ticket {ticket} maps to replica {replica} \
+                         out of range")
+            })?
             .send(ToWorker::Abort(ticket))
             .map_err(|_| anyhow!("replica {replica} worker thread is gone"))
     }
@@ -912,8 +1003,12 @@ impl EnginePool {
             // keep describing what the caller actually received
             // (everything aborted), not what crossed the channel
             for (replica, c) in &out {
-                let _ = self.workers[*replica]
-                    .send(ToWorker::Discard(c.tokens.len() as u64));
+                if let Some(w) = self.workers.get(*replica) {
+                    let n = c.tokens.len() as u64;
+                    // a dead replica's counters died with it
+                    // lint: allow(C1): moot send to a dead replica
+                    let _ = w.send(ToWorker::Discard(n));
+                }
             }
             self.router
                 .reclassify_completed_as_aborted(out.len() as u64);
@@ -1021,14 +1116,16 @@ impl EnginePool {
         let target = self.epoch + 1;
         self.epoch = target;
         let mut first_err: Option<Error> = None;
-        for r in 0..self.workers.len() {
-            if self.workers[r].send(mk(target)).is_err() {
+        for (r, w) in self.workers.iter().enumerate() {
+            if w.send(mk(target)).is_err() {
                 first_err.get_or_insert(anyhow!(
                     "replica {r} worker thread is gone"
                 ));
                 continue;
             }
-            self.fence_acks_owed[r] += 1;
+            if let Some(owed) = self.fence_acks_owed.get_mut(r) {
+                *owed += 1;
+            }
         }
         match first_err {
             Some(e) => Err(e),
@@ -1130,7 +1227,10 @@ impl EnginePool {
         let mut out = vec![EngineStats::default(); n];
         let mut got = 0usize;
         while let Ok((replica, s)) = rx.recv() {
-            out[replica] = s;
+            let Some(slot) = out.get_mut(replica) else {
+                bail!("stats reply from unknown replica {replica}");
+            };
+            *slot = s;
             got += 1;
         }
         if got != n {
@@ -1154,6 +1254,9 @@ impl std::fmt::Debug for EnginePool {
 impl Drop for EnginePool {
     fn drop(&mut self) {
         for w in &self.workers {
+            // an already-dead worker needs no shutdown; the join
+            // below still bounds its lifetime
+            // lint: allow(C1): moot send during teardown
             let _ = w.send(ToWorker::Shutdown);
         }
         for h in self.handles.iter_mut() {

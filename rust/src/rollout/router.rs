@@ -75,7 +75,10 @@ impl Router {
 
     /// Exclude an engine from (or readmit it to) placement.
     pub fn set_quarantined(&mut self, engine: usize, q: bool) {
-        self.quarantined[engine] = q;
+        debug_assert!(engine < self.n_engines);
+        if let Some(slot) = self.quarantined.get_mut(engine) {
+            *slot = q;
+        }
     }
 
     fn cost(req: &Request) -> u64 {
@@ -95,7 +98,8 @@ impl Router {
                 // (placement must still terminate)
                 let mut i = self.next;
                 for _ in 0..self.n_engines {
-                    if !self.quarantined[i] {
+                    let q = self.quarantined.get(i).copied();
+                    if !q.unwrap_or(false) {
                         break;
                     }
                     i = (i + 1) % self.n_engines;
@@ -104,24 +108,29 @@ impl Router {
                 i
             }
             RoutePolicy::LeastLoaded => {
-                let (i, _) = self
+                let healthy = self
                     .load
                     .iter()
                     .enumerate()
-                    .filter(|(i, _)| !self.quarantined[*i])
-                    .min_by_key(|(_, &l)| l)
-                    .unwrap_or_else(|| {
-                        // everything quarantined: fall back to plain
-                        self.load
-                            .iter()
-                            .enumerate()
-                            .min_by_key(|(_, &l)| l)
-                            .unwrap()
-                    });
-                i
+                    .filter(|(i, _)| {
+                        let q = self.quarantined.get(*i).copied();
+                        !q.unwrap_or(false)
+                    })
+                    .min_by_key(|(_, &l)| l);
+                // everything quarantined: fall back to the plain
+                // minimum (new() guarantees n_engines > 0, so the
+                // final unwrap_or(0) is unreachable in practice)
+                let any = self
+                    .load
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &l)| l);
+                healthy.or(any).map(|(i, _)| i).unwrap_or(0)
             }
         };
-        self.load[idx] += cost;
+        if let Some(l) = self.load.get_mut(idx) {
+            *l += cost;
+        }
         self.outstanding.insert(req.id, (idx, cost));
         idx
     }
@@ -150,8 +159,10 @@ impl Router {
 
     fn settle(&mut self, id: u64) -> Option<usize> {
         let (engine, cost) = self.outstanding.remove(&id)?;
-        // cannot underflow: `cost` is exactly what `route` charged
-        self.load[engine] -= cost;
+        if let Some(l) = self.load.get_mut(engine) {
+            // cannot underflow: `cost` is exactly what `route` charged
+            *l -= cost;
+        }
         Some(engine)
     }
 

@@ -39,7 +39,7 @@
 //! assignment, or recompute preemption — the invariant that makes an
 //! N-replica pool bit-identical to a single engine.
 
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 use crate::util::rng::{Pcg64, SplitMix64};
 
 use super::request::SamplingParams;
@@ -72,7 +72,9 @@ pub fn request_seed(engine_seed: u64, request_id: u64) -> u64 {
 pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
     let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let z: f64 = logits.iter().map(|&l| ((l - m) as f64).exp()).sum();
-    (logits[idx] - m) as f64 as f32 - (z.ln() as f32)
+    // out-of-range index reads as probability 0 (log -inf)
+    let li = logits.get(idx).copied().unwrap_or(f32::NEG_INFINITY);
+    (li - m) as f64 as f32 - (z.ln() as f32)
 }
 
 /// Reject logit rows no sampling law can be defined over.
@@ -80,17 +82,18 @@ fn check_logits(logits: &[f32]) -> Result<()> {
     if logits.is_empty() {
         bail!("sampler: empty logit row");
     }
-    if let Some(i) = logits
-        .iter()
-        .position(|l| l.is_nan() || *l == f32::INFINITY)
-    {
+    if let Some((i, l)) = logits.iter().enumerate().find(|(_, l)| {
+        l.is_nan() || (l.is_infinite() && l.is_sign_positive())
+    }) {
         bail!(
-            "sampler: non-finite logit {} at index {i} — upstream \
-             kernel produced garbage",
-            logits[i]
+            "sampler: non-finite logit {l} at index {i} — upstream \
+             kernel produced garbage"
         );
     }
-    if logits.iter().all(|&l| l == f32::NEG_INFINITY) {
+    if logits
+        .iter()
+        .all(|&l| l.is_infinite() && l.is_sign_negative())
+    {
         bail!("sampler: every logit is -inf (empty support)");
     }
     Ok(())
@@ -105,12 +108,14 @@ pub fn sample(
     check_logits(logits)?;
     if params.temperature <= 0.0 {
         // greedy: a point mass — the token's probability under the
-        // sampling law is exactly 1
-        let (idx, _) = logits
+        // sampling law is exactly 1. check_logits rejected the empty
+        // row, so the fallback index is unreachable.
+        let idx = logits
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.total_cmp(b.1))
-            .expect("non-empty checked above");
+            .map(|(i, _)| i)
+            .unwrap_or(0);
         return Ok(SampleOut {
             token: idx as i32,
             logprob: 0.0,
@@ -120,18 +125,21 @@ pub fn sample(
     let scaled: Vec<f32> =
         logits.iter().map(|&l| l / params.temperature).collect();
 
-    // candidate set after top-k / top-p truncation
-    let mut order: Vec<usize> = (0..scaled.len()).collect();
-    order.sort_by(|&a, &b| scaled[b].total_cmp(&scaled[a]));
+    // candidate set after top-k / top-p truncation. Sorting
+    // (index, value) pairs keeps every later lookup index-free.
+    let mut order: Vec<(usize, f32)> =
+        scaled.iter().copied().enumerate().collect();
+    order.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut keep = order.len();
     if params.top_k > 0 {
         keep = keep.min(params.top_k);
     }
+    // the max scaled logit (head of the descending order)
+    let m = order.first().map(|&(_, v)| v).unwrap_or(0.0);
     if params.top_p < 1.0 {
-        let m = scaled[order[0]];
         let exps: Vec<f64> = order
             .iter()
-            .map(|&i| ((scaled[i] - m) as f64).exp())
+            .map(|&(_, v)| ((v - m) as f64).exp())
             .collect();
         let total: f64 = exps.iter().sum();
         let mut acc = 0.0;
@@ -149,23 +157,27 @@ pub fn sample(
     // sample within the kept set; the behavior logprob is evaluated
     // against the SAME weights the draw uses, so it is exactly
     // log(weight_i / sum(kept weights)) for the categorical below
-    let m = scaled[order[0]];
-    let weights: Vec<f32> = order[..keep]
+    let kept = order.get(..keep).context("kept set exceeds order")?;
+    let weights: Vec<f32> = kept
         .iter()
-        .map(|&i| ((scaled[i] - m) as f64).exp() as f32)
+        .map(|&(_, v)| ((v - m) as f64).exp() as f32)
         .collect();
     let pick = rng.categorical(&weights);
-    let idx = order[pick];
+    let &(idx, _) = kept
+        .get(pick)
+        .context("categorical pick out of kept range")?;
     let logprob_full = log_softmax_at(logits, idx);
     // untruncated at temperature 1, renormalization is the identity:
     // evaluate through the same log-softmax route as the full-vocab
     // diagnostic so the two are BIT-equal — the RL-loop default path
     // stays bit-identical to the pre-fix convention
+    // lint: allow(D2): exact ==1.0 gates the bit-equality fast path
     let logprob = if keep == scaled.len() && params.temperature == 1.0 {
         logprob_full
     } else {
         let z: f64 = weights.iter().map(|&w| w as f64).sum();
-        let wi = (weights[pick] as f64).max(f64::MIN_POSITIVE);
+        let w = weights.get(pick).copied().unwrap_or(0.0);
+        let wi = (w as f64).max(f64::MIN_POSITIVE);
         (wi.ln() - z.ln()) as f32
     };
     Ok(SampleOut {

@@ -15,6 +15,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use super::kvcache::KvBlockManager;
 use super::request::Request;
+use crate::util::error::{bail, Context, Result};
 
 #[derive(Clone, Debug, Default)]
 pub struct SchedulerStats {
@@ -121,7 +122,7 @@ impl Scheduler {
             if need_grown + reserve > self.kv.free_blocks() {
                 break;
             }
-            let req = self.waiting.pop_front().unwrap();
+            let Some(req) = self.waiting.pop_front() else { break };
             assert!(self.kv.allocate(req.id, tokens));
             reserve += need_grown - need_now;
             self.running.push(req.id);
@@ -147,7 +148,7 @@ impl Scheduler {
     /// Grow the given running sequences by one token each, preempting
     /// (newest first) when blocks run out. Callers pass only sequences
     /// that consumed a *new* (non-preallocated-prompt) token this step.
-    pub fn extend_all(&mut self, ids: &[u64]) -> ExtendReport {
+    pub fn extend_all(&mut self, ids: &[u64]) -> Result<ExtendReport> {
         let mut preempted = Vec::new();
         for &id in ids {
             // may already have been preempted this step
@@ -155,36 +156,49 @@ impl Scheduler {
                 continue;
             }
             loop {
-                if self.kv.append_token(id) {
+                if self.kv.append_token(id)? {
                     break;
                 }
-                // out of blocks: evict the newest running seq
-                let victim = *self.running.last().unwrap();
-                self.preempt(victim);
+                // out of blocks: evict the newest running seq. The
+                // extending seq itself is running, so the set can't be
+                // empty here — an empty set means corrupt bookkeeping.
+                let Some(&victim) = self.running.last() else {
+                    bail!(
+                        "seq {id} needs a block but the running set \
+                         is empty"
+                    );
+                };
+                self.preempt(victim)?;
                 preempted.push(victim);
                 if victim == id {
                     break; // the extending seq itself was evicted
                 }
             }
         }
-        ExtendReport { preempted }
+        Ok(ExtendReport { preempted })
     }
 
     /// Evict the newest running sequence (used by callers that need to
     /// make room outside the extend path, e.g. readmission top-up).
     /// Returns the victim id.
-    pub fn preempt_newest(&mut self) -> Option<u64> {
-        let victim = *self.running.last()?;
-        self.preempt(victim);
-        Some(victim)
+    pub fn preempt_newest(&mut self) -> Result<Option<u64>> {
+        let Some(&victim) = self.running.last() else {
+            return Ok(None);
+        };
+        self.preempt(victim)?;
+        Ok(Some(victim))
     }
 
-    fn preempt(&mut self, id: u64) {
+    fn preempt(&mut self, id: u64) -> Result<()> {
         self.kv.release(id);
         self.running.retain(|&r| r != id);
-        let body = self.bodies.remove(&id).expect("preempting unknown seq");
+        let body = self
+            .bodies
+            .remove(&id)
+            .with_context(|| format!("preempting unknown seq {id}"))?;
         self.waiting.push_front(body);
         self.stats.preemptions += 1;
+        Ok(())
     }
 
     /// Remove one queued or running request entirely (the streaming
@@ -306,14 +320,14 @@ mod tests {
         assert_eq!(s.admit().len(), 2);
         let ids = s.running_ids().to_vec();
         // first extend consumes exactly the reserved blocks: no thrash
-        let rep = s.extend_all(&ids);
+        let rep = s.extend_all(&ids).unwrap();
         assert!(rep.preempted.is_empty());
         s.check_invariants().unwrap();
         // grow until exhaustion (cache full at 8 tokens each): the
         // NEWEST sequence is evicted and requeued at the front
         let mut preempted = Vec::new();
         for _ in 0..4 {
-            preempted.extend(s.extend_all(&ids).preempted);
+            preempted.extend(s.extend_all(&ids).unwrap().preempted);
         }
         assert_eq!(preempted, vec![2]);
         assert_eq!(s.n_running(), 1);
@@ -337,7 +351,7 @@ mod tests {
         let admitted = s.admit();
         assert_eq!(admitted.len(), 1, "one growth block can't serve two");
         let ids = s.running_ids().to_vec();
-        let rep = s.extend_all(&ids);
+        let rep = s.extend_all(&ids).unwrap();
         assert!(
             rep.preempted.is_empty(),
             "no same-step preemption after admission"
@@ -412,7 +426,7 @@ mod tests {
         // grow until the newest (2) is evicted and requeued
         let mut preempted = Vec::new();
         for _ in 0..5 {
-            preempted.extend(s.extend_all(&ids).preempted);
+            preempted.extend(s.extend_all(&ids).unwrap().preempted);
         }
         assert_eq!(preempted, vec![2]);
         assert_eq!(s.head_of_line().unwrap().id, 2);

@@ -334,6 +334,7 @@ impl<'a> RefModel<'a> {
         let v = self.geo.vocab;
         let mut out = vec![0.0f32; v];
         for (k, &hk) in h.iter().enumerate() {
+            // lint: allow(D2): exact-zero sparsity skip, not a tolerance
             if hk == 0.0 {
                 continue;
             }
@@ -793,6 +794,7 @@ impl RefExecutable {
                 1.0
             };
             tis_w[i] = w as f32;
+            // lint: allow(D2): mask entries are exactly 0.0 or 1.0
             if mk == 0.0 {
                 continue;
             }
@@ -813,6 +815,7 @@ impl RefExecutable {
         for b in 0..bt {
             for t in 0..steps {
                 let i = b * steps + t;
+                // lint: allow(D2): mask entries are exactly 0.0 or 1.0
                 if mask[i] == 0.0 {
                     continue;
                 }
@@ -822,6 +825,7 @@ impl RefExecutable {
                 for j in 0..v {
                     let onehot = if j == nxt { 1.0 } else { 0.0 };
                     let dl = coef * (onehot - fwd.probs[i * v + j]);
+                    // lint: allow(D2): exact-zero gradient skip
                     if dl == 0.0 {
                         continue;
                     }

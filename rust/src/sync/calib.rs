@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::runtime::{HostArray, Runtime};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CalibStrategy {
@@ -65,16 +65,21 @@ impl Calibrator {
     ) -> Result<(f32, f32)> {
         let exe = self.rt.load(&format!("{}_calibrate", self.arch))?;
         let mut tokens = vec![pad; self.b * self.t];
-        for (i, row) in rows.iter().take(self.b).enumerate() {
-            for (j, &tok) in row.iter().take(self.t).enumerate() {
-                tokens[i * self.t + j] = tok;
+        for (dst, row) in
+            tokens.chunks_mut(self.t).zip(rows.iter().take(self.b))
+        {
+            for (slot, &tok) in dst.iter_mut().zip(row.iter()) {
+                *slot = tok;
             }
         }
         let mut inputs: Vec<HostArray> = params.to_vec();
         inputs.push(HostArray::i32(vec![self.b, self.t], tokens));
         let out = exe.run(&inputs)?;
-        let k = out[0].as_f32()?[0];
-        let v = out[1].as_f32()?[0];
+        let mut it = out.into_iter();
+        let ka = it.next().context("calibrate artifact: no k output")?;
+        let va = it.next().context("calibrate artifact: no v output")?;
+        let k = *ka.as_f32()?.first().context("empty k-scale output")?;
+        let v = *va.as_f32()?.first().context("empty v-scale output")?;
         Ok((k, v))
     }
 }

@@ -7,8 +7,8 @@
 //! never the quantization work.
 
 use std::sync::Arc;
-use std::time::Instant;
 
+use crate::util::clock::WallTimer;
 use crate::util::error::Result;
 
 use crate::fp8::{
@@ -100,7 +100,7 @@ impl WeightSync {
         spec: &ModelSpec,
         params: &[HostArray],
     ) -> Result<(Vec<HostArray>, SyncReport)> {
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let mut out = Vec::with_capacity(params.len());
         let mut rep = SyncReport::default();
         for (p, a) in spec.params.iter().zip(params) {
@@ -129,7 +129,7 @@ impl WeightSync {
                 out.push(a.clone());
             }
         }
-        rep.elapsed_s = t0.elapsed().as_secs_f64();
+        rep.elapsed_s = t0.elapsed_s();
         Ok((out, rep))
     }
 

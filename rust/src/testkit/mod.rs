@@ -53,6 +53,7 @@ impl Shrink for u64 {
 impl Shrink for f32 {
     fn shrink(&self) -> Vec<Self> {
         let mut out = Vec::new();
+        // lint: allow(D2): shrinker dedup wants exact inequality
         if *self != 0.0 {
             out.push(0.0);
             out.push(self / 2.0);

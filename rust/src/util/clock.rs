@@ -1,0 +1,73 @@
+//! Wall-clock timing for METRICS ONLY.
+//!
+//! The deterministic modules (`rollout/`, `sync/`, `coordinator/`,
+//! `testkit/`, `fp8/`) are forbidden from touching `std::time::Instant`
+//! directly (pallas-lint rule D1): wall-clock reads that leak into
+//! control flow are exactly how replica-count-dependent behavior snuck
+//! into early drafts of the pool. This wrapper is the sanctioned escape:
+//! it can measure durations for reports and metrics, but its API
+//! deliberately exposes no absolute time, no comparison against other
+//! timers, and no "now" value that could be branched on.
+//!
+//! Contract: a [`WallTimer`] value may flow into `f64` metrics fields
+//! and log lines. It must never influence which branch executes, which
+//! request is scheduled, or what bytes end up in a completion.
+
+use std::time::Instant;
+
+/// A started stopwatch. See the module docs for the usage contract.
+#[derive(Clone, Copy, Debug)]
+pub struct WallTimer {
+    t0: Instant,
+}
+
+impl WallTimer {
+    /// Start timing now.
+    pub fn start() -> WallTimer {
+        WallTimer { t0: Instant::now() }
+    }
+
+    /// Seconds since `start()`. For metrics/reports only.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds since `start()`. For metrics/reports only.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    /// Restart the stopwatch in place.
+    pub fn restart(&mut self) {
+        self.t0 = Instant::now();
+    }
+}
+
+impl Default for WallTimer {
+    fn default() -> Self {
+        WallTimer::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotonic_nonnegative() {
+        let t = WallTimer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut t = WallTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let before = t.elapsed_ms();
+        t.restart();
+        assert!(t.elapsed_ms() <= before + 1.0);
+    }
+}

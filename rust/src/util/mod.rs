@@ -2,6 +2,7 @@
 //! error context and logging (serde/clap/anyhow/log are unavailable
 //! offline — these are the in-repo replacements).
 pub mod cli;
+pub mod clock;
 pub mod csv;
 pub mod error;
 pub mod json;

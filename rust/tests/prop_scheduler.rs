@@ -82,7 +82,9 @@ fn run_script(
             }
             Op::Extend => {
                 let ids = sched.running_ids().to_vec();
-                sched.extend_all(&ids);
+                sched
+                    .extend_all(&ids)
+                    .map_err(|e| e.to_string())?;
             }
             Op::FinishOldest => {
                 if let Some(&id) = sched.running_ids().first() {
@@ -223,7 +225,9 @@ fn admissions_survive_their_admission_round() {
                     }
                 }
                 let ids = sched.running_ids().to_vec();
-                let rep = sched.extend_all(&ids);
+                let rep = sched
+                    .extend_all(&ids)
+                    .map_err(|e| e.to_string())?;
                 for id in &admitted {
                     if rep.preempted.contains(id) {
                         return Err(format!(

@@ -1,0 +1,419 @@
+#!/usr/bin/env python3
+"""Reference mirror of pallas-lint's scan (see tools/lint/src/main.rs).
+
+The Rust binary is authoritative; this mirror exists so the baseline can
+be regenerated and cross-checked in environments without a Rust
+toolchain.  Rule semantics, tokenizer behavior, and report format are
+kept line-for-line equivalent to the Rust implementation — any change to
+one MUST be ported to the other (the lint crate's `mirror_agrees` test
+does not exist; agreement is enforced by the committed-baseline test in
+tools/lint/tests plus this script in CI-less environments).
+
+Usage: mirror.py [--root DIR] [--write-baseline] [--verbose]
+"""
+
+import os
+import re
+import sys
+
+RULES = ("D1", "D2", "P1", "C1")
+
+# Modules whose behavior must be bit-deterministic (rule D1).
+DET_MODULES = ("rollout", "sync", "coordinator", "testkit", "fp8")
+# Modules where the P1 count must be zero (hard floor, baseline-proof).
+CORE_MODULES = ("rollout", "sync", "coordinator", "rl")
+
+D1_IDENTS = ("HashMap", "HashSet", "Instant", "SystemTime", "thread_rng")
+FLOAT_CONSTS = ("INFINITY", "NEG_INFINITY", "NAN")
+PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
+KEYWORDS = (
+    "as", "box", "break", "const", "continue", "dyn", "else", "enum",
+    "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
+    "move", "mut", "pub", "ref", "return", "static", "struct", "trait",
+    "type", "unsafe", "use", "where", "while", "yield",
+)
+
+ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((D1|D2|P1|C1)\)")
+RAW_STR_RE = re.compile(r'(b?r)(#*)"')
+
+
+def tokenize(src):
+    """Return (tokens, allows). tokens: list of (kind, text, line) with
+    kind in {id, num, fnum, p}; comments/strings/chars stripped.
+    allows: set of (line, rule) from `// lint: allow(R): ...` comments.
+    """
+    allows = set()
+    for ln, line in enumerate(src.split("\n"), 1):
+        for m in ALLOW_RE.finditer(line):
+            allows.add((ln, m.group(1)))
+
+    toks = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            while i < n and src[i] != "\n":
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth, i = 1, i + 2
+            while i < n and depth > 0:
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            continue
+        m = RAW_STR_RE.match(src, i) if c in "rb" else None
+        if m:
+            close = '"' + "#" * len(m.group(2))
+            j = src.find(close, m.end())
+            j = n if j < 0 else j + len(close)
+            line += src.count("\n", i, j)
+            i = j
+            continue
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            i += 2 if c == "b" else 1
+            while i < n:
+                if src[i] == "\\":
+                    # count line continuations / escaped newlines
+                    if i + 1 < n and src[i + 1] == "\n":
+                        line += 1
+                    i += 2
+                elif src[i] == '"':
+                    i += 1
+                    break
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            continue
+        if c == "'" or (c == "b" and i + 1 < n and src[i + 1] == "'"):
+            j = i + (2 if c == "b" else 1)
+            if j < n and src[j] == "\\":
+                j += 2
+                while j < n and src[j] != "'":
+                    j += 1
+                i = j + 1
+                continue
+            if j + 1 < n and src[j] != "'" and src[j + 1] == "'":
+                i = j + 2
+                continue
+            # lifetime: consume the quote + identifier
+            i += 1
+            while i < n and (src[i].isalnum() or src[i] == "_"):
+                i += 1
+            continue
+        if c.isalpha() or c == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(("id", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j, isf = i, False
+            if src.startswith("0x", i) or src.startswith("0b", i):
+                j = i + 2
+                while j < n and (src[j].isalnum() or src[j] == "_"):
+                    j += 1
+            else:
+                while j < n and (src[j].isdigit() or src[j] == "_"):
+                    j += 1
+                if (
+                    j + 1 < n
+                    and src[j] == "."
+                    and src[j + 1].isdigit()
+                ):
+                    isf, j = True, j + 1
+                    while j < n and (
+                        src[j].isdigit() or src[j] == "_"
+                    ):
+                        j += 1
+                if (
+                    j < n
+                    and src[j] in "eE"
+                    and (
+                        (j + 1 < n and src[j + 1].isdigit())
+                        or (
+                            j + 2 < n
+                            and src[j + 1] in "+-"
+                            and src[j + 2].isdigit()
+                        )
+                    )
+                ):
+                    isf, j = True, j + 1
+                    if src[j] in "+-":
+                        j += 1
+                    while j < n and src[j].isdigit():
+                        j += 1
+                sfx = j
+                while sfx < n and (src[sfx].isalnum() or src[sfx] == "_"):
+                    sfx += 1
+                if src[j:sfx] in ("f32", "f64"):
+                    isf = True
+                j = sfx
+            toks.append(("fnum" if isf else "num", src[i:j], line))
+            i = j
+            continue
+        two = src[i : i + 2]
+        if two in ("::", "==", "!="):
+            toks.append(("p", two, line))
+            i += 2
+        else:
+            toks.append(("p", c, line))
+            i += 1
+    return toks, allows
+
+
+def test_regions(toks):
+    """Line ranges covered by `#[cfg(test)]` items (attribute included)."""
+    out = []
+    i = 0
+    while i < len(toks):
+        pat = [t[1] for t in toks[i : i + 7]]
+        if pat == ["#", "[", "cfg", "(", "test", ")", "]"]:
+            start_line = toks[i][2]
+            j = i + 7
+            # skip further attributes on the same item
+            while (
+                j + 1 < len(toks)
+                and toks[j][1] == "#"
+                and toks[j + 1][1] == "["
+            ):
+                depth, j = 1, j + 2
+                while j < len(toks) and depth > 0:
+                    if toks[j][1] == "[":
+                        depth += 1
+                    elif toks[j][1] == "]":
+                        depth -= 1
+                    j += 1
+            # find the item body's opening brace (or a terminating `;`)
+            while j < len(toks) and toks[j][1] not in ("{", ";"):
+                j += 1
+            if j < len(toks) and toks[j][1] == "{":
+                depth, j = 1, j + 1
+                while j < len(toks) and depth > 0:
+                    if toks[j][1] == "{":
+                        depth += 1
+                    elif toks[j][1] == "}":
+                        depth -= 1
+                    j += 1
+            end_line = toks[j - 1][2] if j > 0 else start_line
+            out.append((start_line, end_line))
+            i = j
+        else:
+            i += 1
+    return out
+
+
+def floaty(toks, i, direction):
+    """Is the operand next to a comparison at toks[i] float-typed by
+    lexical evidence (float literal or an INFINITY/NEG_INFINITY/NAN
+    path)?"""
+    j = i + direction
+    if j < 0 or j >= len(toks):
+        return False
+    if direction == 1 and toks[j][1] == "-":
+        j += 1
+        if j >= len(toks):
+            return False
+    k, t, _ = toks[j]
+    if k == "fnum":
+        return True
+    if k == "id" and t in FLOAT_CONSTS:
+        return True
+    # forward: `f32::INFINITY` — a path whose tail is a float const
+    if direction == 1 and k == "id":
+        if (
+            j + 2 < len(toks)
+            and toks[j + 1][1] == "::"
+            and toks[j + 2][1] in FLOAT_CONSTS
+        ):
+            return True
+    return False
+
+
+def match_paren(toks, i):
+    depth = 0
+    while i < len(toks):
+        if toks[i][1] == "(":
+            depth += 1
+        elif toks[i][1] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return len(toks)
+
+
+def scan_file(relpath, src):
+    """Return list of (rule, line, what, allowed)."""
+    module = relpath.split("/")[0] if "/" in relpath else "root"
+    toks, allows = tokenize(src)
+    excluded = test_regions(toks)
+
+    def in_test(line):
+        return any(a <= line <= b for a, b in excluded)
+
+    finds = []
+
+    def hit(rule, line, what):
+        allowed = (line, rule) in allows or (line - 1, rule) in allows
+        finds.append((rule, line, what, allowed))
+
+    det = module in DET_MODULES
+    for i, (k, t, line) in enumerate(toks):
+        if in_test(line):
+            continue
+        prev = toks[i - 1] if i > 0 else ("p", "", 0)
+        nxt = toks[i + 1] if i + 1 < len(toks) else ("p", "", 0)
+        if det and k == "id" and t in D1_IDENTS:
+            hit("D1", line, t)
+        if k == "id" and t == "partial_cmp":
+            hit("D2", line, "partial_cmp")
+        if k == "p" and t in ("==", "!="):
+            if floaty(toks, i, -1) or floaty(toks, i, 1):
+                hit("D2", line, "float " + t)
+        if (
+            k == "id"
+            and t in ("unwrap", "expect")
+            and prev[1] == "."
+            and nxt[1] == "("
+        ):
+            hit("P1", line, "." + t + "()")
+        if k == "id" and t in PANIC_MACROS and nxt[1] == "!":
+            hit("P1", line, t + "!")
+        if k == "p" and t == "[":
+            if (prev[0] == "id" and prev[1] not in KEYWORDS) or prev[
+                1
+            ] in (")", "]", "?"):
+                hit("P1", line, "indexing")
+        if (
+            k == "id"
+            and t in ("send", "try_send")
+            and prev[1] == "."
+            and nxt[1] == "("
+        ):
+            j = match_paren(toks, i + 1)
+            tail = [x[1] for x in toks[j + 1 : j + 4]]
+            if tail[:3] == [".", "ok", "("]:
+                hit("C1", line, "." + t + "(..).ok()")
+            else:
+                b = i
+                while b > 0 and toks[b - 1][1] not in (";", "{", "}"):
+                    b -= 1
+                head = [x[1] for x in toks[b : b + 3]]
+                if head == ["let", "_", "="]:
+                    hit("C1", line, "let _ = " + t)
+    return module, finds
+
+
+def scan_tree(root):
+    src_root = os.path.join(root, "rust", "src")
+    counts = {}  # (rule, module) -> [violations, allowed]
+    details = []
+    nfiles = 0
+    for dirpath, dirs, files in sorted(os.walk(src_root)):
+        dirs.sort()
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            nfiles += 1
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                module, finds = scan_file(rel, fh.read())
+            for rule, line, what, allowed in finds:
+                key = (rule, module)
+                counts.setdefault(key, [0, 0])
+                counts[key][1 if allowed else 0] += 1
+                details.append((rule, rel, line, what, allowed))
+    return nfiles, counts, details
+
+
+def render_baseline(counts):
+    lines = ["# pallas-lint baseline: <rule> <module> <count>"]
+    for (rule, module) in sorted(counts):
+        v = counts[(rule, module)][0]
+        if v > 0:
+            lines.append(f"{rule} {module} {v}")
+    return "\n".join(lines) + "\n"
+
+
+def parse_baseline(text):
+    base = {}
+    for ln in text.split("\n"):
+        ln = ln.strip()
+        if not ln or ln.startswith("#"):
+            continue
+        parts = ln.split()
+        if len(parts) == 3:
+            base[(parts[0], parts[1])] = int(parts[2])
+    return base
+
+
+def main(argv):
+    root = "."
+    write, verbose = False, False
+    it = iter(argv)
+    for a in it:
+        if a == "--root":
+            root = next(it)
+        elif a == "--write-baseline":
+            write = True
+        elif a == "--verbose":
+            verbose = True
+    nfiles, counts, details = scan_tree(root)
+    print(f"pallas-lint(mirror): scanned {nfiles} files")
+    for (rule, module) in sorted(counts):
+        v, a = counts[(rule, module)]
+        print(f"  {rule} {module:<12} violations={v} allowed={a}")
+    if verbose:
+        for rule, rel, line, what, allowed in details:
+            tag = " (allowed)" if allowed else ""
+            print(f"    {rule} {rel}:{line} {what}{tag}")
+    bpath = os.path.join(root, "lint-baseline.txt")
+    if write:
+        with open(bpath, "w", encoding="utf-8") as fh:
+            fh.write(render_baseline(counts))
+        print(f"wrote {bpath}")
+        return 0
+    ok = True
+    # hard floors, baseline-proof
+    for (rule, module), (v, _a) in sorted(counts.items()):
+        if v == 0:
+            continue
+        if rule in ("D1", "D2", "C1"):
+            print(f"FLOOR: {rule} must be 0 everywhere, {module} has {v}")
+            ok = False
+        if rule == "P1" and module in CORE_MODULES:
+            print(f"FLOOR: P1 must be 0 in {module}, found {v}")
+            ok = False
+    if os.path.exists(bpath):
+        base = parse_baseline(open(bpath, encoding="utf-8").read())
+        for (rule, module), (v, _a) in sorted(counts.items()):
+            b = base.get((rule, module), 0)
+            if v > b:
+                print(
+                    f"RATCHET: {rule} {module} rose {b} -> {v}"
+                )
+                ok = False
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

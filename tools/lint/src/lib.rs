@@ -1,0 +1,698 @@
+//! pallas-lint: a hermetic static-analysis pass over `rust/src`.
+//!
+//! Four rule families, each encoding an invariant this repo has been
+//! bitten by (see DESIGN.md §7 "Static invariants"):
+//!
+//! * **D1** — determinism: no `HashMap`/`HashSet`/`Instant`/
+//!   `SystemTime`/`thread_rng` tokens inside the deterministic modules
+//!   (`rollout/`, `sync/`, `coordinator/`, `testkit/`, `fp8/`).
+//! * **D2** — ordering: no `partial_cmp` anywhere; no float `==`/`!=`
+//!   where an operand is lexically float-typed (float literal or an
+//!   `INFINITY`/`NEG_INFINITY`/`NAN` path).
+//! * **P1** — panic-freedom: no `.unwrap()`/`.expect()`, no
+//!   `panic!`/`unreachable!`/`todo!`/`unimplemented!`, no bare `[`
+//!   indexing in non-test code.
+//! * **C1** — fence protocol: channel sends must not be silently
+//!   discarded (`let _ = x.send(..)` / `x.send(..).ok()`), because a
+//!   dropped fence ack deadlocks the epoch barrier.
+//!
+//! Per-site escape hatch: a `// lint: allow(<rule>): <reason>` comment
+//! on the violation's line or the line immediately above. Allowed
+//! sites are counted and reported, never hidden.
+//!
+//! `tools/lint/mirror.py` is a line-for-line Python mirror for
+//! environments without a Rust toolchain; keep them in lockstep.
+//!
+//! The scanner is lexical on purpose: no `syn`, no type information.
+//! It trades false positives (paid down via the baseline + `allow`)
+//! for a zero-dependency build and sub-second scans.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Modules whose behavior must be bit-deterministic (rule D1).
+pub const DET_MODULES: [&str; 5] =
+    ["rollout", "sync", "coordinator", "testkit", "fp8"];
+/// Modules where the P1 count must be zero (hard floor, baseline-proof).
+pub const CORE_MODULES: [&str; 4] = ["rollout", "sync", "coordinator", "rl"];
+
+const RULE_NAMES: [&str; 4] = ["D1", "D2", "P1", "C1"];
+const D1_IDENTS: [&str; 5] =
+    ["HashMap", "HashSet", "Instant", "SystemTime", "thread_rng"];
+const FLOAT_CONSTS: [&str; 3] = ["INFINITY", "NEG_INFINITY", "NAN"];
+const PANIC_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+const KEYWORDS: [&str; 31] = [
+    "as", "box", "break", "const", "continue", "dyn", "else", "enum",
+    "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
+    "move", "mut", "pub", "ref", "return", "static", "struct", "trait",
+    "type", "unsafe", "use", "where", "while", "yield",
+];
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Id,
+    Num,
+    Fnum,
+    Punct,
+}
+
+/// One lexical token; comments, strings, and chars are stripped.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One rule hit at a source line, with its allow status resolved.
+#[derive(Clone, Debug)]
+pub struct Find {
+    pub rule: &'static str,
+    pub line: usize,
+    pub what: String,
+    pub allowed: bool,
+}
+
+/// (rule, module) -> (violations, allowed). BTreeMap so iteration
+/// order matches the mirror's `sorted()` over string tuples.
+pub type Counts = BTreeMap<(&'static str, String), (usize, usize)>;
+
+/// One finding with its file, for `--verbose` reporting.
+#[derive(Clone, Debug)]
+pub struct Detail {
+    pub rule: &'static str,
+    pub rel: String,
+    pub line: usize,
+    pub what: String,
+    pub allowed: bool,
+}
+
+fn txt(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+fn slice_str(b: &[u8], i: usize, j: usize) -> String {
+    String::from_utf8_lossy(&b[i..j.min(b.len())]).into_owned()
+}
+
+/// Collect `// lint: allow(R)` markers on one physical line.
+fn collect_allows(
+    line: &str,
+    ln: usize,
+    allows: &mut BTreeSet<(usize, &'static str)>,
+) {
+    let b = line.as_bytes();
+    let mut i = 0usize;
+    while i + 1 < b.len() {
+        if b[i] == b'/' && b[i + 1] == b'/' {
+            let mut j = i + 2;
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if b[j..].starts_with(b"lint:") {
+                j += 5;
+                while j < b.len() && b[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if b[j..].starts_with(b"allow(") {
+                    j += 6;
+                    for rule in RULE_NAMES {
+                        let nm = rule.as_bytes();
+                        if b[j..].starts_with(nm)
+                            && b.get(j + nm.len()) == Some(&b')')
+                        {
+                            allows.insert((ln, rule));
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Does a raw-string literal (`r"`, `r#"`, `br"`, ...) open at `i`?
+/// Returns (index just past the opening quote, hash count).
+fn raw_str_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+        hashes += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn find_sub(b: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from > b.len() {
+        return None;
+    }
+    b[from..]
+        .windows(needle.len().max(1))
+        .position(|w| w == needle)
+        .map(|p| from + p)
+}
+
+fn count_nl(b: &[u8], from: usize, to: usize) -> usize {
+    b[from.min(b.len())..to.min(b.len())]
+        .iter()
+        .filter(|&&c| c == b'\n')
+        .count()
+}
+
+/// Tokenize Rust source: returns (tokens, allow markers). Works on
+/// bytes; non-ASCII appears only inside comments/strings, which are
+/// stripped, so byte-wise classification matches the mirror.
+pub fn tokenize(src: &str) -> (Vec<Tok>, BTreeSet<(usize, &'static str)>) {
+    let mut allows = BTreeSet::new();
+    for (ln0, line) in src.split('\n').enumerate() {
+        collect_allows(line, ln0 + 1, &mut allows);
+    }
+
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let (mut i, mut line) = (0usize, 1usize);
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i..].starts_with(b"/*") {
+                    depth += 1;
+                    i += 2;
+                } else if b[i..].starts_with(b"*/") {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == b'r' || c == b'b' {
+            if let Some((open_end, hashes)) = raw_str_open(b, i) {
+                let mut close = vec![b'"'];
+                close.extend(std::iter::repeat(b'#').take(hashes));
+                let j = find_sub(b, &close, open_end)
+                    .map_or(n, |p| p + close.len());
+                line += count_nl(b, i, j);
+                i = j;
+                continue;
+            }
+        }
+        if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == b'\\' {
+                    // count line continuations / escaped newlines
+                    if b.get(i + 1) == Some(&b'\n') {
+                        line += 1;
+                    }
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == b'\'' || (c == b'b' && b.get(i + 1) == Some(&b'\'')) {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            if b.get(j) == Some(&b'\\') {
+                j += 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                i = j + 1;
+                continue;
+            }
+            if j + 1 < n && b[j] != b'\'' && b[j + 1] == b'\'' {
+                i = j + 2;
+                continue;
+            }
+            // lifetime: consume the quote + identifier
+            i += 1;
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Id,
+                text: slice_str(b, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut isf = false;
+            if b[i..].starts_with(b"0x") || b[i..].starts_with(b"0b") {
+                j = i + 2;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_')
+                {
+                    j += 1;
+                }
+            } else {
+                while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                    j += 1;
+                }
+                if j + 1 < n && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                    isf = true;
+                    j += 1;
+                    while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                        j += 1;
+                    }
+                }
+                let exp = j < n
+                    && (b[j] == b'e' || b[j] == b'E')
+                    && ((j + 1 < n && b[j + 1].is_ascii_digit())
+                        || (j + 2 < n
+                            && (b[j + 1] == b'+' || b[j + 1] == b'-')
+                            && b[j + 2].is_ascii_digit()));
+                if exp {
+                    isf = true;
+                    j += 1;
+                    if b[j] == b'+' || b[j] == b'-' {
+                        j += 1;
+                    }
+                    while j < n && b[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                let mut sfx = j;
+                while sfx < n
+                    && (b[sfx].is_ascii_alphanumeric() || b[sfx] == b'_')
+                {
+                    sfx += 1;
+                }
+                if &b[j..sfx] == b"f32" || &b[j..sfx] == b"f64" {
+                    isf = true;
+                }
+                j = sfx;
+            }
+            toks.push(Tok {
+                kind: if isf { Kind::Fnum } else { Kind::Num },
+                text: slice_str(b, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        let two: &[u8] = &b[i..n.min(i + 2)];
+        if two == b"::" || two == b"==" || two == b"!=" {
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: slice_str(b, i, i + 2),
+                line,
+            });
+            i += 2;
+        } else {
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: slice_str(b, i, i + 1),
+                line,
+            });
+            i += 1;
+        }
+    }
+    (toks, allows)
+}
+
+/// Line ranges covered by `#[cfg(test)]` items (attribute included).
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    const PAT: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_cfg = PAT
+            .iter()
+            .enumerate()
+            .all(|(k, &p)| txt(toks, i + k) == p);
+        if !is_cfg {
+            i += 1;
+            continue;
+        }
+        let start_line = toks.get(i).map_or(1, |t| t.line);
+        let mut j = i + 7;
+        // skip further attributes on the same item
+        while txt(toks, j) == "#" && txt(toks, j + 1) == "[" {
+            let mut depth = 1usize;
+            j += 2;
+            while j < toks.len() && depth > 0 {
+                match txt(toks, j) {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // find the item body's opening brace (or a terminating `;`)
+        while j < toks.len() && !matches!(txt(toks, j), "{" | ";") {
+            j += 1;
+        }
+        if txt(toks, j) == "{" {
+            let mut depth = 1usize;
+            j += 1;
+            while j < toks.len() && depth > 0 {
+                match txt(toks, j) {
+                    "{" => depth += 1,
+                    "}" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        let end_line = j
+            .checked_sub(1)
+            .and_then(|p| toks.get(p))
+            .map_or(start_line, |t| t.line);
+        out.push((start_line, end_line));
+        i = j.max(i + 1);
+    }
+    out
+}
+
+/// Is the operand next to a comparison at `toks[i]` float-typed by
+/// lexical evidence (float literal or an `INFINITY`/`NEG_INFINITY`/
+/// `NAN` path)?
+fn floaty(toks: &[Tok], i: usize, dir: isize) -> bool {
+    let Some(mut j) = i.checked_add_signed(dir) else {
+        return false;
+    };
+    if j >= toks.len() {
+        return false;
+    }
+    if dir == 1 && txt(toks, j) == "-" {
+        j += 1;
+        if j >= toks.len() {
+            return false;
+        }
+    }
+    let Some(t) = toks.get(j) else {
+        return false;
+    };
+    if t.kind == Kind::Fnum {
+        return true;
+    }
+    let is_const = FLOAT_CONSTS.contains(&t.text.as_str());
+    if t.kind == Kind::Id && is_const {
+        return true;
+    }
+    // forward: `f32::INFINITY` — a path whose tail is a float const
+    dir == 1
+        && t.kind == Kind::Id
+        && j + 2 < toks.len()
+        && txt(toks, j + 1) == "::"
+        && FLOAT_CONSTS.contains(&txt(toks, j + 2))
+}
+
+fn match_paren(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0i64;
+    while i < toks.len() {
+        match txt(toks, i) {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Scan one file. `relpath` is relative to `rust/src` with `/`
+/// separators; the module is its first path component (or "root").
+pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
+    let module = match relpath.split_once('/') {
+        Some((m, _)) => m.to_string(),
+        None => "root".to_string(),
+    };
+    let (toks, allows) = tokenize(src);
+    let excluded = test_regions(&toks);
+    let in_test = |line: usize| {
+        excluded.iter().any(|&(a, b)| (a..=b).contains(&line))
+    };
+
+    let mut finds: Vec<Find> = Vec::new();
+    let det = DET_MODULES.contains(&module.as_str());
+    for i in 0..toks.len() {
+        let Some(tok) = toks.get(i) else { break };
+        let (k, t, line) = (tok.kind, tok.text.as_str(), tok.line);
+        if in_test(line) {
+            continue;
+        }
+        let (prev_kind, prev) = match i.checked_sub(1) {
+            Some(p) => toks
+                .get(p)
+                .map_or((Kind::Punct, ""), |x| (x.kind, x.text.as_str())),
+            None => (Kind::Punct, ""),
+        };
+        let nxt = txt(&toks, i + 1);
+        let mut hit = |rule: &'static str, what: String| {
+            let allowed = allows.contains(&(line, rule))
+                || (line > 0 && allows.contains(&(line - 1, rule)));
+            finds.push(Find { rule, line, what, allowed });
+        };
+        if det && k == Kind::Id && D1_IDENTS.contains(&t) {
+            hit("D1", t.to_string());
+        }
+        if k == Kind::Id && t == "partial_cmp" {
+            hit("D2", "partial_cmp".to_string());
+        }
+        if k == Kind::Punct
+            && (t == "==" || t == "!=")
+            && (floaty(&toks, i, -1) || floaty(&toks, i, 1))
+        {
+            hit("D2", format!("float {t}"));
+        }
+        if k == Kind::Id
+            && (t == "unwrap" || t == "expect")
+            && prev == "."
+            && nxt == "("
+        {
+            hit("P1", format!(".{t}()"));
+        }
+        if k == Kind::Id && PANIC_MACROS.contains(&t) && nxt == "!" {
+            hit("P1", format!("{t}!"));
+        }
+        if k == Kind::Punct && t == "[" {
+            let after_ident =
+                prev_kind == Kind::Id && !KEYWORDS.contains(&prev);
+            if after_ident || matches!(prev, ")" | "]" | "?") {
+                hit("P1", "indexing".to_string());
+            }
+        }
+        if k == Kind::Id
+            && (t == "send" || t == "try_send")
+            && prev == "."
+            && nxt == "("
+        {
+            let j = match_paren(&toks, i + 1);
+            if txt(&toks, j + 1) == "."
+                && txt(&toks, j + 2) == "ok"
+                && txt(&toks, j + 3) == "("
+            {
+                hit("C1", format!(".{t}(..).ok()"));
+            } else {
+                let mut s = i;
+                while s > 0 && !matches!(txt(&toks, s - 1), ";" | "{" | "}")
+                {
+                    s -= 1;
+                }
+                if txt(&toks, s) == "let"
+                    && txt(&toks, s + 1) == "_"
+                    && txt(&toks, s + 2) == "="
+                {
+                    hit("C1", format!("let _ = {t}"));
+                }
+            }
+        }
+    }
+    (module, finds)
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    let mut subdirs = Vec::new();
+    for e in &entries {
+        let p = e.path();
+        if p.is_dir() {
+            subdirs.push(p);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    for d in subdirs {
+        rs_files(&d, out)?;
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `<root>/rust/src`.
+pub fn scan_tree(root: &Path) -> io::Result<(usize, Counts, Vec<Detail>)> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    rs_files(&src_root, &mut files)?;
+    let mut counts = Counts::new();
+    let mut details = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)?;
+        let (module, finds) = scan_file(&rel, &src);
+        for f in finds {
+            let e = counts.entry((f.rule, module.clone())).or_insert((0, 0));
+            if f.allowed {
+                e.1 += 1;
+            } else {
+                e.0 += 1;
+            }
+            details.push(Detail {
+                rule: f.rule,
+                rel: rel.clone(),
+                line: f.line,
+                what: f.what,
+                allowed: f.allowed,
+            });
+        }
+    }
+    Ok((files.len(), counts, details))
+}
+
+/// Render the committed baseline format: one `<rule> <module> <count>`
+/// line per nonzero violation count, sorted, plus a header.
+pub fn render_baseline(counts: &Counts) -> String {
+    let mut out =
+        String::from("# pallas-lint baseline: <rule> <module> <count>\n");
+    for ((rule, module), (v, _a)) in counts {
+        if *v > 0 {
+            out.push_str(&format!("{rule} {module} {v}\n"));
+        }
+    }
+    out
+}
+
+/// Parse a baseline file back to (rule, module) -> count. Unparseable
+/// lines are ignored (a missing entry ratchets to zero, the strict
+/// direction).
+pub fn parse_baseline(text: &str) -> BTreeMap<(String, String), usize> {
+    let mut base = BTreeMap::new();
+    for ln in text.split('\n') {
+        let ln = ln.trim();
+        if ln.is_empty() || ln.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = ln.split_whitespace().collect();
+        if let [rule, module, count] = parts.as_slice() {
+            if let Ok(v) = count.parse::<usize>() {
+                base.insert((rule.to_string(), module.to_string()), v);
+            }
+        }
+    }
+    base
+}
+
+/// Full CLI run: scan, report, then either write the baseline or
+/// enforce floors + ratchet. Returns Ok(true) when the tree passes.
+pub fn run(root: &Path, write: bool, verbose: bool) -> io::Result<bool> {
+    let (nfiles, counts, details) = scan_tree(root)?;
+    println!("pallas-lint: scanned {nfiles} files");
+    for ((rule, module), (v, a)) in &counts {
+        println!("  {rule} {module:<12} violations={v} allowed={a}");
+    }
+    if verbose {
+        for d in &details {
+            let tag = if d.allowed { " (allowed)" } else { "" };
+            println!("    {} {}:{} {}{}", d.rule, d.rel, d.line, d.what, tag);
+        }
+    }
+    let bpath = root.join("lint-baseline.txt");
+    if write {
+        fs::write(&bpath, render_baseline(&counts))?;
+        println!("wrote {}", bpath.display());
+        return Ok(true);
+    }
+    let mut ok = true;
+    // hard floors, baseline-proof
+    for ((rule, module), (v, _a)) in &counts {
+        if *v == 0 {
+            continue;
+        }
+        if matches!(*rule, "D1" | "D2" | "C1") {
+            println!("FLOOR: {rule} must be 0 everywhere, {module} has {v}");
+            ok = false;
+        }
+        if *rule == "P1" && CORE_MODULES.contains(&module.as_str()) {
+            println!("FLOOR: P1 must be 0 in {module}, found {v}");
+            ok = false;
+        }
+    }
+    if bpath.exists() {
+        let base = parse_baseline(&fs::read_to_string(&bpath)?);
+        for ((rule, module), (v, _a)) in &counts {
+            let key = (rule.to_string(), module.clone());
+            let b = base.get(&key).copied().unwrap_or(0);
+            if *v > b {
+                println!("RATCHET: {rule} {module} rose {b} -> {v}");
+                ok = false;
+            }
+        }
+    }
+    println!("{}", if ok { "OK" } else { "FAIL" });
+    Ok(ok)
+}

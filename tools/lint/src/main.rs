@@ -1,0 +1,39 @@
+//! CLI for pallas-lint. Mirrors tools/lint/mirror.py:
+//!   pallas-lint [--root DIR] [--write-baseline] [--verbose]
+//! Exit code 0 when floors + ratchet pass, 1 on lint failure, 2 on
+//! usage or I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut write = false;
+    let mut verbose = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(dir) = args.next() else {
+                    eprintln!("pallas-lint: --root requires a value");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(dir);
+            }
+            "--write-baseline" => write = true,
+            "--verbose" => verbose = true,
+            other => {
+                eprintln!("pallas-lint: unknown flag {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match pallas_lint::run(&root, write, verbose) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

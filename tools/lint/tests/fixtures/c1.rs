@@ -1,0 +1,22 @@
+use std::sync::mpsc::{Sender, SyncSender};
+
+pub fn drop_ack(tx: &Sender<u32>) {
+    let _ = tx.send(1);
+}
+
+pub fn swallow(tx: &Sender<u32>) {
+    tx.send(2).ok();
+}
+
+pub fn swallow_try(tx: &SyncSender<u32>) {
+    tx.try_send(3).ok();
+}
+
+pub fn propagated(tx: &Sender<u32>) -> Result<(), String> {
+    tx.send(4).map_err(|e| e.to_string())
+}
+
+pub fn allowed(tx: &Sender<u32>) {
+    // lint: allow(C1): teardown path, receiver may be gone
+    let _ = tx.send(5);
+}

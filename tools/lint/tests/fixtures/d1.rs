@@ -1,0 +1,10 @@
+use std::collections::HashMap;
+
+pub fn build() -> HashMap<u32, u32> {
+    HashMap::new()
+}
+
+pub fn allowed() -> usize {
+    // lint: allow(D1): seeded map used only for a size estimate
+    HashMap::<u32, u32>::new().len()
+}

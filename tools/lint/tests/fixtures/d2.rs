@@ -1,0 +1,20 @@
+pub fn cmp(a: f32, b: f32) -> bool {
+    a.partial_cmp(&b).is_some()
+}
+
+pub fn nan_eq(x: f32) -> bool {
+    x == f32::NAN
+}
+
+pub fn lit(x: f64) -> bool {
+    x != 0.5
+}
+
+pub fn int_ok(x: i64) -> bool {
+    x == 5
+}
+
+pub fn allowed(x: f32) -> bool {
+    // lint: allow(D2): exact sentinel comparison
+    x == f32::INFINITY
+}

@@ -1,0 +1,34 @@
+pub fn index(v: &[u32]) -> u32 {
+    v[0]
+}
+
+pub fn unwrapped(o: Option<u32>) -> u32 {
+    o.unwrap()
+}
+
+pub fn expected(o: Option<u32>) -> u32 {
+    o.expect("present")
+}
+
+pub fn boom() {
+    panic!("no");
+}
+
+pub fn safe(v: &[u32]) -> u32 {
+    v.first().copied().unwrap_or(0)
+}
+
+pub fn allowed(v: &[u32]) -> u32 {
+    v[1] // lint: allow(P1): length checked by the caller
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn indexing_in_tests_is_fine() {
+        let v = [1, 2, 3];
+        assert_eq!(v[0], 1);
+        let o: Option<u32> = Some(4);
+        assert_eq!(o.unwrap(), 4);
+    }
+}

@@ -1,0 +1,187 @@
+//! pallas-lint test suite: per-rule fixtures (positive / negative /
+//! allow), tokenizer line accounting, `#[cfg(test)]` exclusion, the
+//! baseline round-trip, and the committed-baseline cross-check that
+//! keeps `lint-baseline.txt` honest.
+
+use std::path::Path;
+
+use pallas_lint::*;
+
+/// (violations, allowed) for one rule over a scan_file result.
+fn tally(finds: &[Find], rule: &str) -> (usize, usize) {
+    let mut v = (0usize, 0usize);
+    for f in finds.iter().filter(|f| f.rule == rule) {
+        if f.allowed {
+            v.1 += 1;
+        } else {
+            v.0 += 1;
+        }
+    }
+    v
+}
+
+#[test]
+fn d1_flags_nondeterministic_idents_in_det_modules() {
+    let src = include_str!("fixtures/d1.rs");
+    let (module, finds) = scan_file("rollout/d1.rs", src);
+    assert_eq!(module, "rollout");
+    assert_eq!(tally(&finds, "D1"), (3, 1));
+    // the allowed site is the one under the marker, not the `use`
+    let allowed: Vec<usize> = finds
+        .iter()
+        .filter(|f| f.rule == "D1" && f.allowed)
+        .map(|f| f.line)
+        .collect();
+    assert_eq!(allowed, vec![9]);
+}
+
+#[test]
+fn d1_is_scoped_to_det_modules() {
+    let src = include_str!("fixtures/d1.rs");
+    let (module, finds) = scan_file("util/d1.rs", src);
+    assert_eq!(module, "util");
+    assert_eq!(tally(&finds, "D1"), (0, 0));
+}
+
+#[test]
+fn d2_flags_partial_cmp_and_float_eq() {
+    let src = include_str!("fixtures/d2.rs");
+    let (_m, finds) = scan_file("rl/d2.rs", src);
+    assert_eq!(tally(&finds, "D2"), (3, 1));
+    let whats: Vec<&str> = finds
+        .iter()
+        .filter(|f| !f.allowed)
+        .map(|f| f.what.as_str())
+        .collect();
+    assert_eq!(whats, vec!["partial_cmp", "float ==", "float !="]);
+}
+
+#[test]
+fn d2_ignores_integer_comparisons() {
+    let src = "fn f(x: i64) -> bool { x == 5 }\n";
+    let (_m, finds) = scan_file("rl/x.rs", src);
+    assert_eq!(tally(&finds, "D2"), (0, 0));
+}
+
+#[test]
+fn p1_flags_panics_and_indexing_outside_tests() {
+    let src = include_str!("fixtures/p1.rs");
+    let (_m, finds) = scan_file("rl/p1.rs", src);
+    assert_eq!(tally(&finds, "P1"), (4, 1));
+    // the #[cfg(test)] mod at the bottom contributes nothing
+    assert!(finds.iter().all(|f| f.line < 25));
+}
+
+#[test]
+fn p1_same_line_allow_marker_applies() {
+    let src = include_str!("fixtures/p1.rs");
+    let (_m, finds) = scan_file("rl/p1.rs", src);
+    let allowed: Vec<(usize, &str)> = finds
+        .iter()
+        .filter(|f| f.allowed)
+        .map(|f| (f.line, f.what.as_str()))
+        .collect();
+    assert_eq!(allowed, vec![(22, "indexing")]);
+}
+
+#[test]
+fn c1_flags_discarded_sends_only() {
+    let src = include_str!("fixtures/c1.rs");
+    let (_m, finds) = scan_file("sync/c1.rs", src);
+    assert_eq!(tally(&finds, "C1"), (3, 1));
+    let whats: Vec<&str> = finds
+        .iter()
+        .filter(|f| !f.allowed)
+        .map(|f| f.what.as_str())
+        .collect();
+    assert_eq!(
+        whats,
+        vec!["let _ = send", ".send(..).ok()", ".try_send(..).ok()"]
+    );
+}
+
+#[test]
+fn string_line_continuations_keep_line_numbers_aligned() {
+    // `"a\` + newline + ` b"` is one string with an escaped newline;
+    // a tokenizer that skips it without counting mis-anchors every
+    // later finding (and thereby every allow marker) by one line.
+    let src =
+        "fn f(v: &[u32]) -> u32 {\n    let _s = \"a\\\n b\";\n    v[0]\n}\n";
+    let (_m, finds) = scan_file("rl/probe.rs", src);
+    let lines: Vec<(usize, &str)> = finds
+        .iter()
+        .map(|f| (f.line, f.what.as_str()))
+        .collect();
+    assert_eq!(lines, vec![(4, "indexing")]);
+}
+
+#[test]
+fn cfg_test_items_are_excluded() {
+    let src =
+        "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let v = [1];\n        assert_eq!(v[0], 1);\n        Option::<u32>::None.unwrap();\n    }\n}\n";
+    let (_m, finds) = scan_file("rl/t.rs", src);
+    assert!(finds.is_empty(), "got {finds:?}");
+}
+
+#[test]
+fn raw_strings_and_comments_hide_tokens() {
+    let src =
+        "fn f() -> &'static str {\n    // v[0] and x.unwrap() in a comment\n    /* panic!(\"nope\") */\n    r#\"let _ = tx.send(1); v[0]\"#\n}\n";
+    let (_m, finds) = scan_file("rl/s.rs", src);
+    assert!(finds.is_empty(), "got {finds:?}");
+}
+
+#[test]
+fn baseline_round_trips() {
+    let mut counts = Counts::new();
+    counts.insert(("P1", "runtime".to_string()), (107, 0));
+    counts.insert(("P1", "util".to_string()), (8, 2));
+    counts.insert(("D2", "fp8".to_string()), (0, 3));
+    let text = render_baseline(&counts);
+    let base = parse_baseline(&text);
+    // zero-violation rows are elided; nonzero rows survive exactly
+    assert_eq!(base.len(), 2);
+    assert_eq!(
+        base.get(&("P1".to_string(), "runtime".to_string())),
+        Some(&107)
+    );
+    assert_eq!(
+        base.get(&("P1".to_string(), "util".to_string())),
+        Some(&8)
+    );
+    assert!(text.starts_with("# pallas-lint baseline:"));
+}
+
+#[test]
+fn committed_baseline_matches_fresh_scan() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let (nfiles, counts, _details) =
+        scan_tree(&root).expect("scan rust/src");
+    assert!(nfiles > 0, "scan found no files");
+    let fresh = render_baseline(&counts);
+    let committed =
+        std::fs::read_to_string(root.join("lint-baseline.txt"))
+            .expect("read lint-baseline.txt");
+    assert_eq!(
+        fresh, committed,
+        "lint-baseline.txt is stale: regenerate with \
+         `cargo run -p pallas-lint -- --write-baseline`"
+    );
+}
+
+#[test]
+fn floors_hold_on_the_committed_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let (_n, counts, _d) = scan_tree(&root).expect("scan rust/src");
+    for ((rule, module), (v, _a)) in &counts {
+        if matches!(*rule, "D1" | "D2" | "C1") {
+            assert_eq!(
+                *v, 0,
+                "{rule} must be 0 everywhere, {module} has {v}"
+            );
+        }
+        if *rule == "P1" && CORE_MODULES.contains(&module.as_str()) {
+            assert_eq!(*v, 0, "P1 must be 0 in {module}, found {v}");
+        }
+    }
+}
