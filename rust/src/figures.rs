@@ -222,7 +222,10 @@ pub fn reproduce(args: &Args) -> Result<()> {
             println!("[cached] {run}");
             continue;
         }
-        let mut cfg = registry[run].clone();
+        let Some(cfg) = registry.get(run) else {
+            bail!("run {run:?} missing from the registry");
+        };
+        let mut cfg = cfg.clone();
         if let Some(s) = steps_override {
             cfg.steps = s;
         }
@@ -249,7 +252,9 @@ pub fn reproduce(args: &Args) -> Result<()> {
 
     // assemble per-figure arm CSVs (copies with stable arm names)
     for f in &figs {
-        for (arm, run) in figure_arms(f).unwrap() {
+        // already validated by the `needed` collection loop above
+        let Some(arms) = figure_arms(f) else { continue };
+        for (arm, run) in arms {
             let src = format!("{out_dir}/runs/{run}.csv");
             let dst_dir = format!("{out_dir}/{f}");
             std::fs::create_dir_all(&dst_dir)?;
@@ -354,14 +359,16 @@ fn perf_length_sweep(
             ])?;
             reports.push(r);
         }
+        let [bf16, fp8] = reports.as_slice() else {
+            bail!("rollout perf sweep expects exactly 2 plans (bf16, fp8)");
+        };
         println!(
             "{:>8} {:>12.3} {:>12.3} {:>11.1}% {:>10}",
             len,
-            reports[0].ms_per_token,
-            reports[1].ms_per_token,
-            (reports[0].ms_per_token / reports[1].ms_per_token - 1.0)
-                * 100.0,
-            reports[0].preemptions,
+            bf16.ms_per_token,
+            fp8.ms_per_token,
+            (bf16.ms_per_token / fp8.ms_per_token - 1.0) * 100.0,
+            bf16.preemptions,
         );
     }
     w.flush()?;

@@ -175,10 +175,16 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         // token bookkeeping + completion
         let survivors: Vec<u64> = sched.running_ids().to_vec();
         for id in survivors {
-            let g = generated.get_mut(&id).unwrap();
+            // a running id without bookkeeping means the scheduler and
+            // the sim disagree; skip it rather than panic mid-sweep
+            let (Some(g), Some(&target)) =
+                (generated.get_mut(&id), targets.get(&id))
+            else {
+                continue;
+            };
             *g += 1;
             tokens += 1;
-            if *g >= targets[&id] {
+            if *g >= target {
                 sched.finish(id);
                 generated.remove(&id);
                 targets.remove(&id);

@@ -99,7 +99,10 @@ impl KvBlockManager {
     }
 
     pub fn used_blocks(&self) -> usize {
-        self.total_blocks - self.free.len()
+        // free blocks only ever come out of the initial pool, so the
+        // free list can never exceed the total; saturate anyway rather
+        // than letting a future accounting bug wrap to usize::MAX
+        self.total_blocks.saturating_sub(self.free.len())
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -175,7 +178,7 @@ impl KvBlockManager {
             };
             s.blocks.push(b);
         }
-        s.tokens += 1;
+        s.tokens = s.tokens.saturating_add(1);
         self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(true)
     }

@@ -80,23 +80,39 @@
 //! fails a fence or whose thread dies is QUARANTINED from placement
 //! (its instantly-failing admissions would otherwise keep its load
 //! near zero and make `LeastLoaded` funnel traffic into it); a dead
-//! replica's unresolved tickets and owed fence acks are written off
-//! by a reaper so blocking waits terminate. The barrier-era
+//! replica's owed fence acks are written off by a reaper so blocking
+//! waits terminate, and its unresolved tickets are RE-ROUTED to a
+//! surviving replica at the current pool epoch (failing only the ones
+//! nobody can take). The barrier-era
 //! [`EnginePool::generate`] survives as submit-all + drain with
 //! all-or-nothing semantics: any failed ticket fails the call, drops
 //! the delivered results, and tells their replicas to count the
 //! dropped tokens as discarded (preserving the "tokens_generated
 //! counts only delivered tokens" invariant).
+//!
+//! ## Protocol conformance (hb tracing)
+//!
+//! Every channel send/recv, fence park/apply/ack, admission,
+//! quarantine write-off, and ticket resolution runs through an
+//! [`HbHandle`] hook (`testkit::hb`) — a literal no-op unless a test
+//! attaches a recorder via [`EnginePool::new_traced`], in which case
+//! the whole session is logged with vector-clock stamps and
+//! [`EnginePool::hb_verify`] replays it through the fence-protocol
+//! conformance checker. Worker-bound sends go through [`WorkerLink`]
+//! (`send_ordered` / `send_ctl`), the only place a raw channel send
+//! of a `ToWorker::` value may appear — lint rule C2 flags any other,
+//! so no future code path can bypass the fence FIFO ordering.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{
-    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+    channel, Receiver, RecvTimeoutError, SendError, Sender, TryRecvError,
 };
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::runtime::{HostArray, Runtime};
+use crate::testkit::hb::{EvLabel, HbHandle, HbReport, MsgLabel, ResolveKind};
 use crate::util::error::{anyhow, bail, Error, Result};
 
 use super::engine::{EngineConfig, EngineStats, HloEngine};
@@ -177,23 +193,28 @@ pub enum Completed {
     Failed(TicketId, String),
 }
 
-enum ToWorker {
-    /// Streaming admission; the `u64` is the pool epoch at submit
-    /// time, which channel FIFO order guarantees equals the engine's
-    /// weight epoch at admission (checked — see the module docs).
-    Submit(Request, u64),
+/// Order-INSENSITIVE worker control: handled at ingest even while a
+/// fence is parked (an abort must be able to cancel the straggler a
+/// fence is draining; stats must not stall behind it).
+enum Ctl {
     /// Cancel a streamed request if it has not completed yet.
     Abort(u64),
-    /// Epoch fence: finish all in-flight work under the current
-    /// weights, then install and acknowledge the target epoch.
-    SyncWeights(Arc<Vec<HostArray>>, u64),
-    /// Epoch fence for recalibrated KV scales.
-    SyncKvScales(f32, f32, u64),
     /// Count `n` delivered-then-dropped tokens as discarded (the
     /// barrier `generate`'s all-or-nothing failure path).
     Discard(u64),
     Stats(Sender<(usize, EngineStats)>),
     Shutdown,
+}
+
+/// The worker wire protocol: every message is either epoch-ORDERED
+/// (its channel position defines which weights a request runs under)
+/// or plain control. Constructed ONLY inside [`WorkerLink`] — lint
+/// rule C2 flags any raw `send` of a `ToWorker::` value, so a future
+/// code path cannot bypass the fence FIFO by smuggling an ordered
+/// message around the wrapper.
+enum ToWorker {
+    Ordered(Ordered),
+    Ctl(Ctl),
 }
 
 /// Worker -> pool notifications, merged over one shared channel.
@@ -206,9 +227,21 @@ enum Event {
 }
 
 /// A pending epoch fence, parked worker-side until the engine drains.
+/// Worker-side this is the `Draining(target)` state of the fence
+/// state machine (`Running → Draining → Installed`; see
+/// `testkit::hb::FenceState`, which the conformance checker validates
+/// event-by-event against the recorded park/apply/ack trace).
 enum Fence {
     Weights(Arc<Vec<HostArray>>, u64),
     KvScales(f32, f32, u64),
+}
+
+impl Fence {
+    fn target(&self) -> u64 {
+        match self {
+            Fence::Weights(_, t) | Fence::KvScales(_, _, t) => *t,
+        }
+    }
 }
 
 /// The epoch-ORDERED subset of worker messages: the ones whose
@@ -220,12 +253,91 @@ enum Ordered {
     Fence(Fence),
 }
 
+/// The pool's handle to one worker channel — the ONLY place a raw
+/// channel send of a `ToWorker::` value may appear (each carries an
+/// audited C2 allow). Everything else goes through `send_ordered` /
+/// `send_ctl`, so no code path can bypass the fence FIFO ordering.
+struct WorkerLink {
+    tx: Sender<ToWorker>,
+}
+
+impl WorkerLink {
+    /// Send an epoch-ORDERED message (submission or fence).
+    fn send_ordered(
+        &self,
+        m: Ordered,
+    ) -> std::result::Result<(), SendError<ToWorker>> {
+        // lint: allow(C2): WorkerLink IS the audited Ordered wrapper
+        self.tx.send(ToWorker::Ordered(m))
+    }
+
+    /// Send order-insensitive control.
+    fn send_ctl(
+        &self,
+        m: Ctl,
+    ) -> std::result::Result<(), SendError<ToWorker>> {
+        // lint: allow(C2): WorkerLink IS the audited Ordered wrapper
+        self.tx.send(ToWorker::Ctl(m))
+    }
+}
+
+/// hb label for a control message (what the pool claims it sent).
+fn ctl_label(c: &Ctl) -> MsgLabel {
+    match c {
+        Ctl::Abort(id) => MsgLabel::Abort { ticket: *id },
+        Ctl::Discard(_) => MsgLabel::Discard,
+        Ctl::Stats(_) => MsgLabel::Stats,
+        Ctl::Shutdown => MsgLabel::Shutdown,
+    }
+}
+
+/// hb label for any worker-bound message (what the worker actually
+/// received — the recorder cross-checks the two, so the channel FIFO
+/// itself is under test).
+fn msg_label(m: &ToWorker) -> MsgLabel {
+    match m {
+        ToWorker::Ordered(Ordered::Submit(r, stamp)) => {
+            MsgLabel::Submit { ticket: r.id, stamp: *stamp }
+        }
+        ToWorker::Ordered(Ordered::Fence(f)) => {
+            MsgLabel::Fence { target: f.target() }
+        }
+        ToWorker::Ctl(c) => ctl_label(c),
+    }
+}
+
+/// hb metadata for a worker event (replica + label).
+fn ev_meta(ev: &Event) -> (usize, EvLabel) {
+    match ev {
+        Event::Done(r, c) => {
+            (*r, EvLabel::Done { ticket: c.id, epoch: c.epoch })
+        }
+        Event::Aborted(r, id) => (*r, EvLabel::Aborted { ticket: *id }),
+        Event::Failed(r, id, _) => (*r, EvLabel::Failed { ticket: *id }),
+        Event::Fence(r, t, res) => {
+            (*r, EvLabel::FenceAck { target: *t, ok: res.is_ok() })
+        }
+    }
+}
+
 /// The pool hung up its event receiver (dropped mid-session): the
 /// worker has nobody to report to and must exit its serve loop.
 struct PoolGone;
 
-fn emit(events: &Sender<Event>, ev: Event) -> Result<(), PoolGone> {
-    events.send(ev).map_err(|_| PoolGone)
+fn emit(
+    hb: &HbHandle,
+    events: &Sender<Event>,
+    ev: Event,
+) -> Result<(), PoolGone> {
+    let (replica, label) = ev_meta(&ev);
+    hb.event_send(replica, label);
+    match events.send(ev) {
+        Ok(()) => Ok(()),
+        Err(_) => {
+            hb.event_send_failed(replica);
+            Err(PoolGone)
+        }
+    }
 }
 
 struct FenceAck {
@@ -257,6 +369,7 @@ fn apply_fence(
     engine: &mut HloEngine,
     fence: Fence,
     events: &Sender<Event>,
+    hb: &HbHandle,
 ) -> Result<(), PoolGone> {
     let (target, mut res) = match fence {
         Fence::Weights(w, target) => {
@@ -273,7 +386,8 @@ fn apply_fence(
             engine.weight_epoch()
         ));
     }
-    emit(events, Event::Fence(replica, target, res))
+    hb.fence_apply(replica, target, res.is_ok(), engine.weight_epoch());
+    emit(hb, events, Event::Fence(replica, target, res))
 }
 
 /// Process one epoch-ORDERED message (a submission or a fence). These
@@ -285,12 +399,14 @@ fn handle_ordered(
     msg: Ordered,
     fence: &mut Option<Fence>,
     events: &Sender<Event>,
+    hb: &HbHandle,
 ) -> Result<(), PoolGone> {
     match msg {
         Ordered::Submit(req, epoch) => {
             let id = req.id;
             if epoch != engine.weight_epoch() {
                 emit(
+                    hb,
                     events,
                     Event::Failed(
                         replica,
@@ -303,14 +419,21 @@ fn handle_ordered(
                         ),
                     ),
                 )?;
-            } else if let Err(e) = engine.enqueue(req) {
-                emit(
-                    events,
-                    Event::Failed(replica, id, e.to_string()),
-                )?;
+            } else {
+                match engine.enqueue(req) {
+                    Ok(_) => hb.admit(replica, id, epoch),
+                    Err(e) => emit(
+                        hb,
+                        events,
+                        Event::Failed(replica, id, e.to_string()),
+                    )?,
+                }
             }
         }
-        Ordered::Fence(f) => *fence = Some(f),
+        Ordered::Fence(f) => {
+            hb.fence_park(replica, f.target());
+            *fence = Some(f);
+        }
     }
     Ok(())
 }
@@ -322,6 +445,7 @@ fn worker_main(
     rx: Receiver<ToWorker>,
     events: Sender<Event>,
     init: Sender<(usize, Result<()>)>,
+    hb: HbHandle,
 ) {
     let built =
         factory().and_then(|rt| HloEngine::new(Arc::new(rt), cfg));
@@ -369,8 +493,9 @@ fn worker_main(
                     Err(TryRecvError::Disconnected) => break 'serve,
                 }
             };
+            hb.worker_recv(replica, msg_label(&msg));
             let ordered = match msg {
-                ToWorker::Abort(id) => {
+                ToWorker::Ctl(Ctl::Abort(id)) => {
                     // jumps any pending fence: cancelling propagates
                     // straight into the scheduler, so aborting the
                     // very straggler a fence is blocked on frees the
@@ -385,7 +510,7 @@ fn worker_main(
                     // already crossed (or is about to cross) the
                     // event channel — exactly-once either way.
                     if engine.cancel(id) {
-                        if emit(&events, Event::Aborted(replica, id))
+                        if emit(&hb, &events, Event::Aborted(replica, id))
                             .is_err()
                         {
                             break 'serve;
@@ -397,7 +522,7 @@ fn worker_main(
                         })
                     {
                         let _ = backlog.remove(pos);
-                        if emit(&events, Event::Aborted(replica, id))
+                        if emit(&hb, &events, Event::Aborted(replica, id))
                             .is_err()
                         {
                             break 'serve;
@@ -405,27 +530,19 @@ fn worker_main(
                     }
                     continue;
                 }
-                ToWorker::Discard(n) => {
+                ToWorker::Ctl(Ctl::Discard(n)) => {
                     engine.stats.discard_tokens(n);
                     continue;
                 }
-                ToWorker::Stats(reply) => {
+                ToWorker::Ctl(Ctl::Stats(reply)) => {
                     // a requester that timed out and dropped its
                     // receiver just misses the snapshot
                     // lint: allow(C1): reply to a gone requester
                     let _ = reply.send((replica, engine.stats.clone()));
                     continue;
                 }
-                ToWorker::Shutdown => break 'serve,
-                ToWorker::Submit(req, epoch) => {
-                    Ordered::Submit(req, epoch)
-                }
-                ToWorker::SyncWeights(w, t) => {
-                    Ordered::Fence(Fence::Weights(w, t))
-                }
-                ToWorker::SyncKvScales(k, v, t) => {
-                    Ordered::Fence(Fence::KvScales(k, v, t))
-                }
+                ToWorker::Ctl(Ctl::Shutdown) => break 'serve,
+                ToWorker::Ordered(m) => m,
             };
             if fence.is_some() {
                 backlog.push_back(ordered);
@@ -435,6 +552,7 @@ fn worker_main(
                 ordered,
                 &mut fence,
                 &events,
+                &hb,
             )
             .is_err()
             {
@@ -444,7 +562,7 @@ fn worker_main(
         // ---- apply a due fence, then replay the parked backlog ----
         if engine.is_idle() {
             if let Some(f) = fence.take() {
-                if apply_fence(replica, &mut engine, f, &events)
+                if apply_fence(replica, &mut engine, f, &events, &hb)
                     .is_err()
                 {
                     break 'serve;
@@ -458,6 +576,7 @@ fn worker_main(
                     m,
                     &mut fence,
                     &events,
+                    &hb,
                 )
                 .is_err()
                 {
@@ -471,7 +590,8 @@ fn worker_main(
         match engine.step(&mut done) {
             Ok(()) => {
                 for c in done.drain(..) {
-                    if emit(&events, Event::Done(replica, c)).is_err()
+                    if emit(&hb, &events, Event::Done(replica, c))
+                        .is_err()
                     {
                         break 'serve;
                     }
@@ -481,7 +601,8 @@ fn worker_main(
                 // completions that finished before the error are real
                 // and already counted as delivered — ship them
                 for c in done.drain(..) {
-                    if emit(&events, Event::Done(replica, c)).is_err()
+                    if emit(&hb, &events, Event::Done(replica, c))
+                        .is_err()
                     {
                         break 'serve;
                     }
@@ -491,6 +612,7 @@ fn worker_main(
                 let msg = e.to_string();
                 for id in failed {
                     if emit(
+                        &hb,
                         &events,
                         Event::Failed(replica, id, msg.clone()),
                     )
@@ -507,7 +629,7 @@ fn worker_main(
 pub struct EnginePool {
     cfg: PoolConfig,
     router: Router,
-    workers: Vec<Sender<ToWorker>>,
+    workers: Vec<WorkerLink>,
     handles: Vec<Option<JoinHandle<()>>>,
     events: Receiver<Event>,
     /// results pumped off the event channel, awaiting the caller
@@ -515,9 +637,12 @@ pub struct EnginePool {
     /// tickets of the `ready` items (submit's O(log n) duplicate-id
     /// guard — the whole queue is never scanned on the hot path)
     ready_ids: BTreeSet<u64>,
-    /// ticket -> replica for unresolved streamed requests (the abort /
-    /// discard targeting map; the router holds the load charges)
-    outstanding: BTreeMap<u64, usize>,
+    /// ticket -> (replica, request) for unresolved streamed requests:
+    /// the abort / discard targeting map (the router holds the load
+    /// charges). The request itself is retained so the reaper can
+    /// RE-ROUTE a dead replica's unstarted tickets to a survivor
+    /// instead of failing them outright.
+    outstanding: BTreeMap<u64, (usize, Request)>,
     /// pool weight epoch: bumped by every sync fence; submissions are
     /// stamped with it
     epoch: u64,
@@ -526,15 +651,45 @@ pub struct EnginePool {
     /// debt too, so an un-awaited fence cannot fail silently; a dead
     /// replica's debt is written off by the reaper as a fence failure
     fence_acks_owed: Vec<usize>,
+    /// replicas the reaper has already written off (the reaper runs
+    /// on every timeout tick; a corpse must be settled exactly once —
+    /// double write-offs would double-count quarantine events)
+    reaped: Vec<bool>,
     /// first failure reported by an un-awaited (streaming) fence;
     /// surfaced by the next `drain` / fence wait
     fence_failure: Option<Error>,
+    /// happens-before recorder handle (inert unless a test attached a
+    /// recorder via [`EnginePool::new_traced`])
+    hb: HbHandle,
 }
 
 impl EnginePool {
     pub fn new(cfg: PoolConfig, factory: RuntimeFactory) -> Result<Self> {
+        Self::new_traced(cfg, factory, HbHandle::default())
+    }
+
+    /// Build a pool with a happens-before recorder attached: every
+    /// channel send/recv, fence park/apply/ack, admission, quarantine
+    /// write-off, and ticket resolution is logged with a vector-clock
+    /// stamp, and `recorder.check()` (or [`EnginePool::hb_verify`])
+    /// replays the log through the fence-protocol conformance checker.
+    /// With the default inert handle this is exactly [`EnginePool::new`].
+    pub fn new_traced(
+        cfg: PoolConfig,
+        factory: RuntimeFactory,
+        hb: HbHandle,
+    ) -> Result<Self> {
         if cfg.n_replicas == 0 {
             bail!("engine pool needs at least one replica");
+        }
+        if let Some(n) = hb.traced_replicas() {
+            if n != cfg.n_replicas {
+                bail!(
+                    "hb recorder sized for {n} replicas attached to a \
+                     pool of {}",
+                    cfg.n_replicas
+                );
+            }
         }
         let mut workers = Vec::with_capacity(cfg.n_replicas);
         let mut handles = Vec::with_capacity(cfg.n_replicas);
@@ -546,10 +701,11 @@ impl EnginePool {
             let ecfg = cfg.engine.clone();
             let itx = init_tx.clone();
             let etx = event_tx.clone();
+            let hbw = hb.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("engine-pool-{replica}"))
                 .spawn(move || {
-                    worker_main(replica, ecfg, f, rx, etx, itx)
+                    worker_main(replica, ecfg, f, rx, etx, itx, hbw)
                 });
             let handle = match spawned {
                 Ok(h) => h,
@@ -569,7 +725,7 @@ impl EnginePool {
                     )));
                 }
             };
-            workers.push(tx);
+            workers.push(WorkerLink { tx });
             handles.push(Some(handle));
         }
         drop(init_tx);
@@ -613,8 +769,18 @@ impl EnginePool {
             outstanding: BTreeMap::new(),
             epoch: 0,
             fence_acks_owed: vec![0; n],
+            reaped: vec![false; n],
             fence_failure: None,
+            hb,
         })
+    }
+
+    /// Replay the attached happens-before log through the conformance
+    /// checker (see `testkit::hb`). `Ok(None)` when the pool is
+    /// untraced. Meaningful once the session is quiescent — every
+    /// submitted ticket resolved and every fence acked or written off.
+    pub fn hb_verify(&self) -> Result<Option<HbReport>> {
+        self.hb.verify()
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -647,8 +813,16 @@ impl EnginePool {
     // ---- event plumbing ----
 
     /// Queue a resolved ticket for the caller (tracking its id for
-    /// the duplicate-submit guard).
+    /// the duplicate-submit guard). This is THE resolution point —
+    /// exactly-once delivery to the caller — so the hb resolve hook
+    /// lives here.
     fn push_ready(&mut self, item: ReadyItem) {
+        let kind = match &item.item {
+            Completed::Done(c) => ResolveKind::Done { epoch: c.epoch },
+            Completed::Aborted(_) => ResolveKind::Aborted,
+            Completed::Failed(_, _) => ResolveKind::Failed,
+        };
+        self.hb.resolve(item.ticket(), kind);
         self.ready_ids.insert(item.ticket());
         self.ready.push_back(item);
     }
@@ -667,6 +841,10 @@ impl EnginePool {
     /// panics can race the reaper (which already settled the ticket
     /// as failed), and tickets must resolve exactly once.
     fn handle_event(&mut self, ev: Event) -> Option<FenceAck> {
+        {
+            let (replica, label) = ev_meta(&ev);
+            self.hb.event_recv(replica, label);
+        }
         match ev {
             Event::Done(replica, c) => {
                 if self.outstanding.remove(&c.id).is_none() {
@@ -750,15 +928,27 @@ impl EnginePool {
     /// was reaped. Callers pump first, so resolutions the thread DID
     /// send before dying are honored.
     fn reap_dead_workers(&mut self) -> bool {
+        let dead: Vec<usize> = (0..self.handles.len())
+            .filter(|&r| {
+                !self.reaped.get(r).copied().unwrap_or(true)
+                    && self
+                        .handles
+                        .get(r)
+                        .and_then(|h| h.as_ref())
+                        .map_or(true, |h| h.is_finished())
+            })
+            .collect();
+        if dead.is_empty() {
+            return false;
+        }
+        // a dead thread's sends happen-before its exit: pump once so
+        // every resolution the corpse DID report is honored before we
+        // write anything off
+        self.pump();
         let mut reaped = false;
-        for r in 0..self.handles.len() {
-            let dead = self
-                .handles
-                .get(r)
-                .and_then(|h| h.as_ref())
-                .map_or(true, |h| h.is_finished());
-            if !dead {
-                continue;
+        for r in dead {
+            if let Some(flag) = self.reaped.get_mut(r) {
+                *flag = true;
             }
             // a dead replica must stop attracting placements
             self.router.set_quarantined(r, true);
@@ -769,6 +959,7 @@ impl EnginePool {
                 .get_mut(r)
                 .map(std::mem::take)
                 .unwrap_or(0);
+            self.hb.quarantine(r, owed);
             if owed > 0 {
                 self.fence_failure.get_or_insert(anyhow!(
                     "replica {r} worker thread died before \
@@ -776,26 +967,58 @@ impl EnginePool {
                 ));
                 reaped = true;
             }
-            let ids: Vec<u64> = self
+            // its unresolved tickets never started (or died mid-step
+            // with no event sent): re-route each to a surviving
+            // replica at the CURRENT pool epoch, failing only the
+            // ones nobody can take
+            let orphans: Vec<u64> = self
                 .outstanding
                 .iter()
-                .filter(|&(_, &rep)| rep == r)
+                .filter(|&(_, &(rep, _))| rep == r)
                 .map(|(&id, _)| id)
                 .collect();
-            for id in ids {
+            for id in orphans {
+                let Some((_, req)) = self.outstanding.remove(&id)
+                else {
+                    continue;
+                };
                 self.router.abort(id);
-                self.outstanding.remove(&id);
-                self.push_ready(ReadyItem {
-                    replica: r,
-                    item: Completed::Failed(
-                        id,
-                        format!("replica {r} worker thread died"),
-                    ),
-                });
+                if !self.place(req) {
+                    self.push_ready(ReadyItem {
+                        replica: r,
+                        item: Completed::Failed(
+                            id,
+                            format!(
+                                "replica {r} worker thread died and \
+                                 no live replica could take over"
+                            ),
+                        ),
+                    });
+                }
                 reaped = true;
             }
         }
         reaped
+    }
+
+    /// Test hook: shut one worker down and JOIN it, so the next reap
+    /// deterministically observes the death (the failure-path suites
+    /// need a corpse without racing `is_finished`). The shutdown rides
+    /// the ctl path like any other, so hb traces stay conformant.
+    #[doc(hidden)]
+    pub fn kill_worker_for_test(&mut self, replica: usize) {
+        if let Some(w) = self.workers.get(replica) {
+            self.hb.ctl_send(replica, MsgLabel::Shutdown);
+            if w.send_ctl(Ctl::Shutdown).is_err() {
+                self.hb.send_failed(replica);
+            }
+        }
+        if let Some(h) =
+            self.handles.get_mut(replica).and_then(|h| h.take())
+        {
+            // a panicked worker is exactly what this simulates
+            let _ = h.join();
+        }
     }
 
     // ---- streaming session API ----
@@ -806,6 +1029,49 @@ impl EnginePool {
     /// epoch, and returns its ticket (== the request id). The request
     /// starts decoding mid-flight on the replica's next step — no
     /// batch boundary involved.
+    /// Route + send one request, retrying past dead replicas: a send
+    /// failure means the routed replica's thread is dead, so it is
+    /// quarantined and the request re-routed — the pool keeps limping
+    /// on its healthy replicas instead of failing every placement at
+    /// the first corpse (bounded: each retry disqualifies one replica
+    /// from placement). On success the ticket is tracked in
+    /// `outstanding` with the request retained for reaper failover.
+    /// `false` means no live replica accepted it; the router charge is
+    /// settled either way.
+    fn place(&mut self, mut req: Request) -> bool {
+        let id = req.id;
+        for _ in 0..self.workers.len() {
+            let replica = self.router.route(&req);
+            let Some(w) = self.workers.get(replica) else {
+                self.router.abort(id);
+                return false;
+            };
+            let retained = req.clone();
+            self.hb.submit_send(replica, id, self.epoch);
+            match w.send_ordered(Ordered::Submit(req, self.epoch)) {
+                Ok(()) => {
+                    self.outstanding.insert(id, (replica, retained));
+                    return true;
+                }
+                Err(e) => {
+                    self.hb.send_failed(replica);
+                    // the request rides the SendError back out, so the
+                    // common path moves it — the clone above is the
+                    // failover-retention copy, not a retry copy
+                    let ToWorker::Ordered(Ordered::Submit(r, _)) = e.0
+                    else {
+                        self.router.abort(id);
+                        return false;
+                    };
+                    req = r;
+                    self.router.abort(id);
+                    self.router.set_quarantined(replica, true);
+                }
+            }
+        }
+        false
+    }
+
     pub fn submit(&mut self, req: Request) -> Result<TicketId> {
         self.pump();
         // a duplicate of an unresolved ticket would corrupt the
@@ -821,32 +1087,8 @@ impl EnginePool {
             );
         }
         let id = req.id;
-        // a send failure means the routed replica's thread is dead:
-        // quarantine it and re-route, so the pool keeps limping on
-        // its healthy replicas instead of failing every submit at
-        // the first corpse (bounded: each retry disqualifies one
-        // replica from placement). The request rides the SendError
-        // back out, so the common path moves it — no clone.
-        let mut req = req;
-        for _ in 0..self.workers.len() {
-            let replica = self.router.route(&req);
-            let Some(w) = self.workers.get(replica) else {
-                bail!("router picked replica {replica} out of range");
-            };
-            match w.send(ToWorker::Submit(req, self.epoch)) {
-                Ok(()) => {
-                    self.outstanding.insert(id, replica);
-                    return Ok(id);
-                }
-                Err(e) => {
-                    let ToWorker::Submit(r, _) = e.0 else {
-                        bail!("send error lost request {id}");
-                    };
-                    req = r;
-                    self.router.abort(id);
-                    self.router.set_quarantined(replica, true);
-                }
-            }
+        if self.place(req) {
+            return Ok(id);
         }
         // settle the corpses' tickets before reporting total loss
         self.reap_dead_workers();
@@ -934,17 +1176,31 @@ impl EnginePool {
     /// [`Completed::Done`] if the completion won the race. Unknown /
     /// already-resolved tickets are an inert no-op.
     pub fn abort(&mut self, ticket: TicketId) -> Result<()> {
-        let Some(&replica) = self.outstanding.get(&ticket) else {
-            return Ok(());
-        };
-        self.workers
-            .get(replica)
-            .ok_or_else(|| {
-                anyhow!("ticket {ticket} maps to replica {replica} \
-                         out of range")
-            })?
-            .send(ToWorker::Abort(ticket))
-            .map_err(|_| anyhow!("replica {replica} worker thread is gone"))
+        // two passes: a send failure means the ticket's replica died,
+        // and reaping re-routes the ticket to a survivor (or settles
+        // it as failed) — the retry targets its NEW placement instead
+        // of erroring on a ticket the pool can still cancel
+        for attempt in 0..2 {
+            let Some(&(replica, _)) = self.outstanding.get(&ticket)
+            else {
+                return Ok(()); // already resolved (or reaped) — inert
+            };
+            let w = self.workers.get(replica).ok_or_else(|| {
+                anyhow!(
+                    "ticket {ticket} maps to replica {replica} \
+                     out of range"
+                )
+            })?;
+            self.hb.ctl_send(replica, MsgLabel::Abort { ticket });
+            if w.send_ctl(Ctl::Abort(ticket)).is_ok() {
+                return Ok(());
+            }
+            self.hb.send_failed(replica);
+            if attempt == 0 {
+                self.reap_dead_workers();
+            }
+        }
+        bail!("abort of ticket {ticket} found no live replica");
     }
 
     /// Run the pool dry: block until every outstanding ticket
@@ -1005,9 +1261,11 @@ impl EnginePool {
             for (replica, c) in &out {
                 if let Some(w) = self.workers.get(*replica) {
                     let n = c.tokens.len() as u64;
-                    // a dead replica's counters died with it
-                    // lint: allow(C1): moot send to a dead replica
-                    let _ = w.send(ToWorker::Discard(n));
+                    self.hb.ctl_send(*replica, MsgLabel::Discard);
+                    if w.send_ctl(Ctl::Discard(n)).is_err() {
+                        // a dead replica's counters died with it
+                        self.hb.send_failed(*replica);
+                    }
                 }
             }
             self.router
@@ -1064,13 +1322,16 @@ impl EnginePool {
         self.drain_with(first_err)
     }
 
-    /// Send one message (built per replica) to every worker, failing
-    /// loudly if a worker thread has died.
-    fn broadcast<F: Fn() -> ToWorker>(&self, mk: F) -> Result<()> {
+    /// Send one control message (built per replica) to every worker,
+    /// failing loudly if a worker thread has died.
+    fn broadcast<F: Fn() -> Ctl>(&self, mk: F) -> Result<()> {
         for (e, w) in self.workers.iter().enumerate() {
-            w.send(mk()).map_err(|_| {
-                anyhow!("replica {e} worker thread is gone")
-            })?;
+            let m = mk();
+            self.hb.ctl_send(e, ctl_label(&m));
+            if w.send_ctl(m).is_err() {
+                self.hb.send_failed(e);
+                bail!("replica {e} worker thread is gone");
+            }
         }
         Ok(())
     }
@@ -1087,16 +1348,14 @@ impl EnginePool {
         &mut self,
         weights: Arc<Vec<HostArray>>,
     ) -> Result<u64> {
-        self.send_fence(|target| {
-            ToWorker::SyncWeights(weights.clone(), target)
-        })
-        .map(|_| self.epoch)
+        self.send_fence(|target| Fence::Weights(weights.clone(), target))
+            .map(|_| self.epoch)
     }
 
     /// Asynchronous KV-scale fence (recalibration broadcast), same
     /// epoch semantics as [`EnginePool::sync_weights`].
     pub fn sync_kv_scales(&mut self, k: f32, v: f32) -> Result<u64> {
-        self.send_fence(|target| ToWorker::SyncKvScales(k, v, target))
+        self.send_fence(|target| Fence::KvScales(k, v, target))
             .map(|_| self.epoch)
     }
 
@@ -1109,15 +1368,14 @@ impl EnginePool {
     /// wedging every later submission). A dead replica owes no ack
     /// (the reaper writes off its tickets) and is reported as the
     /// error, but the pool keeps limping per-ticket.
-    fn send_fence<F: Fn(u64) -> ToWorker>(
-        &mut self,
-        mk: F,
-    ) -> Result<()> {
+    fn send_fence<F: Fn(u64) -> Fence>(&mut self, mk: F) -> Result<()> {
         let target = self.epoch + 1;
         self.epoch = target;
         let mut first_err: Option<Error> = None;
         for (r, w) in self.workers.iter().enumerate() {
-            if w.send(mk(target)).is_err() {
+            self.hb.fence_send(r, target);
+            if w.send_ordered(Ordered::Fence(mk(target))).is_err() {
+                self.hb.send_failed(r);
                 first_err.get_or_insert(anyhow!(
                     "replica {r} worker thread is gone"
                 ));
@@ -1221,7 +1479,7 @@ impl EnginePool {
     /// end-of-stream numbers, drain first.)
     pub fn per_replica_stats(&self) -> Result<Vec<EngineStats>> {
         let (tx, rx) = channel();
-        self.broadcast(|| ToWorker::Stats(tx.clone()))?;
+        self.broadcast(|| Ctl::Stats(tx.clone()))?;
         drop(tx);
         let n = self.workers.len();
         let mut out = vec![EngineStats::default(); n];
@@ -1253,11 +1511,13 @@ impl std::fmt::Debug for EnginePool {
 
 impl Drop for EnginePool {
     fn drop(&mut self) {
-        for w in &self.workers {
+        for (r, w) in self.workers.iter().enumerate() {
             // an already-dead worker needs no shutdown; the join
             // below still bounds its lifetime
-            // lint: allow(C1): moot send during teardown
-            let _ = w.send(ToWorker::Shutdown);
+            self.hb.ctl_send(r, MsgLabel::Shutdown);
+            if w.send_ctl(Ctl::Shutdown).is_err() {
+                self.hb.send_failed(r);
+            }
         }
         for h in self.handles.iter_mut() {
             if let Some(h) = h.take() {
@@ -1491,6 +1751,62 @@ mod tests {
         assert!(p.submit(r).is_err(), "dup id would corrupt the merge");
         let done = p.drain().unwrap();
         assert_eq!(done.len(), 1);
+    }
+
+    #[cfg(feature = "hb")]
+    #[test]
+    fn traced_session_passes_the_conformance_checker() {
+        use crate::testkit::hb::HbRecorder;
+        let rec = HbRecorder::new(2);
+        let mut p = EnginePool::new_traced(
+            PoolConfig {
+                n_replicas: 2,
+                policy: RoutePolicy::RoundRobin,
+                engine: EngineConfig::new("dense", "bf16"),
+            },
+            hermetic_runtime_factory(),
+            HbHandle::traced(rec.clone()),
+        )
+        .unwrap();
+        for r in reqs(0, 4) {
+            p.submit(r).unwrap();
+        }
+        p.install_kv_scales(1.0, 1.0).unwrap();
+        for r in reqs(4, 8) {
+            p.submit(r).unwrap();
+        }
+        let done = p.drain().unwrap();
+        assert_eq!(done.len(), 8);
+        let report = p
+            .hb_verify()
+            .expect("conformant session")
+            .expect("pool is traced");
+        assert_eq!(report.tickets, 8);
+        assert_eq!(report.fences, 2, "one fence per replica");
+        // epochs split across the install
+        for c in &done {
+            assert_eq!(c.epoch, u64::from(c.id >= 4));
+        }
+        drop(p);
+        rec.check().expect("teardown stays conformant");
+    }
+
+    #[cfg(feature = "hb")]
+    #[test]
+    fn mis_sized_recorder_is_rejected() {
+        use crate::testkit::hb::HbRecorder;
+        let err = EnginePool::new_traced(
+            PoolConfig {
+                n_replicas: 2,
+                policy: RoutePolicy::RoundRobin,
+                engine: EngineConfig::new("dense", "bf16"),
+            },
+            hermetic_runtime_factory(),
+            HbHandle::traced(HbRecorder::new(3)),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("sized for 3"), "{err}");
     }
 
     #[test]

@@ -128,8 +128,8 @@ impl Router {
                 healthy.or(any).map(|(i, _)| i).unwrap_or(0)
             }
         };
-        if let Some(l) = self.load.get_mut(idx) {
-            *l += cost;
+        if let Some(load) = self.load.get_mut(idx) {
+            *load = load.saturating_add(cost);
         }
         self.outstanding.insert(req.id, (idx, cost));
         idx
@@ -159,9 +159,13 @@ impl Router {
 
     fn settle(&mut self, id: u64) -> Option<usize> {
         let (engine, cost) = self.outstanding.remove(&id)?;
-        if let Some(l) = self.load.get_mut(engine) {
-            // cannot underflow: `cost` is exactly what `route` charged
-            *l -= cost;
+        if let Some(load) = self.load.get_mut(engine) {
+            // cannot underflow: `cost` is exactly what `route` charged,
+            // and `outstanding.remove` above makes double-settle inert.
+            // Kept exact (not saturating) so a broken charge pairing
+            // still trips debug overflow checks instead of hiding.
+            // lint: allow(A1): settle subtracts the exact charge `route` added
+            *load -= cost;
         }
         Some(engine)
     }

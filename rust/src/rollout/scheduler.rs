@@ -124,7 +124,11 @@ impl Scheduler {
             }
             let Some(req) = self.waiting.pop_front() else { break };
             assert!(self.kv.allocate(req.id, tokens));
-            reserve += need_grown - need_now;
+            // blocks_for is monotone in tokens, so the growth delta is
+            // >= 0; saturate both steps so a future geometry change
+            // can't turn this into a silent wrap
+            reserve =
+                reserve.saturating_add(need_grown.saturating_sub(need_now));
             self.running.push(req.id);
             self.bodies.insert(req.id, req.clone());
             self.stats.admitted += 1;

@@ -1,0 +1,1028 @@
+//! Happens-before ordering oracle + fence-protocol conformance checker
+//! for the streaming engine pool (`rollout::pool`).
+//!
+//! ## Why
+//!
+//! The paper's TIS/MIS mismatch correction is only sound if every
+//! rollout token is tagged with the exact weight epoch it was sampled
+//! under. The pool enforces that with the epoch-fence protocol; this
+//! module checks the protocol *as executed*, event by event, instead
+//! of trusting module docs:
+//!
+//! * every completion's epoch tag equals its submit stamp;
+//! * no completion spans a weight/KV-scale install (a fence may only
+//!   apply on a drained engine);
+//! * each fence is acknowledged exactly once, and a quarantined
+//!   replica's write-off covers exactly the acks it still owed;
+//! * every submitted ticket resolves exactly once, with a
+//!   happens-before edge from its submit to its resolution.
+//!
+//! ## How
+//!
+//! [`HbRecorder`] keeps one vector clock per actor (actor 0 is the
+//! pool/coordinator thread, actor `1 + r` is replica `r`'s worker) and
+//! one FIFO queue of clock snapshots per (channel, sender). Hooks in
+//! `rollout::pool` call into it on every channel send/recv, fence
+//! park/apply/ack, quarantine write-off, and completion delivery; a
+//! send pushes the sender's clock onto the channel queue, the matching
+//! recv pops and joins it, so clocks encode the real happens-before
+//! order (pool→worker channels are single-producer FIFO; the shared
+//! event channel is per-sender FIFO and every event names its
+//! replica). Each hook also appends a record to a global log whose
+//! order — serialized by the recorder lock — is a linearization
+//! consistent with every per-actor program order and every
+//! send/receive pair.
+//!
+//! [`HbRecorder::check`] then replays the log against an explicit
+//! per-replica fence state machine ([`FenceState`]:
+//! `Running → Draining(target) → Installed(epoch)`) and the invariants
+//! above. The checker is deliberately paranoid: it re-derives engine
+//! epochs from fence events and cross-checks them against what the
+//! worker reported, so a pool that "fixes up" a mis-tagged completion
+//! cannot slip past it.
+//!
+//! Hooks are compiled to no-ops unless the `hb` cargo feature is on
+//! (it is in the default set; `--no-default-features` builds the
+//! zero-cost stubs). The recorder and checker themselves are always
+//! compiled so synthetic-log tests (the chaos-worker fixture proving
+//! the checker non-vacuous) run everywhere.
+//!
+//! Send hooks run BEFORE the physical `send` so a queue push always
+//! happens-before its pop; a failed send (dead receiver) calls the
+//! matching `*_failed` hook, which voids the phantom record — safe
+//! because a failed send means the receiver was dropped, so nobody
+//! can concurrently pop that queue.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::util::error::{anyhow, bail, Result};
+
+/// Label of one pool→worker message (what rides the per-replica FIFO
+/// channel). Used for channel-conformance checking: the worker derives
+/// the label from the message it actually received and the recorder
+/// compares it against what the pool said it sent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgLabel {
+    /// Epoch-ordered submission stamped with the pool epoch.
+    Submit { ticket: u64, stamp: u64 },
+    /// Epoch fence (weights or KV scales) to the target epoch.
+    Fence { target: u64 },
+    Abort { ticket: u64 },
+    Discard,
+    Stats,
+    Shutdown,
+}
+
+/// Label of one worker→pool event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvLabel {
+    Done { ticket: u64, epoch: u64 },
+    Aborted { ticket: u64 },
+    Failed { ticket: u64 },
+    FenceAck { target: u64, ok: bool },
+}
+
+/// How a ticket resolved at the pool (delivery to the caller).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolveKind {
+    Done { epoch: u64 },
+    Aborted,
+    Failed,
+}
+
+/// The explicit per-replica fence state machine the checker validates
+/// event-by-event. `Installed` is the post-apply state; the next
+/// admission returns the replica to `Running`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FenceState {
+    /// No fence pending; admissions run under `epoch`.
+    Running,
+    /// A fence to `target` is parked, waiting for in-flight work to
+    /// drain. Nothing may be admitted in this state.
+    Draining { target: u64 },
+    /// The fence applied; the engine is at `epoch`.
+    Installed { epoch: u64 },
+}
+
+/// One recorded protocol event (with the acting thread's vector clock
+/// snapshot taken at record time).
+#[derive(Clone, Debug)]
+enum Ev {
+    /// Pool sent a submission to replica's worker channel.
+    SubmitSend { replica: usize, ticket: u64, stamp: u64 },
+    /// Pool sent a fence to replica's worker channel.
+    FenceSend { replica: usize, target: u64 },
+    /// Pool sent order-insensitive control to replica.
+    CtlSend { replica: usize, label: MsgLabel },
+    /// Worker ingested one message off its channel.
+    WorkerRecv { replica: usize, label: MsgLabel },
+    /// Worker admitted a submission into its engine.
+    Admit { replica: usize, ticket: u64, engine_epoch: u64 },
+    /// Worker parked a fence (entered `Draining`).
+    FencePark { replica: usize, target: u64 },
+    /// Worker applied a parked fence on a drained engine.
+    FenceApply { replica: usize, target: u64, ok: bool, engine_epoch: u64 },
+    /// Worker sent one event to the pool.
+    EventSend { replica: usize, label: EvLabel },
+    /// Pool received one event.
+    EventRecv { replica: usize, label: EvLabel },
+    /// Pool delivered a resolution to the caller.
+    Resolve { ticket: u64, kind: ResolveKind },
+    /// Pool (reaper) quarantined a replica, writing off `owed` fence
+    /// acks it can never deliver.
+    Quarantine { replica: usize, owed: usize },
+    /// A send to / from `replica` failed (receiver gone); the
+    /// immediately preceding send record on that channel is voided.
+    SendFailed { replica: usize },
+}
+
+struct Record {
+    ev: Ev,
+    clock: Vec<u64>,
+    voided: bool,
+}
+
+/// Queue entry: (sender clock snapshot, label-ish tag, log index of
+/// the send record — so a failed send can void it).
+struct ChanEntry<L> {
+    clock: Vec<u64>,
+    label: L,
+    log_idx: usize,
+}
+
+struct Inner {
+    /// actor 0 = pool thread, actor 1+r = replica r's worker.
+    clocks: Vec<Vec<u64>>,
+    /// pool → worker r FIFO (ToWorker channel).
+    wchan: Vec<VecDeque<ChanEntry<MsgLabel>>>,
+    /// worker r → pool per-sender FIFO (shared event channel).
+    echan: Vec<VecDeque<ChanEntry<EvLabel>>>,
+    log: Vec<Record>,
+    /// violations detected at record time (channel label mismatches).
+    live_violations: Vec<String>,
+}
+
+impl Inner {
+    fn tick(&mut self, actor: usize) -> Vec<u64> {
+        if let Some(c) =
+            self.clocks.get_mut(actor).and_then(|c| c.get_mut(actor))
+        {
+            *c += 1;
+        }
+        self.clocks.get(actor).cloned().unwrap_or_default()
+    }
+
+    fn join(&mut self, actor: usize, other: &[u64]) {
+        if let Some(c) = self.clocks.get_mut(actor) {
+            for (d, s) in c.iter_mut().zip(other) {
+                if *s > *d {
+                    *d = *s;
+                }
+            }
+        }
+    }
+
+    fn push(&mut self, actor: usize, ev: Ev) -> usize {
+        let clock = self.tick(actor);
+        self.log.push(Record { ev, clock, voided: false });
+        self.log.len() - 1
+    }
+}
+
+/// `a` happens-before-or-equals `b` (componentwise ≤).
+fn clock_leq(a: &[u64], b: &[u64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+const POOL: usize = 0;
+
+/// The happens-before recorder: one per traced pool session. Cheap
+/// enough to leave on in tests; production pools run untraced.
+pub struct HbRecorder {
+    n_replicas: usize,
+    inner: Mutex<Inner>,
+}
+
+impl HbRecorder {
+    pub fn new(n_replicas: usize) -> Arc<HbRecorder> {
+        let n_actors = n_replicas + 1;
+        Arc::new(HbRecorder {
+            n_replicas,
+            inner: Mutex::new(Inner {
+                clocks: vec![vec![0; n_actors]; n_actors],
+                wchan: (0..n_replicas).map(|_| VecDeque::new()).collect(),
+                echan: (0..n_replicas).map(|_| VecDeque::new()).collect(),
+                log: Vec::new(),
+                live_violations: Vec::new(),
+            }),
+        })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Inner) -> R) -> Option<R> {
+        // a poisoned lock means a hook panicked; recording stops and
+        // check() reports the poisoning instead of half a log
+        self.inner.lock().ok().map(|mut g| f(&mut g))
+    }
+
+    // ---- pool-side send hooks (call BEFORE the physical send) ----
+
+    fn send_to_worker(&self, replica: usize, ev: Ev, label: MsgLabel) {
+        self.with(|g| {
+            let idx = g.push(POOL, ev);
+            let clock =
+                g.clocks.get(POOL).cloned().unwrap_or_default();
+            if let Some(q) = g.wchan.get_mut(replica) {
+                q.push_back(ChanEntry { clock, label, log_idx: idx });
+            }
+        });
+    }
+
+    pub fn submit_send(&self, replica: usize, ticket: u64, stamp: u64) {
+        self.send_to_worker(
+            replica,
+            Ev::SubmitSend { replica, ticket, stamp },
+            MsgLabel::Submit { ticket, stamp },
+        );
+    }
+
+    pub fn fence_send(&self, replica: usize, target: u64) {
+        self.send_to_worker(
+            replica,
+            Ev::FenceSend { replica, target },
+            MsgLabel::Fence { target },
+        );
+    }
+
+    pub fn ctl_send(&self, replica: usize, label: MsgLabel) {
+        self.send_to_worker(replica, Ev::CtlSend { replica, label }, label);
+    }
+
+    /// The pool's last send to `replica` failed (worker gone): void
+    /// its record and pop the phantom queue entry. Safe: a failed
+    /// send means the receiver was dropped, so no concurrent pop.
+    pub fn send_failed(&self, replica: usize) {
+        self.with(|g| {
+            if let Some(e) =
+                g.wchan.get_mut(replica).and_then(|q| q.pop_back())
+            {
+                if let Some(r) = g.log.get_mut(e.log_idx) {
+                    r.voided = true;
+                }
+            }
+            g.push(POOL, Ev::SendFailed { replica });
+        });
+    }
+
+    // ---- worker-side hooks ----
+
+    /// Worker `replica` ingested one message; `label` is derived from
+    /// the message it actually received and checked against the
+    /// channel queue (FIFO conformance).
+    pub fn worker_recv(&self, replica: usize, label: MsgLabel) {
+        self.with(|g| {
+            let popped =
+                g.wchan.get_mut(replica).and_then(|q| q.pop_front());
+            match popped {
+                Some(e) => {
+                    if e.label != label {
+                        g.live_violations.push(format!(
+                            "replica {replica}: channel FIFO breach — \
+                             pool sent {:?}, worker received {label:?}",
+                            e.label
+                        ));
+                    }
+                    g.join(replica + 1, &e.clock);
+                }
+                None => g.live_violations.push(format!(
+                    "replica {replica}: received {label:?} with no \
+                     recorded send (untracked producer?)"
+                )),
+            }
+            g.push(replica + 1, Ev::WorkerRecv { replica, label });
+        });
+    }
+
+    pub fn admit(&self, replica: usize, ticket: u64, engine_epoch: u64) {
+        self.with(|g| {
+            g.push(replica + 1, Ev::Admit { replica, ticket, engine_epoch });
+        });
+    }
+
+    pub fn fence_park(&self, replica: usize, target: u64) {
+        self.with(|g| {
+            g.push(replica + 1, Ev::FencePark { replica, target });
+        });
+    }
+
+    pub fn fence_apply(
+        &self,
+        replica: usize,
+        target: u64,
+        ok: bool,
+        engine_epoch: u64,
+    ) {
+        self.with(|g| {
+            g.push(
+                replica + 1,
+                Ev::FenceApply { replica, target, ok, engine_epoch },
+            );
+        });
+    }
+
+    pub fn event_send(&self, replica: usize, label: EvLabel) {
+        self.with(|g| {
+            let idx =
+                g.push(replica + 1, Ev::EventSend { replica, label });
+            let clock =
+                g.clocks.get(replica + 1).cloned().unwrap_or_default();
+            if let Some(q) = g.echan.get_mut(replica) {
+                q.push_back(ChanEntry { clock, label, log_idx: idx });
+            }
+        });
+    }
+
+    /// Worker's event send failed (pool hung up): void the record.
+    pub fn event_send_failed(&self, replica: usize) {
+        self.with(|g| {
+            if let Some(e) =
+                g.echan.get_mut(replica).and_then(|q| q.pop_back())
+            {
+                if let Some(r) = g.log.get_mut(e.log_idx) {
+                    r.voided = true;
+                }
+            }
+            g.push(replica + 1, Ev::SendFailed { replica });
+        });
+    }
+
+    // ---- pool-side receive / delivery hooks ----
+
+    pub fn event_recv(&self, replica: usize, label: EvLabel) {
+        self.with(|g| {
+            let popped =
+                g.echan.get_mut(replica).and_then(|q| q.pop_front());
+            match popped {
+                Some(e) => {
+                    if e.label != label {
+                        g.live_violations.push(format!(
+                            "replica {replica}: event FIFO breach — \
+                             worker sent {:?}, pool received {label:?}",
+                            e.label
+                        ));
+                    }
+                    g.join(POOL, &e.clock);
+                }
+                None => g.live_violations.push(format!(
+                    "pool received {label:?} from replica {replica} \
+                     with no recorded send"
+                )),
+            }
+            g.push(POOL, Ev::EventRecv { replica, label });
+        });
+    }
+
+    pub fn resolve(&self, ticket: u64, kind: ResolveKind) {
+        self.with(|g| {
+            g.push(POOL, Ev::Resolve { ticket, kind });
+        });
+    }
+
+    pub fn quarantine(&self, replica: usize, owed: usize) {
+        self.with(|g| {
+            g.push(POOL, Ev::Quarantine { replica, owed });
+        });
+    }
+
+    // ---- the conformance checker ----
+
+    /// Replay the log against the fence state machine and the protocol
+    /// invariants. `Ok(report)` only if every invariant held.
+    pub fn check(&self) -> Result<HbReport> {
+        let g = self
+            .inner
+            .lock()
+            .map_err(|_| anyhow!("hb recorder lock poisoned"))?;
+        let mut v: Vec<String> = g.live_violations.clone();
+        let mut rep: Vec<ReplicaState> = (0..self.n_replicas)
+            .map(|_| ReplicaState::new())
+            .collect();
+        // ticket -> latest (stamp, submit clock, replica)
+        let mut submits: BTreeMap<u64, (u64, Vec<u64>, usize)> =
+            BTreeMap::new();
+        let mut resolves: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut n_fences = 0usize;
+        for r in g.log.iter().filter(|r| !r.voided) {
+            check_event(r, &mut rep, &mut submits, &mut resolves, &mut v);
+            if matches!(r.ev, Ev::FenceSend { .. }) {
+                n_fences += 1;
+            }
+        }
+        // end-of-log obligations
+        for (ticket, (_, _, _)) in &submits {
+            match resolves.get(ticket).copied().unwrap_or(0) {
+                1 => {}
+                0 => v.push(format!(
+                    "ticket {ticket}: submitted but never resolved"
+                )),
+                n => v.push(format!(
+                    "ticket {ticket}: resolved {n} times"
+                )),
+            }
+        }
+        for (r, st) in rep.iter().enumerate() {
+            if st.quarantined {
+                continue; // its missing acks were written off
+            }
+            if st.acks_recvd < st.fences_sent {
+                v.push(format!(
+                    "replica {r}: {} fence(s) sent but only {} \
+                     acknowledged (and the replica was never \
+                     quarantined)",
+                    st.fences_sent, st.acks_recvd
+                ));
+            }
+        }
+        if v.is_empty() {
+            Ok(HbReport {
+                events: g.log.len(),
+                tickets: submits.len(),
+                fences: n_fences,
+            })
+        } else {
+            v.truncate(16);
+            bail!(
+                "hb conformance check failed ({} violation(s)):\n  {}",
+                v.len(),
+                v.join("\n  ")
+            )
+        }
+    }
+}
+
+/// Summary of a clean session (for non-vacuity assertions in tests).
+#[derive(Clone, Copy, Debug)]
+pub struct HbReport {
+    /// total recorded protocol events
+    pub events: usize,
+    /// distinct submitted tickets
+    pub tickets: usize,
+    /// fence messages sent (across all replicas)
+    pub fences: usize,
+}
+
+struct ReplicaState {
+    state: FenceState,
+    epoch: u64,
+    /// last fence target this replica parked (targets are global and
+    /// broadcast, so per replica they increase by exactly one)
+    last_target: u64,
+    /// admitted-but-not-yet-reported tickets, with admission epoch
+    inflight: BTreeMap<u64, u64>,
+    /// fence targets this worker has applied (ack bookkeeping)
+    applied: BTreeSet<u64>,
+    acked: BTreeSet<u64>,
+    /// pool-side counters for the quarantine write-off check
+    fences_sent: usize,
+    acks_recvd: usize,
+    quarantined: bool,
+}
+
+impl ReplicaState {
+    fn new() -> ReplicaState {
+        ReplicaState {
+            state: FenceState::Running,
+            epoch: 0,
+            last_target: 0,
+            inflight: BTreeMap::new(),
+            applied: BTreeSet::new(),
+            acked: BTreeSet::new(),
+            fences_sent: 0,
+            acks_recvd: 0,
+            quarantined: false,
+        }
+    }
+}
+
+fn check_event(
+    rec: &Record,
+    rep: &mut [ReplicaState],
+    submits: &mut BTreeMap<u64, (u64, Vec<u64>, usize)>,
+    resolves: &mut BTreeMap<u64, usize>,
+    v: &mut Vec<String>,
+) {
+    match &rec.ev {
+        Ev::SubmitSend { replica, ticket, stamp } => {
+            submits.insert(
+                *ticket,
+                (*stamp, rec.clock.clone(), *replica),
+            );
+        }
+        Ev::FenceSend { replica, target: _ } => {
+            if let Some(st) = rep.get_mut(*replica) {
+                st.fences_sent += 1;
+            }
+        }
+        Ev::CtlSend { .. } | Ev::WorkerRecv { .. } | Ev::SendFailed { .. } => {}
+        Ev::Admit { replica, ticket, engine_epoch } => {
+            let Some(st) = rep.get_mut(*replica) else { return };
+            if let FenceState::Draining { target } = st.state {
+                v.push(format!(
+                    "replica {replica}: admitted ticket {ticket} while \
+                     draining toward fence {target} — admission must \
+                     not pass a parked fence"
+                ));
+            }
+            st.state = FenceState::Running;
+            if *engine_epoch != st.epoch {
+                v.push(format!(
+                    "replica {replica}: admit of {ticket} reports \
+                     engine epoch {engine_epoch} but fences put it at \
+                     {}",
+                    st.epoch
+                ));
+            }
+            match submits.get(ticket) {
+                None => v.push(format!(
+                    "replica {replica}: admitted ticket {ticket} that \
+                     was never submitted"
+                )),
+                Some((stamp, sclock, _)) => {
+                    if stamp != engine_epoch {
+                        v.push(format!(
+                            "replica {replica}: ticket {ticket} \
+                             stamped for epoch {stamp} admitted at \
+                             engine epoch {engine_epoch}"
+                        ));
+                    }
+                    if !clock_leq(sclock, &rec.clock) {
+                        v.push(format!(
+                            "replica {replica}: admit of {ticket} is \
+                             not happens-after its submit"
+                        ));
+                    }
+                }
+            }
+            st.inflight.insert(*ticket, *engine_epoch);
+        }
+        Ev::FencePark { replica, target } => {
+            let Some(st) = rep.get_mut(*replica) else { return };
+            if let FenceState::Draining { target: t } = st.state {
+                v.push(format!(
+                    "replica {replica}: parked fence {target} while \
+                     fence {t} is still draining"
+                ));
+            }
+            if *target != st.last_target + 1 {
+                v.push(format!(
+                    "replica {replica}: fence targets must be \
+                     consecutive; parked {target} after {}",
+                    st.last_target
+                ));
+            }
+            st.last_target = *target;
+            st.state = FenceState::Draining { target: *target };
+        }
+        Ev::FenceApply { replica, target, ok, engine_epoch } => {
+            let Some(st) = rep.get_mut(*replica) else { return };
+            if st.state != (FenceState::Draining { target: *target }) {
+                v.push(format!(
+                    "replica {replica}: applied fence {target} from \
+                     state {:?} (must be Draining {{ {target} }})",
+                    st.state
+                ));
+            }
+            if !st.inflight.is_empty() {
+                v.push(format!(
+                    "replica {replica}: installed epoch {target} with \
+                     {} ticket(s) still in flight — a fence may only \
+                     apply on a drained engine",
+                    st.inflight.len()
+                ));
+            }
+            if *ok && *engine_epoch != *target {
+                v.push(format!(
+                    "replica {replica}: fence {target} reported ok \
+                     but the engine is at {engine_epoch}"
+                ));
+            }
+            st.epoch = *engine_epoch;
+            st.applied.insert(*target);
+            st.state = if *ok {
+                FenceState::Installed { epoch: *target }
+            } else {
+                FenceState::Running
+            };
+        }
+        Ev::EventSend { replica, label } => {
+            let Some(st) = rep.get_mut(*replica) else { return };
+            match label {
+                EvLabel::Done { ticket, epoch } => {
+                    match st.inflight.remove(ticket) {
+                        None => v.push(format!(
+                            "replica {replica}: completion for ticket \
+                             {ticket} that was never admitted"
+                        )),
+                        Some(admit_epoch) => {
+                            if *epoch != admit_epoch {
+                                v.push(format!(
+                                    "replica {replica}: ticket {ticket} \
+                                     admitted at epoch {admit_epoch} \
+                                     but completed tagged {epoch} — \
+                                     the completion spans an install"
+                                ));
+                            }
+                        }
+                    }
+                    if *epoch != st.epoch {
+                        v.push(format!(
+                            "replica {replica}: ticket {ticket} tagged \
+                             epoch {epoch} but the engine is at {}",
+                            st.epoch
+                        ));
+                    }
+                    let stamp =
+                        submits.get(ticket).map(|(s, _, _)| *s);
+                    if stamp != Some(*epoch) {
+                        v.push(format!(
+                            "replica {replica}: ticket {ticket} tagged \
+                             epoch {epoch} but its submit stamp is \
+                             {stamp:?}"
+                        ));
+                    }
+                }
+                EvLabel::Aborted { ticket }
+                | EvLabel::Failed { ticket } => {
+                    // cancelled mid-flight, or never admitted
+                    // (backlogged / rejected) — both legal
+                    st.inflight.remove(ticket);
+                }
+                EvLabel::FenceAck { target, ok: _ } => {
+                    if !st.applied.contains(target) {
+                        v.push(format!(
+                            "replica {replica}: acknowledged fence \
+                             {target} without applying it"
+                        ));
+                    }
+                    if !st.acked.insert(*target) {
+                        v.push(format!(
+                            "replica {replica}: fence {target} \
+                             acknowledged more than once"
+                        ));
+                    }
+                }
+            }
+        }
+        Ev::EventRecv { replica, label } => {
+            if let EvLabel::FenceAck { .. } = label {
+                if let Some(st) = rep.get_mut(*replica) {
+                    st.acks_recvd += 1;
+                }
+            }
+        }
+        Ev::Resolve { ticket, kind } => {
+            let n = resolves.entry(*ticket).or_insert(0);
+            *n += 1;
+            match submits.get(ticket) {
+                None => v.push(format!(
+                    "ticket {ticket} resolved without a recorded \
+                     submit"
+                )),
+                Some((stamp, sclock, _)) => {
+                    if !clock_leq(sclock, &rec.clock) {
+                        v.push(format!(
+                            "ticket {ticket}: resolve is not \
+                             happens-after its submit"
+                        ));
+                    }
+                    if let ResolveKind::Done { epoch } = kind {
+                        if epoch != stamp {
+                            v.push(format!(
+                                "ticket {ticket}: delivered with epoch \
+                                 {epoch} but submitted under stamp \
+                                 {stamp}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ev::Quarantine { replica, owed } => {
+            let Some(st) = rep.get_mut(*replica) else { return };
+            st.quarantined = true;
+            let expect =
+                st.fences_sent.saturating_sub(st.acks_recvd);
+            if *owed != expect {
+                v.push(format!(
+                    "replica {replica}: quarantine wrote off {owed} \
+                     fence ack(s) but {expect} were owed"
+                ));
+            }
+        }
+    }
+}
+
+// ---- the pool-facing handle ----
+//
+// `HbHandle` is what `EnginePool` holds and threads into its workers.
+// With the `hb` feature off it is an empty struct and every hook is a
+// literal no-op; with it on, an untraced handle costs one branch.
+
+/// Tracing handle attached to an [`crate::rollout::EnginePool`] at
+/// construction ([`crate::rollout::EnginePool::new_traced`]).
+#[derive(Clone, Default)]
+pub struct HbHandle {
+    #[cfg(feature = "hb")]
+    rec: Option<Arc<HbRecorder>>,
+}
+
+impl HbHandle {
+    /// A handle that records into `rec` (no-op if the `hb` feature is
+    /// off — the recorder then simply stays empty).
+    pub fn traced(rec: Arc<HbRecorder>) -> HbHandle {
+        #[cfg(feature = "hb")]
+        {
+            HbHandle { rec: Some(rec) }
+        }
+        #[cfg(not(feature = "hb"))]
+        {
+            let _ = rec;
+            HbHandle {}
+        }
+    }
+
+    /// Replicas the attached recorder was sized for (None = untraced).
+    pub fn traced_replicas(&self) -> Option<usize> {
+        #[cfg(feature = "hb")]
+        {
+            self.rec.as_deref().map(HbRecorder::n_replicas)
+        }
+        #[cfg(not(feature = "hb"))]
+        {
+            None
+        }
+    }
+
+    /// Run the conformance checker on the attached recorder.
+    /// `Ok(None)` when untraced (or the `hb` feature is off).
+    pub fn verify(&self) -> Result<Option<HbReport>> {
+        #[cfg(feature = "hb")]
+        {
+            match self.rec.as_deref() {
+                Some(r) => r.check().map(Some),
+                None => Ok(None),
+            }
+        }
+        #[cfg(not(feature = "hb"))]
+        {
+            Ok(None)
+        }
+    }
+}
+
+/// Generates the forwarding hook methods: with the `hb` feature they
+/// forward to the recorder (if any); without it they compile to
+/// empty inlined bodies.
+macro_rules! hb_hooks {
+    ($($(#[$doc:meta])* fn $name:ident($($arg:ident: $ty:ty),*);)*) => {
+        impl HbHandle {
+            $(
+                $(#[$doc])*
+                #[inline]
+                pub fn $name(&self, $($arg: $ty),*) {
+                    #[cfg(feature = "hb")]
+                    if let Some(r) = self.rec.as_deref() {
+                        r.$name($($arg),*);
+                    }
+                    #[cfg(not(feature = "hb"))]
+                    {
+                        $(let _ = $arg;)*
+                    }
+                }
+            )*
+        }
+    };
+}
+
+hb_hooks! {
+    /// Pool is about to send a submission to `replica`.
+    fn submit_send(replica: usize, ticket: u64, stamp: u64);
+    /// Pool is about to send a fence to `replica`.
+    fn fence_send(replica: usize, target: u64);
+    /// Pool is about to send order-insensitive control to `replica`.
+    fn ctl_send(replica: usize, label: MsgLabel);
+    /// The pool's last send to `replica` failed (worker gone).
+    fn send_failed(replica: usize);
+    /// Worker ingested one message (label derived from what arrived).
+    fn worker_recv(replica: usize, label: MsgLabel);
+    /// Worker admitted a submission into its engine.
+    fn admit(replica: usize, ticket: u64, engine_epoch: u64);
+    /// Worker parked a fence, entering `Draining`.
+    fn fence_park(replica: usize, target: u64);
+    /// Worker applied a parked fence.
+    fn fence_apply(replica: usize, target: u64, ok: bool, engine_epoch: u64);
+    /// Worker is about to send one event to the pool.
+    fn event_send(replica: usize, label: EvLabel);
+    /// The worker's event send failed (pool hung up).
+    fn event_send_failed(replica: usize);
+    /// Pool received one event off the shared channel.
+    fn event_recv(replica: usize, label: EvLabel);
+    /// Pool delivered a resolution to the caller.
+    fn resolve(ticket: u64, kind: ResolveKind);
+    /// Pool quarantined `replica`, writing off `owed` fence acks.
+    fn quarantine(replica: usize, owed: usize);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the recorder through one clean single-replica session:
+    /// submit → admit → done → resolve, fence → park → apply → ack,
+    /// post-fence submit at the new stamp.
+    fn clean_session(rec: &HbRecorder) {
+        rec.submit_send(0, 1, 0);
+        rec.worker_recv(0, MsgLabel::Submit { ticket: 1, stamp: 0 });
+        rec.admit(0, 1, 0);
+        rec.event_send(0, EvLabel::Done { ticket: 1, epoch: 0 });
+        rec.event_recv(0, EvLabel::Done { ticket: 1, epoch: 0 });
+        rec.resolve(1, ResolveKind::Done { epoch: 0 });
+        rec.fence_send(0, 1);
+        rec.worker_recv(0, MsgLabel::Fence { target: 1 });
+        rec.fence_park(0, 1);
+        rec.fence_apply(0, 1, true, 1);
+        rec.event_send(0, EvLabel::FenceAck { target: 1, ok: true });
+        rec.event_recv(0, EvLabel::FenceAck { target: 1, ok: true });
+        rec.submit_send(0, 2, 1);
+        rec.worker_recv(0, MsgLabel::Submit { ticket: 2, stamp: 1 });
+        rec.admit(0, 2, 1);
+        rec.event_send(0, EvLabel::Done { ticket: 2, epoch: 1 });
+        rec.event_recv(0, EvLabel::Done { ticket: 2, epoch: 1 });
+        rec.resolve(2, ResolveKind::Done { epoch: 1 });
+    }
+
+    #[test]
+    fn clean_session_passes() {
+        let rec = HbRecorder::new(1);
+        clean_session(&rec);
+        let rep = rec.check().expect("clean session must pass");
+        assert_eq!(rep.tickets, 2);
+        assert_eq!(rep.fences, 1);
+        assert!(rep.events >= 18, "got {}", rep.events);
+    }
+
+    #[test]
+    fn chaos_worker_installing_without_draining_is_flagged() {
+        // the non-vacuity fixture from the issue: a broken worker that
+        // applies a fence while a ticket is still in flight, then tags
+        // the straggler's completion with the NEW epoch
+        let rec = HbRecorder::new(1);
+        rec.submit_send(0, 7, 0);
+        rec.worker_recv(0, MsgLabel::Submit { ticket: 7, stamp: 0 });
+        rec.admit(0, 7, 0);
+        rec.fence_send(0, 1);
+        rec.worker_recv(0, MsgLabel::Fence { target: 1 });
+        rec.fence_park(0, 1);
+        // CHAOS: install with ticket 7 still in flight
+        rec.fence_apply(0, 1, true, 1);
+        rec.event_send(0, EvLabel::FenceAck { target: 1, ok: true });
+        rec.event_recv(0, EvLabel::FenceAck { target: 1, ok: true });
+        // the straggler finishes under the torn install, mis-tagged
+        rec.event_send(0, EvLabel::Done { ticket: 7, epoch: 1 });
+        rec.event_recv(0, EvLabel::Done { ticket: 7, epoch: 1 });
+        rec.resolve(7, ResolveKind::Done { epoch: 1 });
+        let err = rec.check().expect_err("chaos must be flagged");
+        let msg = err.to_string();
+        assert!(msg.contains("still in flight"), "{msg}");
+        assert!(msg.contains("spans an install"), "{msg}");
+        assert!(msg.contains("submit stamp"), "{msg}");
+    }
+
+    #[test]
+    fn admission_past_a_parked_fence_is_flagged() {
+        let rec = HbRecorder::new(1);
+        rec.fence_send(0, 1);
+        rec.worker_recv(0, MsgLabel::Fence { target: 1 });
+        rec.fence_park(0, 1);
+        rec.submit_send(0, 3, 1);
+        rec.worker_recv(0, MsgLabel::Submit { ticket: 3, stamp: 1 });
+        // CHAOS: admitted while draining (must have been backlogged)
+        rec.admit(0, 3, 0);
+        let err = rec.check().expect_err("must flag");
+        assert!(err.to_string().contains("parked fence"), "{err}");
+    }
+
+    #[test]
+    fn double_ack_and_unapplied_ack_are_flagged() {
+        let rec = HbRecorder::new(1);
+        rec.fence_send(0, 1);
+        rec.worker_recv(0, MsgLabel::Fence { target: 1 });
+        rec.fence_park(0, 1);
+        rec.fence_apply(0, 1, true, 1);
+        rec.event_send(0, EvLabel::FenceAck { target: 1, ok: true });
+        rec.event_send(0, EvLabel::FenceAck { target: 1, ok: true });
+        rec.event_recv(0, EvLabel::FenceAck { target: 1, ok: true });
+        rec.event_recv(0, EvLabel::FenceAck { target: 1, ok: true });
+        let err = rec.check().expect_err("must flag the double ack");
+        assert!(
+            err.to_string().contains("more than once"),
+            "{err}"
+        );
+        let rec2 = HbRecorder::new(1);
+        rec2.event_send(0, EvLabel::FenceAck { target: 5, ok: true });
+        let err2 = rec2.check().expect_err("ack without apply");
+        assert!(
+            err2.to_string().contains("without applying"),
+            "{err2}"
+        );
+    }
+
+    #[test]
+    fn unresolved_and_double_resolved_tickets_are_flagged() {
+        let rec = HbRecorder::new(1);
+        rec.submit_send(0, 4, 0);
+        let err = rec.check().expect_err("unresolved must flag");
+        assert!(err.to_string().contains("never resolved"), "{err}");
+
+        let rec2 = HbRecorder::new(1);
+        rec2.submit_send(0, 4, 0);
+        rec2.worker_recv(0, MsgLabel::Submit { ticket: 4, stamp: 0 });
+        rec2.admit(0, 4, 0);
+        rec2.event_send(0, EvLabel::Done { ticket: 4, epoch: 0 });
+        rec2.event_recv(0, EvLabel::Done { ticket: 4, epoch: 0 });
+        rec2.resolve(4, ResolveKind::Done { epoch: 0 });
+        rec2.resolve(4, ResolveKind::Done { epoch: 0 });
+        let err2 = rec2.check().expect_err("double resolve must flag");
+        assert!(err2.to_string().contains("resolved 2 times"), "{err2}");
+    }
+
+    #[test]
+    fn channel_label_mismatch_is_flagged() {
+        let rec = HbRecorder::new(1);
+        rec.submit_send(0, 9, 0);
+        // the worker claims it received an abort: FIFO breach
+        rec.worker_recv(0, MsgLabel::Abort { ticket: 9 });
+        rec.worker_recv(0, MsgLabel::Shutdown); // and an unsent recv
+        let err = rec.check().expect_err("must flag");
+        let msg = err.to_string();
+        assert!(msg.contains("FIFO breach"), "{msg}");
+        assert!(msg.contains("no recorded send"), "{msg}");
+    }
+
+    #[test]
+    fn quarantine_write_off_must_match_owed_acks() {
+        // replica dies with one un-acked fence: writing off exactly 1
+        // passes; writing off 2 is a violation
+        let ok = HbRecorder::new(1);
+        ok.submit_send(0, 1, 0);
+        ok.fence_send(0, 1);
+        ok.quarantine(0, 1);
+        ok.resolve(1, ResolveKind::Failed);
+        ok.check().expect("exact write-off passes");
+
+        let bad = HbRecorder::new(1);
+        bad.fence_send(0, 1);
+        bad.quarantine(0, 2);
+        let err = bad.check().expect_err("over-write-off must flag");
+        assert!(err.to_string().contains("wrote off 2"), "{err}");
+    }
+
+    #[test]
+    fn voided_sends_are_ignored_by_the_checker() {
+        // a submit whose physical send failed (dead worker) is voided
+        // and must not count as an unresolved ticket
+        let rec = HbRecorder::new(2);
+        rec.submit_send(0, 5, 0);
+        rec.send_failed(0);
+        rec.submit_send(1, 5, 0); // re-routed to the healthy replica
+        rec.worker_recv(1, MsgLabel::Submit { ticket: 5, stamp: 0 });
+        rec.admit(1, 5, 0);
+        rec.event_send(1, EvLabel::Done { ticket: 5, epoch: 0 });
+        rec.event_recv(1, EvLabel::Done { ticket: 5, epoch: 0 });
+        rec.resolve(5, ResolveKind::Done { epoch: 0 });
+        rec.check().expect("voided send must not leak obligations");
+    }
+
+    #[test]
+    fn fence_state_machine_rejects_out_of_order_targets() {
+        let rec = HbRecorder::new(1);
+        rec.fence_send(0, 2);
+        rec.worker_recv(0, MsgLabel::Fence { target: 2 });
+        rec.fence_park(0, 2); // first fence must target epoch 1
+        let err = rec.check().expect_err("must flag");
+        assert!(err.to_string().contains("consecutive"), "{err}");
+    }
+
+    #[test]
+    fn untraced_handle_is_inert() {
+        let h = HbHandle::default();
+        h.submit_send(0, 1, 0);
+        h.resolve(1, ResolveKind::Aborted);
+        assert!(h.verify().expect("inert verify").is_none());
+        assert_eq!(h.traced_replicas(), None);
+    }
+}

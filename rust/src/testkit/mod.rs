@@ -11,7 +11,12 @@
 //! [`interleave`] adds the deterministic-interleaving driver the
 //! streaming-pool suite replays seeded submit/poll/sync/abort event
 //! orders with.
+//!
+//! [`hb`] is the happens-before ordering oracle + fence-protocol
+//! conformance checker for the streaming engine pool (hooks compiled
+//! to no-ops without the `hb` cargo feature).
 
+pub mod hb;
 pub mod interleave;
 
 use crate::util::rng::Pcg64;

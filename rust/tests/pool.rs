@@ -62,7 +62,8 @@ fn single_engine(variant: &str) -> HloEngine {
 }
 
 fn pool(n: usize, variant: &str, policy: RoutePolicy) -> EnginePool {
-    EnginePool::new(
+    use fp8_rl::testkit::hb::{HbHandle, HbRecorder};
+    EnginePool::new_traced(
         PoolConfig {
             n_replicas: n,
             policy,
@@ -71,8 +72,19 @@ fn pool(n: usize, variant: &str, policy: RoutePolicy) -> EnginePool {
         // explicitly hermetic: must not depend on whether an artifacts
         // dir happens to exist in the test cwd
         fp8_rl::rollout::hermetic_runtime_factory(),
+        // every pool test doubles as a fence-protocol conformance
+        // witness: `hb_check` replays the recorded hb log through the
+        // checker (inert under `--no-default-features`)
+        HbHandle::traced(HbRecorder::new(n)),
     )
     .unwrap()
+}
+
+/// Assert the recorded session conforms to the fence protocol.
+fn hb_check(p: &EnginePool, what: &str) {
+    if let Err(e) = p.hb_verify() {
+        panic!("{what}: hb conformance failed: {e}");
+    }
 }
 
 /// Per-token TIS weights as the trainer would compute them against the
@@ -186,6 +198,7 @@ fn four_replica_pool_is_bit_identical_to_single_engine() {
             c.tokens != d.tokens || c.logprobs_full != d.logprobs_full
         });
     assert!(changed, "weight sync + kv scales appear dead");
+    hb_check(&pool4, "four-replica session");
 }
 
 #[test]
@@ -212,6 +225,7 @@ fn replica_count_and_policy_do_not_change_outputs() {
             vec![0u64; n].as_slice(),
             "router load must drain at {n} replicas"
         );
+        hb_check(&p, &format!("{n}-replica barrier session"));
     }
 }
 
@@ -271,6 +285,7 @@ fn mid_decode_weight_sync_fences_epochs() {
             c.tokens != d.tokens || c.logprobs_full != d.logprobs_full
         });
     assert!(changed, "the epoch fence appears to be a dead path");
+    hb_check(&p, "mid-decode fence session");
 }
 
 #[test]
@@ -371,6 +386,98 @@ fn abort_unblocks_a_fence_blocked_straggler() {
     for c in &after {
         assert_eq!(c.epoch, 1);
     }
+    hb_check(&p, "fence-blocked abort session");
+}
+
+#[test]
+fn quarantine_while_fence_parked_writes_off_acks_and_reroutes() {
+    // the reaper regression from the issue: a replica dies while its
+    // fence is still PARKED (draining). The reaper must (a) write off
+    // exactly the fence acks that replica still owed — surfacing the
+    // broken fence as an error, not hanging drain — and (b) re-route
+    // its unresolved tickets to the survivor at the current epoch.
+    // The hb conformance check at the end proves the write-off was
+    // exact (the checker compares it against fences_sent - acks_recvd)
+    // and that every ticket still resolved exactly once.
+    use std::collections::{BTreeMap, BTreeSet};
+
+    use fp8_rl::rollout::Completed;
+
+    let mut p = pool(2, "bf16", RoutePolicy::RoundRobin);
+    let long = |id: u64| Request {
+        id,
+        prompt: vec![12, (id % 10) as i32, 10, 3, 11],
+        params: SamplingParams {
+            temperature: 1.0,
+            max_new_tokens: 10_000,
+            eos: -1, // never terminates early
+            ..Default::default()
+        },
+    };
+    let short = |id: u64| Request {
+        id,
+        prompt: vec![12, (id % 10) as i32, 10, 3, 11],
+        params: SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 4,
+            ..Default::default()
+        },
+    };
+    // round-robin: A -> replica 0 (the straggler its fence will park
+    // on), B -> replica 1 (finishes, lets 1's fence apply)
+    p.submit(long(0)).unwrap();
+    p.submit(short(1)).unwrap();
+    let w = synced_weights(&Runtime::hermetic());
+    assert_eq!(p.sync_weights(w).unwrap(), 1);
+    // C -> replica 0: parked in the backlog BEHIND the pending fence
+    p.submit(short(2)).unwrap();
+    // replica 0 dies with its fence still draining (A in flight, C
+    // backlogged, the fence unacknowledged)
+    p.kill_worker_for_test(0);
+    // the abort's send fails, which triggers the reap: replica 0 is
+    // quarantined, its owed ack written off, A and C re-routed to
+    // replica 1 at the current epoch — the retried abort then cancels
+    // A at its NEW home
+    p.abort(0).unwrap();
+
+    let mut done: BTreeMap<u64, fp8_rl::rollout::Completion> =
+        BTreeMap::new();
+    let mut aborted = BTreeSet::new();
+    let mut fence_err = None;
+    loop {
+        match p.next_resolved() {
+            Ok(Some(Completed::Done(c))) => {
+                assert!(done.insert(c.id, c).is_none());
+            }
+            Ok(Some(Completed::Aborted(id))) => {
+                assert!(aborted.insert(id));
+            }
+            Ok(Some(Completed::Failed(id, msg))) => {
+                panic!("ticket {id} failed: {msg}")
+            }
+            Ok(None) => break,
+            Err(e) => {
+                // the written-off fence surfaces exactly once
+                assert!(
+                    fence_err.replace(e.to_string()).is_none(),
+                    "fence failure reported twice"
+                );
+            }
+        }
+    }
+    let fence_err = fence_err.expect("written-off fence must surface");
+    assert!(fence_err.contains("pool degraded"), "{fence_err}");
+    // every ticket resolved exactly once: B and C completed (C at the
+    // post-fence epoch on the survivor), A's abort won at its new home
+    assert!(aborted.contains(&0), "re-routed straggler must abort");
+    assert_eq!(done.get(&1).map(|c| c.epoch), Some(0), "B pre-fence");
+    assert_eq!(done.get(&2).map(|c| c.epoch), Some(1), "C post-fence");
+    assert_eq!(p.n_outstanding(), 0);
+    assert_eq!(p.loads(), &[0, 0], "write-offs must settle the router");
+    // drain still terminates (the fence debt was written off, not
+    // leaked) and reports nothing new
+    assert!(p.drain().unwrap().is_empty());
+    hb_check(&p, "quarantine-while-parked session");
 }
 
 #[test]
@@ -392,6 +499,7 @@ fn pool_aggregates_stats_across_replicas() {
         per.iter().map(|s| s.tokens_generated).sum::<u64>(),
         total.tokens_generated
     );
+    hb_check(&p, "stats session");
 }
 
 #[test]

@@ -15,6 +15,12 @@
 //! pins `n_syncs >= 1`), so the epoch-fence argument — in-flight
 //! sequences finish under the old weights, later submissions use the
 //! new ones, tags match — is exercised 256+ times.
+//!
+//! Every case additionally runs with a happens-before recorder
+//! attached (`testkit::hb`): once the session is quiescent, the full
+//! event log is replayed through the fence-protocol conformance
+//! checker, so all 256+ interleavings double as protocol-conformance
+//! witnesses (inert under `--no-default-features`).
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -26,6 +32,7 @@ use fp8_rl::rollout::{
 };
 use fp8_rl::runtime::{HostArray, Runtime};
 use fp8_rl::sync::{WeightSync, WeightSyncConfig};
+use fp8_rl::testkit::hb::{HbHandle, HbRecorder};
 use fp8_rl::testkit::interleave::{
     run, InterleaveSpec, InterleaveTarget,
 };
@@ -239,13 +246,14 @@ fn case(seed: u64) -> Result<(), String> {
     let syncs: Vec<Arc<Vec<HostArray>>> =
         (0..spec.n_syncs).map(|j| synced_weights(&rt, j)).collect();
 
-    let pool = EnginePool::new(
+    let pool = EnginePool::new_traced(
         PoolConfig {
             n_replicas: replicas,
             policy,
             engine: EngineConfig::new("dense", "bf16"),
         },
         hermetic_runtime_factory(),
+        HbHandle::traced(HbRecorder::new(replicas)),
     )
     .map_err(|e| e.to_string())?;
     let mut stream = StreamSession {
@@ -286,6 +294,13 @@ fn case(seed: u64) -> Result<(), String> {
             resolved, stream.submitted
         ));
     }
+
+    // --- fence-protocol conformance: replay the recorded hb log
+    // through the checker now that the session is quiescent ---
+    stream
+        .pool
+        .hb_verify()
+        .map_err(|e| format!("hb conformance: {e}"))?;
 
     // --- the bit-equality claim against the sequential reference ---
     let mut reference = SeqReference {

@@ -1,0 +1,29 @@
+#!/usr/bin/env sh
+# Cross-check the two pallas-lint implementations: the Rust scanner
+# (tools/lint, authoritative) and its Python mirror (tools/lint/
+# mirror.py, used where no Rust toolchain exists). Both scan the full
+# tree with --verbose; after normalizing the one intentionally
+# different line (the header names the implementation), the reports
+# must be byte-identical — any rule-semantics drift between the two
+# shows up as a diff here and fails CI.
+#
+# Usage: scripts/lint_crosscheck.sh [repo-root]
+set -eu
+
+root=${1:-.}
+tmp=$(mktemp -d)
+trap 'rm -rf "$tmp"' EXIT
+
+# Floors/ratchet verdicts are part of the compared output on purpose:
+# the implementations must agree on pass/fail, not just on counts.
+# `|| true` keeps a FAIL verdict comparable instead of aborting.
+(cd "$root" && cargo run -q -p pallas-lint -- --verbose || true) \
+    | sed 's/^pallas-lint[^:]*:/pallas-lint:/' > "$tmp/rust.txt"
+(python3 "$root/tools/lint/mirror.py" --root "$root" --verbose || true) \
+    | sed 's/^pallas-lint[^:]*:/pallas-lint:/' > "$tmp/python.txt"
+
+if ! diff -u "$tmp/rust.txt" "$tmp/python.txt"; then
+    echo "lint_crosscheck: scanner and mirror disagree (see diff above)" >&2
+    exit 1
+fi
+echo "lint_crosscheck: scanner and mirror agree ($(wc -l < "$tmp/rust.txt") report lines)"

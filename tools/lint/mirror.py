@@ -16,16 +16,25 @@ import os
 import re
 import sys
 
-RULES = ("D1", "D2", "P1", "C1")
+RULES = ("D1", "D2", "P1", "C1", "A1", "C2")
 
 # Modules whose behavior must be bit-deterministic (rule D1).
 DET_MODULES = ("rollout", "sync", "coordinator", "testkit", "fp8")
 # Modules where the P1 count must be zero (hard floor, baseline-proof).
-CORE_MODULES = ("rollout", "sync", "coordinator", "rl")
+CORE_MODULES = ("rollout", "sync", "coordinator", "rl", "perfmodel", "root")
+# File stems whose arithmetic is accounting-critical (rule A1); the
+# `rl` module is in scope as a whole alongside these.
+A1_FILES = ("kvcache", "pool", "router", "scheduler")
 
 D1_IDENTS = ("HashMap", "HashSet", "Instant", "SystemTime", "thread_rng")
 FLOAT_CONSTS = ("INFINITY", "NEG_INFINITY", "NAN")
 PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
+C1_METHODS = ("send", "try_send", "send_ctl", "send_ordered")
+# Identifier segments that mark an accounting quantity (rule A1).
+ACCT_WORDS = (
+    "block", "blocks", "budget", "budgets", "load", "loads", "reserve",
+    "reserved", "reserves", "token", "tokens",
+)
 KEYWORDS = (
     "as", "box", "break", "const", "continue", "dyn", "else", "enum",
     "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
@@ -33,7 +42,7 @@ KEYWORDS = (
     "type", "unsafe", "use", "where", "while", "yield",
 )
 
-ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((D1|D2|P1|C1)\)")
+ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((D1|D2|P1|C1|A1|C2)\)")
 RAW_STR_RE = re.compile(r'(b?r)(#*)"')
 
 
@@ -259,9 +268,98 @@ def match_paren(toks, i):
     return len(toks)
 
 
+def is_acct(ident):
+    """Accounting-flavored identifier: any `_`-separated segment names
+    a resource quantity (rule A1)."""
+    return any(s in ACCT_WORDS for s in ident.split("_"))
+
+
+def acct_lhs(toks, op):
+    """A compound `+=`/`-=`'s left-hand side: walk back from the
+    operator to the statement boundary and return the first accounting
+    identifier. Stops at `=`/`,` too, so `match` arms (`=>` lexes as
+    `=`,`>`) don't leak scrutinee identifiers into the LHS."""
+    j = op
+    while j > 0:
+        j -= 1
+        k, t, _ = toks[j]
+        if t in (";", "{", "}", "=", ","):
+            return None
+        if k == "id" and t not in KEYWORDS and is_acct(t):
+            return t
+    return None
+
+
+def acct_left(toks, op):
+    """Walk one operand chain LEFT from the operator at `op`
+    (exclusive): identifiers, `.`/`::` separators, and matched
+    `()`/`[]` groups. Returns the first accounting identifier found in
+    the chain."""
+    j = op
+    while j > 0:
+        j -= 1
+        k, t, _ = toks[j]
+        if t in (")", "]"):
+            close, opener = t, "(" if t == ")" else "["
+            depth = 1
+            while j > 0 and depth > 0:
+                j -= 1
+                u = toks[j][1]
+                if u == close:
+                    depth += 1
+                elif u == opener:
+                    depth -= 1
+            if depth > 0:
+                return None
+        elif t in (".", "::"):
+            pass
+        elif k == "id" and t not in KEYWORDS:
+            if is_acct(t):
+                return t
+        elif k in ("num", "fnum"):
+            pass
+        else:
+            return None
+    return None
+
+
+def acct_right(toks, op):
+    """Walk one operand chain RIGHT from the operator at `op`
+    (exclusive); same chain grammar as `acct_left`."""
+    j = op + 1
+    while j < len(toks):
+        k, t, _ = toks[j]
+        if t in ("(", "["):
+            opener, close = t, ")" if t == "(" else "]"
+            depth = 1
+            j += 1
+            while j < len(toks) and depth > 0:
+                u = toks[j][1]
+                if u == opener:
+                    depth += 1
+                elif u == close:
+                    depth -= 1
+                j += 1
+            if depth > 0:
+                return None
+        elif t in (".", "::"):
+            j += 1
+        elif k == "id" and t not in KEYWORDS:
+            if is_acct(t):
+                return t
+            j += 1
+        elif k in ("num", "fnum"):
+            j += 1
+        else:
+            return None
+    return None
+
+
 def scan_file(relpath, src):
     """Return list of (rule, line, what, allowed)."""
     module = relpath.split("/")[0] if "/" in relpath else "root"
+    fname = relpath.rsplit("/", 1)[-1]
+    stem = fname[:-3] if fname.endswith(".rs") else fname
     toks, allows = tokenize(src)
     excluded = test_regions(toks)
 
@@ -275,6 +373,7 @@ def scan_file(relpath, src):
         finds.append((rule, line, what, allowed))
 
     det = module in DET_MODULES
+    acct = stem in A1_FILES or module == "rl"
     for i, (k, t, line) in enumerate(toks):
         if in_test(line):
             continue
@@ -303,7 +402,7 @@ def scan_file(relpath, src):
                 hit("P1", line, "indexing")
         if (
             k == "id"
-            and t in ("send", "try_send")
+            and t in C1_METHODS
             and prev[1] == "."
             and nxt[1] == "("
         ):
@@ -318,6 +417,36 @@ def scan_file(relpath, src):
                 head = [x[1] for x in toks[b : b + 3]]
                 if head == ["let", "_", "="]:
                     hit("C1", line, "let _ = " + t)
+        if acct and k == "p" and t in ("+", "-") and nxt[1] == "=":
+            lhs = acct_lhs(toks, i)
+            if lhs is not None:
+                hit("A1", line, "unchecked " + t + "= on " + lhs)
+        if (
+            acct
+            and k == "p"
+            and t == "-"
+            and nxt[1] != "="
+            and nxt[1] != ">"
+        ):
+            binary = (
+                prev[0] in ("num", "fnum")
+                or prev[1] in (")", "]")
+                or (prev[0] == "id" and prev[1] not in KEYWORDS)
+            )
+            if binary:
+                ident = acct_left(toks, i) or acct_right(toks, i)
+                if ident is not None:
+                    hit("A1", line, "unchecked - on " + ident)
+        if (
+            k == "id"
+            and t in ("send", "try_send")
+            and prev[1] == "."
+            and nxt[1] == "("
+            and i + 3 < len(toks)
+            and toks[i + 2][1] == "ToWorker"
+            and toks[i + 3][1] == "::"
+        ):
+            hit("C2", line, "." + t + "(ToWorker::..)")
     return module, finds
 
 
@@ -396,7 +525,7 @@ def main(argv):
     for (rule, module), (v, _a) in sorted(counts.items()):
         if v == 0:
             continue
-        if rule in ("D1", "D2", "C1"):
+        if rule in ("D1", "D2", "C1", "A1", "C2"):
             print(f"FLOOR: {rule} must be 0 everywhere, {module} has {v}")
             ok = False
         if rule == "P1" and module in CORE_MODULES:

@@ -1,6 +1,6 @@
 //! pallas-lint: a hermetic static-analysis pass over `rust/src`.
 //!
-//! Four rule families, each encoding an invariant this repo has been
+//! Six rule families, each encoding an invariant this repo has been
 //! bitten by (see DESIGN.md §7 "Static invariants"):
 //!
 //! * **D1** — determinism: no `HashMap`/`HashSet`/`Instant`/
@@ -14,7 +14,20 @@
 //!   indexing in non-test code.
 //! * **C1** — fence protocol: channel sends must not be silently
 //!   discarded (`let _ = x.send(..)` / `x.send(..).ok()`), because a
-//!   dropped fence ack deadlocks the epoch barrier.
+//!   dropped fence ack deadlocks the epoch barrier. Covers the pool's
+//!   `send_ctl`/`send_ordered` wrappers too, so the `WorkerLink`
+//!   indirection cannot erode the rule.
+//! * **A1** — accounting arithmetic: in the resource-accounting files
+//!   (`scheduler`/`kvcache`/`router`/`pool` and the `rl` module),
+//!   unchecked `-`/`+=`/`-=` touching an accounting-flavored
+//!   identifier (tokens/blocks/load/reserve/budget segments) must be
+//!   `checked_*`/`saturating_*` or carry an audited allow — the
+//!   `TrainBatch::assemble` usize underflow and the 0-token
+//!   KV-allocator hole were both exactly this shape.
+//! * **C2** — fence FIFO integrity: a raw `.send(ToWorker::..)` /
+//!   `.try_send(ToWorker::..)` must not appear outside the audited
+//!   `WorkerLink` wrapper — smuggling an ordered message around the
+//!   wrapper would bypass the epoch-fence FIFO.
 //!
 //! Per-site escape hatch: a `// lint: allow(<rule>): <reason>` comment
 //! on the violation's line or the line immediately above. Allowed
@@ -36,9 +49,19 @@ use std::path::{Path, PathBuf};
 pub const DET_MODULES: [&str; 5] =
     ["rollout", "sync", "coordinator", "testkit", "fp8"];
 /// Modules where the P1 count must be zero (hard floor, baseline-proof).
-pub const CORE_MODULES: [&str; 4] = ["rollout", "sync", "coordinator", "rl"];
+pub const CORE_MODULES: [&str; 6] =
+    ["rollout", "sync", "coordinator", "rl", "perfmodel", "root"];
+/// File stems whose arithmetic is accounting-critical (rule A1); the
+/// `rl` module is in scope as a whole alongside these.
+pub const A1_FILES: [&str; 4] = ["kvcache", "pool", "router", "scheduler"];
 
-const RULE_NAMES: [&str; 4] = ["D1", "D2", "P1", "C1"];
+const RULE_NAMES: [&str; 6] = ["D1", "D2", "P1", "C1", "A1", "C2"];
+const C1_METHODS: [&str; 4] = ["send", "try_send", "send_ctl", "send_ordered"];
+/// Identifier segments that mark an accounting quantity (rule A1).
+const ACCT_WORDS: [&str; 11] = [
+    "block", "blocks", "budget", "budgets", "load", "loads", "reserve",
+    "reserved", "reserves", "token", "tokens",
+];
 const D1_IDENTS: [&str; 5] =
     ["HashMap", "HashSet", "Instant", "SystemTime", "thread_rng"];
 const FLOAT_CONSTS: [&str; 3] = ["INFINITY", "NEG_INFINITY", "NAN"];
@@ -471,6 +494,112 @@ fn match_paren(toks: &[Tok], mut i: usize) -> usize {
     toks.len()
 }
 
+/// Accounting-flavored identifier: any `_`-separated segment names a
+/// resource quantity (rule A1).
+fn is_acct(ident: &str) -> bool {
+    ident.split('_').any(|s| ACCT_WORDS.contains(&s))
+}
+
+/// A compound `+=`/`-=`'s left-hand side: walk back from the operator
+/// to the statement boundary and return the first accounting
+/// identifier. Stops at `=`/`,` too, so `match` arms (`=>` lexes as
+/// `=`,`>`) don't leak scrutinee identifiers into the LHS.
+fn acct_lhs(toks: &[Tok], op: usize) -> Option<String> {
+    let mut j = op;
+    while j > 0 {
+        j -= 1;
+        let tok = toks.get(j)?;
+        let t = tok.text.as_str();
+        if matches!(t, ";" | "{" | "}" | "=" | ",") {
+            return None;
+        }
+        if tok.kind == Kind::Id && !KEYWORDS.contains(&t) && is_acct(t) {
+            return Some(t.to_string());
+        }
+    }
+    None
+}
+
+/// Walk one operand chain LEFT from the operator at `op` (exclusive):
+/// identifiers, `.`/`::` separators, and matched `()`/`[]` groups.
+/// Returns the first accounting identifier found in the chain.
+fn acct_left(toks: &[Tok], op: usize) -> Option<String> {
+    let mut j = op;
+    while j > 0 {
+        j -= 1;
+        let tok = toks.get(j)?;
+        match tok.text.as_str() {
+            close @ (")" | "]") => {
+                let open = if close == ")" { "(" } else { "[" };
+                let mut depth = 1usize;
+                while j > 0 && depth > 0 {
+                    j -= 1;
+                    let u = txt(toks, j);
+                    if u == close {
+                        depth += 1;
+                    } else if u == open {
+                        depth -= 1;
+                    }
+                }
+                if depth > 0 {
+                    return None;
+                }
+            }
+            "." | "::" => {}
+            t => match tok.kind {
+                Kind::Id if !KEYWORDS.contains(&t) => {
+                    if is_acct(t) {
+                        return Some(t.to_string());
+                    }
+                }
+                Kind::Num | Kind::Fnum => {}
+                _ => return None,
+            },
+        }
+    }
+    None
+}
+
+/// Walk one operand chain RIGHT from the operator at `op` (exclusive);
+/// same chain grammar as `acct_left`.
+fn acct_right(toks: &[Tok], op: usize) -> Option<String> {
+    let mut j = op + 1;
+    while j < toks.len() {
+        let Some(tok) = toks.get(j) else { return None };
+        match tok.text.as_str() {
+            open @ ("(" | "[") => {
+                let close = if open == "(" { ")" } else { "]" };
+                let mut depth = 1usize;
+                j += 1;
+                while j < toks.len() && depth > 0 {
+                    let u = txt(toks, j);
+                    if u == open {
+                        depth += 1;
+                    } else if u == close {
+                        depth -= 1;
+                    }
+                    j += 1;
+                }
+                if depth > 0 {
+                    return None;
+                }
+            }
+            "." | "::" => j += 1,
+            t => match tok.kind {
+                Kind::Id if !KEYWORDS.contains(&t) => {
+                    if is_acct(t) {
+                        return Some(t.to_string());
+                    }
+                    j += 1;
+                }
+                Kind::Num | Kind::Fnum => j += 1,
+                _ => return None,
+            },
+        }
+    }
+    None
+}
+
 /// Scan one file. `relpath` is relative to `rust/src` with `/`
 /// separators; the module is its first path component (or "root").
 pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
@@ -478,6 +607,8 @@ pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
         Some((m, _)) => m.to_string(),
         None => "root".to_string(),
     };
+    let file = relpath.rsplit('/').next().unwrap_or(relpath);
+    let stem = file.strip_suffix(".rs").unwrap_or(file);
     let (toks, allows) = tokenize(src);
     let excluded = test_regions(&toks);
     let in_test = |line: usize| {
@@ -486,6 +617,7 @@ pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
 
     let mut finds: Vec<Find> = Vec::new();
     let det = DET_MODULES.contains(&module.as_str());
+    let acct = A1_FILES.contains(&stem) || module == "rl";
     for i in 0..toks.len() {
         let Some(tok) = toks.get(i) else { break };
         let (k, t, line) = (tok.kind, tok.text.as_str(), tok.line);
@@ -534,7 +666,7 @@ pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
             }
         }
         if k == Kind::Id
-            && (t == "send" || t == "try_send")
+            && C1_METHODS.contains(&t)
             && prev == "."
             && nxt == "("
         {
@@ -557,6 +689,33 @@ pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
                     hit("C1", format!("let _ = {t}"));
                 }
             }
+        }
+        if acct && k == Kind::Punct && (t == "+" || t == "-") && nxt == "=" {
+            if let Some(id) = acct_lhs(&toks, i) {
+                hit("A1", format!("unchecked {t}= on {id}"));
+            }
+        }
+        if acct && k == Kind::Punct && t == "-" && nxt != "=" && nxt != ">" {
+            let binary = prev_kind == Kind::Num
+                || prev_kind == Kind::Fnum
+                || matches!(prev, ")" | "]")
+                || (prev_kind == Kind::Id && !KEYWORDS.contains(&prev));
+            if binary {
+                if let Some(id) =
+                    acct_left(&toks, i).or_else(|| acct_right(&toks, i))
+                {
+                    hit("A1", format!("unchecked - on {id}"));
+                }
+            }
+        }
+        if k == Kind::Id
+            && (t == "send" || t == "try_send")
+            && prev == "."
+            && nxt == "("
+            && txt(&toks, i + 2) == "ToWorker"
+            && txt(&toks, i + 3) == "::"
+        {
+            hit("C2", format!(".{t}(ToWorker::..)"));
         }
     }
     (module, finds)
@@ -673,7 +832,7 @@ pub fn run(root: &Path, write: bool, verbose: bool) -> io::Result<bool> {
         if *v == 0 {
             continue;
         }
-        if matches!(*rule, "D1" | "D2" | "C1") {
+        if matches!(*rule, "D1" | "D2" | "C1" | "A1" | "C2") {
             println!("FLOOR: {rule} must be 0 everywhere, {module} has {v}");
             ok = false;
         }

@@ -1,0 +1,49 @@
+//! A1 fixture: accounting arithmetic. Scanned as `rollout/pool.rs`
+//! (in scope), `rl/batch.rs` (in scope via module), and
+//! `rollout/request.rs` (out of scope — no findings).
+
+pub struct Acct {
+    tokens: u64,
+    blocks: usize,
+    budget: i64,
+}
+
+pub fn total(a: &Acct) -> usize {
+    a.blocks
+}
+
+pub fn churn(a: &mut Acct, n: u64) {
+    a.tokens += n;
+    a.tokens -= n;
+}
+
+pub fn deltas(a: &Acct) -> usize {
+    let spare = a.blocks - 1;
+    let used = total(a) - a.blocks;
+    spare + used
+}
+
+pub fn safe(a: &mut Acct, n: u64) {
+    a.tokens = a.tokens.saturating_add(n);
+    let _hole = a.blocks.saturating_sub(1);
+    let refund: i64 = -1;
+    a.budget = a.budget.saturating_add(refund);
+}
+
+pub fn audited(a: &mut Acct) {
+    // lint: allow(A1): fixture-audited exact subtraction
+    a.budget -= 1;
+}
+
+pub fn arms(a: &Acct, mut n: u64) -> u64 {
+    // the scrutinee's accounting ident must not leak into the arm's LHS
+    match a.tokens {
+        0 => n += 1,
+        _ => {}
+    }
+    n
+}
+
+pub fn plain_counter(c: &mut u64, n: u64) {
+    *c += n;
+}

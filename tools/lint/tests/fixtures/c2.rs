@@ -1,0 +1,28 @@
+//! C2 fixture: raw `ToWorker` sends vs the audited wrapper — the
+//! lint-level half of the chaos-worker proof (a worker-bound control
+//! message smuggled around `WorkerLink` bypasses fence FIFO ordering).
+
+pub fn raw_bypass(tx: &Sender<ToWorker>, m: Ordered) -> Result<(), ()> {
+    tx.send(ToWorker::Ordered(m)).map_err(|_| ())
+}
+
+pub fn raw_try(tx: &Sender<ToWorker>, c: Ctl) -> bool {
+    tx.try_send(ToWorker::Ctl(c)).is_ok()
+}
+
+pub fn audited(tx: &Sender<ToWorker>, c: Ctl) {
+    // lint: allow(C2): fixture stand-in for WorkerLink's audited send
+    if tx.send(ToWorker::Ctl(c)).is_err() {
+        drop(tx);
+    }
+}
+
+pub fn unrelated(tx: &Sender<u64>) {
+    if tx.send(7).is_err() {
+        drop(tx);
+    }
+}
+
+pub fn discarded_wrapper(w: &WorkerLink, c: Ctl) {
+    let _ = w.send_ctl(c);
+}

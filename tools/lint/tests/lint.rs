@@ -101,6 +101,56 @@ fn c1_flags_discarded_sends_only() {
 }
 
 #[test]
+fn a1_flags_unchecked_accounting_arithmetic_in_scope() {
+    let src = include_str!("fixtures/a1.rs");
+    let (_m, finds) = scan_file("rollout/pool.rs", src);
+    assert_eq!(tally(&finds, "A1"), (4, 1));
+    let whats: Vec<&str> = finds
+        .iter()
+        .filter(|f| f.rule == "A1" && !f.allowed)
+        .map(|f| f.what.as_str())
+        .collect();
+    assert_eq!(
+        whats,
+        vec![
+            "unchecked += on tokens",
+            "unchecked -= on tokens",
+            "unchecked - on blocks",
+            "unchecked - on blocks",
+        ]
+    );
+}
+
+#[test]
+fn a1_is_scoped_to_accounting_files_and_the_rl_module() {
+    let src = include_str!("fixtures/a1.rs");
+    // same source, non-accounting file stem: silent
+    let (_m, finds) = scan_file("rollout/request.rs", src);
+    assert_eq!(tally(&finds, "A1"), (0, 0));
+    // the rl module is in scope as a whole, any stem
+    let (_m, finds) = scan_file("rl/batch.rs", src);
+    assert_eq!(tally(&finds, "A1"), (4, 1));
+}
+
+#[test]
+fn c2_flags_raw_toworker_sends_and_c1_covers_the_wrappers() {
+    let src = include_str!("fixtures/c2.rs");
+    let (_m, finds) = scan_file("rollout/chaos.rs", src);
+    assert_eq!(tally(&finds, "C2"), (2, 1));
+    // a discarded `send_ctl` is still a discarded send (C1)
+    assert_eq!(tally(&finds, "C1"), (1, 0));
+    let whats: Vec<&str> = finds
+        .iter()
+        .filter(|f| f.rule == "C2" && !f.allowed)
+        .map(|f| f.what.as_str())
+        .collect();
+    assert_eq!(
+        whats,
+        vec![".send(ToWorker::..)", ".try_send(ToWorker::..)"]
+    );
+}
+
+#[test]
 fn string_line_continuations_keep_line_numbers_aligned() {
     // `"a\` + newline + ` b"` is one string with an escaped newline;
     // a tokenizer that skips it without counting mis-anchors every
@@ -174,7 +224,7 @@ fn floors_hold_on_the_committed_tree() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
     let (_n, counts, _d) = scan_tree(&root).expect("scan rust/src");
     for ((rule, module), (v, _a)) in &counts {
-        if matches!(*rule, "D1" | "D2" | "C1") {
+        if matches!(*rule, "D1" | "D2" | "C1" | "A1" | "C2") {
             assert_eq!(
                 *v, 0,
                 "{rule} must be 0 everywhere, {module} has {v}"
