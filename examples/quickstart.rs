@@ -28,8 +28,8 @@ fn main() -> Result<()> {
          {:.1} MB (bf16) -> {:.1} MB (fp8 codes+scales), max err {:.4}",
         report.n_quantized,
         report.n_passthrough,
-        report.bytes_bf16 as f64 / 1e6,
-        report.bytes_fp8 as f64 / 1e6,
+        report.bytes_bf16.get() as f64 / 1e6,
+        report.bytes_fp8.get() as f64 / 1e6,
         report.max_quant_err,
     );
 

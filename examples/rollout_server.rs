@@ -23,6 +23,7 @@ use fp8_rl::rollout::{
 use fp8_rl::util::cli::Args;
 use fp8_rl::util::error::{anyhow, Result};
 use fp8_rl::util::rng::Pcg64;
+use fp8_rl::util::units::Bytes;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -35,7 +36,8 @@ fn main() -> Result<()> {
         // ~14 max-length sequences at bf16 (28 at fp8) per replica
         let mut cfg = EngineConfig::new("dense", variant);
         let bytes_per_token_bf16 = 2 * 4 * 2 * 32 * 2; // 2*L*Hkv*Dh*2B
-        cfg.kv_budget_bytes = Some(14 * 64 * bytes_per_token_bf16);
+        cfg.kv_budget_bytes =
+            Some(Bytes::new(14 * 64 * bytes_per_token_bf16));
         let mut pool = EnginePool::new(
             PoolConfig {
                 n_replicas,

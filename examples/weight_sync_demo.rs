@@ -43,8 +43,8 @@ fn main() -> Result<()> {
             "[2] sync ({scale_fmt:?} scales): {} quantized | \
              {:.2} MB -> {:.2} MB | max quant err {:.5} | {:.1} ms",
             rep.n_quantized,
-            rep.bytes_bf16 as f64 / 1e6,
-            rep.bytes_fp8 as f64 / 1e6,
+            rep.bytes_bf16.get() as f64 / 1e6,
+            rep.bytes_fp8.get() as f64 / 1e6,
             rep.max_quant_err,
             rep.elapsed_s * 1e3,
         );

@@ -14,6 +14,7 @@ use fp8_rl::rollout::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
 use fp8_rl::rollout::request::SamplingParams;
 use fp8_rl::rollout::sampler;
 use fp8_rl::util::rng::Pcg64;
+use fp8_rl::util::units::{Blocks, Tokens};
 
 fn main() {
     let mut rng = Pcg64::new(42);
@@ -60,9 +61,9 @@ fn main() {
     Bench::new("kvcache/alloc+64 extends+release x64 seqs")
         .target(Duration::from_millis(400))
         .run(|| {
-            let mut m = KvBlockManager::new(geo, 4096);
+            let mut m = KvBlockManager::new(geo, Blocks::new(4096));
             for id in 0..64u64 {
-                m.allocate(id, 128);
+                m.allocate(id, Tokens::new(128));
             }
             for _ in 0..64 {
                 for id in 0..64u64 {

@@ -7,96 +7,200 @@
 //! scales — the engine's memory accounting and the paper's 2x footprint
 //! reduction fall out of that (1 byte/elem + 1 f32 per block).
 //!
+//! `QuantizedTensor` is sealed (lint rule Q1, DESIGN.md §9): codes and
+//! scales are private, constructed only by the quantizers in this
+//! module, and leave through `dequantize` / `matmul_dequant` or the
+//! read-only accessors. That makes "codes are always paired with their
+//! scales" a module invariant rather than a call-site convention.
+//!
 //! Numerics are bit-identical to the Pallas `blockwise_quant` kernel and
 //! the jnp reference (`fp8_numerics.quant_weight_blockwise`); the pytest
 //! suite checks the Python pair, and `tests/quantizer_parity.rs` checks
 //! Rust-vs-golden.
 
-use super::formats::{Fp8Format, ScaleFormat, E4M3};
+use super::formats::{Fp8Format, ScaleFormat, E4M3, MIN_AMAX};
 use super::tensor::Tensor;
+use crate::util::error::{bail, Result};
+use crate::util::units::Bytes;
 
 /// Default paper block size.
 pub const BLOCK: usize = 128;
 
 /// A blockwise-quantized 2-D weight: u8 codes + per-block f32 scales.
+/// Sealed: only the quantizers in this module construct one, so the
+/// block dims are always nonzero and `codes.len() == rows * cols`.
 #[derive(Clone, Debug)]
 pub struct QuantizedTensor {
-    pub rows: usize,
-    pub cols: usize,
-    pub block: (usize, usize),
-    pub codes: Vec<u8>,
+    rows: usize,
+    cols: usize,
+    block: (usize, usize),
+    codes: Vec<u8>,
     /// row-major (rows/bm) x (cols/bn) scales
-    pub scales: Vec<f32>,
-    pub fmt: Fp8Format,
+    scales: Vec<f32>,
+    fmt: Fp8Format,
 }
 
 impl QuantizedTensor {
-    /// FP8 memory footprint in bytes (codes + scales).
-    pub fn nbytes(&self) -> usize {
-        self.codes.len() + self.scales.len() * 4
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn block(&self) -> (usize, usize) {
+        self.block
+    }
+
+    pub fn fmt(&self) -> Fp8Format {
+        self.fmt
+    }
+
+    /// Read-only view of the FP8 codes. Consumers that need values
+    /// should go through [`QuantizedTensor::dequantize`]; raw-code
+    /// readers outside `fp8/` are flagged by lint rule Q1.
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Read-only view of the per-block scales (see [`Self::codes`]).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// FP8 memory footprint (codes + scales).
+    pub fn nbytes(&self) -> Bytes {
+        Bytes::new(self.codes.len() + self.scales.len() * 4)
     }
 
     /// Dequantize back to f32 (what the FP8 GEMM "sees").
     pub fn dequantize(&self) -> Tensor {
+        let shape = vec![self.rows, self.cols];
+        if self.rows * self.cols == 0 {
+            return Tensor { shape, data: Vec::new() };
+        }
         let (bm, bn) = self.block;
         let nbc = self.cols.div_ceil(bn);
-        let mut data = vec![0.0f32; self.rows * self.cols];
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                let s = self.scales[(r / bm) * nbc + (c / bn)];
-                data[r * self.cols + c] =
-                    self.fmt.decode(self.codes[r * self.cols + c]) * s;
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for (r, row) in self.codes.chunks(self.cols).enumerate() {
+            let base = (r / bm) * nbc;
+            for (c, &code) in row.iter().enumerate() {
+                let s = self
+                    .scales
+                    .get(base + c / bn)
+                    .copied()
+                    .unwrap_or(1.0);
+                data.push(self.fmt.decode(code) * s);
             }
         }
-        Tensor::new(vec![self.rows, self.cols], data).unwrap()
+        Tensor { shape, data }
+    }
+
+    /// Fused dequantize + GEMM: `dequantize(self) @ rhs` without
+    /// materializing the f32 weight — the second sanctioned exit for
+    /// quantized payloads (mirrors the engine-side scaled matmul).
+    pub fn matmul_dequant(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (k, n) = rhs.dims2()?;
+        if k != self.cols {
+            bail!(
+                "matmul_dequant: lhs {}x{} vs rhs {}x{}",
+                self.rows,
+                self.cols,
+                k,
+                n
+            );
+        }
+        let shape = vec![self.rows, n];
+        if self.rows * n == 0 || self.cols == 0 {
+            return Ok(Tensor { shape, data: vec![0.0; self.rows * n] });
+        }
+        let (bm, bn) = self.block;
+        let nbc = self.cols.div_ceil(bn);
+        let mut out = vec![0.0f32; self.rows * n];
+        let lhs_rows = self.codes.chunks(self.cols);
+        for (r, (crow, orow)) in
+            lhs_rows.zip(out.chunks_mut(n)).enumerate()
+        {
+            let base = (r / bm) * nbc;
+            for (c, &code) in crow.iter().enumerate() {
+                let s = self
+                    .scales
+                    .get(base + c / bn)
+                    .copied()
+                    .unwrap_or(1.0);
+                let a = self.fmt.decode(code) * s;
+                let brow = rhs.data.iter().skip(c * n).take(n);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(Tensor { shape, data: out })
     }
 }
 
-/// Quantize a 2-D (or flattened) tensor blockwise.
+/// Quantize a 2-D (or flattened) tensor blockwise. Errors on rank-0
+/// input and zero block dims (the seal's constructor-side checks).
 pub fn quantize_blockwise(
     t: &Tensor,
     block: (usize, usize),
     fmt: Fp8Format,
     scale_fmt: ScaleFormat,
-) -> QuantizedTensor {
-    let (rows, cols) = t.dims2();
+) -> Result<QuantizedTensor> {
+    let (rows, cols) = t.dims2()?;
     let (bm, bn) = block;
-    let nbr = rows.div_ceil(bm);
+    if bm == 0 || bn == 0 {
+        bail!("quantize_blockwise: zero block dim ({bm}x{bn})");
+    }
+    if rows == 0 || cols == 0 {
+        return Ok(QuantizedTensor {
+            rows,
+            cols,
+            block,
+            codes: Vec::new(),
+            scales: Vec::new(),
+            fmt,
+        });
+    }
     let nbc = cols.div_ceil(bn);
-    let mut scales = vec![0.0f32; nbr * nbc];
-    // pass 1: per-block amax
-    for br in 0..nbr {
-        for bc in 0..nbc {
-            let mut amax = 0.0f32;
-            for r in br * bm..((br + 1) * bm).min(rows) {
-                for c in bc * bn..((bc + 1) * bn).min(cols) {
-                    amax = amax.max(t.data[r * cols + c].abs());
-                }
+    let nbr = rows.div_ceil(bm);
+    // pass 1: per-block amax, swept row-major (f32 max is
+    // order-independent here, so this matches the per-block sweep)
+    let mut amax = vec![0.0f32; nbr * nbc];
+    for (r, row) in t.data.chunks(cols).enumerate() {
+        let base = (r / bm) * nbc;
+        for (c, &x) in row.iter().enumerate() {
+            if let Some(a) = amax.get_mut(base + c / bn) {
+                *a = a.max(x.abs());
             }
-            let s = scale_fmt.apply(amax.max(1e-12) / fmt.max);
-            scales[br * nbc + bc] = s;
         }
     }
+    let scales: Vec<f32> = amax
+        .iter()
+        .map(|&a| scale_fmt.apply(a.max(MIN_AMAX) / fmt.max))
+        .collect();
     // pass 2: encode
-    let mut codes = vec![0u8; rows * cols];
-    for r in 0..rows {
-        for c in 0..cols {
-            let s = scales[(r / bm) * nbc + (c / bn)];
-            codes[r * cols + c] = fmt.encode(t.data[r * cols + c] / s);
+    let mut codes = Vec::with_capacity(rows * cols);
+    for (r, row) in t.data.chunks(cols).enumerate() {
+        let base = (r / bm) * nbc;
+        for (c, &x) in row.iter().enumerate() {
+            let s = scales.get(base + c / bn).copied().unwrap_or(1.0);
+            codes.push(fmt.encode(x / s));
         }
     }
-    QuantizedTensor {
+    Ok(QuantizedTensor {
         rows,
         cols,
         block,
         codes,
         scales,
         fmt,
-    }
+    })
 }
 
 /// Convenience: default paper configuration (E4M3, 128x128, FP32 scales).
-pub fn quantize_default(t: &Tensor) -> QuantizedTensor {
+pub fn quantize_default(t: &Tensor) -> Result<QuantizedTensor> {
     quantize_blockwise(t, (BLOCK, BLOCK), E4M3, ScaleFormat::Fp32)
 }
 
@@ -106,8 +210,8 @@ pub fn qdq_blockwise(
     block: (usize, usize),
     fmt: Fp8Format,
     scale_fmt: ScaleFormat,
-) -> Tensor {
-    quantize_blockwise(t, block, fmt, scale_fmt).dequantize()
+) -> Result<Tensor> {
+    Ok(quantize_blockwise(t, block, fmt, scale_fmt)?.dequantize())
 }
 
 /// Per-(1 x tile) dynamic activation quantization (matches the Pallas
@@ -117,25 +221,23 @@ pub fn qdq_act_tilewise(
     tile: usize,
     fmt: Fp8Format,
     scale_fmt: ScaleFormat,
-) -> Tensor {
-    let (rows, cols) = t.dims2();
-    let mut out = vec![0.0f32; rows * cols];
-    for r in 0..rows {
-        let mut c0 = 0;
-        while c0 < cols {
-            let c1 = (c0 + tile).min(cols);
-            let mut amax = 0.0f32;
-            for c in c0..c1 {
-                amax = amax.max(t.data[r * cols + c].abs());
-            }
-            let s = scale_fmt.apply(amax.max(1e-12) / fmt.max);
-            for c in c0..c1 {
-                out[r * cols + c] = fmt.qdq(t.data[r * cols + c] / s) * s;
-            }
-            c0 = c1;
+) -> Result<Tensor> {
+    let (_rows, cols) = t.dims2()?;
+    if tile == 0 {
+        bail!("qdq_act_tilewise: zero tile");
+    }
+    let mut out = Vec::with_capacity(t.data.len());
+    if cols == 0 {
+        return Ok(Tensor { shape: t.shape.clone(), data: out });
+    }
+    for row in t.data.chunks(cols) {
+        for seg in row.chunks(tile) {
+            let amax = seg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let s = scale_fmt.apply(amax.max(MIN_AMAX) / fmt.max);
+            out.extend(seg.iter().map(|&x| fmt.qdq(x / s) * s));
         }
     }
-    Tensor::new(t.shape.clone(), out).unwrap()
+    Ok(Tensor { shape: t.shape.clone(), data: out })
 }
 
 #[cfg(test)]
@@ -156,7 +258,8 @@ mod tests {
         // |x - qdq(x)| <= scale * 2^-mbits (coarse bound: scale * 0.0625)
         let mut rng = Pcg64::new(1);
         let t = random_tensor(&mut rng, 64, 96);
-        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32);
+        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32)
+            .unwrap();
         let d = q.dequantize();
         for (i, (&x, &y)) in t.data.iter().zip(&d.data).enumerate() {
             let br = (i / 96) / 32;
@@ -173,7 +276,8 @@ mod tests {
     fn scales_map_amax_to_max() {
         let mut t = Tensor::zeros(vec![4, 4]);
         t.data[5] = -100.0;
-        let q = quantize_blockwise(&t, (4, 4), E4M3, ScaleFormat::Fp32);
+        let q = quantize_blockwise(&t, (4, 4), E4M3, ScaleFormat::Fp32)
+            .unwrap();
         assert_eq!(q.scales.len(), 1);
         assert!((q.scales[0] - 100.0 / 448.0).abs() < 1e-9);
         // the amax element must round-trip exactly (it sits at fmt.max)
@@ -186,7 +290,8 @@ mod tests {
         let mut rng = Pcg64::new(2);
         let mut t = random_tensor(&mut rng, 64, 64);
         t.data[0] = 1e4; // block (0,0)
-        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32);
+        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32)
+            .unwrap();
         let d = q.dequantize();
         // far block (1,1): error stays at its own scale's half-ulp
         // (worst ulp near amax is 32 * scale), not the outlier's 357
@@ -210,12 +315,14 @@ mod tests {
     fn ue8m0_scales_are_pow2() {
         let mut rng = Pcg64::new(3);
         let t = random_tensor(&mut rng, 32, 32);
-        let q = quantize_blockwise(&t, (16, 16), E4M3, ScaleFormat::Ue8m0);
+        let q = quantize_blockwise(&t, (16, 16), E4M3, ScaleFormat::Ue8m0)
+            .unwrap();
         for &s in &q.scales {
             assert_eq!(s.log2().fract(), 0.0, "scale {s} not a power of 2");
         }
         // ue8m0 error >= fp32-scale error on average (coarser scales)
-        let qf = quantize_blockwise(&t, (16, 16), E4M3, ScaleFormat::Fp32);
+        let qf = quantize_blockwise(&t, (16, 16), E4M3, ScaleFormat::Fp32)
+            .unwrap();
         let ef: f32 = t.max_abs_diff(&qf.dequantize());
         let eu: f32 = t.max_abs_diff(&q.dequantize());
         assert!(eu >= ef * 0.99, "ue8m0 {eu} vs fp32 {ef}");
@@ -224,19 +331,20 @@ mod tests {
     #[test]
     fn nbytes_is_half_of_bf16() {
         let t = Tensor::zeros(vec![256, 256]);
-        let q = quantize_default(&t);
+        let q = quantize_default(&t).unwrap();
         let bf16_bytes = 256 * 256 * 2;
         // 1 byte/elem + 4 scales * 4B  => well under bf16
-        assert!(q.nbytes() < bf16_bytes * 6 / 10);
-        assert_eq!(q.codes.len(), 256 * 256);
-        assert_eq!(q.scales.len(), 4);
+        assert!(q.nbytes().get() < bf16_bytes * 6 / 10);
+        assert_eq!(q.codes().len(), 256 * 256);
+        assert_eq!(q.scales().len(), 4);
     }
 
     #[test]
     fn ragged_shapes() {
         let mut rng = Pcg64::new(4);
         let t = random_tensor(&mut rng, 33, 65); // not multiples of block
-        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32);
+        let q = quantize_blockwise(&t, (32, 32), E4M3, ScaleFormat::Fp32)
+            .unwrap();
         assert_eq!(q.scales.len(), 2 * 3);
         let d = q.dequantize();
         assert_eq!(d.shape, vec![33, 65]);
@@ -249,8 +357,87 @@ mod tests {
     fn act_tilewise_matches_block_1xn() {
         let mut rng = Pcg64::new(5);
         let t = random_tensor(&mut rng, 8, 64);
-        let a = qdq_act_tilewise(&t, 32, E4M3, ScaleFormat::Fp32);
-        let b = qdq_blockwise(&t, (1, 32), E4M3, ScaleFormat::Fp32);
+        let a = qdq_act_tilewise(&t, 32, E4M3, ScaleFormat::Fp32).unwrap();
+        let b = qdq_blockwise(&t, (1, 32), E4M3, ScaleFormat::Fp32).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_zero_block_stays_zero_and_finite() {
+        // an all-zero tensor must produce finite scales, zero codes and
+        // an exactly-zero round trip (MIN_AMAX guard, not NaN)
+        let t = Tensor::zeros(vec![8, 8]);
+        let q = quantize_blockwise(&t, (4, 4), E4M3, ScaleFormat::Fp32)
+            .unwrap();
+        for &s in q.scales() {
+            assert!(s.is_finite() && s > 0.0, "scale {s}");
+        }
+        assert!(q.codes().iter().all(|&c| c == 0));
+        let d = q.dequantize();
+        assert!(d.data.iter().all(|&x| x == 0.0));
+        let a = qdq_act_tilewise(&t, 4, E4M3, ScaleFormat::Ue8m0).unwrap();
+        assert!(a.data.iter().all(|&x| x == 0.0 && !x.is_nan()));
+    }
+
+    #[test]
+    fn single_subnormal_block_is_finite() {
+        // a block whose only nonzero is an f32 subnormal: the derived
+        // scale is clamped, the round trip stays finite (flushes to 0)
+        let mut t = Tensor::zeros(vec![4, 4]);
+        t.data[3] = 1e-40; // subnormal f32
+        for sf in [ScaleFormat::Fp32, ScaleFormat::Ue8m0] {
+            let q = quantize_blockwise(&t, (4, 4), E4M3, sf).unwrap();
+            for &s in q.scales() {
+                assert!(s.is_finite() && s > 0.0, "scale {s}");
+            }
+            let d = q.dequantize();
+            assert!(
+                d.data.iter().all(|&x| x.is_finite() && !x.is_nan()),
+                "{sf:?}: {:?}",
+                d.data
+            );
+            let a = qdq_act_tilewise(&t, 4, E4M3, sf).unwrap();
+            assert!(a.data.iter().all(|&x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_error_or_empty() {
+        let t = Tensor::zeros(vec![4, 4]);
+        assert!(quantize_blockwise(&t, (0, 4), E4M3, ScaleFormat::Fp32)
+            .is_err());
+        assert!(qdq_act_tilewise(&t, 0, E4M3, ScaleFormat::Fp32).is_err());
+        let empty = Tensor::zeros(vec![0, 4]);
+        let q = quantize_default(&empty).unwrap();
+        assert_eq!(q.nbytes(), crate::util::units::Bytes::ZERO);
+        assert_eq!(q.dequantize().shape, vec![0, 4]);
+    }
+
+    #[test]
+    fn matmul_dequant_matches_dequantize_then_matmul() {
+        let mut rng = Pcg64::new(6);
+        let t = random_tensor(&mut rng, 9, 17);
+        let rhs = random_tensor(&mut rng, 17, 5);
+        let q = quantize_blockwise(&t, (4, 8), E4M3, ScaleFormat::Fp32)
+            .unwrap();
+        let fused = q.matmul_dequant(&rhs).unwrap();
+        assert_eq!(fused.shape, vec![9, 5]);
+        // naive reference against the dequantized weight
+        let d = q.dequantize();
+        for r in 0..9 {
+            for c in 0..5 {
+                let mut acc = 0.0f32;
+                for k in 0..17 {
+                    acc += d.data[r * 17 + k] * rhs.data[k * 5 + c];
+                }
+                let got = fused.data[r * 5 + c];
+                assert!(
+                    (acc - got).abs() <= 1e-4 * acc.abs().max(1.0),
+                    "({r},{c}): {acc} vs {got}"
+                );
+            }
+        }
+        // shape mismatch errors
+        assert!(q.matmul_dequant(&t).is_err());
     }
 }

@@ -46,6 +46,21 @@ pub const E5M2: Fp8Format = Fp8Format {
     min_subnormal: 1.52587890625e-5, // 2^-16
 };
 
+/// Floor applied to a per-block/tile amax before deriving a scale.
+/// An all-zero (or fully flushed) block otherwise yields scale 0 and
+/// `0 / 0 = NaN` at encode time; clamping the amax instead of special-
+/// casing the block keeps the scale math branch-free and the encoded
+/// codes for such blocks all-zero.
+pub const MIN_AMAX: f32 = 1e-12;
+
+/// Floor applied to the final scale by [`ScaleFormat::apply`]: the
+/// divisor in `x / scale` stays a positive normal, so dequantization
+/// can never divide by zero. With [`MIN_AMAX`] upstream the smallest
+/// reachable scale is `MIN_AMAX / 57344 ≈ 1.7e-17`, far above this
+/// floor — the clamp is a no-op for every in-band input and exists to
+/// make the invariant local to the scale codec.
+pub const MIN_SCALE: f32 = f32::MIN_POSITIVE;
+
 impl Fp8Format {
     /// Saturating round-to-nearest-even encode of an f32.
     /// NaN maps to the format's NaN code; +-inf saturates to +-max.
@@ -176,7 +191,10 @@ pub enum ScaleFormat {
 }
 
 impl ScaleFormat {
+    /// Round a raw scale to this format, clamped to [`MIN_SCALE`] so
+    /// the result is always a positive, finite divisor.
     pub fn apply(self, s: f32) -> f32 {
+        let s = s.max(MIN_SCALE);
         match self {
             ScaleFormat::Fp32 => s,
             ScaleFormat::Ue8m0 => Ue8m0::encode_ceil(s).decode(),
@@ -336,5 +354,22 @@ mod tests {
         assert!(d >= s && d < 2.0 * s);
         assert_eq!(ScaleFormat::Fp32.apply(0.3), 0.3);
         assert_eq!(ScaleFormat::Ue8m0.apply(0.3), 0.5);
+    }
+
+    #[test]
+    fn scale_floor_keeps_the_divisor_normal() {
+        for sf in [ScaleFormat::Fp32, ScaleFormat::Ue8m0] {
+            for s in [0.0f32, -0.0, 1e-45, f32::MIN_POSITIVE / 2.0] {
+                let a = sf.apply(s);
+                assert!(a >= MIN_SCALE, "{sf:?}.apply({s}) = {a}");
+                assert!(a.is_finite());
+                assert!((1.0f32 / a).is_finite(), "1/{a} overflows");
+            }
+        }
+        // in-band scales are untouched (the clamp is a no-op): the
+        // smallest scale the quantizers can produce is MIN_AMAX / max
+        let smallest = MIN_AMAX / E5M2.max;
+        assert_eq!(ScaleFormat::Fp32.apply(smallest), smallest);
+        assert!(smallest > MIN_SCALE);
     }
 }

@@ -2,15 +2,25 @@
 //!
 //! This is the numeric core of the weight-sync pipeline (paper §2.1.1)
 //! and the Rust-side twin of `python/compile/fp8_numerics.py`.
+//!
+//! Quantized payloads are sealed here: `QuantizedTensor` and
+//! `Nvfp4Tensor` keep their codes/scales private, and the only exits
+//! are `dequantize` / `matmul_dequant` and the read-only accessors
+//! (lint rule Q1, DESIGN.md §9). KV-scale freshness is carried by
+//! [`ScaleSet`] (lint rule Q2).
 pub mod blockwise;
 pub mod formats;
 pub mod nvfp4;
+pub mod scale;
 pub mod tensor;
 
 pub use blockwise::{
     qdq_act_tilewise, qdq_blockwise, quantize_blockwise, quantize_default,
     QuantizedTensor, BLOCK,
 };
-pub use formats::{Fp8Format, ScaleFormat, Ue8m0, E4M3, E5M2};
+pub use formats::{
+    Fp8Format, ScaleFormat, Ue8m0, E4M3, E5M2, MIN_AMAX, MIN_SCALE,
+};
 pub use nvfp4::{qdq_e2m1, quantize_nvfp4, Nvfp4Tensor, E2M1_MAX};
+pub use scale::ScaleSet;
 pub use tensor::Tensor;

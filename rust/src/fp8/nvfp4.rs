@@ -11,9 +11,14 @@
 //! *why* the paper expects instability: NVFP4's relative error is ~8x
 //! E4M3's at the same blocking, which compounds over autoregressive
 //! steps exactly like the KV-error accumulation the paper measures.
+//!
+//! Like `QuantizedTensor`, `Nvfp4Tensor` is sealed (lint rule Q1):
+//! packed codes and scales stay private and leave via `dequantize` or
+//! the read-only accessors.
 
-use super::formats::ScaleFormat;
+use super::formats::{ScaleFormat, MIN_AMAX};
 use super::tensor::Tensor;
+use crate::util::units::Bytes;
 
 /// Largest finite E2M1 magnitude.
 pub const E2M1_MAX: f32 = 6.0;
@@ -45,7 +50,7 @@ pub fn encode_e2m1(x: f32) -> u8 {
 
 /// Decode a 4-bit code.
 pub fn decode_e2m1(code: u8) -> f32 {
-    let v = GRID[(code & 0x7) as usize];
+    let v = GRID.get((code & 0x7) as usize).copied().unwrap_or(0.0);
     if code & 0x8 != 0 {
         -v
     } else {
@@ -59,14 +64,16 @@ pub fn qdq_e2m1(x: f32) -> f32 {
 }
 
 /// An NVFP4-quantized tensor: packed nibbles + per-16-elem scales.
+/// Sealed: only [`quantize_nvfp4`] constructs one, so `n` always
+/// matches the shape product and every tile has its scale.
 #[derive(Clone, Debug)]
 pub struct Nvfp4Tensor {
-    pub shape: Vec<usize>,
+    shape: Vec<usize>,
     /// two codes per byte, row-major, low nibble first
-    pub packed: Vec<u8>,
+    packed: Vec<u8>,
     /// one scale per 16 consecutive elements (last tile may be short)
-    pub scales: Vec<f32>,
-    pub n: usize,
+    scales: Vec<f32>,
+    n: usize,
 }
 
 pub const TILE: usize = 16;
@@ -74,23 +81,22 @@ pub const TILE: usize = 16;
 /// Quantize with per-16-element FP32 scales (amax -> 6.0 mapping).
 pub fn quantize_nvfp4(t: &Tensor, scale_fmt: ScaleFormat) -> Nvfp4Tensor {
     let n = t.data.len();
-    let n_tiles = n.div_ceil(TILE);
-    let mut scales = Vec::with_capacity(n_tiles);
+    let mut scales = Vec::with_capacity(n.div_ceil(TILE));
     let mut packed = vec![0u8; n.div_ceil(2)];
-    for ti in 0..n_tiles {
-        let lo = ti * TILE;
-        let hi = (lo + TILE).min(n);
-        let amax = t.data[lo..hi]
-            .iter()
-            .fold(0.0f32, |m, &x| m.max(x.abs()));
-        let s = scale_fmt.apply(amax.max(1e-12) / E2M1_MAX);
+    for (ti, seg) in t.data.chunks(TILE).enumerate() {
+        let amax = seg.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let s = scale_fmt.apply(amax.max(MIN_AMAX) / E2M1_MAX);
         scales.push(s);
-        for i in lo..hi {
-            let code = encode_e2m1(t.data[i] / s);
-            if i % 2 == 0 {
-                packed[i / 2] |= code;
-            } else {
-                packed[i / 2] |= code << 4;
+        let lo = ti * TILE;
+        for (j, &x) in seg.iter().enumerate() {
+            let i = lo + j;
+            let code = encode_e2m1(x / s);
+            if let Some(b) = packed.get_mut(i / 2) {
+                if i % 2 == 0 {
+                    *b |= code;
+                } else {
+                    *b |= code << 4;
+                }
             }
         }
     }
@@ -103,20 +109,47 @@ pub fn quantize_nvfp4(t: &Tensor, scale_fmt: ScaleFormat) -> Nvfp4Tensor {
 }
 
 impl Nvfp4Tensor {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Read-only view of the packed nibbles (see lint rule Q1).
+    pub fn packed(&self) -> &[u8] {
+        &self.packed
+    }
+
+    /// Read-only view of the per-tile scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
     pub fn dequantize(&self) -> Tensor {
         let mut data = Vec::with_capacity(self.n);
         for i in 0..self.n {
-            let byte = self.packed[i / 2];
+            let byte = self.packed.get(i / 2).copied().unwrap_or(0);
             let code = if i % 2 == 0 { byte & 0xF } else { byte >> 4 };
-            data.push(decode_e2m1(code) * self.scales[i / TILE]);
+            let s = self.scales.get(i / TILE).copied().unwrap_or(1.0);
+            data.push(decode_e2m1(code) * s);
         }
-        Tensor::new(self.shape.clone(), data).unwrap()
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
     }
 
-    /// Bytes: packed nibbles + f32 scales (4x weight-footprint reduction
-    /// vs bf16 at tile 16, before scale overhead).
-    pub fn nbytes(&self) -> usize {
-        self.packed.len() + self.scales.len() * 4
+    /// Footprint: packed nibbles + f32 scales (4x weight-footprint
+    /// reduction vs bf16 at tile 16, before scale overhead).
+    pub fn nbytes(&self) -> Bytes {
+        Bytes::new(self.packed.len() + self.scales.len() * 4)
     }
 }
 
@@ -162,7 +195,19 @@ mod tests {
             assert!((x - y).abs() <= s * 1.0 + 1e-6, "elem {i}");
         }
         // footprint: ~0.5 B/elem + scales
-        assert!(q.nbytes() < t.data.len());
+        assert!(q.nbytes().get() < t.data.len());
+        assert_eq!(q.len(), 77);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn all_zero_tile_stays_finite() {
+        let t = Tensor::zeros(vec![37]);
+        let q = quantize_nvfp4(&t, ScaleFormat::Fp32);
+        for &s in q.scales() {
+            assert!(s.is_finite() && s > 0.0);
+        }
+        assert!(q.dequantize().data.iter().all(|&x| x == 0.0));
     }
 
     #[test]
@@ -179,6 +224,7 @@ mod tests {
             E4M3,
             ScaleFormat::Fp32,
         )
+        .unwrap()
         .dequantize();
         let e2 = quantize_nvfp4(&t, ScaleFormat::Fp32).dequantize();
         let err4: f32 = t

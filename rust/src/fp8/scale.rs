@@ -1,0 +1,90 @@
+//! Epoch-stamped KV-scale handle — the runtime half of lint rule Q2
+//! (paper §2.3.1 KV-scale recalibration; DESIGN.md §9).
+//!
+//! The static lint pins `ScaleSet` construction and raw
+//! `kscale`/`vscale` plumbing to the fenced install path
+//! (`install_kv_scales` / `sync_kv_scales`); the `debug_assert` in
+//! [`ScaleSet::read`] catches a stale handle that slips past the
+//! static check dynamically.
+
+use crate::util::units::ScaleEpoch;
+
+/// The K/V dequantization scale pair plus the weight epoch it was
+/// calibrated against. Decode-side consumers read through
+/// [`ScaleSet::read`], passing the engine's current weight epoch, so a
+/// handle calibrated before a weight swap panics in debug builds
+/// instead of silently dequantizing with the old scales.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleSet {
+    k: f32,
+    v: f32,
+    epoch: ScaleEpoch,
+}
+
+impl ScaleSet {
+    /// Build a scale pair stamped with the epoch it was calibrated at.
+    /// Call sites outside the `install_kv_scales` / `sync_kv_scales`
+    /// path are flagged by lint rule Q2.
+    pub fn new(k: f32, v: f32, epoch: ScaleEpoch) -> ScaleSet {
+        ScaleSet { k, v, epoch }
+    }
+
+    /// Identity scales at epoch zero — the pre-calibration default.
+    pub fn identity() -> ScaleSet {
+        ScaleSet { k: 1.0, v: 1.0, epoch: ScaleEpoch::new(0) }
+    }
+
+    /// Read the `(k, v)` pair for a decode running at weight epoch
+    /// `at`. Panics in debug builds when the handle is stale, i.e. the
+    /// engine's weights moved past the epoch these scales were
+    /// stamped with.
+    pub fn read(&self, at: ScaleEpoch) -> (f32, f32) {
+        debug_assert_eq!(
+            self.epoch, at,
+            "stale ScaleSet: scales stamped at epoch {} read at weight \
+             epoch {}",
+            self.epoch, at
+        );
+        (self.k, self.v)
+    }
+
+    /// The same scales re-stamped at `epoch` — used when an install
+    /// path deliberately carries scales across a weight bump (the
+    /// calibration loop re-validates them out of band).
+    pub fn restamped(&self, epoch: ScaleEpoch) -> ScaleSet {
+        ScaleSet { epoch, ..*self }
+    }
+
+    /// The weight epoch these scales were stamped at.
+    pub fn epoch(&self) -> ScaleEpoch {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_reads_ones_at_epoch_zero() {
+        let s = ScaleSet::identity();
+        assert_eq!(s.read(ScaleEpoch::new(0)), (1.0, 1.0));
+        assert_eq!(s.epoch(), ScaleEpoch::new(0));
+    }
+
+    #[test]
+    fn restamp_preserves_values_and_moves_epoch() {
+        let s = ScaleSet::new(0.5, 2.0, ScaleEpoch::new(3));
+        let r = s.restamped(ScaleEpoch::new(4));
+        assert_eq!(r.epoch(), ScaleEpoch::new(4));
+        assert_eq!(r.read(ScaleEpoch::new(4)), (0.5, 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "stale ScaleSet")]
+    #[cfg(debug_assertions)]
+    fn stale_read_panics_in_debug() {
+        let s = ScaleSet::new(0.5, 2.0, ScaleEpoch::new(3));
+        let _ = s.read(ScaleEpoch::new(4));
+    }
+}

@@ -37,15 +37,19 @@ impl Tensor {
         self.data.is_empty()
     }
 
-    /// Rows/cols for a 2-D tensor (1-D treated as a single row).
-    pub fn dims2(&self) -> (usize, usize) {
-        match self.shape.len() {
-            1 => (1, self.shape[0]),
-            2 => (self.shape[0], self.shape[1]),
-            _ => {
-                let last = *self.shape.last().unwrap();
-                (self.data.len() / last, last)
-            }
+    /// Rows/cols for a 2-D tensor (1-D treated as a single row;
+    /// higher ranks collapse the leading dims). Errors on rank 0 and
+    /// on a zero trailing dim in rank >= 3, where no row count exists.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [] => bail!("dims2 on a rank-0 tensor"),
+            [n] => Ok((1, *n)),
+            [r, c] => Ok((*r, *c)),
+            [.., 0] => bail!(
+                "dims2 on shape {:?}: zero trailing dim",
+                self.shape
+            ),
+            [.., last] => Ok((self.data.len() / last, *last)),
         }
     }
 
@@ -75,9 +79,11 @@ mod tests {
 
     #[test]
     fn dims2() {
-        assert_eq!(Tensor::zeros(vec![6]).dims2(), (1, 6));
-        assert_eq!(Tensor::zeros(vec![2, 3]).dims2(), (2, 3));
-        assert_eq!(Tensor::zeros(vec![2, 3, 4]).dims2(), (6, 4));
+        assert_eq!(Tensor::zeros(vec![6]).dims2().unwrap(), (1, 6));
+        assert_eq!(Tensor::zeros(vec![2, 3]).dims2().unwrap(), (2, 3));
+        assert_eq!(Tensor::zeros(vec![2, 3, 4]).dims2().unwrap(), (6, 4));
+        assert!(Tensor::zeros(vec![]).dims2().is_err());
+        assert!(Tensor::zeros(vec![2, 3, 0]).dims2().is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::rollout::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
 use crate::rollout::request::{Request, SamplingParams};
 use crate::rollout::scheduler::Scheduler;
 use crate::util::rng::Pcg64;
+use crate::util::units::{Bytes, Tokens};
 
 use super::hw::Gpu;
 use super::modelcost::{
@@ -56,14 +57,14 @@ impl SimConfig {
     }
 
     /// KV byte budget: memory left after weights, scaled by utilization.
-    pub fn kv_budget(&self) -> usize {
+    pub fn kv_budget(&self) -> Bytes {
         let total = self.gpu.mem_bytes * self.n_gpus;
         let weights = self
             .model
             .weight_bytes(self.plan.weight_bytes_per_elem());
         // activations + fragmentation reserve
         let usable = (total * self.gpu_mem_util - weights).max(1e9);
-        usable as usize
+        Bytes::new(usable as usize)
     }
 }
 
@@ -133,7 +134,7 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         let admitted = {
             let gen_ref = &generated;
             sched.admit_with(|id| {
-                gen_ref.get(&id).copied().unwrap_or(0)
+                Tokens::new(gen_ref.get(&id).copied().unwrap_or(0))
             })
         };
         for req in admitted {
@@ -153,7 +154,7 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
         let running: Vec<u64> = sched.running_ids().to_vec();
         let ctxs: Vec<usize> = running
             .iter()
-            .map(|id| sched.kv.seq_tokens(*id))
+            .map(|id| sched.kv.seq_tokens(*id).get())
             .collect();
         let cost = decode_step_cost(
             &cfg.gpu, &cfg.model, &cfg.plan, &ctxs,

@@ -33,9 +33,11 @@
 
 use std::sync::Arc;
 
+use crate::fp8::ScaleSet;
 use crate::runtime::{DeviceBuffer, Executable, HostArray, Runtime};
 use crate::util::error::{bail, Context, Result};
 use crate::util::rng::Pcg64;
+use crate::util::units::{Blocks, Bytes, ScaleEpoch, Tokens};
 
 use super::kvcache::{KvBlockManager, KvGeometry, KvPrecision};
 use super::request::{Completion, FinishReason, Request};
@@ -53,7 +55,7 @@ pub struct EngineConfig {
     pub kv_precision: KvPrecision,
     /// KV byte budget for the block manager; None = exactly the dense
     /// cache the artifact carries (no artificial pressure)
-    pub kv_budget_bytes: Option<usize>,
+    pub kv_budget_bytes: Option<Bytes>,
     pub block_tokens: usize,
     pub seed: u64,
 }
@@ -188,9 +190,10 @@ pub struct HloEngine {
     pos_buf: DeviceBuffer,
     ks_buf: DeviceBuffer,
     vs_buf: DeviceBuffer,
-    kscale: f32,
-    vscale: f32,
-    /// true when kscale/vscale changed since ks_buf/vs_buf were staged
+    /// epoch-stamped K/V dequant scales (rule Q2: installed only via
+    /// `install_kv_scales`, read back through the `ScaleSet` handle)
+    scales: ScaleSet,
+    /// true when the scales changed since ks_buf/vs_buf were staged
     scales_dirty: bool,
     slots: Vec<Option<Slot>>,
     sched: Scheduler,
@@ -229,7 +232,7 @@ impl HloEngine {
                 // capacity == the dense cache the artifact carries
                 KvBlockManager::new(
                     geo,
-                    b * max_seq / cfg.block_tokens,
+                    Blocks::new(b * max_seq / cfg.block_tokens),
                 )
             }
         };
@@ -271,8 +274,7 @@ impl HloEngine {
             pos_buf,
             ks_buf,
             vs_buf,
-            kscale: 1.0,
-            vscale: 1.0,
+            scales: ScaleSet::identity(),
             scales_dirty: false,
             slots: (0..b).map(|_| None).collect(),
             sched,
@@ -302,6 +304,9 @@ impl HloEngine {
             }
             self.param_bufs = self.rt.to_device_all(params)?;
             self.weight_epoch += 1;
+            self.scales = self
+                .scales
+                .restamped(ScaleEpoch::new(self.weight_epoch));
             return Ok(());
         }
         for (buf, a) in self.param_bufs.iter_mut().zip(params) {
@@ -311,6 +316,12 @@ impl HloEngine {
         // behind, which the pool's submit-time epoch check turns into a
         // loud per-request failure instead of silently mis-tagging
         self.weight_epoch += 1;
+        // the scales themselves did not change; carrying them across
+        // the weight bump is deliberate (recalibration is out of band),
+        // so restamp the handle at the new epoch
+        self.scales = self
+            .scales
+            .restamped(ScaleEpoch::new(self.weight_epoch));
         Ok(())
     }
 
@@ -318,10 +329,10 @@ impl HloEngine {
     /// copies are refreshed lazily on the next prefill/decode. Bumps
     /// the weight epoch: the behavior policy's numerics changed.
     pub fn install_kv_scales(&mut self, kscale: f32, vscale: f32) {
-        self.kscale = kscale;
-        self.vscale = vscale;
-        self.scales_dirty = true;
         self.weight_epoch += 1;
+        self.scales =
+            ScaleSet::new(kscale, vscale, ScaleEpoch::new(self.weight_epoch));
+        self.scales_dirty = true;
     }
 
     /// The current weight epoch (see the module docs): number of
@@ -332,28 +343,38 @@ impl HloEngine {
     }
 
     /// Re-stage the k/v scale device buffers if the scales changed.
+    /// The freshness check in [`ScaleSet::read`] asserts (debug) that
+    /// the handle was stamped at the current weight epoch.
     fn refresh_scales(&mut self) -> Result<()> {
         if !self.scales_dirty {
             return Ok(());
         }
+        let (k, v) = self.scales.read(ScaleEpoch::new(self.weight_epoch));
         upload_into(
             &self.rt,
             &mut self.stats,
             &mut self.ks_buf,
-            &HostArray::scalar_f32(self.kscale),
+            &HostArray::scalar_f32(k),
         )?;
         upload_into(
             &self.rt,
             &mut self.stats,
             &mut self.vs_buf,
-            &HostArray::scalar_f32(self.vscale),
+            &HostArray::scalar_f32(v),
         )?;
         self.scales_dirty = false;
         Ok(())
     }
 
     pub fn kv_scales(&self) -> (f32, f32) {
-        (self.kscale, self.vscale)
+        self.scales.read(ScaleEpoch::new(self.weight_epoch))
+    }
+
+    /// The engine's current epoch-stamped scale handle. A caller that
+    /// holds on to it across an install and reads it again trips the
+    /// staleness assert — see `tests/fp8_roundtrip.rs`.
+    pub fn scale_set(&self) -> ScaleSet {
+        self.scales
     }
 
     /// Generate completions for a batch of requests (runs to drain).
@@ -410,7 +431,8 @@ impl HloEngine {
                 self.prompt_len
             );
         }
-        let need = self.sched.kv.blocks_for(req.prompt.len() + 1);
+        let need =
+            self.sched.kv.blocks_for(Tokens::new(req.prompt.len() + 1));
         if need > self.sched.kv.total_blocks() {
             bail!(
                 "request {} can never be admitted — its {}-token prompt \
@@ -482,7 +504,9 @@ impl HloEngine {
                      blocks but the cache has only {} blocks total",
                     head.id,
                     head.prompt.len(),
-                    self.sched.kv.blocks_for(head.prompt.len() + 1),
+                    self.sched.kv.blocks_for(Tokens::new(
+                        head.prompt.len() + 1
+                    )),
                     self.sched.kv.total_blocks()
                 );
             }

@@ -13,6 +13,7 @@
 use std::collections::BTreeMap;
 
 use crate::util::error::{bail, Result};
+use crate::util::units::{Blocks, Bytes, Tokens};
 
 /// Bytes per KV element for each storage precision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,20 +44,23 @@ pub struct KvGeometry {
 
 impl KvGeometry {
     /// Bytes of K+V for one token across all layers.
-    pub fn bytes_per_token(&self) -> usize {
-        2 * self.n_layers
-            * self.n_kv_heads
-            * self.d_head
-            * self.precision.bytes_per_elem()
+    pub fn bytes_per_token(&self) -> Bytes {
+        Bytes::new(
+            2 * self.n_layers
+                * self.n_kv_heads
+                * self.d_head
+                * self.precision.bytes_per_elem(),
+        )
     }
 
-    pub fn bytes_per_block(&self) -> usize {
-        self.bytes_per_token() * self.block_tokens
+    pub fn bytes_per_block(&self) -> Bytes {
+        Bytes::new(self.bytes_per_token().get() * self.block_tokens)
     }
 
-    /// How many blocks fit in a byte budget.
-    pub fn blocks_in(&self, budget_bytes: usize) -> usize {
-        budget_bytes / self.bytes_per_block()
+    /// How many blocks fit in a byte budget (the bytes -> blocks
+    /// conversion point for rule U1).
+    pub fn blocks_in(&self, budget: Bytes) -> Blocks {
+        Blocks::new(budget.get() / self.bytes_per_block().get())
     }
 }
 
@@ -74,39 +78,39 @@ pub struct KvBlockManager {
     seqs: BTreeMap<u64, SeqAlloc>,
     /// counters for metrics
     pub alloc_failures: u64,
-    pub peak_used: usize,
+    pub peak_used: Blocks,
 }
 
 impl KvBlockManager {
-    pub fn new(geometry: KvGeometry, total_blocks: usize) -> Self {
+    pub fn new(geometry: KvGeometry, total_blocks: Blocks) -> Self {
+        let total_blocks = total_blocks.get();
         KvBlockManager {
             geometry,
             total_blocks,
             free: (0..total_blocks).rev().collect(),
             seqs: BTreeMap::new(),
             alloc_failures: 0,
-            peak_used: 0,
+            peak_used: Blocks::ZERO,
         }
     }
 
-    pub fn from_budget(geometry: KvGeometry, budget_bytes: usize) -> Self {
-        let blocks = geometry.blocks_in(budget_bytes);
-        Self::new(geometry, blocks)
+    pub fn from_budget(geometry: KvGeometry, budget: Bytes) -> Self {
+        Self::new(geometry, geometry.blocks_in(budget))
     }
 
-    pub fn total_blocks(&self) -> usize {
-        self.total_blocks
+    pub fn total_blocks(&self) -> Blocks {
+        Blocks::new(self.total_blocks)
     }
 
-    pub fn used_blocks(&self) -> usize {
+    pub fn used_blocks(&self) -> Blocks {
         // free blocks only ever come out of the initial pool, so the
         // free list can never exceed the total; saturate anyway rather
         // than letting a future accounting bug wrap to usize::MAX
-        self.total_blocks.saturating_sub(self.free.len())
+        Blocks::new(self.total_blocks.saturating_sub(self.free.len()))
     }
 
-    pub fn free_blocks(&self) -> usize {
-        self.free.len()
+    pub fn free_blocks(&self) -> Blocks {
+        Blocks::new(self.free.len())
     }
 
     pub fn n_seqs(&self) -> usize {
@@ -117,13 +121,14 @@ impl KvBlockManager {
         self.seqs.contains_key(&id)
     }
 
-    pub fn seq_tokens(&self, id: u64) -> usize {
-        self.seqs.get(&id).map(|s| s.tokens).unwrap_or(0)
+    pub fn seq_tokens(&self, id: u64) -> Tokens {
+        Tokens::new(self.seqs.get(&id).map(|s| s.tokens).unwrap_or(0))
     }
 
-    /// Blocks needed to hold `tokens` tokens.
-    pub fn blocks_for(&self, tokens: usize) -> usize {
-        tokens.div_ceil(self.geometry.block_tokens)
+    /// Blocks needed to hold `tokens` tokens (the tokens -> blocks
+    /// conversion point for rule U1).
+    pub fn blocks_for(&self, tokens: Tokens) -> Blocks {
+        Blocks::new(tokens.get().div_ceil(self.geometry.block_tokens))
     }
 
     /// True when the sequence's allocation is exactly full — its next
@@ -136,8 +141,8 @@ impl KvBlockManager {
     }
 
     /// Can a new sequence of `tokens` tokens be admitted right now?
-    pub fn can_allocate(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free.len()
+    pub fn can_allocate(&self, tokens: Tokens) -> bool {
+        self.blocks_for(tokens) <= Blocks::new(self.free.len())
     }
 
     /// Admit a sequence with an initial `tokens` tokens (prompt).
@@ -148,10 +153,10 @@ impl KvBlockManager {
     /// `at_block_boundary()` disagreed with its allocation — it never
     /// looked block-boundary-full, so it evaded the scheduler's
     /// admission growth reserve.
-    pub fn allocate(&mut self, id: u64, tokens: usize) -> bool {
+    pub fn allocate(&mut self, id: u64, tokens: Tokens) -> bool {
         assert!(!self.seqs.contains_key(&id), "seq {id} already allocated");
-        let tokens = tokens.max(1);
-        let need = self.blocks_for(tokens);
+        let tokens = tokens.get().max(1);
+        let need = self.blocks_for(Tokens::new(tokens)).get();
         if need > self.free.len() {
             self.alloc_failures += 1;
             return false;
@@ -192,7 +197,7 @@ impl KvBlockManager {
 
     /// Fraction of capacity in use.
     pub fn utilization(&self) -> f64 {
-        self.used_blocks() as f64 / self.total_blocks.max(1) as f64
+        self.used_blocks().get() as f64 / self.total_blocks.max(1) as f64
     }
 
     /// Invariant check (used by property tests): no block is both free
@@ -267,40 +272,41 @@ mod tests {
     #[test]
     fn bytes_accounting() {
         let g = geo(KvPrecision::Bf16);
-        assert_eq!(g.bytes_per_token(), 2 * 4 * 2 * 32 * 2);
+        assert_eq!(g.bytes_per_token(), Bytes::new(2 * 4 * 2 * 32 * 2));
         let g8 = geo(KvPrecision::Fp8);
-        assert_eq!(g8.bytes_per_token() * 2, g.bytes_per_token());
+        assert_eq!(g8.bytes_per_token().get() * 2, g.bytes_per_token().get());
     }
 
     #[test]
     fn fp8_doubles_capacity() {
-        let budget = 1 << 20;
+        let budget = Bytes::new(1 << 20);
         let bf = KvBlockManager::from_budget(geo(KvPrecision::Bf16), budget);
         let f8 = KvBlockManager::from_budget(geo(KvPrecision::Fp8), budget);
-        assert_eq!(f8.total_blocks(), 2 * bf.total_blocks());
+        assert_eq!(f8.total_blocks().get(), 2 * bf.total_blocks().get());
     }
 
     #[test]
     fn alloc_extend_release() {
-        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), 8);
-        assert!(m.allocate(1, 16)); // exactly 1 block
-        assert_eq!(m.used_blocks(), 1);
+        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), Blocks::new(8));
+        assert!(m.allocate(1, Tokens::new(16))); // exactly 1 block
+        assert_eq!(m.used_blocks(), Blocks::new(1));
         // 16 more tokens => one more block
         for _ in 0..16 {
             assert!(m.append_token(1).unwrap());
         }
-        assert_eq!(m.used_blocks(), 2);
+        assert_eq!(m.used_blocks(), Blocks::new(2));
         m.check_invariants().unwrap();
         m.release(1);
-        assert_eq!(m.used_blocks(), 0);
+        assert_eq!(m.used_blocks(), Blocks::ZERO);
+        assert_eq!(m.peak_used, Blocks::new(2));
         m.check_invariants().unwrap();
     }
 
     #[test]
     fn exhaustion_counts_failures() {
-        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), 2);
-        assert!(m.allocate(1, 32)); // both blocks
-        assert!(!m.allocate(2, 1));
+        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), Blocks::new(2));
+        assert!(m.allocate(1, Tokens::new(32))); // both blocks
+        assert!(!m.allocate(2, Tokens::new(1)));
         assert_eq!(m.alloc_failures, 1);
         assert!(!m.append_token(1).unwrap());
         assert_eq!(m.alloc_failures, 2);
@@ -313,10 +319,15 @@ mod tests {
         // max(1) but record 0 tokens, so the sequence's accounting
         // disagreed with its allocation (and `at_block_boundary` could
         // never fire, dodging the scheduler's growth reserve)
-        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), 4);
-        assert!(m.allocate(1, 0));
-        assert_eq!(m.seq_tokens(1), 1, "clamped token count is stored");
-        assert_eq!(m.used_blocks(), 1);
+        let mut m =
+            KvBlockManager::new(geo(KvPrecision::Bf16), Blocks::new(4));
+        assert!(m.allocate(1, Tokens::ZERO));
+        assert_eq!(
+            m.seq_tokens(1),
+            Tokens::new(1),
+            "clamped token count is stored"
+        );
+        assert_eq!(m.used_blocks(), Blocks::new(1));
         assert!(!m.at_block_boundary(1));
         m.check_invariants().unwrap();
         // growth proceeds from the clamped count: 15 more appends fill
@@ -324,11 +335,11 @@ mod tests {
         for _ in 0..15 {
             assert!(m.append_token(1).unwrap());
         }
-        assert_eq!(m.seq_tokens(1), 16);
+        assert_eq!(m.seq_tokens(1), Tokens::new(16));
         assert!(m.at_block_boundary(1), "boundary must be observable");
-        assert_eq!(m.used_blocks(), 1);
+        assert_eq!(m.used_blocks(), Blocks::new(1));
         assert!(m.append_token(1).unwrap());
-        assert_eq!(m.used_blocks(), 2);
+        assert_eq!(m.used_blocks(), Blocks::new(2));
         m.check_invariants().unwrap();
         m.release(1);
         m.check_invariants().unwrap();
@@ -336,7 +347,7 @@ mod tests {
 
     #[test]
     fn release_unknown_is_noop() {
-        let mut m = KvBlockManager::new(geo(KvPrecision::Fp8), 4);
+        let mut m = KvBlockManager::new(geo(KvPrecision::Fp8), Blocks::new(4));
         m.release(99);
         m.check_invariants().unwrap();
     }

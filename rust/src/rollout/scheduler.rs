@@ -16,6 +16,7 @@ use std::collections::{BTreeMap, VecDeque};
 use super::kvcache::KvBlockManager;
 use super::request::Request;
 use crate::util::error::{bail, Context, Result};
+use crate::util::units::{Blocks, Tokens};
 
 #[derive(Clone, Debug, Default)]
 pub struct SchedulerStats {
@@ -81,7 +82,7 @@ impl Scheduler {
     /// Admit as many waiting requests as fit. Returns the newly admitted
     /// requests (the engine assigns them to slots and starts prefill).
     pub fn admit(&mut self) -> Vec<Request> {
-        self.admit_with(|_| 0)
+        self.admit_with(|_| Tokens::ZERO)
     }
 
     /// Admission with per-request extra token reservations — recompute
@@ -101,25 +102,28 @@ impl Scheduler {
     /// replaying its prompt sits at a boundary without appending for a
     /// few rounds, and we reserve for it anyway — a small throughput
     /// cost for a thrash-freedom guarantee that needs no caller hints.
-    pub fn admit_with<F: Fn(u64) -> usize>(
+    pub fn admit_with<F: Fn(u64) -> Tokens>(
         &mut self,
         extra: F,
     ) -> Vec<Request> {
         let mut out = Vec::new();
-        let mut reserve: usize = self
-            .running
-            .iter()
-            .filter(|id| self.kv.at_block_boundary(**id))
-            .count();
+        let mut reserve: Blocks = Blocks::new(
+            self.running
+                .iter()
+                .filter(|id| self.kv.at_block_boundary(**id))
+                .count(),
+        );
         while self.running.len() < self.max_batch {
             let Some(front) = self.waiting.front() else { break };
-            let tokens =
-                (front.prompt.len() + extra(front.id)).max(1);
+            let tokens = Tokens::new(front.prompt.len())
+                .saturating_add(extra(front.id))
+                .max(Tokens::new(1));
             let need_now = self.kv.blocks_for(tokens);
             // +1 growth reserve so a fresh admission can't instantly
             // deadlock the running set
-            let need_grown = self.kv.blocks_for(tokens + 1);
-            if need_grown + reserve > self.kv.free_blocks() {
+            let need_grown =
+                self.kv.blocks_for(tokens.saturating_add(Tokens::new(1)));
+            if need_grown.saturating_add(reserve) > self.kv.free_blocks() {
                 break;
             }
             let Some(req) = self.waiting.pop_front() else { break };
@@ -277,7 +281,10 @@ mod tests {
             block_tokens: 4,
             precision: KvPrecision::Bf16,
         };
-        Scheduler::new(KvBlockManager::new(geo, blocks), max_batch)
+        Scheduler::new(
+            KvBlockManager::new(geo, crate::util::units::Blocks::new(blocks)),
+            max_batch,
+        )
     }
 
     fn req(id: u64, plen: usize) -> Request {
@@ -376,7 +383,7 @@ mod tests {
         assert_eq!(s.admit().len(), 2);
         s.drain();
         assert!(s.is_idle());
-        assert_eq!(s.kv.used_blocks(), 0);
+        assert_eq!(s.kv.used_blocks(), crate::util::units::Blocks::ZERO);
         s.check_invariants().unwrap();
         // the scheduler is immediately reusable
         s.submit(req(4, 4));

@@ -12,6 +12,11 @@
 //! * **TrainerSide** (NeMo-RL implementation): triggered at the end of
 //!   the training step, fed a subset of the *training batch* (prompts +
 //!   previous responses), then shipped to the engine with the weights.
+//!
+//! The returned (k, v) pair is deliberately the *last* raw-float hop:
+//! installing it goes through the engine's `install_kv_scales` fence,
+//! which bumps the weight epoch and stamps the pair into an
+//! epoch-checked `ScaleSet` (lint rule Q2 flags any other plumbing).
 
 use std::sync::Arc;
 

@@ -15,6 +15,12 @@
 //! the same codes (idempotency is asserted in tests) — while the
 //! `QuantizedTensor` codes drive the memory accounting (2x footprint
 //! reduction).
+//!
+//! Accounting conventions (lint rules Q2/U1): traffic in [`SyncReport`]
+//! is tallied in the `Bytes` newtype from `util::units`, and the
+//! calibrated (k, v) pair is handed to the engine's `install_kv_scales`
+//! / pool `sync_kv_scales` fence, which stamps it into an epoch-carrying
+//! `ScaleSet` — raw scale plumbing outside those entry points is flagged.
 
 pub mod calib;
 pub mod pipeline;

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use crate::util::clock::WallTimer;
 use crate::util::error::Result;
+use crate::util::units::Bytes;
 
 use crate::fp8::{
     quantize_blockwise, Fp8Format, ScaleFormat, Tensor, E4M3,
@@ -75,8 +76,8 @@ pub struct SyncReport {
     pub n_quantized: usize,
     pub n_passthrough: usize,
     /// bytes if shipped as f32/bf16 vs as (codes + scales)
-    pub bytes_bf16: usize,
-    pub bytes_fp8: usize,
+    pub bytes_bf16: Bytes,
+    pub bytes_fp8: Bytes,
     pub elapsed_s: f64,
     /// max |w - dequant(quant(w))| across quantized tensors
     pub max_quant_err: f32,
@@ -105,7 +106,8 @@ impl WeightSync {
         let mut rep = SyncReport::default();
         for (p, a) in spec.params.iter().zip(params) {
             let data = a.as_f32()?;
-            rep.bytes_bf16 += data.len() * 2;
+            rep.bytes_bf16 =
+                rep.bytes_bf16.saturating_add(Bytes::new(data.len() * 2));
             if self.cfg.fp8
                 && p.shape.len() == 2
                 && should_quantize(&p.name, self.cfg.quantize_router)
@@ -116,15 +118,18 @@ impl WeightSync {
                     self.cfg.block,
                     self.cfg.fmt,
                     self.cfg.scale_fmt,
-                );
-                rep.bytes_fp8 += q.nbytes();
+                )?;
+                rep.bytes_fp8 = rep.bytes_fp8.saturating_add(q.nbytes());
                 let d = q.dequantize();
                 rep.max_quant_err =
                     rep.max_quant_err.max(t.max_abs_diff(&d));
                 rep.n_quantized += 1;
                 out.push(HostArray::f32(p.shape.clone(), d.data));
             } else {
-                rep.bytes_fp8 += data.len() * 2; // shipped at bf16
+                // shipped at bf16
+                rep.bytes_fp8 = rep
+                    .bytes_fp8
+                    .saturating_add(Bytes::new(data.len() * 2));
                 rep.n_passthrough += 1;
                 out.push(a.clone());
             }
@@ -177,16 +182,18 @@ mod tests {
             (32, 32),
             E4M3,
             ScaleFormat::Fp32,
-        );
+        )
+        .unwrap();
         let d1 = q1.dequantize();
         let q2 = quantize_blockwise(
             &d1,
             (32, 32),
             E4M3,
             ScaleFormat::Fp32,
-        );
+        )
+        .unwrap();
         let d2 = q2.dequantize();
         assert_eq!(d1, d2);
-        assert_eq!(q1.codes, q2.codes);
+        assert_eq!(q1.codes(), q2.codes());
     }
 }

@@ -1,6 +1,7 @@
 //! Substrate utilities: JSON, RNG, statistics, CLI parsing, CSV output,
-//! error context and logging (serde/clap/anyhow/log are unavailable
-//! offline — these are the in-repo replacements).
+//! error context, logging, and unit-typed accounting newtypes
+//! (serde/clap/anyhow/log are unavailable offline — these are the
+//! in-repo replacements).
 pub mod cli;
 pub mod clock;
 pub mod csv;
@@ -9,3 +10,4 @@ pub mod json;
 pub mod log;
 pub mod rng;
 pub mod stats;
+pub mod units;

@@ -1,0 +1,126 @@
+//! Unit-typed accounting newtypes: `Tokens`, `Blocks`, `Bytes`, and
+//! `ScaleEpoch` — the type-system half of lint rule U1 (DESIGN.md §9).
+//!
+//! The newtypes are deliberately arithmetic-free: there is no
+//! `Add`/`Sub` impl, so the compiler rejects `tokens + blocks`
+//! outright and same-family math has to name its overflow policy
+//! (`checked_*` / `saturating_*`). Cross-family conversions live as
+//! named methods on the owning type (`KvGeometry::blocks_in`,
+//! `KvBlockManager::blocks_for`, `QuantizedTensor::nbytes`), never as
+//! bare casts at call sites. `Display` prints the bare number so log
+//! and error strings stay byte-identical with pre-newtype formatting.
+
+use std::fmt;
+
+macro_rules! unit_newtype {
+    ($(#[$doc:meta])* $name:ident, $repr:ty) => {
+        $(#[$doc])*
+        #[derive(
+            Clone,
+            Copy,
+            Debug,
+            Default,
+            PartialEq,
+            Eq,
+            PartialOrd,
+            Ord,
+            Hash,
+        )]
+        pub struct $name($repr);
+
+        impl $name {
+            pub const ZERO: $name = $name(0);
+
+            pub const fn new(v: $repr) -> $name {
+                $name(v)
+            }
+
+            /// The raw count, for display-adjacent math and FFI edges.
+            pub const fn get(self) -> $repr {
+                self.0
+            }
+
+            pub const fn is_zero(self) -> bool {
+                self.0 == 0
+            }
+
+            pub fn checked_add(self, rhs: $name) -> Option<$name> {
+                self.0.checked_add(rhs.0).map($name)
+            }
+
+            pub fn checked_sub(self, rhs: $name) -> Option<$name> {
+                self.0.checked_sub(rhs.0).map($name)
+            }
+
+            pub fn saturating_add(self, rhs: $name) -> $name {
+                $name(self.0.saturating_add(rhs.0))
+            }
+
+            pub fn saturating_sub(self, rhs: $name) -> $name {
+                $name(self.0.saturating_sub(rhs.0))
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                self.0.fmt(f)
+            }
+        }
+    };
+}
+
+unit_newtype!(
+    /// A count of sequence tokens (prompt + generated).
+    Tokens,
+    usize
+);
+unit_newtype!(
+    /// A count of paged-KV cache blocks.
+    Blocks,
+    usize
+);
+unit_newtype!(
+    /// A byte quantity: KV budgets, weight-sync traffic accounting.
+    Bytes,
+    usize
+);
+unit_newtype!(
+    /// A weight-sync epoch stamp. Carried by `fp8::ScaleSet` so that
+    /// decode-side scale reads can be freshness-checked against the
+    /// engine's current weight epoch (lint rule Q2).
+    ScaleEpoch,
+    u64
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prints_the_bare_number() {
+        assert_eq!(format!("{}", Tokens::new(42)), "42");
+        assert_eq!(format!("{:>4}", Blocks::new(7)), "   7");
+        assert_eq!(format!("{}", ScaleEpoch::new(9)), "9");
+    }
+
+    #[test]
+    fn saturating_and_checked_ops() {
+        let a = Bytes::new(usize::MAX);
+        assert_eq!(a.saturating_add(Bytes::new(1)), a);
+        assert_eq!(Bytes::ZERO.saturating_sub(Bytes::new(3)), Bytes::ZERO);
+        assert_eq!(Bytes::new(2).checked_sub(Bytes::new(3)), None);
+        assert_eq!(
+            Tokens::new(2).checked_add(Tokens::new(3)),
+            Some(Tokens::new(5))
+        );
+    }
+
+    #[test]
+    fn ordering_and_zero() {
+        assert!(Blocks::new(2) < Blocks::new(3));
+        assert_eq!(Blocks::new(2).max(Blocks::new(3)), Blocks::new(3));
+        assert!(Tokens::ZERO.is_zero());
+        assert!(!Tokens::new(1).is_zero());
+        assert_eq!(Bytes::default(), Bytes::ZERO);
+    }
+}

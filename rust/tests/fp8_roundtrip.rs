@@ -1,0 +1,188 @@
+//! Quantize -> dequantize round-trip error bounds, per FP8 format, plus
+//! the Q2-freshness non-vacuity check: a stale `ScaleSet` handle really
+//! does trip its epoch `debug_assert` (so the lint rule guards a check
+//! that fires, not a no-op).
+//!
+//! The bound used throughout: the quantizers pick a per-block scale
+//! `s >= amax / fmt.max`, so nothing saturates and every scaled value
+//! `v = x / s` round-trips under round-to-nearest with
+//!
+//!   |v - qdq(v)| <= ulp(v)/2 <= |v| * 2^-(mbits+1)   (normal range)
+//!   |v - qdq(v)| <= min_subnormal / 2                (below it)
+//!
+//! Multiplying back by `s` and doubling each term for slack (binade
+//! edges, UE8M0's power-of-two scale inflation) gives the per-element
+//! bound checked here:
+//!
+//!   |x - y| <= |x| * 2^-mbits + s * fmt.min_subnormal
+
+use std::sync::Arc;
+
+use fp8_rl::fp8::{
+    qdq_act_tilewise, quantize_blockwise, Fp8Format, ScaleFormat, Tensor,
+    E4M3, E5M2, MIN_AMAX,
+};
+use fp8_rl::rollout::{EngineConfig, HloEngine};
+use fp8_rl::runtime::Runtime;
+use fp8_rl::util::rng::Pcg64;
+use fp8_rl::util::units::ScaleEpoch;
+
+fn random_tensor(
+    rng: &mut Pcg64,
+    rows: usize,
+    cols: usize,
+    spread: f32,
+) -> Tensor {
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| rng.normal() as f32 * spread)
+        .collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+/// Per-element round-trip bound for weight-blockwise quantization,
+/// swept over shapes, block geometries, magnitudes and scale formats.
+fn check_blockwise(fmt: Fp8Format, name: &str) {
+    let mut rng = Pcg64::new(0x5eed + fmt.mbits as u64);
+    let rel = (2.0f32).powi(-(fmt.mbits as i32));
+    let cases: &[(usize, usize, usize, usize)] =
+        &[(16, 16, 4, 4), (33, 7, 8, 3), (5, 128, 1, 16), (64, 64, 128, 128)];
+    for &(rows, cols, bm, bn) in cases {
+        for sf in [ScaleFormat::Fp32, ScaleFormat::Ue8m0] {
+            for &spread in &[1e-3f32, 1.0, 37.5] {
+                let t = random_tensor(&mut rng, rows, cols, spread);
+                let q = quantize_blockwise(&t, (bm, bn), fmt, sf).unwrap();
+                let d = q.dequantize();
+                assert_eq!(d.shape, t.shape);
+                let nbc = cols.div_ceil(bn);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let x = t.data[r * cols + c];
+                        let y = d.data[r * cols + c];
+                        let s = q.scales()[(r / bm) * nbc + c / bn];
+                        let bound = x.abs() * rel + s * fmt.min_subnormal;
+                        assert!(
+                            (x - y).abs() <= bound,
+                            "{name} {rows}x{cols} block {bm}x{bn} \
+                             {sf:?} elem ({r},{c}): |{x} - {y}| = {} \
+                             exceeds {bound} (scale {s})",
+                            (x - y).abs()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blockwise_roundtrip_bound_e4m3() {
+    check_blockwise(E4M3, "e4m3");
+}
+
+#[test]
+fn blockwise_roundtrip_bound_e5m2() {
+    check_blockwise(E5M2, "e5m2");
+}
+
+/// Same bound for the activation path (`qdq_act_tilewise`). The tile
+/// scale is recomputed here exactly as the quantizer computes it, so
+/// the bound is tight to the actual divisor used.
+fn check_tilewise(fmt: Fp8Format, name: &str) {
+    let mut rng = Pcg64::new(0xac7 + fmt.mbits as u64);
+    let rel = (2.0f32).powi(-(fmt.mbits as i32));
+    for &(rows, cols, tile) in
+        &[(8usize, 64usize, 16usize), (13, 29, 7), (1, 128, 128)]
+    {
+        for sf in [ScaleFormat::Fp32, ScaleFormat::Ue8m0] {
+            for &spread in &[1e-4f32, 1.0, 512.0] {
+                let t = random_tensor(&mut rng, rows, cols, spread);
+                let d = qdq_act_tilewise(&t, tile, fmt, sf).unwrap();
+                assert_eq!(d.shape, t.shape);
+                for (ri, (row, drow)) in t
+                    .data
+                    .chunks(cols)
+                    .zip(d.data.chunks(cols))
+                    .enumerate()
+                {
+                    for (ti, (seg, dseg)) in
+                        row.chunks(tile).zip(drow.chunks(tile)).enumerate()
+                    {
+                        let amax = seg
+                            .iter()
+                            .fold(0.0f32, |m, &x| m.max(x.abs()));
+                        let s = sf.apply(amax.max(MIN_AMAX) / fmt.max);
+                        for (j, (&x, &y)) in
+                            seg.iter().zip(dseg).enumerate()
+                        {
+                            let bound =
+                                x.abs() * rel + s * fmt.min_subnormal;
+                            assert!(
+                                (x - y).abs() <= bound,
+                                "{name} tile {tile} {sf:?} row {ri} \
+                                 tile {ti} elem {j}: |{x} - {y}| = {} \
+                                 exceeds {bound}",
+                                (x - y).abs()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn act_tilewise_roundtrip_bound_e4m3() {
+    check_tilewise(E4M3, "e4m3");
+}
+
+#[test]
+fn act_tilewise_roundtrip_bound_e5m2() {
+    check_tilewise(E5M2, "e5m2");
+}
+
+/// All-zero and near-zero inputs round-trip to exactly zero (the
+/// MIN_AMAX clamp keeps the divisor finite instead of 0/0 -> NaN).
+#[test]
+fn zero_input_roundtrips_to_zero_everywhere() {
+    let t = Tensor::zeros(vec![4, 32]);
+    for fmt in [E4M3, E5M2] {
+        for sf in [ScaleFormat::Fp32, ScaleFormat::Ue8m0] {
+            let d = quantize_blockwise(&t, (2, 8), fmt, sf)
+                .unwrap()
+                .dequantize();
+            assert!(d.data.iter().all(|&x| x == 0.0));
+            let a = qdq_act_tilewise(&t, 16, fmt, sf).unwrap();
+            assert!(a.data.iter().all(|&x| x == 0.0));
+        }
+    }
+}
+
+/// Q2 non-vacuity: the `ScaleEpoch` assert in `ScaleSet::read` is live.
+/// Grab a handle, bump the engine's weight epoch by installing fresh KV
+/// scales, then read the old handle at the new epoch -> debug panic.
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "stale ScaleSet")]
+fn stale_scale_set_trips_the_epoch_assert() {
+    let rt = Arc::new(Runtime::hermetic());
+    let mut eng =
+        HloEngine::new(rt, EngineConfig::new("dense", "bf16")).unwrap();
+    let stale = eng.scale_set();
+    eng.install_kv_scales(0.9, 1.1); // bumps the weight epoch
+    let _ = stale.read(ScaleEpoch::new(eng.weight_epoch()));
+}
+
+/// The happy path the assert protects: a handle taken after the install
+/// reads back the installed scales at the current epoch.
+#[test]
+fn fresh_scale_set_reads_installed_values() {
+    let rt = Arc::new(Runtime::hermetic());
+    let mut eng =
+        HloEngine::new(rt, EngineConfig::new("dense", "bf16")).unwrap();
+    eng.install_kv_scales(0.7, 1.3);
+    let (k, v) =
+        eng.scale_set().read(ScaleEpoch::new(eng.weight_epoch()));
+    assert_eq!((k, v), (0.7, 1.3));
+    assert_eq!(eng.kv_scales(), (0.7, 1.3));
+}

@@ -17,6 +17,7 @@ use fp8_rl::rollout::{
     EngineConfig, FinishReason, HloEngine, Request, SamplingParams,
 };
 use fp8_rl::runtime::Runtime;
+use fp8_rl::util::units::Bytes;
 use fp8_rl::sync::{
     CalibStrategy, Calibrator, WeightSync, WeightSyncConfig,
 };
@@ -139,7 +140,7 @@ fn engine_stall_fails_fast_with_diagnostic() {
     let rt = runtime();
     let mut cfg = EngineConfig::new("dense", "bf16");
     // exactly one 16-token block: a 16-token prompt (+1 growth) needs 2
-    cfg.kv_budget_bytes = Some(4096);
+    cfg.kv_budget_bytes = Some(Bytes::new(4096));
     let mut engine = HloEngine::new(rt, cfg).unwrap();
     let req = Request {
         id: 7,
@@ -165,7 +166,7 @@ fn engine_self_preempt_thrash_fails_fast() {
     // it must now error after a bounded number of recompute attempts
     let rt = runtime();
     let mut cfg = EngineConfig::new("dense", "bf16");
-    cfg.kv_budget_bytes = Some(4096); // 1 block = 16 tokens
+    cfg.kv_budget_bytes = Some(Bytes::new(4096)); // 1 block = 16 tokens
     let mut engine = HloEngine::new(rt, cfg).unwrap();
     let req = Request {
         id: 9,
@@ -194,7 +195,7 @@ fn engine_preemption_accounting() {
     // still finish, with the eviction counted on the victim
     let rt = runtime();
     let mut cfg = EngineConfig::new("dense", "bf16");
-    cfg.kv_budget_bytes = Some(3 * 4096); // 3 blocks = 48 tokens
+    cfg.kv_budget_bytes = Some(Bytes::new(3 * 4096)); // 3 blocks = 48 tokens
     let mut engine = HloEngine::new(rt, cfg).unwrap();
     let reqs: Vec<Request> = (0..2)
         .map(|i| Request {
@@ -232,7 +233,7 @@ fn tokens_generated_counts_only_delivered_tokens() {
     // of the delivered completion lengths exactly.
     let rt = runtime();
     let mut cfg = EngineConfig::new("dense", "bf16");
-    cfg.kv_budget_bytes = Some(3 * 4096); // 3 blocks = 48 tokens
+    cfg.kv_budget_bytes = Some(Bytes::new(3 * 4096)); // 3 blocks = 48 tokens
     let mut engine = HloEngine::new(rt, cfg).unwrap();
     let reqs: Vec<Request> = (0..2)
         .map(|i| Request {
@@ -267,7 +268,7 @@ fn generate_error_drains_scheduler_state() {
     // stalled forever on the same stuck head-of-line request
     let rt = runtime();
     let mut cfg = EngineConfig::new("dense", "bf16");
-    cfg.kv_budget_bytes = Some(4096); // 1 block of 16 tokens
+    cfg.kv_budget_bytes = Some(Bytes::new(4096)); // 1 block of 16 tokens
     let mut engine = HloEngine::new(rt, cfg).unwrap();
     let stuck = Request {
         id: 1,

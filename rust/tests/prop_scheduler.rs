@@ -21,6 +21,7 @@ use fp8_rl::rollout::request::{
 use fp8_rl::rollout::scheduler::Scheduler;
 use fp8_rl::testkit::{check, vec_of, Shrink};
 use fp8_rl::util::rng::Pcg64;
+use fp8_rl::util::units::{Blocks, Bytes};
 
 fn geo(block_tokens: usize) -> KvGeometry {
     KvGeometry {
@@ -64,8 +65,10 @@ fn run_script(
     max_batch: usize,
     ops: &[Op],
 ) -> Result<(), String> {
-    let mut sched =
-        Scheduler::new(KvBlockManager::new(geo(4), blocks), max_batch);
+    let mut sched = Scheduler::new(
+        KvBlockManager::new(geo(4), Blocks::new(blocks)),
+        max_batch,
+    );
     let mut next_id = 0u64;
     for op in ops {
         match op {
@@ -128,8 +131,8 @@ fn kv_capacity_doubles_with_fp8() {
                 precision: KvPrecision::Fp8,
                 ..geo(16)
             };
-            let nb = bf.blocks_in(budget);
-            let nf = f8.blocks_in(budget);
+            let nb = bf.blocks_in(Bytes::new(budget)).get();
+            let nf = f8.blocks_in(Bytes::new(budget)).get();
             // fp8 fits at least 2x-1 blocks (floor effects) and at most 2x+1
             if nf < nb * 2 || nf > nb * 2 + 1 {
                 return Err(format!("budget {budget}: bf16 {nb} fp8 {nf}"));
@@ -149,7 +152,7 @@ fn no_request_starves_with_capacity() {
         |r| 1usize + r.below(6) as usize,
         |&k| {
             let mut sched = Scheduler::new(
-                KvBlockManager::new(geo(4), 64),
+                KvBlockManager::new(geo(4), Blocks::new(64)),
                 8,
             );
             for id in 0..k as u64 {
@@ -189,7 +192,7 @@ fn admissions_survive_their_admission_round() {
         },
         |(blocks, (max_batch, plens))| {
             let mut sched = Scheduler::new(
-                KvBlockManager::new(geo(4), *blocks),
+                KvBlockManager::new(geo(4), Blocks::new(*blocks)),
                 *max_batch,
             );
             let mut next_id = 0u64;

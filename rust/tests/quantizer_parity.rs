@@ -89,7 +89,7 @@ fn blockwise_matches_flat_when_single_block() {
     let mut rng = Pcg64::new(9);
     let data: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
     let t = Tensor::new(vec![8, 8], data.clone()).unwrap();
-    let q = qdq_blockwise(&t, (8, 8), E4M3, ScaleFormat::Fp32);
+    let q = qdq_blockwise(&t, (8, 8), E4M3, ScaleFormat::Fp32).unwrap();
     let amax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
     let scale = amax / 448.0;
     for (i, (&x, &y)) in data.iter().zip(&q.data).enumerate() {
@@ -110,8 +110,8 @@ fn act_tilewise_respects_tile_independence() {
     let mut bumped = base.clone();
     bumped[0] = 1000.0; // tile 0 outlier
     let t2 = Tensor::new(vec![1, 32], bumped).unwrap();
-    let q1 = qdq_act_tilewise(&t1, 16, E4M3, ScaleFormat::Fp32);
-    let q2 = qdq_act_tilewise(&t2, 16, E4M3, ScaleFormat::Fp32);
+    let q1 = qdq_act_tilewise(&t1, 16, E4M3, ScaleFormat::Fp32).unwrap();
+    let q2 = qdq_act_tilewise(&t2, 16, E4M3, ScaleFormat::Fp32).unwrap();
     // tile 1 (elements 16..32) identical
     assert_eq!(&q1.data[16..], &q2.data[16..]);
     // tile 0 differs
@@ -137,8 +137,9 @@ fn ue8m0_scales_never_overflow_codes() {
                 (1, xs.len()),
                 E4M3,
                 ScaleFormat::Ue8m0,
-            );
-            let s = q.scales[0];
+            )
+            .map_err(|e| e.to_string())?;
+            let s = q.scales()[0];
             for &x in xs {
                 if (x / s).abs() > 448.0 + 1e-3 {
                     return Err(format!(

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Schema check for the BENCH_*.json reports the bench jobs publish.
+
+The bench smoke jobs are non-gating (shared-runner numbers are noisy),
+but the *shape* of what they publish is a contract: the summarizer
+(`scripts/summarize_runs.py`), the committed baselines, and anyone
+diffing trajectories PR-over-PR all parse these files. This check is
+cheap and deterministic, so it gates: a bench refactor that renames a
+section or starts emitting strings where numbers belong fails here,
+not three PRs later in a plotting script.
+
+Usage: scripts/check_bench_schema.py [FILE...]
+With no arguments, checks the three committed reports.
+"""
+
+import json
+import math
+import sys
+
+# bench name -> required top-level sections (beyond bench/backend)
+# and whether the section holds sub-objects of numeric leaves.
+SCHEMAS = {
+    "engine_decode": {"variants": dict},
+    "engine_pool": {"host_cores": (int, float),
+                    "replicas": dict,
+                    "stream_admission": dict},
+    "rl_step": {"host_cores": (int, float),
+                "pipelined": dict,
+                "sequential": dict},
+}
+
+DEFAULT_FILES = ["BENCH_%s.json" % b for b in sorted(SCHEMAS)]
+
+
+def numeric_leaves(section, path, errors):
+    """Every leaf under a bench section must be a finite number
+    (nested one level: section -> variant/config -> metric)."""
+    for key, val in section.items():
+        here = "%s.%s" % (path, key)
+        if isinstance(val, dict):
+            numeric_leaves(val, here, errors)
+        elif isinstance(val, bool) or not isinstance(val, (int, float)):
+            errors.append("%s: expected a number, got %r" % (here, val))
+        elif isinstance(val, float) and not math.isfinite(val):
+            errors.append("%s: non-finite number %r" % (here, val))
+
+
+def check_file(fname):
+    errors = []
+    try:
+        with open(fname) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return ["%s: unreadable or invalid JSON: %s" % (fname, e)]
+    if not isinstance(doc, dict):
+        return ["%s: top level must be an object" % fname]
+
+    bench = doc.get("bench")
+    if bench not in SCHEMAS:
+        return ["%s: unknown or missing bench name %r (known: %s)"
+                % (fname, bench, ", ".join(sorted(SCHEMAS)))]
+    expect = "BENCH_%s.json" % bench
+    if not fname.endswith(expect):
+        errors.append("%s: bench %r belongs in %s" % (fname, bench, expect))
+    if not isinstance(doc.get("backend"), str) or not doc["backend"]:
+        errors.append("%s: 'backend' must be a non-empty string" % fname)
+
+    for key, want in SCHEMAS[bench].items():
+        if key not in doc:
+            errors.append("%s: missing required key %r" % (fname, key))
+        elif not isinstance(doc[key], want) or isinstance(doc[key], bool):
+            errors.append("%s: key %r must be %s, got %r"
+                          % (fname, key, want, type(doc[key]).__name__))
+        elif isinstance(doc[key], dict):
+            numeric_leaves(doc[key], "%s:%s" % (fname, key), errors)
+
+    extra = set(doc) - set(SCHEMAS[bench]) - {"bench", "backend", "note"}
+    if extra:
+        errors.append("%s: unexpected top-level keys %s (extend SCHEMAS "
+                      "when the bench grows a section)"
+                      % (fname, sorted(extra)))
+    return errors
+
+
+def main(argv):
+    files = argv[1:] or DEFAULT_FILES
+    failures = []
+    for fname in files:
+        errs = check_file(fname)
+        if errs:
+            failures.extend(errs)
+        else:
+            print("check_bench_schema: %s OK" % fname)
+    for e in failures:
+        print("check_bench_schema: %s" % e, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,52 @@
+#!/usr/bin/env sh
+# Ratchet guard: lint-baseline.txt may only shrink.
+#
+# `cargo run -p pallas-lint` already fails when the tree exceeds the
+# committed baseline — but nothing stopped a PR from *raising the
+# baseline file itself* to smuggle new debt past the ratchet. This
+# guard closes that hole at the git layer: against the parent commit,
+# every (rule, module) count must be <= the old count and no new
+# (rule, module) row may appear. Rows disappearing or shrinking is the
+# expected direction (burn-down + `--write-baseline`).
+#
+# Usage: scripts/ratchet_guard.sh [base-ref]
+#   base-ref defaults to HEAD^ (on PRs, pass the merge-base instead).
+# A missing base (initial commit, shallow clone without the parent, or
+# a base that predates the baseline file) passes: there is nothing to
+# ratchet against.
+set -eu
+
+base=${1:-HEAD^}
+file=lint-baseline.txt
+
+if ! git rev-parse --verify --quiet "$base" >/dev/null; then
+    echo "ratchet_guard: base '$base' not found (initial commit or shallow clone) — nothing to compare"
+    exit 0
+fi
+if ! git cat-file -e "$base:$file" 2>/dev/null; then
+    echo "ratchet_guard: $file absent at $base — nothing to compare"
+    exit 0
+fi
+
+old=$(mktemp) && new=$(mktemp)
+trap 'rm -f "$old" "$new"' EXIT
+git show "$base:$file" | grep -v '^#' | grep -v '^[[:space:]]*$' > "$old" || true
+grep -v '^#' "$file" | grep -v '^[[:space:]]*$' > "$new" || true
+
+fail=0
+while read -r rule module count; do
+    [ -n "${count:-}" ] || continue
+    prev=$(awk -v r="$rule" -v m="$module" '$1==r && $2==m {print $3}' "$old")
+    if [ -z "$prev" ]; then
+        echo "ratchet_guard: NEW baseline row '$rule $module $count' (not in $base) — fix the violations or add per-site allows instead" >&2
+        fail=1
+    elif [ "$count" -gt "$prev" ]; then
+        echo "ratchet_guard: '$rule $module' grew $prev -> $count vs $base — the ratchet only goes down" >&2
+        fail=1
+    fi
+done < "$new"
+
+if [ "$fail" -ne 0 ]; then
+    exit 1
+fi
+echo "ratchet_guard: $file only shrank vs $base ($(wc -l < "$old" | tr -d ' ') -> $(wc -l < "$new" | tr -d ' ') rows)"

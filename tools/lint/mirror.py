@@ -16,20 +16,46 @@ import os
 import re
 import sys
 
-RULES = ("D1", "D2", "P1", "C1", "A1", "C2")
+RULES = ("D1", "D2", "P1", "C1", "A1", "C2", "Q1", "Q2", "U1")
 
 # Modules whose behavior must be bit-deterministic (rule D1).
 DET_MODULES = ("rollout", "sync", "coordinator", "testkit", "fp8")
 # Modules where the P1 count must be zero (hard floor, baseline-proof).
-CORE_MODULES = ("rollout", "sync", "coordinator", "rl", "perfmodel", "root")
+CORE_MODULES = (
+    "rollout", "sync", "coordinator", "rl", "perfmodel", "root", "fp8",
+)
 # File stems whose arithmetic is accounting-critical (rule A1); the
 # `rl` module is in scope as a whole alongside these.
 A1_FILES = ("kvcache", "pool", "router", "scheduler")
+# Modules where raw KV-scale plumbing is in scope for rule Q2.
+Q2_MODULES = ("rollout", "sync", "coordinator")
+# Modules where unit-family mixing must be zero (rule U1 hard floor).
+U1_MODULES = ("fp8", "rollout", "sync")
 
 D1_IDENTS = ("HashMap", "HashSet", "Instant", "SystemTime", "thread_rng")
 FLOAT_CONSTS = ("INFINITY", "NEG_INFINITY", "NAN")
 PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
 C1_METHODS = ("send", "try_send", "send_ctl", "send_ordered")
+# Sealed quantized-payload types (rule Q1).
+Q1_TYPES = ("QuantizedTensor", "Nvfp4Tensor")
+# Their payload fields; reads outside `fp8/` are flagged.
+Q1_FIELDS = ("codes", "packed", "scales")
+# Quantizing ctor fns whose results taint a binding as quantized.
+Q1_CTORS = ("quantize_blockwise", "quantize_default", "quantize_nvfp4")
+# The epoch-fenced install path: the only fns allowed to touch raw
+# scales or build a `ScaleSet` (rule Q2).
+Q2_FNS = ("install_kv_scales", "kv_scales", "sync_kv_scales")
+Q2_IDENTS = ("kscale", "vscale")
+# Type constructors stepped over when resolving a param's type.
+TYPE_WRAPPERS = ("Arc", "Box", "Option", "Rc", "Vec")
+# Identifier segments naming a unit family (rule U1); an identifier
+# spanning two families (`block_tokens`) is a conversion factor.
+UNIT_FAMILIES = (
+    ("blocks", ("block", "blocks")),
+    ("bytes", ("byte", "bytes")),
+    ("epoch", ("epoch", "epochs")),
+    ("tokens", ("token", "tokens")),
+)
 # Identifier segments that mark an accounting quantity (rule A1).
 ACCT_WORDS = (
     "block", "blocks", "budget", "budgets", "load", "loads", "reserve",
@@ -42,7 +68,9 @@ KEYWORDS = (
     "type", "unsafe", "use", "where", "while", "yield",
 )
 
-ALLOW_RE = re.compile(r"//\s*lint:\s*allow\((D1|D2|P1|C1|A1|C2)\)")
+ALLOW_RE = re.compile(
+    r"//\s*lint:\s*allow\((D1|D2|P1|C1|A1|C2|Q1|Q2|U1)\)"
+)
 RAW_STR_RE = re.compile(r'(b?r)(#*)"')
 
 
@@ -355,6 +383,253 @@ def acct_right(toks, op):
     return None
 
 
+def fn_spans(toks):
+    """All fn bodies in token space, as (sig, name, body_lo, body_hi)
+    tuples of token indices: the `fn` keyword, the fn's name, the
+    body's opening brace, one past its close. Nested fns get their own
+    spans (the walk resumes just past each body's opening brace).
+    Paren AND bracket depth are tracked while looking for the body
+    brace so `-> [u8; 4]` return types don't read as bodyless trait
+    decls."""
+    out = []
+    i = 0
+    while i < len(toks):
+        named = i + 1 < len(toks) and toks[i + 1][0] == "id"
+        if toks[i][1] != "fn" or not named:
+            i += 1
+            continue
+        name = i + 1
+        j = name + 1
+        depth = 0
+        opn = None
+        while j < len(toks):
+            t = toks[j][1]
+            if t in ("(", "["):
+                depth += 1
+            elif t in (")", "]"):
+                depth -= 1
+            elif t == "{" and depth == 0:
+                opn = j
+                break
+            elif t == ";" and depth == 0:
+                break
+            j += 1
+        if opn is None:
+            i = max(j, i + 1)
+            continue
+        d, k = 1, opn + 1
+        while k < len(toks) and d > 0:
+            if toks[k][1] == "{":
+                d += 1
+            elif toks[k][1] == "}":
+                d -= 1
+            k += 1
+        out.append((i, name, opn, k))
+        i = opn + 1
+    return out
+
+
+def enclosing_fn(spans, i):
+    """Index (into `spans`) of the innermost fn whose extent —
+    signature included, so params count — covers token `i`."""
+    best = None
+    for s, (sig, _name, _lo, hi) in enumerate(spans):
+        if sig < i < hi:
+            if best is None or spans[best][0] < sig:
+                best = s
+    return best
+
+
+def quant_marks(toks, span):
+    """Fn-scoped dataflow (rule Q1): identifiers that lexically hold a
+    quantized payload — params typed with a Q1 type (behind `&`/`mut`/
+    wrapper generics), plus `let`/`for` bindings whose initializer
+    mentions a Q1 type, a quantizing ctor, or an already-marked name
+    (one forward pass; chains through re-bindings in source order)."""
+    sig, _name, body_lo, body_hi = span
+    marks = set()
+    for i in range(sig, body_lo):
+        k, t, _ = toks[i]
+        if k != "id" or t not in Q1_TYPES:
+            continue
+        j = i
+        while j > sig:
+            p = toks[j - 1][1]
+            if p in ("&", "mut", "<", "(", "[") or p in TYPE_WRAPPERS:
+                j -= 1
+            else:
+                break
+        if j >= 2 and toks[j - 1][1] == ":":
+            nk, nt, _ = toks[j - 2]
+            if nk == "id" and nt not in KEYWORDS:
+                marks.add(nt)
+    i = body_lo
+    while i < body_hi:
+        kw = toks[i][1] if i < len(toks) else ""
+        if kw not in ("let", "for"):
+            i += 1
+            continue
+        j = i + 1
+        if kw == "let" and j < len(toks) and toks[j][1] == "mut":
+            j += 1
+        if (
+            j >= len(toks)
+            or toks[j][0] != "id"
+            or toks[j][1] in KEYWORDS
+        ):
+            i = j
+            continue
+        name = toks[j][1]
+        stop = ";" if kw == "let" else "{"
+        k = j + 1
+        tainted = False
+        while k < body_hi and (k >= len(toks) or toks[k][1] != stop):
+            if k < len(toks):
+                uk, ut, _ = toks[k]
+                if uk == "id" and (
+                    ut in Q1_TYPES or ut in Q1_CTORS or ut in marks
+                ):
+                    tainted = True
+            k += 1
+        if tainted:
+            marks.add(name)
+        i = k
+    return marks
+
+
+def quant_receiver(toks, i, marks):
+    """Is the receiver of the `.field` read at token `i` (the field
+    ident; `i-1` is the `.`) a marked binding, or a direct call of a
+    quantizing ctor / marked callable?"""
+    p = i - 2
+    if p < 0:
+        return False
+    rk, rt, _ = toks[p]
+    if rt in (")", "]"):
+        close, opener = rt, "(" if rt == ")" else "["
+        j = p
+        depth = 1
+        while j > 0 and depth > 0:
+            j -= 1
+            u = toks[j][1]
+            if u == close:
+                depth += 1
+            elif u == opener:
+                depth -= 1
+        if depth > 0 or j == 0:
+            return False
+        ck, ct, _ = toks[j - 1]
+        return ck == "id" and (ct in Q1_CTORS or ct in marks)
+    return rk == "id" and rt in marks
+
+
+def unit_class(ident):
+    """Unit family of an identifier, by `_`-segment (rule U1): None if
+    no family word appears, the family if exactly one does, and the
+    `"*"` conversion sentinel — which exempts the whole operand chain
+    — when two families meet in one name (`block_tokens`,
+    `bytes_per_token`)."""
+    found = None
+    for seg in ident.split("_"):
+        for fam, words in UNIT_FAMILIES:
+            if seg in words:
+                if found is not None and found != fam:
+                    return "*"
+                found = fam
+    return found
+
+
+def unit_lhs(toks, op):
+    """A compound `+=`/`-=`'s left-hand unit family: walk back from
+    the operator to the statement boundary (same boundaries as
+    `acct_lhs`) and classify the first unit-flavored identifier. A
+    conversion name exempts the statement."""
+    j = op
+    while j > 0:
+        j -= 1
+        k, t, _ = toks[j]
+        if t in (";", "{", "}", "=", ","):
+            return None
+        if k == "id" and t not in KEYWORDS:
+            fam = unit_class(t)
+            if fam == "*":
+                return None
+            if fam is not None:
+                return fam
+    return None
+
+
+def unit_left(toks, op):
+    """Walk one operand chain LEFT from the operator at `op`
+    (exclusive; same chain grammar as `acct_left`) and return its
+    unit family."""
+    j = op
+    while j > 0:
+        j -= 1
+        k, t, _ = toks[j]
+        if t in (")", "]"):
+            close, opener = t, "(" if t == ")" else "["
+            depth = 1
+            while j > 0 and depth > 0:
+                j -= 1
+                u = toks[j][1]
+                if u == close:
+                    depth += 1
+                elif u == opener:
+                    depth -= 1
+            if depth > 0:
+                return None
+        elif t in (".", "::"):
+            pass
+        elif k == "id" and t not in KEYWORDS:
+            fam = unit_class(t)
+            if fam == "*":
+                return None
+            if fam is not None:
+                return fam
+        elif k in ("num", "fnum"):
+            pass
+        else:
+            return None
+    return None
+
+
+def unit_right(toks, op):
+    """Walk one operand chain RIGHT from the operator at `op`
+    (exclusive; same chain grammar as `acct_right`) and return its
+    unit family."""
+    j = op + 1
+    while j < len(toks):
+        k, t, _ = toks[j]
+        if t in ("(", "["):
+            opener, close = t, ")" if t == "(" else "]"
+            depth = 1
+            j += 1
+            while j < len(toks) and depth > 0:
+                u = toks[j][1]
+                if u == opener:
+                    depth += 1
+                elif u == close:
+                    depth -= 1
+                j += 1
+            if depth > 0:
+                return None
+        elif t in (".", "::"):
+            j += 1
+        elif k == "id" and t not in KEYWORDS:
+            fam = unit_class(t)
+            if fam == "*":
+                return None
+            if fam is not None:
+                return fam
+            j += 1
+        elif k in ("num", "fnum"):
+            j += 1
+        else:
+            return None
+    return None
+
+
 def scan_file(relpath, src):
     """Return list of (rule, line, what, allowed)."""
     module = relpath.split("/")[0] if "/" in relpath else "root"
@@ -374,6 +649,11 @@ def scan_file(relpath, src):
 
     det = module in DET_MODULES
     acct = stem in A1_FILES or module == "rl"
+    q1 = module != "fp8"
+    q2 = module in Q2_MODULES
+    uni = module in U1_MODULES
+    spans = fn_spans(toks)
+    marks = [quant_marks(toks, s) for s in spans]
     for i, (k, t, line) in enumerate(toks):
         if in_test(line):
             continue
@@ -447,6 +727,74 @@ def scan_file(relpath, src):
             and toks[i + 3][1] == "::"
         ):
             hit("C2", line, "." + t + "(ToWorker::..)")
+        if q1 and k == "id" and t in Q1_TYPES:
+            lit = nxt[1] == "{" and prev[1] not in (
+                ">", "impl", "struct", "enum", "dyn", "for",
+            )
+            newc = (
+                nxt[1] == "::"
+                and i + 2 < len(toks)
+                and toks[i + 2][1] == "new"
+            )
+            if lit or newc:
+                hit("Q1", line, "construct " + t)
+        if (
+            q1
+            and k == "id"
+            and t in Q1_FIELDS
+            and prev[1] == "."
+            and nxt[1] != "("
+        ):
+            s = enclosing_fn(spans, i)
+            if s is not None and quant_receiver(toks, i, marks[s]):
+                hit("Q1", line, "." + t + " read")
+        if q2 and k == "id" and (t in Q2_IDENTS or t == "ScaleSet"):
+            s = enclosing_fn(spans, i)
+            fenced = s is not None and toks[spans[s][1]][1] in Q2_FNS
+            if not fenced:
+                if t in Q2_IDENTS:
+                    hit("Q2", line, "raw " + t)
+                else:
+                    lit = nxt[1] == "{" and prev[1] not in (
+                        ">", "impl", "struct", "enum", "dyn", "for",
+                    )
+                    newc = (
+                        nxt[1] == "::"
+                        and i + 2 < len(toks)
+                        and toks[i + 2][1] == "new"
+                    )
+                    if lit or newc:
+                        hit(
+                            "Q2",
+                            line,
+                            "ScaleSet built outside install path",
+                        )
+        if uni and k == "p" and t in ("+", "-") and nxt[1] == "=":
+            l_fam = unit_lhs(toks, i)
+            r_fam = unit_right(toks, i + 1)
+            if l_fam is not None and r_fam is not None and l_fam != r_fam:
+                hit("U1", line, f"{l_fam} {t}= {r_fam}")
+        if (
+            uni
+            and k == "p"
+            and t in ("+", "-")
+            and nxt[1] != "="
+            and nxt[1] != ">"
+        ):
+            binary = (
+                prev[0] in ("num", "fnum")
+                or prev[1] in (")", "]")
+                or (prev[0] == "id" and prev[1] not in KEYWORDS)
+            )
+            if binary:
+                l_fam = unit_left(toks, i)
+                r_fam = unit_right(toks, i)
+                if (
+                    l_fam is not None
+                    and r_fam is not None
+                    and l_fam != r_fam
+                ):
+                    hit("U1", line, f"{l_fam} {t} {r_fam}")
     return module, finds
 
 
@@ -525,7 +873,7 @@ def main(argv):
     for (rule, module), (v, _a) in sorted(counts.items()):
         if v == 0:
             continue
-        if rule in ("D1", "D2", "C1", "A1", "C2"):
+        if rule in ("D1", "D2", "C1", "A1", "C2", "Q1", "Q2", "U1"):
             print(f"FLOOR: {rule} must be 0 everywhere, {module} has {v}")
             ok = False
         if rule == "P1" and module in CORE_MODULES:

@@ -1,6 +1,6 @@
 //! pallas-lint: a hermetic static-analysis pass over `rust/src`.
 //!
-//! Six rule families, each encoding an invariant this repo has been
+//! Nine rule families, each encoding an invariant this repo has been
 //! bitten by (see DESIGN.md §7 "Static invariants"):
 //!
 //! * **D1** — determinism: no `HashMap`/`HashSet`/`Instant`/
@@ -28,6 +28,25 @@
 //!   `.try_send(ToWorker::..)` must not appear outside the audited
 //!   `WorkerLink` wrapper — smuggling an ordered message around the
 //!   wrapper would bypass the epoch-fence FIFO.
+//! * **Q1** — scale provenance: quantized payloads are sealed inside
+//!   `fp8/`. Outside it, constructing a `QuantizedTensor`/
+//!   `Nvfp4Tensor` (`Type { .. }` / `Type::new`) or reading a payload
+//!   field (`.codes`/`.scales`/`.packed`) through a binding the
+//!   fn-scoped dataflow pass marked as quantized is flagged — the
+//!   only sanctioned exits are the `dequantize`/`matmul_dequant`/
+//!   accessor API, which keeps codes and scales together.
+//! * **Q2** — scale freshness: in `rollout`/`sync`/`coordinator`,
+//!   raw `kscale`/`vscale` plumbing and `ScaleSet` construction are
+//!   confined to the epoch-fenced install path
+//!   (`install_kv_scales`/`sync_kv_scales`/`kv_scales`); everything
+//!   else reads scales through the `ScaleEpoch`-checked handle.
+//! * **U1** — unit typing: in `fp8`/`rollout`/`sync`, a `+`/`-`/
+//!   `+=`/`-=` whose operand chains resolve to *different* unit
+//!   families (tokens/blocks/bytes/epoch) without a conversion-named
+//!   factor in the chain (`block_tokens`, `bytes_per_token`) is
+//!   flagged; the `Tokens`/`Blocks`/`Bytes`/`ScaleEpoch` newtypes in
+//!   `util` carry the same invariant into the type system, the lint
+//!   guards the residual `usize` boundary sites.
 //!
 //! Per-site escape hatch: a `// lint: allow(<rule>): <reason>` comment
 //! on the violation's line or the line immediately above. Allowed
@@ -49,13 +68,18 @@ use std::path::{Path, PathBuf};
 pub const DET_MODULES: [&str; 5] =
     ["rollout", "sync", "coordinator", "testkit", "fp8"];
 /// Modules where the P1 count must be zero (hard floor, baseline-proof).
-pub const CORE_MODULES: [&str; 6] =
-    ["rollout", "sync", "coordinator", "rl", "perfmodel", "root"];
+pub const CORE_MODULES: [&str; 7] =
+    ["rollout", "sync", "coordinator", "rl", "perfmodel", "root", "fp8"];
 /// File stems whose arithmetic is accounting-critical (rule A1); the
 /// `rl` module is in scope as a whole alongside these.
 pub const A1_FILES: [&str; 4] = ["kvcache", "pool", "router", "scheduler"];
+/// Modules where raw KV-scale plumbing is in scope for rule Q2.
+pub const Q2_MODULES: [&str; 3] = ["rollout", "sync", "coordinator"];
+/// Modules where unit-family mixing must be zero (rule U1 hard floor).
+pub const U1_MODULES: [&str; 3] = ["fp8", "rollout", "sync"];
 
-const RULE_NAMES: [&str; 6] = ["D1", "D2", "P1", "C1", "A1", "C2"];
+const RULE_NAMES: [&str; 9] =
+    ["D1", "D2", "P1", "C1", "A1", "C2", "Q1", "Q2", "U1"];
 const C1_METHODS: [&str; 4] = ["send", "try_send", "send_ctl", "send_ordered"];
 /// Identifier segments that mark an accounting quantity (rule A1).
 const ACCT_WORDS: [&str; 11] = [
@@ -67,6 +91,28 @@ const D1_IDENTS: [&str; 5] =
 const FLOAT_CONSTS: [&str; 3] = ["INFINITY", "NEG_INFINITY", "NAN"];
 const PANIC_MACROS: [&str; 4] =
     ["panic", "unreachable", "todo", "unimplemented"];
+/// Sealed quantized-payload types (rule Q1).
+const Q1_TYPES: [&str; 2] = ["QuantizedTensor", "Nvfp4Tensor"];
+/// Their payload fields; reads outside `fp8/` are flagged.
+const Q1_FIELDS: [&str; 3] = ["codes", "packed", "scales"];
+/// Quantizing ctor fns whose results taint a binding as quantized.
+const Q1_CTORS: [&str; 3] =
+    ["quantize_blockwise", "quantize_default", "quantize_nvfp4"];
+/// The epoch-fenced install path: the only fns allowed to touch raw
+/// scales or build a `ScaleSet` (rule Q2).
+const Q2_FNS: [&str; 3] =
+    ["install_kv_scales", "kv_scales", "sync_kv_scales"];
+const Q2_IDENTS: [&str; 2] = ["kscale", "vscale"];
+/// Type constructors stepped over when resolving a param's type.
+const TYPE_WRAPPERS: [&str; 5] = ["Arc", "Box", "Option", "Rc", "Vec"];
+/// Identifier segments naming a unit family (rule U1); an identifier
+/// spanning two families (`block_tokens`) is a conversion factor.
+const UNIT_FAMILIES: [(&str, [&str; 2]); 4] = [
+    ("blocks", ["block", "blocks"]),
+    ("bytes", ["byte", "bytes"]),
+    ("epoch", ["epoch", "epochs"]),
+    ("tokens", ["token", "tokens"]),
+];
 const KEYWORDS: [&str; 31] = [
     "as", "box", "break", "const", "continue", "dyn", "else", "enum",
     "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
@@ -600,6 +646,328 @@ fn acct_right(toks: &[Tok], op: usize) -> Option<String> {
     None
 }
 
+/// One `fn` item's token extent: `sig` is the index of the `fn`
+/// keyword, `name` of the fn's name, `body_lo` of the body's opening
+/// brace, `body_hi` one past its close.
+#[derive(Clone, Copy, Debug)]
+pub struct FnSpan {
+    pub sig: usize,
+    pub name: usize,
+    pub body_lo: usize,
+    pub body_hi: usize,
+}
+
+/// All fn bodies in token space (nested fns get their own spans —
+/// the walk resumes just past each body's opening brace). Paren AND
+/// bracket depth are tracked while looking for the body brace so
+/// `-> [u8; 4]` return types don't read as bodyless trait decls.
+pub fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let named = matches!(toks.get(i + 1), Some(t) if t.kind == Kind::Id);
+        if txt(toks, i) != "fn" || !named {
+            i += 1;
+            continue;
+        }
+        let name = i + 1;
+        let mut j = name + 1;
+        let mut depth = 0i64;
+        let mut open = None;
+        while j < toks.len() {
+            match txt(toks, j) {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(lo) = open else {
+            i = j.max(i + 1);
+            continue;
+        };
+        let mut d = 1i64;
+        let mut k = lo + 1;
+        while k < toks.len() && d > 0 {
+            match txt(toks, k) {
+                "{" => d += 1,
+                "}" => d -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        out.push(FnSpan { sig: i, name, body_lo: lo, body_hi: k });
+        i = lo + 1;
+    }
+    out
+}
+
+/// Index (into `spans`) of the innermost fn whose extent — signature
+/// included, so params count — covers token `i`.
+pub fn enclosing_fn(spans: &[FnSpan], i: usize) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (s, span) in spans.iter().enumerate() {
+        if span.sig < i && i < span.body_hi {
+            let better = match best.and_then(|b| spans.get(b)) {
+                Some(prev) => prev.sig < span.sig,
+                None => true,
+            };
+            if better {
+                best = Some(s);
+            }
+        }
+    }
+    best
+}
+
+/// Fn-scoped dataflow (rule Q1): identifiers that lexically hold a
+/// quantized payload — params typed with a Q1 type (behind `&`/`mut`/
+/// wrapper generics), plus `let`/`for` bindings whose initializer
+/// mentions a Q1 type, a quantizing ctor, or an already-marked name
+/// (one forward pass; chains through re-bindings in source order).
+fn quant_marks(toks: &[Tok], span: &FnSpan) -> BTreeSet<String> {
+    let mut marks: BTreeSet<String> = BTreeSet::new();
+    for i in span.sig..span.body_lo {
+        let Some(tok) = toks.get(i) else { break };
+        if tok.kind != Kind::Id || !Q1_TYPES.contains(&tok.text.as_str()) {
+            continue;
+        }
+        let mut j = i;
+        while j > span.sig {
+            let p = txt(toks, j - 1);
+            if matches!(p, "&" | "mut" | "<" | "(" | "[")
+                || TYPE_WRAPPERS.contains(&p)
+            {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        if j >= 2 && txt(toks, j - 1) == ":" {
+            if let Some(name) = toks.get(j - 2) {
+                if name.kind == Kind::Id
+                    && !KEYWORDS.contains(&name.text.as_str())
+                {
+                    marks.insert(name.text.clone());
+                }
+            }
+        }
+    }
+    let mut i = span.body_lo;
+    while i < span.body_hi {
+        let kw = txt(toks, i);
+        if kw != "let" && kw != "for" {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if kw == "let" && txt(toks, j) == "mut" {
+            j += 1;
+        }
+        let name = match toks.get(j) {
+            Some(t)
+                if t.kind == Kind::Id
+                    && !KEYWORDS.contains(&t.text.as_str()) =>
+            {
+                t.text.clone()
+            }
+            _ => {
+                i = j;
+                continue;
+            }
+        };
+        let stop = if kw == "let" { ";" } else { "{" };
+        let mut k = j + 1;
+        let mut tainted = false;
+        while k < span.body_hi && txt(toks, k) != stop {
+            if let Some(u) = toks.get(k) {
+                if u.kind == Kind::Id
+                    && (Q1_TYPES.contains(&u.text.as_str())
+                        || Q1_CTORS.contains(&u.text.as_str())
+                        || marks.contains(&u.text))
+                {
+                    tainted = true;
+                }
+            }
+            k += 1;
+        }
+        if tainted {
+            marks.insert(name);
+        }
+        i = k;
+    }
+    marks
+}
+
+/// Is the receiver of the `.field` read at token `i` (the field
+/// ident; `i-1` is the `.`) a marked binding, or a direct call of a
+/// quantizing ctor / marked callable?
+fn quant_receiver(
+    toks: &[Tok],
+    i: usize,
+    marks: &BTreeSet<String>,
+) -> bool {
+    let Some(p) = i.checked_sub(2) else { return false };
+    let Some(r) = toks.get(p) else { return false };
+    match r.text.as_str() {
+        close @ (")" | "]") => {
+            let open = if close == ")" { "(" } else { "[" };
+            let mut j = p;
+            let mut depth = 1usize;
+            while j > 0 && depth > 0 {
+                j -= 1;
+                let u = txt(toks, j);
+                if u == close {
+                    depth += 1;
+                } else if u == open {
+                    depth -= 1;
+                }
+            }
+            if depth > 0 || j == 0 {
+                return false;
+            }
+            match toks.get(j - 1) {
+                Some(c) if c.kind == Kind::Id => {
+                    Q1_CTORS.contains(&c.text.as_str())
+                        || marks.contains(&c.text)
+                }
+                _ => false,
+            }
+        }
+        _ => r.kind == Kind::Id && marks.contains(&r.text),
+    }
+}
+
+/// Unit family of an identifier, by `_`-segment (rule U1): `None` if
+/// no family word appears, the family if exactly one does, and the
+/// `"*"` conversion sentinel — which exempts the whole operand chain
+/// — when two families meet in one name (`block_tokens`,
+/// `bytes_per_token`).
+fn unit_class(ident: &str) -> Option<&'static str> {
+    let mut found: Option<&'static str> = None;
+    for seg in ident.split('_') {
+        for (fam, words) in &UNIT_FAMILIES {
+            if words.contains(&seg) {
+                match found {
+                    Some(f) if f != *fam => return Some("*"),
+                    _ => found = Some(fam),
+                }
+            }
+        }
+    }
+    found
+}
+
+/// A compound `+=`/`-=`'s left-hand unit family: walk back from the
+/// operator to the statement boundary (same boundaries as `acct_lhs`)
+/// and classify the first unit-flavored identifier. A conversion name
+/// exempts the statement.
+fn unit_lhs(toks: &[Tok], op: usize) -> Option<&'static str> {
+    let mut j = op;
+    while j > 0 {
+        j -= 1;
+        let tok = toks.get(j)?;
+        let t = tok.text.as_str();
+        if matches!(t, ";" | "{" | "}" | "=" | ",") {
+            return None;
+        }
+        if tok.kind == Kind::Id && !KEYWORDS.contains(&t) {
+            match unit_class(t) {
+                Some("*") => return None,
+                Some(f) => return Some(f),
+                None => {}
+            }
+        }
+    }
+    None
+}
+
+/// Walk one operand chain LEFT from the operator at `op` (exclusive;
+/// same chain grammar as `acct_left`) and return its unit family.
+fn unit_left(toks: &[Tok], op: usize) -> Option<&'static str> {
+    let mut j = op;
+    while j > 0 {
+        j -= 1;
+        let tok = toks.get(j)?;
+        match tok.text.as_str() {
+            close @ (")" | "]") => {
+                let open = if close == ")" { "(" } else { "[" };
+                let mut depth = 1usize;
+                while j > 0 && depth > 0 {
+                    j -= 1;
+                    let u = txt(toks, j);
+                    if u == close {
+                        depth += 1;
+                    } else if u == open {
+                        depth -= 1;
+                    }
+                }
+                if depth > 0 {
+                    return None;
+                }
+            }
+            "." | "::" => {}
+            t => match tok.kind {
+                Kind::Id if !KEYWORDS.contains(&t) => match unit_class(t) {
+                    Some("*") => return None,
+                    Some(f) => return Some(f),
+                    None => {}
+                },
+                Kind::Num | Kind::Fnum => {}
+                _ => return None,
+            },
+        }
+    }
+    None
+}
+
+/// Walk one operand chain RIGHT from the operator at `op` (exclusive;
+/// same chain grammar as `acct_right`) and return its unit family.
+fn unit_right(toks: &[Tok], op: usize) -> Option<&'static str> {
+    let mut j = op + 1;
+    while j < toks.len() {
+        let Some(tok) = toks.get(j) else { return None };
+        match tok.text.as_str() {
+            open @ ("(" | "[") => {
+                let close = if open == "(" { ")" } else { "]" };
+                let mut depth = 1usize;
+                j += 1;
+                while j < toks.len() && depth > 0 {
+                    let u = txt(toks, j);
+                    if u == open {
+                        depth += 1;
+                    } else if u == close {
+                        depth -= 1;
+                    }
+                    j += 1;
+                }
+                if depth > 0 {
+                    return None;
+                }
+            }
+            "." | "::" => j += 1,
+            t => match tok.kind {
+                Kind::Id if !KEYWORDS.contains(&t) => {
+                    match unit_class(t) {
+                        Some("*") => return None,
+                        Some(f) => return Some(f),
+                        None => {}
+                    }
+                    j += 1;
+                }
+                Kind::Num | Kind::Fnum => j += 1,
+                _ => return None,
+            },
+        }
+    }
+    None
+}
+
 /// Scan one file. `relpath` is relative to `rust/src` with `/`
 /// separators; the module is its first path component (or "root").
 pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
@@ -618,6 +986,12 @@ pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
     let mut finds: Vec<Find> = Vec::new();
     let det = DET_MODULES.contains(&module.as_str());
     let acct = A1_FILES.contains(&stem) || module == "rl";
+    let q1 = module != "fp8";
+    let q2 = Q2_MODULES.contains(&module.as_str());
+    let uni = U1_MODULES.contains(&module.as_str());
+    let spans = fn_spans(&toks);
+    let marks: Vec<BTreeSet<String>> =
+        spans.iter().map(|s| quant_marks(&toks, s)).collect();
     for i in 0..toks.len() {
         let Some(tok) = toks.get(i) else { break };
         let (k, t, line) = (tok.kind, tok.text.as_str(), tok.line);
@@ -716,6 +1090,84 @@ pub fn scan_file(relpath: &str, src: &str) -> (String, Vec<Find>) {
             && txt(&toks, i + 3) == "::"
         {
             hit("C2", format!(".{t}(ToWorker::..)"));
+        }
+        if q1 && k == Kind::Id && Q1_TYPES.contains(&t) {
+            let lit = nxt == "{"
+                && !matches!(
+                    prev,
+                    ">" | "impl" | "struct" | "enum" | "dyn" | "for"
+                );
+            let newc = nxt == "::" && txt(&toks, i + 2) == "new";
+            if lit || newc {
+                hit("Q1", format!("construct {t}"));
+            }
+        }
+        if q1
+            && k == Kind::Id
+            && Q1_FIELDS.contains(&t)
+            && prev == "."
+            && nxt != "("
+        {
+            let marked = enclosing_fn(&spans, i)
+                .and_then(|s| marks.get(s))
+                .is_some_and(|m| quant_receiver(&toks, i, m));
+            if marked {
+                hit("Q1", format!(".{t} read"));
+            }
+        }
+        if q2 && k == Kind::Id && (Q2_IDENTS.contains(&t) || t == "ScaleSet")
+        {
+            let fenced = enclosing_fn(&spans, i)
+                .and_then(|s| spans.get(s))
+                .is_some_and(|s| Q2_FNS.contains(&txt(&toks, s.name)));
+            if !fenced {
+                if Q2_IDENTS.contains(&t) {
+                    hit("Q2", format!("raw {t}"));
+                } else {
+                    let lit = nxt == "{"
+                        && !matches!(
+                            prev,
+                            ">" | "impl" | "struct" | "enum" | "dyn" | "for"
+                        );
+                    let newc = nxt == "::" && txt(&toks, i + 2) == "new";
+                    if lit || newc {
+                        hit(
+                            "Q2",
+                            "ScaleSet built outside install path"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+        }
+        if uni && k == Kind::Punct && (t == "+" || t == "-") && nxt == "=" {
+            if let (Some(l), Some(r)) =
+                (unit_lhs(&toks, i), unit_right(&toks, i + 1))
+            {
+                if l != r {
+                    hit("U1", format!("{l} {t}= {r}"));
+                }
+            }
+        }
+        if uni
+            && k == Kind::Punct
+            && (t == "+" || t == "-")
+            && nxt != "="
+            && nxt != ">"
+        {
+            let binary = prev_kind == Kind::Num
+                || prev_kind == Kind::Fnum
+                || matches!(prev, ")" | "]")
+                || (prev_kind == Kind::Id && !KEYWORDS.contains(&prev));
+            if binary {
+                if let (Some(l), Some(r)) =
+                    (unit_left(&toks, i), unit_right(&toks, i))
+                {
+                    if l != r {
+                        hit("U1", format!("{l} {t} {r}"));
+                    }
+                }
+            }
         }
     }
     (module, finds)
@@ -832,7 +1284,10 @@ pub fn run(root: &Path, write: bool, verbose: bool) -> io::Result<bool> {
         if *v == 0 {
             continue;
         }
-        if matches!(*rule, "D1" | "D2" | "C1" | "A1" | "C2") {
+        if matches!(
+            *rule,
+            "D1" | "D2" | "C1" | "A1" | "C2" | "Q1" | "Q2" | "U1"
+        ) {
             println!("FLOOR: {rule} must be 0 everywhere, {module} has {v}");
             ok = false;
         }

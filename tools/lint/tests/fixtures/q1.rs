@@ -1,0 +1,33 @@
+//! Q1 fixture: quantized-payload provenance outside `fp8/`.
+
+use crate::fp8::{quantize_blockwise, QuantizedTensor};
+
+fn peek(q: &QuantizedTensor) -> usize {
+    let raw = q.codes; // flagged: field read through a typed param
+    raw.len()
+}
+
+fn copy_scales(t: &Tensor) -> Vec<f32> {
+    let copied = quantize_blockwise(t);
+    copied.scales // flagged: binding tainted by the ctor
+}
+
+fn chained(t: &Tensor) -> usize {
+    quantize_blockwise(t).codes.len() // flagged: ctor-call receiver
+}
+
+fn forge(rows: usize) -> QuantizedTensor {
+    QuantizedTensor { rows } // flagged: construction outside fp8
+}
+
+fn audited(q: &QuantizedTensor) -> usize {
+    // lint: allow(Q1): parity harness compares raw codes
+    q.codes.len()
+}
+
+fn sanctioned(d: &QuantizedTensor, cfg: &Config) -> Vec<f32> {
+    let out = d.scales(); // accessor call, not a field read
+    let n = cfg.codes; // unmarked receiver: not a quantized payload
+    let _ = n;
+    out
+}

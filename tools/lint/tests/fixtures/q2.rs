@@ -1,0 +1,33 @@
+//! Q2 fixture: KV-scale freshness — raw plumbing vs the fenced path.
+
+pub struct Raw {
+    kscale: f32, // flagged: raw scale field outside the install path
+    pub epoch: u64,
+}
+
+pub struct Holder {
+    scales: ScaleSet,
+}
+
+fn plumb(engine: &mut Engine, k: f32) {
+    let fresh = ScaleSet::new(k, k, engine.epoch()); // flagged
+    engine.kscale = k; // flagged: raw scale write
+    engine.set(fresh.kscale()); // flagged: raw ident even as a call
+}
+
+fn install_kv_scales(engine: &mut Engine, kscale: f32, vscale: f32) {
+    engine.scales = ScaleSet::new(kscale, vscale, engine.next_epoch());
+}
+
+fn kv_scales(engine: &Engine) -> (f32, f32) {
+    engine.scales.read(engine.epoch())
+}
+
+fn audited(engine: &Engine) -> f32 {
+    // lint: allow(Q2): calibration probe reads the raw scale
+    engine.vscale
+}
+
+fn identity_is_fine() -> ScaleSet {
+    ScaleSet::identity()
+}

@@ -1,0 +1,30 @@
+//! U1 fixture: unit-family mixing without an explicit conversion.
+
+fn mixed(n_tokens: usize, free_blocks: usize) -> usize {
+    n_tokens + free_blocks // flagged: tokens + blocks
+}
+
+fn drift(budget_bytes: usize, used_blocks: usize) -> usize {
+    budget_bytes - used_blocks // flagged: bytes - blocks
+}
+
+fn creep(seq_tokens: &mut usize, epoch: u64) {
+    *seq_tokens += epoch as usize; // flagged: tokens += epoch
+}
+
+fn audited(prompt_tokens: usize, kv_blocks: usize) -> usize {
+    // lint: allow(U1): fixture-audited intentional mix
+    prompt_tokens + kv_blocks
+}
+
+fn converted(seq_tokens: usize, geo: &Geometry) -> usize {
+    seq_tokens + geo.block_tokens // conversion factor exempts the chain
+}
+
+fn same_family(free_blocks: usize, used_blocks: usize) -> usize {
+    free_blocks + used_blocks
+}
+
+fn literal(seq_tokens: usize) -> usize {
+    seq_tokens + 1
+}
