@@ -49,6 +49,9 @@ fn main() -> Result<()> {
     cfg.max_new_tokens = 6;
     cfg.rollout_replicas = args.usize_or("replicas", 1)?;
     cfg.pipeline_depth = args.usize_or("pipeline", 0)?;
+    // --prefix-sharing: GRPO groups share prompt KV copy-on-write and
+    // skip redundant prefill (bit-identical outputs; DESIGN.md §10)
+    cfg.prefix_sharing = args.bool("prefix-sharing");
     if cfg.pipeline_depth > 0 {
         // pipelining rides the streaming pool; the staleness window
         // defaults to exactly the schedule's lag
@@ -59,13 +62,14 @@ fn main() -> Result<()> {
 
     println!(
         "e2e RL: arch={} rollout={} train={} steps={} replicas={} \
-         pipeline={}",
+         pipeline={} prefix_sharing={}",
         cfg.arch,
         cfg.rollout_variant,
         cfg.train_variant,
         cfg.steps,
         cfg.rollout_replicas,
-        cfg.pipeline_depth
+        cfg.pipeline_depth,
+        cfg.prefix_sharing
     );
     let rt = Arc::new(Runtime::new(args.str_or("artifacts", "artifacts"))?);
     let mut rl = RlLoop::new(rt, cfg)?;

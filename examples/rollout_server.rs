@@ -38,10 +38,18 @@ fn main() -> Result<()> {
         let bytes_per_token_bf16 = 2 * 4 * 2 * 32 * 2; // 2*L*Hkv*Dh*2B
         cfg.kv_budget_bytes =
             Some(Bytes::new(14 * 64 * bytes_per_token_bf16));
+        // --prefix-sharing: duplicate prompts share KV copy-on-write
+        // and route to a home replica (outputs bit-identical)
+        cfg.prefix_sharing = args.bool("prefix-sharing");
+        let policy = if cfg.prefix_sharing {
+            RoutePolicy::PrefixAffinity
+        } else {
+            RoutePolicy::LeastLoaded
+        };
         let mut pool = EnginePool::new(
             PoolConfig {
                 n_replicas,
-                policy: RoutePolicy::LeastLoaded,
+                policy,
                 engine: cfg,
             },
             factory.clone(),

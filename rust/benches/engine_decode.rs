@@ -89,10 +89,90 @@ fn main() {
         );
         variants.insert(variant.to_string(), Json::Obj(v));
     }
+    // ---- grouped prefill: GRPO-shaped workload, shared vs unshared ----
+    // 4 prompts x G=8 completions each; with prefix sharing on, every
+    // group pays ~one prefill and shares its prompt KV copy-on-write.
+    // Outputs are asserted bit-identical across the knob, so the two
+    // rows measure the SAME work.
+    let mut grouped: BTreeMap<String, Json> = BTreeMap::new();
+    let mut baseline_tokens: Option<Vec<Vec<i32>>> = None;
+    for (mode, sharing) in [("unshared", false), ("shared", true)] {
+        let mut cfg = EngineConfig::new("dense", "kvfp8");
+        cfg.prefix_sharing = sharing;
+        let mut engine = match HloEngine::new(rt.clone(), cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skip grouped_prefill/{mode}: {e}");
+                continue;
+            }
+        };
+        let mut rng = Pcg64::new(17);
+        let mut reqs: Vec<Request> = Vec::new();
+        for p in 0..4u64 {
+            let prompt = vec![
+                12,
+                rng.below(10) as i32,
+                10,
+                rng.below(10) as i32,
+                11,
+            ];
+            for g in 0..8u64 {
+                reqs.push(Request {
+                    id: 1 + p * 8 + g,
+                    prompt: prompt.clone(),
+                    params: SamplingParams {
+                        max_new_tokens: 14 + (g % 3) as usize,
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+        let _ = engine.generate(reqs.clone()).unwrap(); // warm
+        let steps0 = engine.stats.decode_steps;
+        let saved0 = engine.stats.prefill_tokens_saved;
+        let shared0 = engine.stats.kv_bytes_shared;
+        let t0 = Instant::now();
+        let done = engine.generate(reqs).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+        let steps = (engine.stats.decode_steps - steps0).max(1);
+        let saved = engine.stats.prefill_tokens_saved - saved0;
+        let kv_shared = engine.stats.kv_bytes_shared - shared0;
+        let toks: Vec<Vec<i32>> =
+            done.iter().map(|c| c.tokens.clone()).collect();
+        match &baseline_tokens {
+            None => baseline_tokens = Some(toks),
+            Some(base) => assert_eq!(
+                base, &toks,
+                "prefix sharing changed sampled tokens"
+            ),
+        }
+        println!(
+            "bench engine/grouped_prefill[{mode:8}]: {tokens} tokens \
+             in {dt:.2}s = {:.1} tok/s | {steps} decode steps | \
+             prefill_tokens_saved={saved} kv_bytes_shared={kv_shared}",
+            tokens as f64 / dt,
+        );
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("tokens".into(), Json::Num(tokens as f64));
+        m.insert("seconds".into(), Json::Num(dt));
+        m.insert("decode_steps".into(), Json::Num(steps as f64));
+        m.insert(
+            "prefill_tokens_saved".into(),
+            Json::Num(saved as f64),
+        );
+        m.insert(
+            "kv_bytes_shared".into(),
+            Json::Num(kv_shared as f64),
+        );
+        grouped.insert(mode.to_string(), Json::Obj(m));
+    }
+
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
     root.insert("bench".into(), Json::Str("engine_decode".into()));
     root.insert("backend".into(), Json::Str(rt.backend_name().into()));
     root.insert("variants".into(), Json::Obj(variants));
+    root.insert("grouped_prefill".into(), Json::Obj(grouped));
     let path = "BENCH_engine_decode.json";
     match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
         Ok(()) => eprintln!("wrote {path}"),

@@ -61,7 +61,8 @@ fn main() {
     Bench::new("kvcache/alloc+64 extends+release x64 seqs")
         .target(Duration::from_millis(400))
         .run(|| {
-            let mut m = KvBlockManager::new(geo, Blocks::new(4096));
+            let mut m =
+                KvBlockManager::new(geo, Blocks::new(4096)).unwrap();
             for id in 0..64u64 {
                 m.allocate(id, Tokens::new(128));
             }

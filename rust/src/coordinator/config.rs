@@ -51,6 +51,12 @@ pub struct ExperimentConfig {
     /// depth 1 in steady state while linearly increasing staleness —
     /// `RlLoop::new` warns. See DESIGN.md §6.
     pub pipeline_depth: usize,
+    /// shared-prefix KV reuse (DESIGN.md §10): GRPO group members
+    /// share their prompt's KV blocks copy-on-write, the engine skips
+    /// prefill for shared-prefix hits, and the pool routes by prompt
+    /// hash so a group lands on one replica. Outputs are bit-identical
+    /// either way — this is purely a memory/FLOPs knob.
+    pub prefix_sharing: bool,
     /// bounded-staleness window for the TIS/MIS epoch check: a training
     /// batch may contain completions whose behavior-policy epoch tag is
     /// up to this many weight epochs BEHIND the epoch the loop last
@@ -109,6 +115,7 @@ impl ExperimentConfig {
             getb("rollout_streaming", c.rollout_streaming);
         c.pipeline_depth =
             getf("pipeline_depth", c.pipeline_depth as f64) as usize;
+        c.prefix_sharing = getb("prefix_sharing", c.prefix_sharing);
         c.max_epoch_staleness = getf(
             "max_epoch_staleness",
             c.max_epoch_staleness as f64,
@@ -151,6 +158,7 @@ impl ExperimentConfig {
             rollout_replicas: 1,
             rollout_streaming: false,
             pipeline_depth: 0,
+            prefix_sharing: false,
             max_epoch_staleness: 0,
             seed: 1234,
             max_digits: 2,

@@ -166,7 +166,17 @@ impl RlLoop {
         }
         let engine_cfg = EngineConfig {
             seed: cfg.seed,
+            prefix_sharing: cfg.prefix_sharing,
             ..EngineConfig::new(&cfg.arch, &cfg.rollout_variant)
+        };
+        // prefix sharing only pays off when a GRPO group lands on one
+        // replica, so the knob also flips placement to content-
+        // addressed routing (outputs are placement-invariant either
+        // way — per-request RNG streams)
+        let policy = if cfg.prefix_sharing {
+            RoutePolicy::PrefixAffinity
+        } else {
+            RoutePolicy::LeastLoaded
         };
         // streaming admission needs the pool's session API, so the
         // knob forces the pool topology even at one replica
@@ -175,7 +185,7 @@ impl RlLoop {
             Rollout::Pool(EnginePool::new(
                 PoolConfig {
                     n_replicas: cfg.rollout_replicas,
-                    policy: RoutePolicy::LeastLoaded,
+                    policy,
                     engine: engine_cfg,
                 },
                 // replicas MUST load from the same manifest source as

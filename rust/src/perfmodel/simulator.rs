@@ -94,7 +94,12 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
             KvPrecision::Bf16
         },
     };
-    let kv = KvBlockManager::from_budget(geo, cfg.kv_budget());
+    // a degenerate model descriptor (zero-sized geometry) has nothing
+    // meaningful to simulate; report zeros instead of panicking
+    let Ok(kv) = KvBlockManager::from_budget(geo, cfg.kv_budget())
+    else {
+        return SimReport::default();
+    };
     let mut sched = Scheduler::new(kv, cfg.max_batch);
     let mut rng = Pcg64::new(cfg.seed);
 

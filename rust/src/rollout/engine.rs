@@ -58,6 +58,12 @@ pub struct EngineConfig {
     pub kv_budget_bytes: Option<Bytes>,
     pub block_tokens: usize,
     pub seed: u64,
+    /// Shared-prefix KV reuse (DESIGN.md §10): admission shares prompt
+    /// blocks copy-on-write, and the engine skips prefill work for a
+    /// newly admitted request whose prompt prefix is already resident
+    /// in a device KV row. A pure memory/FLOPs optimization — outputs
+    /// are bit-identical with it on or off.
+    pub prefix_sharing: bool,
 }
 
 impl EngineConfig {
@@ -76,8 +82,19 @@ impl EngineConfig {
             kv_budget_bytes: None,
             block_tokens: 16,
             seed: 1234,
+            prefix_sharing: false,
         }
     }
+}
+
+/// What a device KV row currently holds: the token prefix whose KV is
+/// resident there, and the weight epoch it was computed under (KV from
+/// an older epoch is NOT reusable — a weight/scale install changes the
+/// cache numerics, so aliasing stale rows would break bit-identity
+/// with a from-scratch prefill).
+struct RowPrefix {
+    tokens: Vec<i32>,
+    epoch: u64,
 }
 
 struct Slot {
@@ -121,6 +138,12 @@ pub struct EngineStats {
     /// host<->device bytes moved during the most recent decode step
     /// of the current `generate` call (0 until its first decode step)
     pub host_bytes_last_step: u64,
+    /// prompt tokens whose prefill compute was skipped by aliasing an
+    /// already-resident shared-prefix KV row (prefix sharing only)
+    pub prefill_tokens_saved: u64,
+    /// prompt-KV bytes served by sharing already-resident blocks
+    /// instead of storing a private copy (block-manager accounting)
+    pub kv_bytes_shared: u64,
 }
 
 impl EngineStats {
@@ -134,6 +157,8 @@ impl EngineStats {
         self.preemptions += o.preemptions;
         self.host_bytes_moved += o.host_bytes_moved;
         self.host_bytes_last_step += o.host_bytes_last_step;
+        self.prefill_tokens_saved += o.prefill_tokens_saved;
+        self.kv_bytes_shared += o.kv_bytes_shared;
     }
 
     /// Move `n` sampled-but-undelivered tokens from `tokens_generated`
@@ -172,6 +197,41 @@ fn download(
     Ok(a)
 }
 
+/// Apply `(src, dst, len)` element-range copies to a device buffer:
+/// device-side when the backend supports it (RefBackend — zero host
+/// traffic), else via a download / copy / re-upload round trip (the
+/// traffic is counted like any other host crossing).
+fn copy_ranges_in(
+    rt: &Runtime,
+    stats: &mut EngineStats,
+    buf: &mut DeviceBuffer,
+    ranges: &[(usize, usize, usize)],
+) -> Result<()> {
+    if buf.copy_within_ranges(ranges)? {
+        return Ok(());
+    }
+    let mut a = download(stats, buf)?;
+    {
+        let data = a.as_f32_mut()?;
+        for &(src, dst, len) in ranges {
+            let (Some(src_end), Some(dst_end)) =
+                (src.checked_add(len), dst.checked_add(len))
+            else {
+                bail!("kv row copy: range overflow");
+            };
+            if src_end > data.len() || dst_end > data.len() {
+                bail!(
+                    "kv row copy: range out of bounds ({src}+{len} / \
+                     {dst}+{len} of {})",
+                    data.len()
+                );
+            }
+            data.copy_within(src..src_end, dst);
+        }
+    }
+    upload_into(rt, stats, buf, &a)
+}
+
 pub struct HloEngine {
     rt: Arc<Runtime>,
     cfg: EngineConfig,
@@ -196,6 +256,13 @@ pub struct HloEngine {
     /// true when the scales changed since ks_buf/vs_buf were staged
     scales_dirty: bool,
     slots: Vec<Option<Slot>>,
+    /// per device-KV-row: which token prefix is resident there (and
+    /// under which weight epoch) — the lookup table behind the
+    /// shared-prefix prefill-skip path (`find_resident_prefix_row`)
+    row_prefix: Vec<Option<RowPrefix>>,
+    /// `sched.kv.shared_block_hits` high-water mark already folded
+    /// into `stats.kv_bytes_shared`
+    kv_shared_blocks_seen: u64,
     sched: Scheduler,
     preempt_counts: std::collections::BTreeMap<u64, u32>,
     /// bumped by every successful weight / KV-scale install; stamps
@@ -227,16 +294,17 @@ impl HloEngine {
             precision: cfg.kv_precision,
         };
         let kv = match cfg.kv_budget_bytes {
-            Some(budget) => KvBlockManager::from_budget(geo, budget),
+            Some(budget) => KvBlockManager::from_budget(geo, budget)?,
             None => {
                 // capacity == the dense cache the artifact carries
                 KvBlockManager::new(
                     geo,
                     Blocks::new(b * max_seq / cfg.block_tokens),
-                )
+                )?
             }
         };
-        let sched = Scheduler::new(kv, b);
+        let mut sched = Scheduler::new(kv, b);
+        sched.set_prefix_sharing(cfg.prefix_sharing);
         let kv_shape = vec![
             geo.n_layers,
             b,
@@ -277,6 +345,8 @@ impl HloEngine {
             scales: ScaleSet::identity(),
             scales_dirty: false,
             slots: (0..b).map(|_| None).collect(),
+            row_prefix: (0..b).map(|_| None).collect(),
+            kv_shared_blocks_seen: 0,
             sched,
             preempt_counts: std::collections::BTreeMap::new(),
             weight_epoch: 0,
@@ -546,24 +616,109 @@ impl HloEngine {
         Pcg64::new(sampler::request_seed(self.cfg.seed, req_id))
     }
 
-    /// Admit waiting requests into free slots.
+    /// Fold newly shared block-manager hits into `kv_bytes_shared`
+    /// (called after every admission round; a no-op with sharing off).
+    fn note_shared_blocks(&mut self) {
+        let hits = self.sched.kv.shared_block_hits;
+        let delta = hits.saturating_sub(self.kv_shared_blocks_seen);
+        self.kv_shared_blocks_seen = hits;
+        let per_block =
+            self.sched.kv.geometry.bytes_per_block().get() as u64;
+        self.stats.kv_bytes_shared = self
+            .stats
+            .kv_bytes_shared
+            .saturating_add(delta.saturating_mul(per_block));
+    }
+
+    /// A device KV row whose resident prefix covers this prompt's
+    /// first `plen-1` tokens under the CURRENT weight epoch. Those are
+    /// exactly the positions a full chunked prefill would write before
+    /// the request samples its first token, so aliasing the row lets
+    /// admission fast-forward past the whole teacher-forced replay.
+    fn find_resident_prefix_row(&self, prompt: &[i32]) -> Option<usize> {
+        let need = prompt.len().checked_sub(1)?;
+        if need == 0 {
+            return None; // nothing to skip for a 1-token prompt
+        }
+        self.row_prefix.iter().position(|rp| {
+            rp.as_ref().is_some_and(|rp| {
+                rp.epoch == self.weight_epoch
+                    && rp.tokens.len() >= need
+                    && rp.tokens.get(..need) == prompt.get(..need)
+            })
+        })
+    }
+
+    /// Copy device KV row `src` onto row `dst` in both caches. The
+    /// dense layout is [n_layers, b, n_kv_heads, max_seq, d_head], so
+    /// each layer contributes one contiguous per-row chunk. Copying
+    /// the FULL row is safe: positions at or beyond the shared prefix
+    /// hold junk that the causal mask keeps unattended until decode
+    /// overwrites them — the same argument the prefill wave's pad
+    /// positions rely on.
+    fn copy_kv_row(&mut self, src: usize, dst: usize) -> Result<()> {
+        let geo = &self.sched.kv.geometry;
+        let chunk = geo.n_kv_heads * self.max_seq * geo.d_head;
+        let ranges: Vec<(usize, usize, usize)> = (0..geo.n_layers)
+            .map(|l| {
+                ((l * self.b + src) * chunk, (l * self.b + dst) * chunk, chunk)
+            })
+            .collect();
+        copy_ranges_in(&self.rt, &mut self.stats, &mut self.kc, &ranges)?;
+        copy_ranges_in(&self.rt, &mut self.stats, &mut self.vc, &ranges)
+    }
+
+    /// Admit waiting requests into free slots. With prefix sharing on,
+    /// a request whose prompt prefix is already resident in a device
+    /// KV row skips the teacher-forced prompt replay: the row is
+    /// aliased (copied device-side) and the slot starts at the last
+    /// prompt token. Bit-exact vs the replay path: KV content per
+    /// position is a pure function of (token prefix, weights, scales),
+    /// prompt replay never consumes sampler RNG, and the first sampled
+    /// token comes from the same position either way.
     fn admit_into_slots(&mut self) -> Result<()> {
         let admitted = self.sched.admit();
+        self.note_shared_blocks();
         for req in admitted {
             let rng = self.slot_rng(req.id);
-            let first = *req
-                .prompt
-                .first()
-                .context("admitted request has an empty prompt")?;
-            let Some(slot) =
-                self.slots.iter_mut().find(|s| s.is_none())
+            let plen = req.prompt.len();
+            let Some(i) = self.slots.iter().position(|s| s.is_none())
             else {
                 bail!("scheduler admitted beyond slot capacity");
             };
+            let mut start = 0usize;
+            if self.cfg.prefix_sharing && plen >= 2 {
+                if let Some(src) =
+                    self.find_resident_prefix_row(&req.prompt)
+                {
+                    if src != i {
+                        self.copy_kv_row(src, i)?;
+                    }
+                    start = plen - 1;
+                    self.stats.prefill_tokens_saved += start as u64;
+                }
+            }
+            let feed = *req
+                .prompt
+                .get(start)
+                .context("admitted request has an empty prompt")?;
+            if let Some(rp) = self.row_prefix.get_mut(i) {
+                *rp = Some(RowPrefix {
+                    tokens: req
+                        .prompt
+                        .get(..start)
+                        .unwrap_or(&[])
+                        .to_vec(),
+                    epoch: self.weight_epoch,
+                });
+            }
+            let Some(slot) = self.slots.get_mut(i) else {
+                bail!("slot index out of range");
+            };
             *slot = Some(Slot {
-                next_feed: first,
-                cursor: 1,
-                pos: 0,
+                next_feed: feed,
+                cursor: start + 1,
+                pos: start,
                 generated: Vec::new(),
                 logprobs: Vec::new(),
                 logprobs_full: Vec::new(),
@@ -581,6 +736,7 @@ impl HloEngine {
         done: &mut Vec<Completion>,
     ) -> Result<usize> {
         let admitted = self.sched.admit();
+        self.note_shared_blocks();
         if admitted.is_empty() {
             return Ok(0);
         }
@@ -624,6 +780,12 @@ impl HloEngine {
         let logits = download(&mut self.stats, &logits_buf)?;
         self.kc = kc;
         self.vc = vc;
+        // the wave replaced both cache buffers wholesale: whatever the
+        // old rows held is gone, so the resident-prefix registry starts
+        // over from this wave's rows
+        for rp in self.row_prefix.iter_mut() {
+            *rp = None;
+        }
         // install slots; prompt tokens 0..plen-1 are already in cache;
         // the scheduler allocated plen tokens. sample the first response
         // token from logits[:, plen-1].
@@ -631,6 +793,15 @@ impl HloEngine {
         let n_admitted = admitted.len();
         for (i, req) in admitted.into_iter().enumerate() {
             let plen = req.prompt.len();
+            // row i now holds this prompt's full KV (positions
+            // 0..plen-1), usable as a shared-prefix source until the
+            // row is clobbered or the weight epoch moves
+            if let Some(rp) = self.row_prefix.get_mut(i) {
+                *rp = Some(RowPrefix {
+                    tokens: req.prompt.clone(),
+                    epoch: self.weight_epoch,
+                });
+            }
             let base = (i * self.prompt_len + plen - 1) * self.vocab;
             let row = lg
                 .get(base..base + self.vocab)
@@ -675,6 +846,19 @@ impl HloEngine {
         }
         self.stats.decode_steps += 1;
         let bytes0 = self.stats.host_bytes_moved;
+        // the decode artifact executes ALL b rows every step: an empty
+        // slot feeds token 0 at position 0, clobbering position 0 of
+        // its row — so whatever prefix was resident there is invalid
+        // the moment this step runs. (A row freed THIS step stays
+        // aliasable until the next decode, and `step` admits before
+        // decoding, so a group member can still alias a just-freed
+        // sibling row.)
+        for (rp, s) in self.row_prefix.iter_mut().zip(self.slots.iter())
+        {
+            if s.is_none() {
+                *rp = None;
+            }
+        }
         let mut tokens = vec![0i32; self.b];
         let mut pos = vec![0i32; self.b];
         // sequences consuming a token BEYOND their preallocated prompt
@@ -779,6 +963,30 @@ impl HloEngine {
                 continue;
             };
             slot.pos += 1;
+            // this step wrote the slot's fed token's KV at pos-1:
+            // extend the row's resident-prefix record over any prompt
+            // tokens now in cache (generated tokens are per-sequence,
+            // never shareable, so the record stops at the prompt)
+            let resident = slot.pos.min(slot.req.prompt.len());
+            if let Some(rp_slot) = self.row_prefix.get_mut(i) {
+                match rp_slot {
+                    Some(rp) if rp.epoch == self.weight_epoch => {
+                        while rp.tokens.len() < resident {
+                            match slot.req.prompt.get(rp.tokens.len()) {
+                                Some(&t) => rp.tokens.push(t),
+                                None => break,
+                            }
+                        }
+                    }
+                    // a stale-epoch or invalidated record stays dead:
+                    // the row's early positions may hold KV computed
+                    // under older weights, so it must never be offered
+                    // as a share source again until re-seeded by a
+                    // wave or a fresh admission
+                    Some(_) => *rp_slot = None,
+                    None => {}
+                }
+            }
             if let Some(&t) = slot.req.prompt.get(slot.cursor) {
                 // still prefilling: feed next prompt token, ignore
                 // logits
@@ -829,7 +1037,11 @@ impl HloEngine {
             None
         };
         if let Some(reason) = finish {
-            self.sched.finish(slot.req.id);
+            // the completion path must finish each sequence EXACTLY
+            // once — a rejected finish here means the slot and the
+            // scheduler disagree about who owns the id
+            let finished = self.sched.finish(slot.req.id);
+            assert!(finished, "request {} finished twice", slot.req.id);
             done.push(Completion {
                 id: slot.req.id,
                 prompt: slot.req.prompt.clone(),

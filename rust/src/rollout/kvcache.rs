@@ -1,10 +1,28 @@
-//! Paged KV-cache block manager (the vLLM-style allocator).
+//! Paged KV-cache block manager (the vLLM-style allocator), with
+//! refcounted copy-on-write prefix sharing.
 //!
 //! This is the substrate behind the paper's §2.3 performance analysis:
 //! KV-cache *capacity* bounds concurrency, and when the active set's
 //! context grows past capacity the scheduler must preempt sequences
 //! (recompute-style eviction), wasting work. FP8 KV storage halves
 //! bytes/token, doubling capacity — the mechanism behind the 38% gain.
+//!
+//! RL rollouts are the best possible case for prefix reuse on top of
+//! that: a DAPO/GRPO group samples G completions from the *same*
+//! prompt. [`KvBlockManager::allocate_shared`] looks the prompt up in
+//! a prefix-hash registry, bumps refcounts on the blocks already
+//! holding that prefix's KV, and takes only the tail from the free
+//! list — so a group of G pays ~1/G of the prompt KV, multiplicative
+//! with the FP8 halving. Appending into a shared block triggers
+//! copy-on-write; a block returns to the free list only when its
+//! refcount hits zero, so evicting one group member can never free a
+//! block another member still references. See DESIGN.md §10.
+//!
+//! The manager is *accounting-only*: the engine's device cache is a
+//! dense per-row tensor, and the row-aliasing fast path (engine.rs)
+//! moves the actual KV bytes. The block tables here model capacity,
+//! drive admission/preemption, and carry the sharing bookkeeping the
+//! engine's counters are derived from.
 //!
 //! Used by both the real HLO-backed engine (tiny models) and the H100
 //! cost-model simulator (8B/30B descriptors), so preemption dynamics in
@@ -31,6 +49,31 @@ impl KvPrecision {
     }
 }
 
+/// A zero-sized cache geometry. Every constructor validates up front
+/// so `blocks_in` / `from_budget` return this typed error instead of
+/// panicking on the divide by `bytes_per_block() == 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvGeometryError {
+    ZeroLayers,
+    ZeroKvHeads,
+    ZeroHeadDim,
+    ZeroBlockTokens,
+}
+
+impl std::fmt::Display for KvGeometryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let what = match self {
+            KvGeometryError::ZeroLayers => "n_layers",
+            KvGeometryError::ZeroKvHeads => "n_kv_heads",
+            KvGeometryError::ZeroHeadDim => "d_head",
+            KvGeometryError::ZeroBlockTokens => "block_tokens",
+        };
+        write!(f, "invalid KV geometry: {what} must be non-zero")
+    }
+}
+
+impl std::error::Error for KvGeometryError {}
+
 /// Static geometry of the cache.
 #[derive(Clone, Copy, Debug)]
 pub struct KvGeometry {
@@ -43,6 +86,25 @@ pub struct KvGeometry {
 }
 
 impl KvGeometry {
+    /// Reject zero-sized geometries (0 layers/heads/head-dim or
+    /// `block_tokens == 0`): every dimension participates in a
+    /// divisor somewhere downstream.
+    pub fn validate(&self) -> Result<(), KvGeometryError> {
+        if self.n_layers == 0 {
+            return Err(KvGeometryError::ZeroLayers);
+        }
+        if self.n_kv_heads == 0 {
+            return Err(KvGeometryError::ZeroKvHeads);
+        }
+        if self.d_head == 0 {
+            return Err(KvGeometryError::ZeroHeadDim);
+        }
+        if self.block_tokens == 0 {
+            return Err(KvGeometryError::ZeroBlockTokens);
+        }
+        Ok(())
+    }
+
     /// Bytes of K+V for one token across all layers.
     pub fn bytes_per_token(&self) -> Bytes {
         Bytes::new(
@@ -58,10 +120,31 @@ impl KvGeometry {
     }
 
     /// How many blocks fit in a byte budget (the bytes -> blocks
-    /// conversion point for rule U1).
-    pub fn blocks_in(&self, budget: Bytes) -> Blocks {
-        Blocks::new(budget.get() / self.bytes_per_block().get())
+    /// conversion point for rule U1). Errors on a zero-sized geometry
+    /// instead of panicking on the division.
+    pub fn blocks_in(
+        &self,
+        budget: Bytes,
+    ) -> Result<Blocks, KvGeometryError> {
+        self.validate()?;
+        Ok(Blocks::new(budget.get() / self.bytes_per_block().get()))
     }
+}
+
+/// FNV-1a over a token stream — the prefix-registry key. Stable
+/// across runs and processes (no `RandomState`), cheap, and good
+/// enough for a registry whose lookups are verified token-by-token
+/// (a hash collision only costs a missed share, never a wrong one).
+/// Also used by the router's prefix-affinity placement.
+pub fn prefix_hash(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 #[derive(Debug)]
@@ -70,32 +153,78 @@ struct SeqAlloc {
     tokens: usize,
 }
 
-/// Block allocator with per-sequence block tables.
+/// A registered shareable prefix: the exact tokens (lookups verify
+/// against them — the hash only routes) and the blocks holding their
+/// KV, in prefix order.
+#[derive(Debug)]
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    blocks: Vec<usize>,
+}
+
+/// What a shared allocation was served from: blocks taken by bumping
+/// registry refcounts vs. blocks taken from the free list, and how
+/// many prompt tokens the shared blocks cover.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SharedGrant {
+    pub shared_blocks: Blocks,
+    pub new_blocks: Blocks,
+    pub shared_tokens: Tokens,
+}
+
+/// Block allocator with per-sequence block tables and refcounted
+/// copy-on-write prefix sharing.
 pub struct KvBlockManager {
     pub geometry: KvGeometry,
     total_blocks: usize,
     free: Vec<usize>,
     seqs: BTreeMap<u64, SeqAlloc>,
+    /// per-block reference count; 0 == on the free list
+    refcount: Vec<u32>,
+    /// prefix-hash -> shareable prefix (first writer wins; purged
+    /// eagerly when any member block's refcount hits zero)
+    prefix_map: BTreeMap<u64, PrefixEntry>,
+    /// reverse index: block -> registry keys naming it. A freed block
+    /// id gets recycled with different contents, so every entry still
+    /// pointing at it must die with it (the ABA hazard).
+    block_keys: BTreeMap<usize, Vec<u64>>,
     /// counters for metrics
     pub alloc_failures: u64,
     pub peak_used: Blocks,
+    /// cumulative blocks served by bumping a registry refcount
+    /// instead of the free list
+    pub shared_block_hits: u64,
+    /// cumulative prompt tokens whose KV those shared blocks cover
+    pub shared_token_hits: u64,
 }
 
 impl KvBlockManager {
-    pub fn new(geometry: KvGeometry, total_blocks: Blocks) -> Self {
+    pub fn new(
+        geometry: KvGeometry,
+        total_blocks: Blocks,
+    ) -> Result<Self, KvGeometryError> {
+        geometry.validate()?;
         let total_blocks = total_blocks.get();
-        KvBlockManager {
+        Ok(KvBlockManager {
             geometry,
             total_blocks,
             free: (0..total_blocks).rev().collect(),
             seqs: BTreeMap::new(),
+            refcount: vec![0; total_blocks],
+            prefix_map: BTreeMap::new(),
+            block_keys: BTreeMap::new(),
             alloc_failures: 0,
             peak_used: Blocks::ZERO,
-        }
+            shared_block_hits: 0,
+            shared_token_hits: 0,
+        })
     }
 
-    pub fn from_budget(geometry: KvGeometry, budget: Bytes) -> Self {
-        Self::new(geometry, geometry.blocks_in(budget))
+    pub fn from_budget(
+        geometry: KvGeometry,
+        budget: Bytes,
+    ) -> Result<Self, KvGeometryError> {
+        Self::new(geometry, geometry.blocks_in(budget)?)
     }
 
     pub fn total_blocks(&self) -> Blocks {
@@ -125,24 +254,248 @@ impl KvBlockManager {
         Tokens::new(self.seqs.get(&id).map(|s| s.tokens).unwrap_or(0))
     }
 
+    /// Bytes of prompt KV served from shared blocks so far (what the
+    /// engine's `kv_bytes_shared` counter is derived from).
+    pub fn shared_bytes_total(&self) -> Bytes {
+        Bytes::new(
+            self.geometry.bytes_per_block().get()
+                * self.shared_block_hits as usize,
+        )
+    }
+
     /// Blocks needed to hold `tokens` tokens (the tokens -> blocks
     /// conversion point for rule U1).
     pub fn blocks_for(&self, tokens: Tokens) -> Blocks {
         Blocks::new(tokens.get().div_ceil(self.geometry.block_tokens))
     }
 
+    fn rc(&self, b: usize) -> u32 {
+        self.refcount.get(b).copied().unwrap_or(0)
+    }
+
     /// True when the sequence's allocation is exactly full — its next
-    /// appended token will need a fresh block. The scheduler counts
-    /// these into its admission growth reserve.
+    /// appended token will need a fresh block.
     pub fn at_block_boundary(&self, id: u64) -> bool {
         self.seqs.get(&id).is_some_and(|s| {
             s.tokens == s.blocks.len() * self.geometry.block_tokens
         })
     }
 
+    /// Will this sequence's next `append_token` take a block from the
+    /// free list? True at a block boundary (fresh block needed) or
+    /// when its tail block is shared (the append must copy-on-write).
+    /// The scheduler counts these into its admission growth reserve;
+    /// without sharing every refcount is 1 and this degenerates to
+    /// exactly [`KvBlockManager::at_block_boundary`].
+    pub fn append_needs_block(&self, id: u64) -> bool {
+        let Some(s) = self.seqs.get(&id) else {
+            return false;
+        };
+        if s.tokens == s.blocks.len() * self.geometry.block_tokens {
+            return true;
+        }
+        s.blocks.last().is_some_and(|&b| self.rc(b) > 1)
+    }
+
     /// Can a new sequence of `tokens` tokens be admitted right now?
+    /// Applies the same `max(1)` clamp as `allocate`: the old version
+    /// answered "yes, 0 blocks" for a 0-token probe that `allocate`
+    /// would then charge a whole block for, so a check-then-allocate
+    /// caller could fail the allocation it was just promised.
     pub fn can_allocate(&self, tokens: Tokens) -> bool {
-        self.blocks_for(tokens) <= Blocks::new(self.free.len())
+        self.blocks_for(tokens.max(Tokens::new(1)))
+            <= Blocks::new(self.free.len())
+    }
+
+    /// Pop `need` blocks off the free list at refcount 1, or `None`
+    /// (without touching anything) if the list is short.
+    fn take_free(&mut self, need: usize) -> Option<Vec<usize>> {
+        if need > self.free.len() {
+            return None;
+        }
+        let at = self.free.len().saturating_sub(need);
+        let blocks = self.free.split_off(at);
+        for &b in &blocks {
+            if let Some(slot) = self.refcount.get_mut(b) {
+                *slot = 1;
+            }
+        }
+        Some(blocks)
+    }
+
+    fn ref_block(&mut self, b: usize) {
+        if let Some(slot) = self.refcount.get_mut(b) {
+            *slot = slot.saturating_add(1);
+        }
+    }
+
+    /// Drop one reference; a block whose refcount reaches zero goes
+    /// back on the free list and every registry entry naming it dies
+    /// with it. This is the sharing-safety property: eviction of one
+    /// group member can never free a block another still references.
+    fn unref_block(&mut self, b: usize) {
+        let Some(slot) = self.refcount.get_mut(b) else {
+            return;
+        };
+        *slot = slot.saturating_sub(1);
+        if *slot == 0 {
+            self.free.push(b);
+            self.purge_block_keys(b);
+        }
+    }
+
+    /// Remove every registry entry naming `b` (called exactly when
+    /// its refcount hits zero), unlinking the entries from the other
+    /// blocks' reverse-index rows as well.
+    fn purge_block_keys(&mut self, b: usize) {
+        let Some(keys) = self.block_keys.remove(&b) else {
+            return;
+        };
+        for k in keys {
+            let Some(entry) = self.prefix_map.remove(&k) else {
+                continue;
+            };
+            for &ob in &entry.blocks {
+                if ob == b {
+                    continue;
+                }
+                let emptied = self
+                    .block_keys
+                    .get_mut(&ob)
+                    .map(|ks| {
+                        ks.retain(|&kk| kk != k);
+                        ks.is_empty()
+                    })
+                    .unwrap_or(false);
+                if emptied {
+                    self.block_keys.remove(&ob);
+                }
+            }
+        }
+    }
+
+    /// Register `tokens` -> `blocks` under its prefix hash. First
+    /// writer wins: identical prompts re-register the same mapping;
+    /// a colliding different prompt keeps the incumbent (lookups
+    /// verify tokens, so a collision costs a miss, never corruption).
+    fn register_prefix(&mut self, tokens: &[i32], blocks: &[usize]) {
+        if tokens.is_empty() || blocks.is_empty() {
+            return;
+        }
+        let key = prefix_hash(tokens);
+        if self.prefix_map.contains_key(&key) {
+            return;
+        }
+        self.prefix_map.insert(
+            key,
+            PrefixEntry {
+                tokens: tokens.to_vec(),
+                blocks: blocks.to_vec(),
+            },
+        );
+        for &b in blocks {
+            self.block_keys.entry(b).or_default().push(key);
+        }
+    }
+
+    /// Register every shareable prefix of `prompt` under this
+    /// sequence's block table: each full-block prefix, plus the whole
+    /// prompt when it ends inside a partial block AND the allocation
+    /// adds no tokens beyond the prompt. A partial tail block of an
+    /// allocation that extends past the prompt will also hold
+    /// non-prompt KV, so it must stay private.
+    fn register_all(
+        &mut self,
+        tokens_total: usize,
+        prompt: &[i32],
+        blocks: &[usize],
+    ) {
+        let bt = self.geometry.block_tokens;
+        let p = prompt.len().min(tokens_total);
+        for k in 1..=p / bt {
+            let (Some(pre), Some(bl)) =
+                (prompt.get(..k * bt), blocks.get(..k))
+            else {
+                break;
+            };
+            self.register_prefix(pre, bl);
+        }
+        if tokens_total == p && p % bt != 0 {
+            if let (Some(pre), Some(bl)) =
+                (prompt.get(..p), blocks.get(..p.div_ceil(bt)))
+            {
+                self.register_prefix(pre, bl);
+            }
+        }
+    }
+
+    /// Longest registered prefix of `prompt` still resident: the
+    /// whole prompt first (partial tail block included — only ever
+    /// registered when the owning allocation ends exactly at the
+    /// prompt, and only claimable under the same condition), then
+    /// full-block prefixes, longest first. Returns the blocks to
+    /// share and the token count they cover.
+    fn find_prefix(
+        &self,
+        tokens_total: usize,
+        prompt: &[i32],
+    ) -> Option<(Vec<usize>, usize)> {
+        let bt = self.geometry.block_tokens;
+        let p = prompt.len().min(tokens_total);
+        let try_len = |len: usize| -> Option<(Vec<usize>, usize)> {
+            let pre = prompt.get(..len)?;
+            let e = self.prefix_map.get(&prefix_hash(pre))?;
+            if e.tokens != pre {
+                return None; // hash collision: verified mismatch
+            }
+            if e.blocks.len() != len.div_ceil(bt) {
+                return None; // defensive: malformed entry
+            }
+            Some((e.blocks.clone(), len))
+        };
+        if tokens_total == p && p % bt != 0 {
+            if let Some(hit) = try_len(p) {
+                return Some(hit);
+            }
+        }
+        let mut k = p / bt;
+        while k > 0 {
+            if let Some(hit) = try_len(k * bt) {
+                return Some(hit);
+            }
+            k -= 1;
+        }
+        None
+    }
+
+    /// Admission accounting for the sharing path, mirror of the
+    /// unshared `(blocks_for(t), blocks_for(t+1))` pair: free-list
+    /// blocks a fresh `allocate_shared` would take right now, and
+    /// with one token of growth. The growth block is charged when the
+    /// allocation ends exactly at a block boundary (same as the
+    /// unshared math) OR when the registry covers the allocation's
+    /// tail block — the first append then needs a copy-on-write
+    /// block instead of appending in place.
+    pub fn shared_admission_need(
+        &self,
+        tokens: Tokens,
+        prompt: &[i32],
+    ) -> (Blocks, Blocks) {
+        let t = tokens.get().max(1);
+        let total = self.blocks_for(Tokens::new(t)).get();
+        let shared = self
+            .find_prefix(t, prompt)
+            .map(|(bl, _)| bl.len())
+            .unwrap_or(0);
+        let now = total.saturating_sub(shared);
+        let grown = if t % self.geometry.block_tokens == 0
+            || shared >= total
+        {
+            now.saturating_add(1)
+        } else {
+            now
+        };
+        (Blocks::new(now), Blocks::new(grown))
     }
 
     /// Admit a sequence with an initial `tokens` tokens (prompt).
@@ -157,41 +510,120 @@ impl KvBlockManager {
         assert!(!self.seqs.contains_key(&id), "seq {id} already allocated");
         let tokens = tokens.get().max(1);
         let need = self.blocks_for(Tokens::new(tokens)).get();
-        if need > self.free.len() {
-            self.alloc_failures += 1;
+        let Some(blocks) = self.take_free(need) else {
+            self.alloc_failures = self.alloc_failures.saturating_add(1);
             return false;
-        }
-        let blocks = self.free.split_off(self.free.len() - need);
+        };
         self.seqs.insert(id, SeqAlloc { blocks, tokens });
         self.peak_used = self.peak_used.max(self.used_blocks());
         true
     }
 
-    /// Extend a sequence by one token; may need a fresh block.
+    /// Admit a sequence, serving as much of its prompt prefix as
+    /// possible from the shared-prefix registry: registered blocks
+    /// get a refcount bump, only the tail comes off the free list,
+    /// and this prompt's own shareable prefixes are registered for
+    /// later arrivals (a GRPO group's first member registers, the
+    /// other G-1 hit). Returns what the allocation was served from,
+    /// or `None` (counting a failure) if the incremental blocks are
+    /// unavailable. `allocate` remains the sharing-free path and
+    /// never touches the registry.
+    pub fn allocate_shared(
+        &mut self,
+        id: u64,
+        tokens: Tokens,
+        prompt: &[i32],
+    ) -> Option<SharedGrant> {
+        assert!(!self.seqs.contains_key(&id), "seq {id} already allocated");
+        let tokens = tokens.get().max(1);
+        let need_total = self.blocks_for(Tokens::new(tokens)).get();
+        let (hit_blocks, hit_tokens) = self
+            .find_prefix(tokens, prompt)
+            .unwrap_or((Vec::new(), 0));
+        let need_new = need_total.saturating_sub(hit_blocks.len());
+        let Some(fresh) = self.take_free(need_new) else {
+            self.alloc_failures = self.alloc_failures.saturating_add(1);
+            return None;
+        };
+        for &b in &hit_blocks {
+            self.ref_block(b);
+        }
+        self.shared_block_hits = self
+            .shared_block_hits
+            .saturating_add(hit_blocks.len() as u64);
+        self.shared_token_hits =
+            self.shared_token_hits.saturating_add(hit_tokens as u64);
+        let grant = SharedGrant {
+            shared_blocks: Blocks::new(hit_blocks.len()),
+            new_blocks: Blocks::new(need_new),
+            shared_tokens: Tokens::new(hit_tokens),
+        };
+        let mut blocks = hit_blocks;
+        blocks.extend(fresh);
+        self.register_all(tokens, prompt, &blocks);
+        self.seqs.insert(id, SeqAlloc { blocks, tokens });
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Some(grant)
+    }
+
+    /// Extend a sequence by one token; may need a fresh block (at a
+    /// block boundary) or a copy-on-write block (tail shared with
+    /// other sequences — appending in place would corrupt their KV).
     /// Returns `Ok(false)` if the cache is out of blocks (preemption
     /// required), `Err` if the sequence is unknown (caller bug).
     pub fn append_token(&mut self, id: u64) -> Result<bool> {
         let block_tokens = self.geometry.block_tokens;
+        let (at_boundary, tail) = {
+            let Some(s) = self.seqs.get(&id) else {
+                bail!("append_token on unknown seq {id}");
+            };
+            (
+                s.tokens == s.blocks.len() * block_tokens,
+                s.blocks.last().copied(),
+            )
+        };
+        // the displaced COW block keeps its other references (its
+        // refcount is > 1 here), so the unref below never frees it
+        let cow = !at_boundary && tail.is_some_and(|b| self.rc(b) > 1);
+        if at_boundary || cow {
+            let fresh = match self.take_free(1).as_deref() {
+                Some(&[b]) => b,
+                _ => {
+                    self.alloc_failures =
+                        self.alloc_failures.saturating_add(1);
+                    return Ok(false);
+                }
+            };
+            let Some(s) = self.seqs.get_mut(&id) else {
+                bail!("append_token on unknown seq {id}");
+            };
+            if at_boundary {
+                s.blocks.push(fresh);
+            } else if let Some(t) = s.blocks.last_mut() {
+                *t = fresh;
+            }
+            if cow {
+                if let Some(old) = tail {
+                    self.unref_block(old);
+                }
+            }
+        }
         let Some(s) = self.seqs.get_mut(&id) else {
             bail!("append_token on unknown seq {id}");
         };
-        // capacity exactly filled -> next token needs a fresh block
-        if s.tokens == s.blocks.len() * block_tokens {
-            let Some(b) = self.free.pop() else {
-                self.alloc_failures += 1;
-                return Ok(false);
-            };
-            s.blocks.push(b);
-        }
         s.tokens = s.tokens.saturating_add(1);
         self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(true)
     }
 
-    /// Release a sequence entirely (finished or preempted-with-recompute).
+    /// Release a sequence entirely (finished or preempted-with-
+    /// recompute): every block drops one reference; only refcount
+    /// zero returns a block to the free list.
     pub fn release(&mut self, id: u64) {
         if let Some(s) = self.seqs.remove(&id) {
-            self.free.extend(s.blocks);
+            for b in s.blocks {
+                self.unref_block(b);
+            }
         }
     }
 
@@ -200,19 +632,29 @@ impl KvBlockManager {
         self.used_blocks().get() as f64 / self.total_blocks.max(1) as f64
     }
 
-    /// Invariant check (used by property tests): no block is both free
-    /// and allocated, and block counts add up.
+    /// Invariant check (used by property tests): refcount
+    /// conservation (per-block refcount == number of per-sequence
+    /// references), no block both free and referenced, no leaks, and
+    /// a registry that names only live blocks with a consistent
+    /// reverse index.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = vec![false; self.total_blocks];
+        let mut in_free = vec![false; self.total_blocks];
         for &b in &self.free {
-            let Some(slot) = seen.get_mut(b) else {
+            let Some(slot) = in_free.get_mut(b) else {
                 return Err(format!("free block {b} out of range"));
             };
             if *slot {
                 return Err(format!("block {b} double-listed in free"));
             }
             *slot = true;
+            if self.rc(b) != 0 {
+                return Err(format!(
+                    "free block {b} has refcount {}",
+                    self.rc(b)
+                ));
+            }
         }
+        let mut refs = vec![0u32; self.total_blocks];
         for (id, s) in &self.seqs {
             // every live allocation accounts for at least one token —
             // a 0-token sequence would hold blocks its own accessors
@@ -238,18 +680,83 @@ impl KvBlockManager {
             {
                 return Err(format!("seq {id}: over-allocated"));
             }
+            // a sequence's own table never repeats a block (sharing
+            // is only ever across sequences)
+            let mut sorted = s.blocks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != s.blocks.len() {
+                return Err(format!("seq {id}: duplicate block in table"));
+            }
             for &b in &s.blocks {
-                let Some(slot) = seen.get_mut(b) else {
+                let Some(r) = refs.get_mut(b) else {
                     return Err(format!("seq block {b} out of range"));
                 };
-                if *slot {
-                    return Err(format!("block {b} allocated twice"));
-                }
-                *slot = true;
+                *r += 1;
             }
         }
-        if !seen.iter().all(|&x| x) {
-            return Err("leaked blocks (neither free nor allocated)".into());
+        // refcount conservation + free/referenced exclusivity + leaks
+        for b in 0..self.total_blocks {
+            let r = refs.get(b).copied().unwrap_or(0);
+            let rc = self.rc(b);
+            if r != rc {
+                return Err(format!(
+                    "block {b}: refcount {rc} but {r} sequence \
+                     reference(s)"
+                ));
+            }
+            let free = in_free.get(b).copied().unwrap_or(false);
+            if free && r > 0 {
+                return Err(format!("block {b} both free and referenced"));
+            }
+            if !free && r == 0 {
+                return Err(format!(
+                    "leaked block {b} (neither free nor referenced)"
+                ));
+            }
+        }
+        // registry hygiene: entries sized to their token prefix, only
+        // live blocks, reverse index bijective
+        for (key, e) in &self.prefix_map {
+            if e.blocks.len()
+                != e.tokens.len().div_ceil(self.geometry.block_tokens)
+            {
+                return Err(format!(
+                    "prefix {key:#x}: {} block(s) for {} token(s)",
+                    e.blocks.len(),
+                    e.tokens.len()
+                ));
+            }
+            for &b in &e.blocks {
+                if self.rc(b) == 0 {
+                    return Err(format!(
+                        "prefix {key:#x} names dead block {b}"
+                    ));
+                }
+                if !self
+                    .block_keys
+                    .get(&b)
+                    .is_some_and(|ks| ks.contains(key))
+                {
+                    return Err(format!(
+                        "prefix {key:#x} missing from block {b}'s \
+                         reverse index"
+                    ));
+                }
+            }
+        }
+        for (b, ks) in &self.block_keys {
+            for k in ks {
+                if !self
+                    .prefix_map
+                    .get(k)
+                    .is_some_and(|e| e.blocks.contains(b))
+                {
+                    return Err(format!(
+                        "block {b} reverse-indexes stale prefix {k:#x}"
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -269,6 +776,10 @@ mod tests {
         }
     }
 
+    fn mk(prec: KvPrecision, blocks: usize) -> KvBlockManager {
+        KvBlockManager::new(geo(prec), Blocks::new(blocks)).unwrap()
+    }
+
     #[test]
     fn bytes_accounting() {
         let g = geo(KvPrecision::Bf16);
@@ -280,14 +791,51 @@ mod tests {
     #[test]
     fn fp8_doubles_capacity() {
         let budget = Bytes::new(1 << 20);
-        let bf = KvBlockManager::from_budget(geo(KvPrecision::Bf16), budget);
-        let f8 = KvBlockManager::from_budget(geo(KvPrecision::Fp8), budget);
+        let bf = KvBlockManager::from_budget(geo(KvPrecision::Bf16), budget)
+            .unwrap();
+        let f8 = KvBlockManager::from_budget(geo(KvPrecision::Fp8), budget)
+            .unwrap();
         assert_eq!(f8.total_blocks().get(), 2 * bf.total_blocks().get());
     }
 
     #[test]
+    fn zero_sized_geometry_is_a_typed_error_not_a_panic() {
+        // regression: blocks_in divided by bytes_per_block(), which a
+        // zero-sized geometry turns into a divide-by-zero panic
+        let cases = [
+            (
+                KvGeometry { n_layers: 0, ..geo(KvPrecision::Bf16) },
+                KvGeometryError::ZeroLayers,
+            ),
+            (
+                KvGeometry { n_kv_heads: 0, ..geo(KvPrecision::Bf16) },
+                KvGeometryError::ZeroKvHeads,
+            ),
+            (
+                KvGeometry { d_head: 0, ..geo(KvPrecision::Bf16) },
+                KvGeometryError::ZeroHeadDim,
+            ),
+            (
+                KvGeometry { block_tokens: 0, ..geo(KvPrecision::Bf16) },
+                KvGeometryError::ZeroBlockTokens,
+            ),
+        ];
+        for (bad, want) in cases {
+            assert_eq!(bad.validate(), Err(want));
+            assert_eq!(bad.blocks_in(Bytes::new(1 << 20)), Err(want));
+            assert!(KvBlockManager::new(bad, Blocks::new(4)).is_err());
+            assert!(
+                KvBlockManager::from_budget(bad, Bytes::new(1 << 20))
+                    .is_err()
+            );
+            assert!(!format!("{want}").is_empty(), "Display impl");
+        }
+        assert!(geo(KvPrecision::Bf16).validate().is_ok());
+    }
+
+    #[test]
     fn alloc_extend_release() {
-        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), Blocks::new(8));
+        let mut m = mk(KvPrecision::Bf16, 8);
         assert!(m.allocate(1, Tokens::new(16))); // exactly 1 block
         assert_eq!(m.used_blocks(), Blocks::new(1));
         // 16 more tokens => one more block
@@ -304,7 +852,7 @@ mod tests {
 
     #[test]
     fn exhaustion_counts_failures() {
-        let mut m = KvBlockManager::new(geo(KvPrecision::Bf16), Blocks::new(2));
+        let mut m = mk(KvPrecision::Bf16, 2);
         assert!(m.allocate(1, Tokens::new(32))); // both blocks
         assert!(!m.allocate(2, Tokens::new(1)));
         assert_eq!(m.alloc_failures, 1);
@@ -319,8 +867,7 @@ mod tests {
         // max(1) but record 0 tokens, so the sequence's accounting
         // disagreed with its allocation (and `at_block_boundary` could
         // never fire, dodging the scheduler's growth reserve)
-        let mut m =
-            KvBlockManager::new(geo(KvPrecision::Bf16), Blocks::new(4));
+        let mut m = mk(KvPrecision::Bf16, 4);
         assert!(m.allocate(1, Tokens::ZERO));
         assert_eq!(
             m.seq_tokens(1),
@@ -346,9 +893,167 @@ mod tests {
     }
 
     #[test]
+    fn can_allocate_matches_allocate_on_zero_tokens() {
+        // regression: can_allocate(0) answered "yes, 0 blocks needed"
+        // while allocate(0) clamps to 1 token and takes a block — with
+        // an empty free list the promise was a lie
+        let mut m = mk(KvPrecision::Bf16, 1);
+        assert!(m.can_allocate(Tokens::ZERO));
+        assert!(m.allocate(1, Tokens::new(16))); // the only block
+        assert!(
+            !m.can_allocate(Tokens::ZERO),
+            "a full cache must not promise a 0-token allocation"
+        );
+        assert!(!m.allocate(2, Tokens::ZERO));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
     fn release_unknown_is_noop() {
-        let mut m = KvBlockManager::new(geo(KvPrecision::Fp8), Blocks::new(4));
+        let mut m = mk(KvPrecision::Fp8, 4);
         m.release(99);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_group_pays_one_prompt() {
+        // a GRPO group: 8 members, one 32-token prompt (2 full blocks)
+        let mut m = mk(KvPrecision::Bf16, 64);
+        let prompt: Vec<i32> = (0..32).collect();
+        let g0 = m
+            .allocate_shared(0, Tokens::new(32), &prompt)
+            .expect("first member allocates");
+        assert_eq!(g0.shared_blocks, Blocks::ZERO, "nothing to hit yet");
+        assert_eq!(g0.new_blocks, Blocks::new(2));
+        for id in 1..8u64 {
+            let g = m
+                .allocate_shared(id, Tokens::new(32), &prompt)
+                .expect("group member allocates");
+            assert_eq!(g.shared_blocks, Blocks::new(2), "full prefix hit");
+            assert_eq!(g.new_blocks, Blocks::ZERO);
+            assert_eq!(g.shared_tokens, Tokens::new(32));
+        }
+        // 8 sequences, 2 unique blocks: 1/G of the prompt KV
+        assert_eq!(m.used_blocks(), Blocks::new(2));
+        assert_eq!(m.shared_block_hits, 14);
+        m.check_invariants().unwrap();
+        // releasing 7 members keeps the blocks alive for the last one
+        for id in 0..7u64 {
+            m.release(id);
+            m.check_invariants().unwrap();
+        }
+        assert_eq!(m.used_blocks(), Blocks::new(2));
+        assert!(m.has_seq(7));
+        m.release(7);
+        assert_eq!(m.used_blocks(), Blocks::ZERO);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_into_shared_tail_copies_on_write() {
+        // 5-token prompt in 4-token blocks: 1 full block + a partial
+        // tail, both shared (allocation ends exactly at the prompt)
+        let g = KvGeometry { block_tokens: 4, ..geo(KvPrecision::Bf16) };
+        let mut m = KvBlockManager::new(g, Blocks::new(16)).unwrap();
+        let prompt = vec![7, 8, 9, 10, 11];
+        assert!(m.allocate_shared(0, Tokens::new(5), &prompt).is_some());
+        let g1 = m.allocate_shared(1, Tokens::new(5), &prompt).unwrap();
+        assert_eq!(g1.shared_blocks, Blocks::new(2));
+        assert_eq!(m.used_blocks(), Blocks::new(2));
+        assert!(
+            m.append_needs_block(0),
+            "appending into the shared tail must look like growth"
+        );
+        // seq 0 appends: its tail is shared, so it must get a private
+        // copy; seq 1's view is untouched
+        assert!(m.append_token(0).unwrap());
+        assert_eq!(m.used_blocks(), Blocks::new(3));
+        assert_eq!(m.seq_tokens(0), Tokens::new(6));
+        assert_eq!(m.seq_tokens(1), Tokens::new(5));
+        m.check_invariants().unwrap();
+        assert!(
+            !m.append_needs_block(0),
+            "the private tail has room for in-place appends"
+        );
+        // seq 1 appends next: rc of the old shared tail is now 1, so
+        // it owns it and appends in place
+        assert!(!m.append_needs_block(1));
+        assert!(m.append_token(1).unwrap());
+        assert_eq!(m.used_blocks(), Blocks::new(3));
+        m.check_invariants().unwrap();
+        // releasing seq 1 must not free seq 0's blocks
+        m.release(1);
+        assert!(m.has_seq(0));
+        m.check_invariants().unwrap();
+        m.release(0);
+        assert_eq!(m.used_blocks(), Blocks::ZERO);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_tail_shares_only_at_exact_prompt_length() {
+        // an allocation extending past the prompt (recompute
+        // readmission reserving prompt + preserved progress) may share
+        // the FULL-block prefix but never the partial tail: the tail
+        // will hold non-prompt KV
+        let g = KvGeometry { block_tokens: 4, ..geo(KvPrecision::Bf16) };
+        let mut m = KvBlockManager::new(g, Blocks::new(16)).unwrap();
+        let prompt = vec![1, 2, 3, 4, 5, 6];
+        assert!(m.allocate_shared(0, Tokens::new(6), &prompt).is_some());
+        // 6 prompt tokens + 2 preserved: tail block is private
+        let g1 = m.allocate_shared(1, Tokens::new(8), &prompt).unwrap();
+        assert_eq!(g1.shared_blocks, Blocks::new(1), "full block only");
+        assert_eq!(g1.shared_tokens, Tokens::new(4));
+        assert_eq!(g1.new_blocks, Blocks::new(1));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn freed_blocks_purge_their_registry_entries() {
+        // ABA safety: once the group drains, its blocks recycle — a
+        // new allocation with the same prompt must MISS (the KV is
+        // gone) instead of sharing stale block ids
+        let mut m = mk(KvPrecision::Bf16, 8);
+        let prompt: Vec<i32> = (0..16).collect();
+        assert!(m.allocate_shared(0, Tokens::new(16), &prompt).is_some());
+        m.release(0);
+        m.check_invariants().unwrap();
+        let g = m.allocate_shared(1, Tokens::new(16), &prompt).unwrap();
+        assert_eq!(
+            g.shared_blocks,
+            Blocks::ZERO,
+            "a drained prefix must not be served from recycled blocks"
+        );
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_admission_need_matches_what_allocation_takes() {
+        let g = KvGeometry { block_tokens: 4, ..geo(KvPrecision::Bf16) };
+        let mut m = KvBlockManager::new(g, Blocks::new(16)).unwrap();
+        let prompt = vec![3, 4, 5, 6, 7];
+        let (now, grown) =
+            m.shared_admission_need(Tokens::new(5), &prompt);
+        assert_eq!((now, grown), (Blocks::new(2), Blocks::new(2)));
+        let free0 = m.free_blocks();
+        assert!(m.allocate_shared(0, Tokens::new(5), &prompt).is_some());
+        assert_eq!(
+            free0.get().saturating_sub(m.free_blocks().get()),
+            now.get()
+        );
+        // second member: everything shared, growth = 1 COW block
+        let (now, grown) =
+            m.shared_admission_need(Tokens::new(5), &prompt);
+        assert_eq!((now, grown), (Blocks::ZERO, Blocks::new(1)));
+        let free0 = m.free_blocks();
+        assert!(m.allocate_shared(1, Tokens::new(5), &prompt).is_some());
+        assert_eq!(free0, m.free_blocks(), "fully shared: no new blocks");
+        assert!(m.append_token(1).unwrap());
+        assert_eq!(
+            free0.get().saturating_sub(m.free_blocks().get()),
+            1,
+            "the first append consumed exactly the reserved COW block"
+        );
         m.check_invariants().unwrap();
     }
 }

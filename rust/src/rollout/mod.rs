@@ -14,7 +14,10 @@ pub mod sampler;
 pub mod scheduler;
 
 pub use engine::{EngineConfig, EngineStats, HloEngine};
-pub use kvcache::{KvBlockManager, KvGeometry, KvPrecision};
+pub use kvcache::{
+    prefix_hash, KvBlockManager, KvGeometry, KvGeometryError,
+    KvPrecision, SharedGrant,
+};
 pub use pool::{
     factory_like, hermetic_runtime_factory, runtime_factory, Completed,
     EnginePool, PoolConfig, Rollout, RuntimeFactory, TicketId,

@@ -823,7 +823,11 @@ impl EnginePool {
             Completed::Failed(_, _) => ResolveKind::Failed,
         };
         self.hb.resolve(item.ticket(), kind);
-        self.ready_ids.insert(item.ticket());
+        // exactly-once: a ticket already sitting in the ready queue
+        // being resolved AGAIN means the outstanding-gating upstream
+        // (handle_event / the reaper) let a duplicate through
+        let fresh = self.ready_ids.insert(item.ticket());
+        assert!(fresh, "ticket {} resolved twice", item.ticket());
         self.ready.push_back(item);
     }
 

@@ -31,12 +31,21 @@
 
 use std::collections::BTreeMap;
 
+use super::kvcache::prefix_hash;
 use super::request::Request;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePolicy {
     RoundRobin,
     LeastLoaded,
+    /// Content-addressed placement: requests hash their prompt to a
+    /// home replica, so a GRPO group (G completions of one prompt)
+    /// lands on ONE engine and its shared-prefix KV reuse actually
+    /// fires — `LeastLoaded` would scatter the group and every replica
+    /// would prefill its own copy. Placement never affects outputs
+    /// (per-request RNG streams make completions placement-invariant);
+    /// this is purely a cache-locality policy.
+    PrefixAffinity,
 }
 
 pub struct Router {
@@ -126,6 +135,25 @@ impl Router {
                     .enumerate()
                     .min_by_key(|(_, &l)| l);
                 healthy.or(any).map(|(i, _)| i).unwrap_or(0)
+            }
+            RoutePolicy::PrefixAffinity => {
+                // home replica by prompt hash; if it is quarantined,
+                // probe linearly (every member of a group probes the
+                // same order from the same home, so the group stays
+                // colocated on the fallback replica too). If everything
+                // is quarantined the scan wraps back to the home pick
+                // (placement must still terminate).
+                let mut i = (prefix_hash(&req.prompt)
+                    % self.n_engines as u64)
+                    as usize;
+                for _ in 0..self.n_engines {
+                    let q = self.quarantined.get(i).copied();
+                    if !q.unwrap_or(false) {
+                        break;
+                    }
+                    i = (i + 1) % self.n_engines;
+                }
+                i
             }
         };
         if let Some(load) = self.load.get_mut(idx) {
@@ -227,6 +255,50 @@ mod tests {
         assert_ne!(a, b);
         let c = r.route(&req(3, 1)); // engine b still lighter
         assert_eq!(b, c);
+    }
+
+    #[test]
+    fn prefix_affinity_colocates_identical_prompts() {
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 4);
+        let prompt: Vec<i32> = vec![5, 6, 7, 8];
+        // a GRPO group: same prompt, distinct ids -> ONE replica
+        let home = r.route(&Request {
+            id: 0,
+            prompt: prompt.clone(),
+            params: SamplingParams::default(),
+        });
+        for id in 1..8u64 {
+            let e = r.route(&Request {
+                id,
+                prompt: prompt.clone(),
+                params: SamplingParams::default(),
+            });
+            assert_eq!(e, home, "group member {id} left its home");
+        }
+        // varied prompts spread across replicas
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 100..132u64 {
+            let q = Request {
+                id,
+                prompt: vec![id as i32, (id * 7) as i32, 3],
+                params: SamplingParams::default(),
+            };
+            seen.insert(r.route(&q));
+        }
+        assert!(seen.len() > 1, "distinct prompts must spread");
+        // quarantining the home moves the WHOLE group, together
+        let mut r2 = Router::new(RoutePolicy::PrefixAffinity, 4);
+        r2.set_quarantined(home, true);
+        let mut fallbacks = std::collections::BTreeSet::new();
+        for id in 200..208u64 {
+            fallbacks.insert(r2.route(&Request {
+                id,
+                prompt: prompt.clone(),
+                params: SamplingParams::default(),
+            }));
+        }
+        assert_eq!(fallbacks.len(), 1, "group stays colocated");
+        assert!(!fallbacks.contains(&home), "home is avoided");
     }
 
     #[test]

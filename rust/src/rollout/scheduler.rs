@@ -33,6 +33,8 @@ pub struct Scheduler {
     running: Vec<u64>,
     /// request bodies for requeue-on-preemption
     bodies: BTreeMap<u64, Request>,
+    /// admit via `allocate_shared` (charge only incremental blocks)
+    prefix_sharing: bool,
     pub stats: SchedulerStats,
 }
 
@@ -49,8 +51,22 @@ impl Scheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             bodies: BTreeMap::new(),
+            prefix_sharing: false,
             stats: SchedulerStats::default(),
         }
+    }
+
+    /// Route admissions through `KvBlockManager::allocate_shared`:
+    /// a request is charged only the blocks its prompt prefix does
+    /// NOT already share. Off by default; sharing is a pure memory
+    /// optimization (DESIGN.md §10), so outputs are bit-identical
+    /// either way.
+    pub fn set_prefix_sharing(&mut self, on: bool) {
+        self.prefix_sharing = on;
+    }
+
+    pub fn prefix_sharing(&self) -> bool {
+        self.prefix_sharing
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -102,6 +118,16 @@ impl Scheduler {
     /// replaying its prompt sits at a boundary without appending for a
     /// few rounds, and we reserve for it anyway — a small throughput
     /// cost for a thrash-freedom guarantee that needs no caller hints.
+    ///
+    /// With prefix sharing on, the same cumulative structure holds
+    /// over free-list blocks: a candidate is charged only its
+    /// *incremental* need (`shared_admission_need`), and the running-
+    /// set reserve counts `append_needs_block` — boundary growth OR a
+    /// shared tail whose next append takes a copy-on-write block. G
+    /// same-round sharers of one partial tail consume exactly G-1 COW
+    /// blocks on their first appends, matching the G-1 growth deltas
+    /// accumulated here, so the no-same-round-preemption guarantee is
+    /// preserved (DESIGN.md §10).
     pub fn admit_with<F: Fn(u64) -> Tokens>(
         &mut self,
         extra: F,
@@ -110,7 +136,7 @@ impl Scheduler {
         let mut reserve: Blocks = Blocks::new(
             self.running
                 .iter()
-                .filter(|id| self.kv.at_block_boundary(**id))
+                .filter(|id| self.kv.append_needs_block(**id))
                 .count(),
         );
         while self.running.len() < self.max_batch {
@@ -118,16 +144,30 @@ impl Scheduler {
             let tokens = Tokens::new(front.prompt.len())
                 .saturating_add(extra(front.id))
                 .max(Tokens::new(1));
-            let need_now = self.kv.blocks_for(tokens);
-            // +1 growth reserve so a fresh admission can't instantly
-            // deadlock the running set
-            let need_grown =
-                self.kv.blocks_for(tokens.saturating_add(Tokens::new(1)));
+            // +1 growth reserve (need_grown vs need_now) so a fresh
+            // admission can't instantly deadlock the running set
+            let (need_now, need_grown) = if self.prefix_sharing {
+                self.kv.shared_admission_need(tokens, &front.prompt)
+            } else {
+                (
+                    self.kv.blocks_for(tokens),
+                    self.kv.blocks_for(
+                        tokens.saturating_add(Tokens::new(1)),
+                    ),
+                )
+            };
             if need_grown.saturating_add(reserve) > self.kv.free_blocks() {
                 break;
             }
             let Some(req) = self.waiting.pop_front() else { break };
-            assert!(self.kv.allocate(req.id, tokens));
+            if self.prefix_sharing {
+                assert!(self
+                    .kv
+                    .allocate_shared(req.id, tokens, &req.prompt)
+                    .is_some());
+            } else {
+                assert!(self.kv.allocate(req.id, tokens));
+            }
             // blocks_for is monotone in tokens, so the growth delta is
             // >= 0; saturate both steps so a future geometry change
             // can't turn this into a silent wrap
@@ -238,12 +278,20 @@ impl Scheduler {
         ids
     }
 
-    /// Mark a sequence finished and release its blocks.
-    pub fn finish(&mut self, id: u64) {
+    /// Mark a sequence finished and release its blocks. Returns
+    /// `false` for an unknown (never-admitted or already-finished)
+    /// id: the old version unconditionally bumped `stats.finished`
+    /// and issued a no-op release, so a double-finish inflated the
+    /// finished counter the CSV metrics report.
+    pub fn finish(&mut self, id: u64) -> bool {
+        if !self.kv.has_seq(id) {
+            return false;
+        }
         self.kv.release(id);
         self.running.retain(|&r| r != id);
         self.bodies.remove(&id);
         self.stats.finished += 1;
+        true
     }
 
     /// Invariants for the property suite.
@@ -282,7 +330,8 @@ mod tests {
             precision: KvPrecision::Bf16,
         };
         Scheduler::new(
-            KvBlockManager::new(geo, crate::util::units::Blocks::new(blocks)),
+            KvBlockManager::new(geo, crate::util::units::Blocks::new(blocks))
+                .unwrap(),
             max_batch,
         )
     }
@@ -456,8 +505,96 @@ mod tests {
         s.submit(req(1, 4));
         s.submit(req(2, 4));
         assert_eq!(s.admit().len(), 1); // only one fits with reserve
-        s.finish(1);
+        assert!(s.finish(1));
         assert_eq!(s.admit().len(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_finish_does_not_inflate_stats() {
+        // regression: finish() used to bump stats.finished and release
+        // unconditionally, so finishing an unknown or already-finished
+        // id corrupted the CSV metrics
+        let mut s = mk(100, 2);
+        s.submit(req(1, 4));
+        assert_eq!(s.admit().len(), 1);
+        assert!(s.finish(1), "first finish succeeds");
+        assert!(!s.finish(1), "second finish is rejected");
+        assert!(!s.finish(99), "never-admitted id is rejected");
+        assert_eq!(s.stats.finished, 1);
+        s.check_invariants().unwrap();
+    }
+
+    fn shared_req(id: u64, prompt: &[i32]) -> Request {
+        Request {
+            id,
+            prompt: prompt.to_vec(),
+            params: SamplingParams::default(),
+        }
+    }
+
+    #[test]
+    fn shared_admission_charges_only_incremental_blocks() {
+        // a GRPO group of 4 over one 8-token prompt (2 blocks of 4):
+        // unshared needs 4x(2+1 growth); shared needs 2 unique prompt
+        // blocks + per-member COW/growth reserve
+        let prompt: Vec<i32> = (10..18).collect();
+        let mut s = mk(6, 8); // far too small for 4 private copies
+        s.set_prefix_sharing(true);
+        assert!(s.prefix_sharing());
+        for id in 0..4 {
+            s.submit(shared_req(id, &prompt));
+        }
+        let admitted = s.admit();
+        assert_eq!(
+            admitted.len(),
+            4,
+            "sharing admits the whole group into 6 blocks"
+        );
+        assert_eq!(s.kv.used_blocks(), Blocks::new(2), "one prompt copy");
+        s.check_invariants().unwrap();
+        // every member grows one token: each needs its own block past
+        // the shared boundary, covered by the admission reserve
+        let ids = s.running_ids().to_vec();
+        let rep = s.extend_all(&ids).unwrap();
+        assert!(rep.preempted.is_empty(), "reserve covered group growth");
+        s.check_invariants().unwrap();
+        // the same workload without sharing admits at most 2 members
+        let mut u = mk(6, 8);
+        for id in 0..4 {
+            u.submit(shared_req(id, &prompt));
+        }
+        assert!(u.admit().len() < 4, "private copies must not all fit");
+        u.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_group_growth_reserve_is_cumulative_over_cow_blocks() {
+        // 5-token prompt: 1 full block + a shared partial tail. Each
+        // sharer's first append copy-on-writes the tail, so G sharers
+        // need G-1 extra blocks (the last owns the tail at rc 1) —
+        // admission must reserve them cumulatively or the group
+        // thrashes on its first decode step.
+        let prompt = [7, 8, 9, 10, 11];
+        let mut s = mk(4, 8); // 2 prompt + 2 spare
+        s.set_prefix_sharing(true);
+        for id in 0..3 {
+            s.submit(shared_req(id, &prompt));
+        }
+        // member 0 takes 2 blocks; members 1,2 are fully shared but
+        // each adds a +1 growth delta; 2 spares cover only one of them
+        // plus member 0's in-place tail headroom
+        let admitted = s.admit();
+        assert!(
+            admitted.len() >= 2,
+            "at least two members fit with reserve"
+        );
+        let ids = s.running_ids().to_vec();
+        let rep = s.extend_all(&ids).unwrap();
+        assert!(
+            rep.preempted.is_empty(),
+            "no same-round preemption with COW-aware reserve"
+        );
         s.check_invariants().unwrap();
     }
 }

@@ -41,6 +41,21 @@ pub trait DeviceBufferImpl {
     fn write_from_host(&self, _a: &HostArray) -> Result<bool> {
         Ok(false)
     }
+
+    /// Copy element ranges within the buffer, device-side: each
+    /// `(src, dst, len)` triple copies `len` elements starting at
+    /// element `src` onto element `dst` (ranges processed in order;
+    /// a triple may overlap its own source like `copy_within`).
+    /// Returns `Ok(false)` when the backend cannot copy in place —
+    /// callers then fall back to a host round-trip. The engine uses
+    /// this to alias a device-resident KV row into a newly admitted
+    /// sequence's row for shared-prefix prefill skipping.
+    fn copy_within_ranges(
+        &self,
+        _ranges: &[(usize, usize, usize)],
+    ) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 /// A device-resident input buffer (backend-erased).
@@ -61,6 +76,16 @@ impl DeviceBuffer {
     pub fn write_from_host(&self, a: &HostArray) -> Result<bool> {
         self.imp.write_from_host(a)
     }
+
+    /// Device-side `(src, dst, len)` element-range copies;
+    /// `Ok(false)` means "unsupported, fall back to host".
+    pub fn copy_within_ranges(
+        &self,
+        ranges: &[(usize, usize, usize)],
+    ) -> Result<bool> {
+        self.imp.copy_within_ranges(ranges)
+    }
+}
 
     pub fn imp(&self) -> &dyn DeviceBufferImpl {
         self.imp.as_ref()

@@ -115,6 +115,33 @@ impl DeviceBufferImpl for RefBuffer {
         }
         Ok(true)
     }
+
+    fn copy_within_ranges(
+        &self,
+        ranges: &[(usize, usize, usize)],
+    ) -> Result<bool> {
+        let mut a = self.0.borrow_mut();
+        // only the f32 KV tensors need device-side row aliasing
+        let HostArray::F32(_, data) = &mut *a else {
+            return Ok(false);
+        };
+        for &(src, dst, len) in ranges {
+            let (Some(src_end), Some(dst_end)) =
+                (src.checked_add(len), dst.checked_add(len))
+            else {
+                bail!("copy_within_ranges: range overflow");
+            };
+            if src_end > data.len() || dst_end > data.len() {
+                bail!(
+                    "copy_within_ranges: range out of bounds \
+                     ({src}+{len} / {dst}+{len} of {})",
+                    data.len()
+                );
+            }
+            data.copy_within(src..src_end, dst);
+        }
+        Ok(true)
+    }
 }
 
 impl Backend for RefBackend {

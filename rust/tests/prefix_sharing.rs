@@ -1,0 +1,169 @@
+//! Prefix-sharing integration tests (hermetic: synthetic manifest +
+//! RefBackend).
+//!
+//! The contract: turning `prefix_sharing` on is a pure cost
+//! optimization. A GRPO-style group of G completions over one prompt
+//! pays (approximately) one prefill and shares its prompt KV blocks
+//! copy-on-write — and every completion's tokens, behavior logprobs,
+//! full-vocab logprobs, and finish reason are BIT-IDENTICAL to the
+//! unshared run. Sampling uses a per-request RNG stream
+//! (`slot_rng(req_id)`), so skipping prefill steps cannot shift any
+//! random draw; KV rows are pure functions of (token prefix, weights,
+//! scales), so aliasing a device-resident row is exact.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use fp8_rl::rollout::{
+    Completion, EngineConfig, HloEngine, Request, SamplingParams,
+};
+use fp8_rl::runtime::Runtime;
+
+/// 2 groups x 16 members each; members of a group share a 5-token
+/// prompt. `max_new_tokens` is staggered inside each group so members
+/// finish on different steps and readmission flows through the chunked
+/// (row-aliasing) path rather than a fresh wave.
+fn grouped_requests() -> Vec<Request> {
+    let mut reqs = Vec::new();
+    let mut id = 1u64;
+    for g in 0..2i32 {
+        let prompt = vec![12, g, 10, g, 11];
+        for m in 0..16usize {
+            reqs.push(Request {
+                id,
+                prompt: prompt.clone(),
+                params: SamplingParams {
+                    temperature: 1.0,
+                    max_new_tokens: 6 + m % 3,
+                    ..Default::default()
+                },
+            });
+            id += 1;
+        }
+    }
+    reqs
+}
+
+struct RunOut {
+    completions: BTreeMap<u64, Completion>,
+    prefill_tokens_saved: u64,
+    kv_bytes_shared: u64,
+}
+
+fn run_grouped(variant: &str, sharing: bool) -> RunOut {
+    let mut cfg = EngineConfig::new("dense", variant);
+    cfg.prefix_sharing = sharing;
+    let mut engine =
+        HloEngine::new(Arc::new(Runtime::hermetic()), cfg).unwrap();
+    let done = engine.generate(grouped_requests()).unwrap();
+    RunOut {
+        completions: done.into_iter().map(|c| (c.id, c)).collect(),
+        prefill_tokens_saved: engine.stats.prefill_tokens_saved,
+        kv_bytes_shared: engine.stats.kv_bytes_shared,
+    }
+}
+
+fn assert_bit_identical(
+    shared: &BTreeMap<u64, Completion>,
+    plain: &BTreeMap<u64, Completion>,
+    what: &str,
+) {
+    assert_eq!(
+        shared.len(),
+        plain.len(),
+        "{what}: completion counts diverge"
+    );
+    for (id, s) in shared {
+        let p = plain.get(id).unwrap_or_else(|| {
+            panic!("{what}: unshared run never completed request {id}")
+        });
+        assert_eq!(s.tokens, p.tokens, "{what}: tokens diverge, id {id}");
+        assert_eq!(
+            s.logprobs, p.logprobs,
+            "{what}: behavior logprobs diverge, id {id}"
+        );
+        assert_eq!(
+            s.logprobs_full, p.logprobs_full,
+            "{what}: full-vocab logprobs diverge, id {id}"
+        );
+        assert_eq!(
+            s.finish, p.finish,
+            "{what}: finish reason diverges, id {id}"
+        );
+    }
+}
+
+#[test]
+fn grouped_generate_bit_identical_and_cheaper() {
+    for variant in ["bf16", "kvfp8"] {
+        let shared = run_grouped(variant, true);
+        let plain = run_grouped(variant, false);
+        assert_bit_identical(
+            &shared.completions,
+            &plain.completions,
+            variant,
+        );
+        // the group structure must actually be exploited...
+        assert!(
+            shared.prefill_tokens_saved > 0,
+            "{variant}: sharing saved no prefill tokens"
+        );
+        assert!(
+            shared.kv_bytes_shared > 0,
+            "{variant}: sharing shared no KV bytes"
+        );
+        // ...and the knob must be inert when off
+        assert_eq!(plain.prefill_tokens_saved, 0, "{variant}");
+        assert_eq!(plain.kv_bytes_shared, 0, "{variant}");
+    }
+}
+
+#[test]
+fn step_schedule_aliases_resident_prefix_deterministically() {
+    // a fully deterministic admission schedule so the saved-token count
+    // is exact: r1 prefills via the wave path (row 0 holds its full
+    // prompt), then r2..r4 with the SAME prompt admit into empty rows
+    // and alias row 0's device-resident KV, each skipping plen-1 = 4
+    // prefill tokens
+    let prompt = vec![12, 3, 10, 7, 11];
+    let req = |id: u64| Request {
+        id,
+        prompt: prompt.clone(),
+        params: SamplingParams {
+            temperature: 1.0,
+            max_new_tokens: 4,
+            ..Default::default()
+        },
+    };
+    let run = |sharing: bool| {
+        let mut cfg = EngineConfig::new("dense", "kvfp8");
+        cfg.prefix_sharing = sharing;
+        let mut engine =
+            HloEngine::new(Arc::new(Runtime::hermetic()), cfg)
+                .unwrap();
+        let mut done = Vec::new();
+        engine.enqueue(req(1)).unwrap();
+        engine.step(&mut done).unwrap(); // wave: r1 full prefill
+        for id in 2..=4 {
+            engine.enqueue(req(id)).unwrap();
+        }
+        // r1 is still mid-decode, so r2..r4 take the chunked admission
+        // path while row 0's prefix record is resident
+        while !engine.is_idle() {
+            engine.step(&mut done).unwrap();
+        }
+        let by_id: BTreeMap<u64, Completion> =
+            done.into_iter().map(|c| (c.id, c)).collect();
+        (by_id, engine.stats.prefill_tokens_saved)
+    };
+    let (shared, saved_on) = run(true);
+    let (plain, saved_off) = run(false);
+    assert_bit_identical(&shared, &plain, "step-schedule");
+    assert_eq!(shared.len(), 4);
+    assert_eq!(
+        saved_on,
+        3 * (prompt.len() as u64 - 1),
+        "r2..r4 must each skip plen-1 prefill tokens"
+    );
+    assert_eq!(saved_off, 0);
+}

@@ -66,7 +66,8 @@ fn run_script(
     ops: &[Op],
 ) -> Result<(), String> {
     let mut sched = Scheduler::new(
-        KvBlockManager::new(geo(4), Blocks::new(blocks)),
+        KvBlockManager::new(geo(4), Blocks::new(blocks))
+            .map_err(|e| e.to_string())?,
         max_batch,
     );
     let mut next_id = 0u64;
@@ -131,8 +132,14 @@ fn kv_capacity_doubles_with_fp8() {
                 precision: KvPrecision::Fp8,
                 ..geo(16)
             };
-            let nb = bf.blocks_in(Bytes::new(budget)).get();
-            let nf = f8.blocks_in(Bytes::new(budget)).get();
+            let nb = bf
+                .blocks_in(Bytes::new(budget))
+                .map_err(|e| e.to_string())?
+                .get();
+            let nf = f8
+                .blocks_in(Bytes::new(budget))
+                .map_err(|e| e.to_string())?
+                .get();
             // fp8 fits at least 2x-1 blocks (floor effects) and at most 2x+1
             if nf < nb * 2 || nf > nb * 2 + 1 {
                 return Err(format!("budget {budget}: bf16 {nb} fp8 {nf}"));
@@ -152,7 +159,8 @@ fn no_request_starves_with_capacity() {
         |r| 1usize + r.below(6) as usize,
         |&k| {
             let mut sched = Scheduler::new(
-                KvBlockManager::new(geo(4), Blocks::new(64)),
+                KvBlockManager::new(geo(4), Blocks::new(64))
+                    .map_err(|e| e.to_string())?,
                 8,
             );
             for id in 0..k as u64 {
@@ -192,7 +200,8 @@ fn admissions_survive_their_admission_round() {
         },
         |(blocks, (max_batch, plens))| {
             let mut sched = Scheduler::new(
-                KvBlockManager::new(geo(4), Blocks::new(*blocks)),
+                KvBlockManager::new(geo(4), Blocks::new(*blocks))
+                    .map_err(|e| e.to_string())?,
                 *max_batch,
             );
             let mut next_id = 0u64;
@@ -246,6 +255,226 @@ fn admissions_survive_their_admission_round() {
                 }
             }
             Ok(())
+        },
+    );
+}
+
+#[test]
+fn prefix_sharing_grouped_saves_blocks_with_identical_admission() {
+    // GRPO-style grouped workloads: each group's G members share one
+    // prompt. With ample capacity a prefix-sharing scheduler must admit
+    // exactly the same ids as an unshared one (sharing is an accounting
+    // optimization, never an admission-policy change), must never use
+    // MORE blocks, must use strictly FEWER right after admission when
+    // any group has G > 1, and must drain back to zero blocks on finish.
+    check(
+        106,
+        200,
+        |r| {
+            vec_of(r, 1, 8, |rr| {
+                (1 + rr.below(8) as usize, 1 + rr.below(12) as usize)
+            })
+        },
+        |groups: &Vec<(usize, usize)>| {
+            let mk = |sharing: bool| -> Result<Scheduler, String> {
+                let mut s = Scheduler::new(
+                    KvBlockManager::new(geo(4), Blocks::new(4096))
+                        .map_err(|e| e.to_string())?,
+                    256,
+                );
+                s.set_prefix_sharing(sharing);
+                Ok(s)
+            };
+            let mut shared = mk(true)?;
+            let mut plain = mk(false)?;
+            let mut next_id = 0u64;
+            for (gi, (g, plen)) in groups.iter().enumerate() {
+                // distinct prompts per group: first token encodes gi
+                let prompt: Vec<i32> = (0..*plen)
+                    .map(|t| (gi * 16 + t) as i32)
+                    .collect();
+                for _ in 0..*g {
+                    for s in [&mut shared, &mut plain] {
+                        s.submit(Request {
+                            id: next_id,
+                            prompt: prompt.clone(),
+                            params: SamplingParams::default(),
+                        });
+                    }
+                    next_id += 1;
+                }
+            }
+            let a: Vec<u64> =
+                shared.admit().iter().map(|r| r.id).collect();
+            let b: Vec<u64> =
+                plain.admit().iter().map(|r| r.id).collect();
+            if a != b {
+                return Err(format!(
+                    "admissions diverge: shared {a:?} vs plain {b:?}"
+                ));
+            }
+            shared.check_invariants()?;
+            plain.check_invariants()?;
+            let (su, pu) = (
+                shared.kv.used_blocks().get(),
+                plain.kv.used_blocks().get(),
+            );
+            if su > pu {
+                return Err(format!(
+                    "sharing uses more blocks: {su} vs {pu}"
+                ));
+            }
+            if groups.iter().any(|(g, _)| *g > 1) && su >= pu {
+                return Err(format!(
+                    "a real group must share: {su} !< {pu}"
+                ));
+            }
+            // decode rounds: COW splits shared tails but full-block
+            // prompt prefixes stay shared, so shared <= plain always
+            for round in 0..20 {
+                let ids = shared.running_ids().to_vec();
+                shared
+                    .extend_all(&ids)
+                    .map_err(|e| e.to_string())?;
+                plain
+                    .extend_all(&ids)
+                    .map_err(|e| e.to_string())?;
+                shared.check_invariants()?;
+                plain.check_invariants()?;
+                let (su, pu) = (
+                    shared.kv.used_blocks().get(),
+                    plain.kv.used_blocks().get(),
+                );
+                if su > pu {
+                    return Err(format!(
+                        "round {round}: sharing uses more blocks: \
+                         {su} vs {pu}"
+                    ));
+                }
+            }
+            for id in shared.running_ids().to_vec() {
+                shared.finish(id);
+                plain.finish(id);
+            }
+            shared.check_invariants()?;
+            plain.check_invariants()?;
+            if shared.kv.used_blocks().get() != 0 {
+                return Err(format!(
+                    "shared cache leaked {} blocks after drain",
+                    shared.kv.used_blocks().get()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One scripted op on a prefix-sharing scheduler (grouped storms).
+#[derive(Clone, Debug)]
+enum Gop {
+    SubmitGroup(usize, usize), // (group size, prompt length)
+    Admit,
+    Extend,
+    FinishOldest,
+    CancelNewest,
+    PreemptNewest,
+}
+
+impl Shrink for Gop {
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            Gop::SubmitGroup(g, n) if *g > 1 || *n > 1 => {
+                vec![Gop::SubmitGroup(1.max(g / 2), 1.max(n / 2))]
+            }
+            _ => vec![],
+        }
+    }
+}
+
+fn run_grouped_script(
+    blocks: usize,
+    max_batch: usize,
+    ops: &[Gop],
+) -> Result<(), String> {
+    let mut sched = Scheduler::new(
+        KvBlockManager::new(geo(4), Blocks::new(blocks))
+            .map_err(|e| e.to_string())?,
+        max_batch,
+    );
+    sched.set_prefix_sharing(true);
+    let mut next_id = 0u64;
+    let mut group_no = 0usize;
+    for op in ops {
+        match op {
+            Gop::SubmitGroup(g, plen) => {
+                let prompt: Vec<i32> = (0..*plen)
+                    .map(|t| (group_no * 16 + t) as i32)
+                    .collect();
+                group_no += 1;
+                for _ in 0..*g {
+                    sched.submit(Request {
+                        id: next_id,
+                        prompt: prompt.clone(),
+                        params: SamplingParams::default(),
+                    });
+                    next_id += 1;
+                }
+            }
+            Gop::Admit => {
+                sched.admit();
+            }
+            Gop::Extend => {
+                let ids = sched.running_ids().to_vec();
+                sched
+                    .extend_all(&ids)
+                    .map_err(|e| e.to_string())?;
+            }
+            Gop::FinishOldest => {
+                if let Some(&id) = sched.running_ids().first() {
+                    sched.finish(id);
+                }
+            }
+            Gop::CancelNewest => {
+                if let Some(&id) = sched.running_ids().last() {
+                    sched.cancel(id);
+                }
+            }
+            Gop::PreemptNewest => {
+                sched
+                    .preempt_newest()
+                    .map_err(|e| e.to_string())?;
+            }
+        }
+        // refcount conservation, free-XOR-referenced, registry hygiene
+        // — checked after EVERY op, under real block pressure
+        sched.check_invariants()?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prefix_sharing_invariants_hold_under_grouped_storms() {
+    check(
+        107,
+        300,
+        |r| {
+            let blocks = 1 + r.below(24) as usize;
+            let max_batch = 1 + r.below(8) as usize;
+            let ops = vec_of(r, 1, 60, |rr| match rr.below(7) {
+                0 | 1 => Gop::SubmitGroup(
+                    1 + rr.below(8) as usize,
+                    1 + rr.below(12) as usize,
+                ),
+                2 => Gop::Admit,
+                3 => Gop::Extend,
+                4 => Gop::FinishOldest,
+                5 => Gop::CancelNewest,
+                _ => Gop::PreemptNewest,
+            });
+            (blocks, (max_batch, ops))
+        },
+        |(blocks, (max_batch, ops))| {
+            run_grouped_script(*blocks, *max_batch, ops)
         },
     );
 }

@@ -65,6 +65,9 @@ fn synced_weights(rt: &Runtime, j: usize) -> Arc<Vec<HostArray>> {
 /// A request set exercising every sampler path (plain / top-k / top-p /
 /// greedy) with seed-varied prompts and lengths.
 fn gen_requests(rng: &mut Pcg64, n: usize) -> Vec<Request> {
+    // GRPO-style duplicates: some requests reuse the previous prompt so
+    // prefix sharing (when enabled) actually finds shareable prefixes
+    let mut last: Option<Vec<i32>> = None;
     (0..n)
         .map(|i| {
             let params = match i % 4 {
@@ -96,6 +99,12 @@ fn gen_requests(rng: &mut Pcg64, n: usize) -> Vec<Request> {
                 prompt.push(rng.below(10) as i32);
             }
             prompt.push(11);
+            if i % 2 == 1 && rng.below(2) == 0 {
+                if let Some(prev) = &last {
+                    prompt = prev.clone();
+                }
+            }
+            last = Some(prompt.clone());
             Request {
                 id: 1 + i as u64,
                 prompt,
@@ -246,11 +255,16 @@ fn case(seed: u64) -> Result<(), String> {
     let syncs: Vec<Arc<Vec<HostArray>>> =
         (0..spec.n_syncs).map(|j| synced_weights(&rt, j)).collect();
 
+    // half the cases run with prefix sharing ON: the bit-equality claim
+    // must hold across the knob (the reference below stays UNSHARED, so
+    // any sharing-induced divergence in tokens/logprobs fails the case)
+    let mut engine_cfg = EngineConfig::new("dense", "bf16");
+    engine_cfg.prefix_sharing = seed % 2 == 0;
     let pool = EnginePool::new_traced(
         PoolConfig {
             n_replicas: replicas,
             policy,
-            engine: EngineConfig::new("dense", "bf16"),
+            engine: engine_cfg,
         },
         hermetic_runtime_factory(),
         HbHandle::traced(HbRecorder::new(replicas)),

@@ -20,7 +20,7 @@ import sys
 # bench name -> required top-level sections (beyond bench/backend)
 # and whether the section holds sub-objects of numeric leaves.
 SCHEMAS = {
-    "engine_decode": {"variants": dict},
+    "engine_decode": {"variants": dict, "grouped_prefill": dict},
     "engine_pool": {"host_cores": (int, float),
                     "replicas": dict,
                     "stream_admission": dict},
