@@ -119,7 +119,7 @@ impl Runtime {
         } else {
             Manifest::synthetic()
         };
-        Runtime::with_backend(manifest, default_backend()?)
+        Ok(Runtime::with_backend(manifest, default_backend()?))
     }
 
     /// Fully hermetic runtime: synthetic manifest + RefBackend,
@@ -129,19 +129,19 @@ impl Runtime {
             Manifest::synthetic(),
             Box::new(RefBackend::new()),
         )
-        .expect("hermetic runtime construction cannot fail")
     }
 
-    /// Attach an explicit backend to a manifest.
+    /// Attach an explicit backend to a manifest. Infallible: the
+    /// runtime holds no resources beyond what the caller hands it.
     pub fn with_backend(
         manifest: Manifest,
         backend: Box<dyn Backend>,
-    ) -> Result<Runtime> {
-        Ok(Runtime {
+    ) -> Runtime {
+        Runtime {
             manifest,
             backend,
             cache: Mutex::new(HashMap::new()),
-        })
+        }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -150,7 +150,12 @@ impl Runtime {
 
     /// Load + compile an entrypoint (cached).
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = self
+            .cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+        {
             return Ok(e.clone());
         }
         let spec = self.manifest.entry(name)?.clone();
@@ -161,7 +166,7 @@ impl Runtime {
         let exec = Arc::new(Executable { spec, imp });
         self.cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(name.to_string(), exec.clone());
         Ok(exec)
     }

@@ -60,6 +60,7 @@ impl ModelSpec {
         *self
             .config
             .get(key)
+            // lint: allow(P1): a missing config key is a programming error
             .unwrap_or_else(|| panic!("model config missing '{key}'"))
             as usize
     }
@@ -254,9 +255,9 @@ impl Manifest {
         for p in &spec.params {
             let n: usize = p.shape.iter().product();
             let mut v = Vec::with_capacity(n);
-            for i in 0..n {
-                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
-                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            for chunk in bytes.chunks_exact(4).skip(off).take(n) {
+                let &[b0, b1, b2, b3] = chunk else { continue };
+                v.push(f32::from_le_bytes([b0, b1, b2, b3]));
             }
             off += n;
             out.push(v);
@@ -524,7 +525,8 @@ fn synthetic_params(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
             let std = if p.name == "embed" {
                 0.02
             } else {
-                (p.shape[0] as f32).powf(-0.5)
+                let rows = p.shape.first().copied().unwrap_or(1);
+                (rows as f32).powf(-0.5)
             };
             let tag = fnv1a(&format!("{}/{}", spec.arch, p.name));
             let mut rng = Pcg64::new(seed ^ tag);

@@ -92,7 +92,10 @@ impl ExecutableImpl for PjrtExecutable {
 }
 
 fn collect(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostArray>> {
-    let buf = &out[0][0];
+    let buf = out
+        .first()
+        .and_then(|r| r.first())
+        .context("pjrt execute returned no output")?;
     let lit = buf.to_literal_sync()?;
     let parts = lit.to_tuple()?;
     parts.iter().map(from_literal).collect::<Result<Vec<_>>>()

@@ -294,28 +294,45 @@ struct RefModel<'a> {
     lm_head: &'a [f32],
 }
 
+/// The host array bound to the named parameter of `spec`.
+fn lookup<'p>(
+    spec: &ModelSpec,
+    params: &[&'p HostArray],
+    name: &str,
+) -> Result<&'p HostArray> {
+    let i = spec
+        .params
+        .iter()
+        .position(|p| p.name == name)
+        .with_context(|| {
+            format!("model {} has no param {name}", spec.arch)
+        })?;
+    params.get(i).copied().with_context(|| {
+        format!("model {}: parameter list shorter than spec", spec.arch)
+    })
+}
+
 impl<'a> RefModel<'a> {
     fn new(
         spec: &ModelSpec,
         geo: Geometry,
         params: &[&'a HostArray],
     ) -> Result<RefModel<'a>> {
-        let find = |name: &str| {
-            spec.params
-                .iter()
-                .position(|p| p.name == name)
-                .with_context(|| {
-                    format!("model {} has no param {name}", spec.arch)
-                })
-        };
-        let embed = params[find("embed")?].as_f32()?;
-        let lm_head = params[find("lm_head")?].as_f32()?;
+        let embed = lookup(spec, params, "embed")?.as_f32()?;
+        let lm_head = lookup(spec, params, "lm_head")?.as_f32()?;
         let (wq, wq_cols) = match spec
             .params
             .iter()
-            .position(|p| p.name == "layer0.q_proj")
+            .enumerate()
+            .find(|(_, p)| p.name == "layer0.q_proj")
         {
-            Some(i) => (Some(params[i].as_f32()?), spec.params[i].shape[1]),
+            Some((i, p)) => match params.get(i) {
+                Some(a) => (
+                    Some(a.as_f32()?),
+                    p.shape.get(1).copied().unwrap_or(0),
+                ),
+                None => (None, 0),
+            },
             None => (None, 0),
         };
         Ok(RefModel {
@@ -330,9 +347,17 @@ impl<'a> RefModel<'a> {
     /// c' = ALPHA * prev + embed[tok]
     fn state_update(&self, prev: &[f32], tok: i32) -> Vec<f32> {
         let d = self.geo.d;
-        let t = (tok.max(0) as usize) % self.geo.vocab;
-        let row = &self.embed[t * d..(t + 1) * d];
-        (0..d).map(|j| ALPHA * prev[j] + row[j]).collect()
+        let t = (tok.max(0) as usize) % self.geo.vocab.max(1);
+        let row = if d > 0 {
+            self.embed.chunks_exact(d).nth(t).unwrap_or(&[])
+        } else {
+            &[]
+        };
+        let mut out = vec![0.0f32; d];
+        for ((o, &p), &r) in out.iter_mut().zip(prev).zip(row) {
+            *o = ALPHA * p + r;
+        }
+        out
     }
 
     /// h = tanh(BETA * c @ layer0.q_proj) (identity mix if absent).
@@ -340,18 +365,31 @@ impl<'a> RefModel<'a> {
         let d = self.geo.d;
         let mut h = vec![0.0f32; d];
         let cols = self.wq_cols.min(d);
-        for (j, out) in h.iter_mut().enumerate() {
-            let acc = match self.wq {
-                Some(w) if j < cols => {
-                    let mut a = 0.0f32;
-                    for (k, ck) in c.iter().enumerate() {
-                        a += ck * w[k * self.wq_cols + j];
+        match self.wq {
+            Some(w) if cols > 0 => {
+                // k-outer accumulation, same per-output add order as
+                // the j-outer form: acc[j] += c[k] * w[k, j]
+                let mut acc = vec![0.0f32; cols];
+                for (&ck, wrow) in
+                    c.iter().zip(w.chunks_exact(self.wq_cols))
+                {
+                    for (a, &wkj) in acc.iter_mut().zip(wrow) {
+                        *a += ck * wkj;
                     }
-                    a
                 }
-                _ => c[j],
-            };
-            *out = (BETA * acc).tanh();
+                for (out, &a) in h.iter_mut().zip(&acc) {
+                    *out = (BETA * a).tanh();
+                }
+                // identity tail beyond the projection's columns
+                for (out, &cj) in h.iter_mut().zip(c).skip(cols) {
+                    *out = (BETA * cj).tanh();
+                }
+            }
+            _ => {
+                for (out, &cj) in h.iter_mut().zip(c) {
+                    *out = (BETA * cj).tanh();
+                }
+            }
         }
         h
     }
@@ -360,12 +398,14 @@ impl<'a> RefModel<'a> {
     fn logits(&self, h: &[f32]) -> Vec<f32> {
         let v = self.geo.vocab;
         let mut out = vec![0.0f32; v];
-        for (k, &hk) in h.iter().enumerate() {
+        if v == 0 {
+            return out;
+        }
+        for (&hk, row) in h.iter().zip(self.lm_head.chunks_exact(v)) {
             // lint: allow(D2): exact-zero sparsity skip, not a tolerance
             if hk == 0.0 {
                 continue;
             }
-            let row = &self.lm_head[k * v..(k + 1) * v];
             for (o, r) in out.iter_mut().zip(row) {
                 *o += hk * r;
             }
@@ -376,7 +416,15 @@ impl<'a> RefModel<'a> {
 
 /// Borrow the leading `n` host inputs as the flat parameter list.
 fn borrow_params(inputs: &[HostArray], n: usize) -> Vec<&HostArray> {
-    inputs[..n].iter().collect()
+    inputs.iter().take(n).collect()
+}
+
+/// First element of a scalar f32 input.
+fn scalar(a: &HostArray, what: &str) -> Result<f32> {
+    a.as_f32()?
+        .first()
+        .copied()
+        .with_context(|| format!("empty {what} scalar"))
 }
 
 /// Read the state stored at `pos` back out of the caches (mean of the
@@ -392,7 +440,8 @@ fn read_state(
     (0..geo.d)
         .map(|j| {
             let i = geo.cache_index(b_rollout, b, pos, j);
-            0.5 * (kc[i] + vc[i])
+            0.5 * (kc.get(i).copied().unwrap_or(0.0)
+                + vc.get(i).copied().unwrap_or(0.0))
         })
         .collect()
 }
@@ -414,16 +463,20 @@ fn store_state(
     vs: f32,
 ) -> Vec<f32> {
     let mut seen = vec![0.0f32; geo.d];
-    for (j, &cj) in c.iter().enumerate() {
+    for ((j, &cj), s) in c.iter().enumerate().zip(seen.iter_mut()) {
         let i = geo.cache_index(b_rollout, b, pos, j);
         let (k, v) = if fp8_kv {
             (qdq_kv(cj, ks), qdq_kv(cj, vs))
         } else {
             (cj, cj)
         };
-        kc[i] = k;
-        vc[i] = v;
-        seen[j] = 0.5 * (k + v);
+        if let Some(slot) = kc.get_mut(i) {
+            *slot = k;
+        }
+        if let Some(slot) = vc.get_mut(i) {
+            *slot = v;
+        }
+        *s = 0.5 * (k + v);
     }
     seen
 }
@@ -499,18 +552,29 @@ impl RefExecutable {
         let mut kc = vec![0.0f32; geo.cache_len(b_roll)];
         let mut vc = vec![0.0f32; geo.cache_len(b_roll)];
         let mut logits = vec![0.0f32; b_roll * plen * v];
-        for b in 0..b_roll {
+        if plen == 0 || v == 0 {
+            return (logits, kc, vc);
+        }
+        for (b, (trow, lrow_b)) in tokens
+            .chunks_exact(plen)
+            .zip(logits.chunks_exact_mut(plen * v))
+            .take(b_roll)
+            .enumerate()
+        {
             let mut state = vec![0.0f32; geo.d];
-            for p in 0..plen {
-                let c = model.state_update(&state, tokens[b * plen + p]);
+            for (p, (&tok, lrow)) in trow
+                .iter()
+                .zip(lrow_b.chunks_exact_mut(v))
+                .enumerate()
+            {
+                let c = model.state_update(&state, tok);
                 let mut h = model.features(&c);
                 if flags.fp8_linear {
                     qdq_row_e4m3(&mut h, flags.scale_fmt);
                 }
                 let row = model.logits(&h);
-                let base = (b * plen + p) * v;
-                for (j, x) in row.iter().enumerate() {
-                    logits[base + j] = bf16(*x);
+                for (dst, x) in lrow.iter_mut().zip(&row) {
+                    *dst = bf16(*x);
                 }
                 state = store_state(
                     geo,
@@ -537,9 +601,13 @@ impl RefExecutable {
         self.check_arity(inputs.len(), n + 3)?;
         let model =
             RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
-        let tokens = inputs[n].as_i32()?;
-        let ks = inputs[n + 1].as_f32()?[0];
-        let vs = inputs[n + 2].as_f32()?[0];
+        let (_, rest) = inputs.split_at(n);
+        let [tokens_a, ks_a, vs_a] = rest else {
+            bail!("{}: input unpacking failed", self.spec.name);
+        };
+        let tokens = tokens_a.as_i32()?;
+        let ks = scalar(ks_a, "kscale")?;
+        let vs = scalar(vs_a, "vscale")?;
         let (logits, kc, vc) = self.prefill_core(&model, tokens, ks, vs);
         let geo = self.geo;
         let (b_roll, plen) =
@@ -565,11 +633,14 @@ impl RefExecutable {
                 bufs.iter().map(|b| b.0.borrow()).collect();
             let refs: Vec<&HostArray> =
                 guards.iter().map(|g| &**g).collect();
-            let model =
-                RefModel::new(&self.model, self.geo, &refs[..n])?;
-            let tokens = refs[n].as_i32()?;
-            let ks = refs[n + 1].as_f32()?[0];
-            let vs = refs[n + 2].as_f32()?[0];
+            let (ps, rest) = refs.split_at(n);
+            let [tokens_a, ks_a, vs_a] = rest else {
+                bail!("{}: input unpacking failed", self.spec.name);
+            };
+            let model = RefModel::new(&self.model, self.geo, ps)?;
+            let tokens = tokens_a.as_i32()?;
+            let ks = scalar(ks_a, "kscale")?;
+            let vs = scalar(vs_a, "vscale")?;
             self.prefill_core(&model, tokens, ks, vs)
         };
         let geo = self.geo;
@@ -611,8 +682,17 @@ impl RefExecutable {
         }
         let v = geo.vocab;
         let mut logits = vec![0.0f32; b_roll * v];
-        for b in 0..b_roll {
-            let p = pos[b].max(0) as usize;
+        if v == 0 {
+            return Ok(logits);
+        }
+        for (b, ((&tok, &pv), lrow)) in tokens
+            .iter()
+            .zip(pos)
+            .zip(logits.chunks_exact_mut(v))
+            .take(b_roll)
+            .enumerate()
+        {
+            let p = pv.max(0) as usize;
             if p >= geo.max_seq {
                 bail!(
                     "{}: decode position {p} out of range (max_seq {})",
@@ -625,14 +705,14 @@ impl RefExecutable {
             } else {
                 read_state(geo, kc, vc, b_roll, b, p - 1)
             };
-            let c = model.state_update(&prev, tokens[b]);
+            let c = model.state_update(&prev, tok);
             let mut h = model.features(&c);
             if flags.fp8_linear {
                 qdq_row_e4m3(&mut h, flags.scale_fmt);
             }
             let row = model.logits(&h);
-            for (j, x) in row.iter().enumerate() {
-                logits[b * v + j] = bf16(*x);
+            for (dst, x) in lrow.iter_mut().zip(&row) {
+                *dst = bf16(*x);
             }
             store_state(
                 geo,
@@ -658,12 +738,16 @@ impl RefExecutable {
         self.check_arity(inputs.len(), n + 6)?;
         let model =
             RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
-        let mut kc = inputs[n].as_f32()?.to_vec();
-        let mut vc = inputs[n + 1].as_f32()?.to_vec();
-        let tokens = inputs[n + 2].as_i32()?;
-        let pos = inputs[n + 3].as_i32()?;
-        let ks = inputs[n + 4].as_f32()?[0];
-        let vs = inputs[n + 5].as_f32()?[0];
+        let (_, rest) = inputs.split_at(n);
+        let [kc_a, vc_a, tokens_a, pos_a, ks_a, vs_a] = rest else {
+            bail!("{}: input unpacking failed", self.spec.name);
+        };
+        let mut kc = kc_a.as_f32()?.to_vec();
+        let mut vc = vc_a.as_f32()?.to_vec();
+        let tokens = tokens_a.as_i32()?;
+        let pos = pos_a.as_i32()?;
+        let ks = scalar(ks_a, "kscale")?;
+        let vs = scalar(vs_a, "vscale")?;
         let logits = self
             .decode_core(&model, &mut kc, &mut vc, tokens, pos, ks, vs)?;
         let geo = self.geo;
@@ -685,20 +769,24 @@ impl RefExecutable {
     ) -> Result<Vec<DeviceBuffer>> {
         let n = self.model.params.len();
         self.check_arity(bufs.len(), n + 6)?;
+        let (pbufs, rest) = bufs.split_at(n);
+        let [kcb, vcb, tokb, posb, ksb, vsb] = rest else {
+            bail!("{}: input unpacking failed", self.spec.name);
+        };
         let logits = {
             let guards: Vec<Ref<HostArray>> =
-                bufs[..n].iter().map(|b| b.0.borrow()).collect();
+                pbufs.iter().map(|b| b.0.borrow()).collect();
             let refs: Vec<&HostArray> =
                 guards.iter().map(|g| &**g).collect();
             let model = RefModel::new(&self.model, self.geo, &refs)?;
-            let mut kcg = bufs[n].0.borrow_mut();
-            let mut vcg = bufs[n + 1].0.borrow_mut();
-            let tokg = bufs[n + 2].0.borrow();
-            let posg = bufs[n + 3].0.borrow();
-            let ksg = bufs[n + 4].0.borrow();
-            let vsg = bufs[n + 5].0.borrow();
-            let ks = ksg.as_f32()?[0];
-            let vs = vsg.as_f32()?[0];
+            let mut kcg = kcb.0.borrow_mut();
+            let mut vcg = vcb.0.borrow_mut();
+            let tokg = tokb.0.borrow();
+            let posg = posb.0.borrow();
+            let ksg = ksb.0.borrow();
+            let vsg = vsb.0.borrow();
+            let ks = scalar(&ksg, "kscale")?;
+            let vs = scalar(&vsg, "vscale")?;
             self.decode_core(
                 &model,
                 kcg.as_f32_mut()?,
@@ -715,8 +803,8 @@ impl RefExecutable {
                 vec![b_roll, self.geo.vocab],
                 logits,
             )),
-            bufs[n].alias(),
-            bufs[n + 1].alias(),
+            kcb.alias(),
+            vcb.alias(),
         ])
     }
 
@@ -731,15 +819,40 @@ impl RefExecutable {
         let geo = self.geo;
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
         let (d, v) = (geo.d, geo.vocab);
-        let steps = tt - 1;
-        let mut feats = vec![0.0f32; bt * steps * d];
-        let mut probs = vec![0.0f32; bt * steps * v];
-        let mut lp = vec![0.0f32; bt * steps];
-        let mut ent = vec![0.0f32; bt * steps];
-        for b in 0..bt {
+        let steps = tt.saturating_sub(1);
+        let mut fwd = TrainForward {
+            feats: vec![0.0f32; bt * steps * d],
+            probs: vec![0.0f32; bt * steps * v],
+            lp: vec![0.0f32; bt * steps],
+            ent: vec![0.0f32; bt * steps],
+            nexts: vec![0usize; bt * steps],
+        };
+        if steps == 0 || d == 0 || v == 0 {
+            return fwd;
+        }
+        for ((((trow, frow_b), prow_b), lrow_b), (erow_b, nrow_b)) in
+            tokens
+                .chunks_exact(tt)
+                .zip(fwd.feats.chunks_exact_mut(steps * d))
+                .zip(fwd.probs.chunks_exact_mut(steps * v))
+                .zip(fwd.lp.chunks_exact_mut(steps))
+                .zip(
+                    fwd.ent
+                        .chunks_exact_mut(steps)
+                        .zip(fwd.nexts.chunks_exact_mut(steps)),
+                )
+                .take(bt)
+        {
             let mut state = vec![0.0f32; d];
-            for t in 0..steps {
-                let c = model.state_update(&state, tokens[b * tt + t]);
+            for (((((&tok, &tok_next), fslot), pslot), lslot), (eslot, nslot)) in
+                trow.iter()
+                    .zip(trow.iter().skip(1))
+                    .zip(frow_b.chunks_exact_mut(d))
+                    .zip(prow_b.chunks_exact_mut(v))
+                    .zip(lrow_b.iter_mut())
+                    .zip(erow_b.iter_mut().zip(nrow_b.iter_mut()))
+            {
+                let c = model.state_update(&state, tok);
                 let h = model.features(&c);
                 let row = model.logits(&h);
                 let mx =
@@ -747,48 +860,50 @@ impl RefExecutable {
                 let z: f64 =
                     row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
                 let logz = mx as f64 + z.ln();
-                let idx = b * steps + t;
-                let nxt = (tokens[b * tt + t + 1].max(0) as usize) % v;
-                lp[idx] = (row[nxt] as f64 - logz) as f32;
+                let nxt = (tok_next.max(0) as usize) % v;
+                *nslot = nxt;
+                *lslot = (row.get(nxt).copied().unwrap_or(0.0) as f64
+                    - logz) as f32;
                 let mut e = 0.0f64;
-                for (j, &x) in row.iter().enumerate() {
+                for (ps, &x) in pslot.iter_mut().zip(&row) {
                     let p = ((x as f64) - logz).exp();
-                    probs[idx * v + j] = p as f32;
+                    *ps = p as f32;
                     e -= p * ((x as f64) - logz);
                 }
-                ent[idx] = e as f32;
-                feats[idx * d..(idx + 1) * d].copy_from_slice(&h);
+                *eslot = e as f32;
+                fslot.copy_from_slice(&h);
                 state = c;
             }
         }
-        TrainForward {
-            feats,
-            probs,
-            lp,
-            ent,
-        }
+        fwd
     }
 
     fn run_train(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
         let n = self.model.params.len();
         self.check_arity(inputs.len(), 3 * n + 6)?;
-        let params = &inputs[..n];
-        let m_in = &inputs[n..2 * n];
-        let v_in = &inputs[2 * n..3 * n];
-        let step = inputs[3 * n].as_f32()?[0];
-        let tokens = inputs[3 * n + 1].as_i32()?;
-        let mask = inputs[3 * n + 2].as_f32()?;
-        let adv = inputs[3 * n + 3].as_f32()?;
-        let rlogp = inputs[3 * n + 4].as_f32()?;
-        let hp = inputs[3 * n + 5].as_f32()?;
-        let (lr, tis_c, ent_coef, mis) = (hp[0], hp[1], hp[2], hp[3]);
+        let (params, rest) = inputs.split_at(n);
+        let (m_in, rest) = rest.split_at(n);
+        let (v_in, rest) = rest.split_at(n);
+        let [step_a, tokens_a, mask_a, adv_a, rlogp_a, hp_a] = rest
+        else {
+            bail!("{}: train input unpacking failed", self.spec.name);
+        };
+        let step = scalar(step_a, "step")?;
+        let tokens = tokens_a.as_i32()?;
+        let mask = mask_a.as_f32()?;
+        let adv = adv_a.as_f32()?;
+        let rlogp = rlogp_a.as_f32()?;
+        let hp = hp_a.as_f32()?;
+        let &[lr, tis_c, ent_coef, mis, ..] = hp else {
+            bail!("{}: hyperparameter vector too short", self.spec.name);
+        };
 
         let model =
             RefModel::new(&self.model, self.geo, &borrow_params(params, n))?;
         let fwd = self.train_forward(&model, tokens);
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
         let (d, v) = (self.geo.d, self.geo.vocab);
-        let steps = tt - 1;
+        let steps = tt.saturating_sub(1);
 
         // ---- loss + mismatch diagnostics (pi_old == pi_theta: one
         // update per batch, so ratio == 1 and the DAPO clip is inactive;
@@ -802,9 +917,14 @@ impl RefExecutable {
         let mut tis_sum = 0.0f64;
         let mut raw_sum = 0.0f64;
         let mut tis_w = vec![0.0f32; bt * steps];
-        for i in 0..bt * steps {
-            let mk = mask[i];
-            let dlog = (fwd.lp[i] - rlogp[i]) as f64;
+        for ((((w_slot, &mk), (&lpi, &rl)), &ad), &en) in tis_w
+            .iter_mut()
+            .zip(mask)
+            .zip(fwd.lp.iter().zip(rlogp))
+            .zip(adv)
+            .zip(&fwd.ent)
+        {
+            let dlog = (lpi - rl) as f64;
             let raw = dlog.exp();
             let w = if tis_c > 0.0 {
                 if mis > 0.0 {
@@ -820,14 +940,14 @@ impl RefExecutable {
             } else {
                 1.0
             };
-            tis_w[i] = w as f32;
+            *w_slot = w as f32;
             // lint: allow(D2): mask entries are exactly 0.0 or 1.0
             if mk == 0.0 {
                 continue;
             }
             let mkd = mk as f64;
-            obj += adv[i] as f64 * w * mkd;
-            sum_ent += fwd.ent[i] as f64 * mkd;
+            obj += ad as f64 * w * mkd;
+            sum_ent += en as f64 * mkd;
             k1 -= dlog * mkd;
             k3 += ((raw - 1.0) - dlog) * mkd;
             tis_sum += w * mkd;
@@ -839,25 +959,38 @@ impl RefExecutable {
 
         // ---- policy gradient through the lm_head only ----
         let mut g_lm = vec![0.0f32; d * v];
-        for b in 0..bt {
-            for t in 0..steps {
-                let i = b * steps + t;
+        if d > 0 && v > 0 {
+            let mut dl = vec![0.0f32; v];
+            for ((((&mk, &ad), &w), hrow), (prow, &nxt)) in mask
+                .iter()
+                .zip(adv)
+                .zip(&tis_w)
+                .zip(fwd.feats.chunks_exact(d))
+                .zip(fwd.probs.chunks_exact(v).zip(&fwd.nexts))
+            {
                 // lint: allow(D2): mask entries are exactly 0.0 or 1.0
-                if mask[i] == 0.0 {
+                if mk == 0.0 {
                     continue;
                 }
-                let coef = -(adv[i] * tis_w[i]) / denom;
-                let nxt = (tokens[b * tt + t + 1].max(0) as usize) % v;
-                let hrow = &fwd.feats[i * d..(i + 1) * d];
-                for j in 0..v {
+                let coef = -(ad * w) / denom;
+                for (j, (dst, &pj)) in
+                    dl.iter_mut().zip(prow).enumerate()
+                {
                     let onehot = if j == nxt { 1.0 } else { 0.0 };
-                    let dl = coef * (onehot - fwd.probs[i * v + j]);
-                    // lint: allow(D2): exact-zero gradient skip
-                    if dl == 0.0 {
-                        continue;
-                    }
-                    for (k, &hk) in hrow.iter().enumerate() {
-                        g_lm[k * v + j] += hk * dl;
+                    *dst = coef * (onehot - pj);
+                }
+                // k-outer accumulation: each g_lm element still sees at
+                // most one add per masked step, in step order, so the
+                // float sums stay bit-identical to the index form.
+                for (&hk, grow) in
+                    hrow.iter().zip(g_lm.chunks_exact_mut(v))
+                {
+                    for (g, &dlj) in grow.iter_mut().zip(&dl) {
+                        // lint: allow(D2): exact-zero gradient skip
+                        if dlj == 0.0 {
+                            continue;
+                        }
+                        *g += hk * dlj;
                     }
                 }
             }
@@ -876,10 +1009,16 @@ impl RefExecutable {
         let mut new_p = Vec::with_capacity(n);
         let mut new_m = Vec::with_capacity(n);
         let mut new_v = Vec::with_capacity(n);
-        for (i, pspec) in self.model.params.iter().enumerate() {
-            let p = params[i].as_f32()?;
-            let m0 = m_in[i].as_f32()?;
-            let v0 = v_in[i].as_f32()?;
+        for ((pspec, pa), (ma, va)) in self
+            .model
+            .params
+            .iter()
+            .zip(params)
+            .zip(m_in.iter().zip(v_in))
+        {
+            let p = pa.as_f32()?;
+            let m0 = ma.as_f32()?;
+            let v0 = va.as_f32()?;
             let grad: &[f32] = if pspec.name == "lm_head" {
                 &g_lm
             } else {
@@ -889,13 +1028,17 @@ impl RefExecutable {
             let mut pn = Vec::with_capacity(len);
             let mut mn = Vec::with_capacity(len);
             let mut vn = Vec::with_capacity(len);
-            for j in 0..len {
-                let g = grad.get(j).copied().unwrap_or(0.0) * clip;
-                let m1 = ADAM_B1 * m0[j] + (1.0 - ADAM_B1) * g;
-                let v1 = ADAM_B2 * v0[j] + (1.0 - ADAM_B2) * g * g;
+            for ((&pj, (&m0j, &v0j)), g) in p
+                .iter()
+                .zip(m0.iter().zip(v0))
+                .zip(grad.iter().copied().chain(std::iter::repeat(0.0)))
+            {
+                let g = g * clip;
+                let m1 = ADAM_B1 * m0j + (1.0 - ADAM_B1) * g;
+                let v1 = ADAM_B2 * v0j + (1.0 - ADAM_B2) * g * g;
                 let upd =
                     lr * (m1 / bc1) / ((v1 / bc2).sqrt() + ADAM_EPS);
-                pn.push(p[j] - upd);
+                pn.push(pj - upd);
                 mn.push(m1);
                 vn.push(v1);
             }
@@ -941,12 +1084,17 @@ impl RefExecutable {
         self.check_arity(inputs.len(), n + 1)?;
         let model =
             RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
-        let tokens = inputs[n].as_i32()?;
+        let (_, rest) = inputs.split_at(n);
+        let [tokens_a] = rest else {
+            bail!("{}: logprobs input unpacking failed", self.spec.name);
+        };
+        let tokens = tokens_a.as_i32()?;
         let fwd = self.train_forward(&model, tokens);
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
+        let steps = tt.saturating_sub(1);
         Ok(vec![
-            HostArray::f32(vec![bt, tt - 1], fwd.lp),
-            HostArray::f32(vec![bt, tt - 1], fwd.ent),
+            HostArray::f32(vec![bt, steps], fwd.lp),
+            HostArray::f32(vec![bt, steps], fwd.ent),
         ])
     }
 
@@ -961,19 +1109,25 @@ impl RefExecutable {
         self.check_arity(inputs.len(), n + 1)?;
         let model =
             RefModel::new(&self.model, self.geo, &borrow_params(inputs, n))?;
-        let tokens = inputs[n].as_i32()?;
+        let (_, rest) = inputs.split_at(n);
+        let [tokens_a] = rest else {
+            bail!("{}: calibrate input unpacking failed", self.spec.name);
+        };
+        let tokens = tokens_a.as_i32()?;
         let (bt, tt) = (self.constants.b_train, self.constants.t_train);
         let mut amax_even = 0.0f32;
         let mut amax_odd = 0.0f32;
-        for b in 0..bt {
-            let mut state = vec![0.0f32; self.geo.d];
-            for t in 0..tt {
-                state = model.state_update(&state, tokens[b * tt + t]);
-                for (j, &x) in state.iter().enumerate() {
-                    if j % 2 == 0 {
-                        amax_even = amax_even.max(x.abs());
-                    } else {
-                        amax_odd = amax_odd.max(x.abs());
+        if tt > 0 {
+            for trow in tokens.chunks_exact(tt).take(bt) {
+                let mut state = vec![0.0f32; self.geo.d];
+                for &tok in trow {
+                    state = model.state_update(&state, tok);
+                    for (j, &x) in state.iter().enumerate() {
+                        if j % 2 == 0 {
+                            amax_even = amax_even.max(x.abs());
+                        } else {
+                            amax_odd = amax_odd.max(x.abs());
+                        }
                     }
                 }
             }
@@ -992,6 +1146,9 @@ struct TrainForward {
     probs: Vec<f32>,
     lp: Vec<f32>,
     ent: Vec<f32>,
+    /// Per-step next-token index (already reduced mod vocab), so the
+    /// gradient pass never re-derives it from the token stream.
+    nexts: Vec<usize>,
 }
 
 #[cfg(test)]

@@ -27,3 +27,26 @@ if ! diff -u "$tmp/rust.txt" "$tmp/python.txt"; then
     exit 1
 fi
 echo "lint_crosscheck: scanner and mirror agree ($(wc -l < "$tmp/rust.txt") report lines)"
+
+# Rule M1 (model-vocabulary drift) is zero on a healthy tree, so the
+# diff above never exercises its message rendering. Cross-check both
+# implementations against the committed drift fixture, where M1 fires
+# in both directions (variant missing from the vocabulary, stale
+# vocabulary pair): those detail lines must byte-match too, and must
+# actually be present.
+(cd "$root" && cargo run -q -p pallas-lint -- \
+    --root tools/lint/tests/fixtures/m1 --verbose || true) \
+    | sed 's/^pallas-lint[^:]*:/pallas-lint:/' > "$tmp/rust-m1.txt"
+(python3 "$root/tools/lint/mirror.py" \
+    --root "$root/tools/lint/tests/fixtures/m1" --verbose || true) \
+    | sed 's/^pallas-lint[^:]*:/pallas-lint:/' > "$tmp/python-m1.txt"
+
+if ! diff -u "$tmp/rust-m1.txt" "$tmp/python-m1.txt"; then
+    echo "lint_crosscheck: scanner and mirror disagree on the M1 fixture" >&2
+    exit 1
+fi
+if ! grep -q 'M1' "$tmp/python-m1.txt"; then
+    echo "lint_crosscheck: M1 fixture produced no M1 findings" >&2
+    exit 1
+fi
+echo "lint_crosscheck: M1 fixture findings byte-match"

@@ -16,7 +16,7 @@ import os
 import re
 import sys
 
-RULES = ("D1", "D2", "P1", "C1", "A1", "C2", "Q1", "Q2", "U1")
+RULES = ("D1", "D2", "P1", "C1", "A1", "C2", "Q1", "Q2", "U1", "M1")
 
 # Modules whose behavior must be bit-deterministic (rule D1).
 DET_MODULES = ("rollout", "sync", "coordinator", "testkit", "fp8")
@@ -69,8 +69,16 @@ KEYWORDS = (
 )
 
 ALLOW_RE = re.compile(
-    r"//\s*lint:\s*allow\((D1|D2|P1|C1|A1|C2|Q1|Q2|U1)\)"
+    r"//\s*lint:\s*allow\((D1|D2|P1|C1|A1|C2|Q1|Q2|U1|M1)\)"
 )
+
+# Rule M1 sources of truth: (file under rust/src, enums pinned).
+M1_SOURCES = (
+    ("rollout/pool.rs", ("Ctl", "ToWorker", "Ordered", "Fence", "Event")),
+    ("testkit/hb.rs", ("FenceState",)),
+)
+# The model-side vocabulary file rule M1 cross-checks (repo-relative).
+M1_VOCAB = "tools/model/src/vocab.rs"
 RAW_STR_RE = re.compile(r'(b?r)(#*)"')
 
 
@@ -798,6 +806,168 @@ def scan_file(relpath, src):
     return module, finds
 
 
+def enum_variants(src, name):
+    """Variants of `enum <name>` as [(variant, 1-based line)], or None
+    when the enum is not found. Line-based: header is a trimmed line
+    `enum <name>` (optionally behind pub/pub(crate)); a variant is a
+    leading uppercase identifier on a depth-1 body line; comment-only
+    and attribute lines are skipped.
+    """
+    lines = src.split("\n")
+    header = None
+    for idx, raw in enumerate(lines):
+        t = raw.strip()
+        for p in ("pub(crate) ", "pub "):
+            if t.startswith(p):
+                t = t[len(p):]
+        if t.startswith("enum ") and t[5:].startswith(name):
+            after = t[5 + len(name):]
+            if after == "" or after[0] in (" ", "{", "<"):
+                header = idx
+                break
+    if header is None:
+        return None
+    vars_, depth, open_ = [], 0, False
+    for idx in range(header, len(lines)):
+        raw = lines[idx]
+        t = raw.strip()
+        if t.startswith("//"):
+            continue
+        if (
+            open_
+            and depth == 1
+            and not t.startswith("#[")
+            and t[:1].isascii()
+            and t[:1].isupper()
+        ):
+            v = ""
+            for c in t:
+                if c.isascii() and (c.isalnum() or c == "_"):
+                    v += c
+                else:
+                    break
+            vars_.append((v, idx + 1))
+        for c in raw:
+            if c == "{":
+                depth += 1
+                open_ = True
+            elif c == "}":
+                depth -= 1
+        if open_ and depth <= 0:
+            break
+    return vars_
+
+
+def vocab_pairs(src):
+    """('Enum', 'Variant', line) triples: the first two quoted
+    identifiers on each trimmed line starting with `("` — the lexical
+    contract vocab.rs documents.
+    """
+    out = []
+    for idx, raw in enumerate(src.split("\n")):
+        t = raw.strip()
+        if not t.startswith('("'):
+            continue
+        parts, rest = [], t
+        while len(parts) < 2:
+            start = rest.find('"')
+            if start < 0:
+                break
+            after = rest[start + 1:]
+            end = after.find('"')
+            if end < 0:
+                break
+            parts.append(after[:end])
+            rest = after[end + 1:]
+        if len(parts) == 2:
+            out.append((parts[0], parts[1], idx + 1))
+    return out
+
+
+def m1_module(rel):
+    if rel.startswith("tools/"):
+        return "model"
+    return rel.split("/", 1)[0] if "/" in rel else "root"
+
+
+def scan_model_vocab(root):
+    """Rule M1 — model drift. Cross-checks the tools/model protocol
+    vocabulary against the implementation enums in both directions;
+    findings carry no allow escape. Ordering is fixed: per-source
+    missing variants (M1_SOURCES order, variants in line order), then
+    stale vocabulary pairs in vocab.rs line order.
+    """
+    details = []
+    vpath = os.path.join(root, *M1_VOCAB.split("/"))
+    vocab, have_vocab = [], False
+    try:
+        with open(vpath, encoding="utf-8") as fh:
+            vocab = vocab_pairs(fh.read())
+        have_vocab = True
+    except OSError:
+        details.append((
+            "M1",
+            M1_VOCAB,
+            1,
+            "vocabulary file unreadable — the model's protocol "
+            "vocabulary cannot be cross-checked",
+            False,
+        ))
+    used = [False] * len(vocab)
+    for file, enums in M1_SOURCES:
+        path = os.path.join(root, "rust", "src", *file.split("/"))
+        try:
+            with open(path, encoding="utf-8") as fh:
+                src = fh.read()
+        except OSError:
+            details.append((
+                "M1",
+                file,
+                1,
+                f"{file} unreadable — M1 source of truth missing",
+                False,
+            ))
+            continue
+        for name in enums:
+            vars_ = enum_variants(src, name)
+            if vars_ is None:
+                details.append((
+                    "M1",
+                    file,
+                    1,
+                    f"enum {name} not found in {file}",
+                    False,
+                ))
+                continue
+            for variant, line in vars_:
+                hit = False
+                for vi, (e, v, _ln) in enumerate(vocab):
+                    if e == name and v == variant:
+                        used[vi] = True
+                        hit = True
+                if have_vocab and not hit:
+                    details.append((
+                        "M1",
+                        file,
+                        line,
+                        f"{name}::{variant} missing from the "
+                        "tools/model vocabulary — update vocab.rs "
+                        "and the model",
+                        False,
+                    ))
+    for vi, (e, v, line) in enumerate(vocab):
+        if not used[vi]:
+            details.append((
+                "M1",
+                M1_VOCAB,
+                line,
+                f"stale vocabulary pair {e}::{v} — no such variant "
+                "in the implementation",
+                False,
+            ))
+    return details
+
+
 def scan_tree(root):
     src_root = os.path.join(root, "rust", "src")
     counts = {}  # (rule, module) -> [violations, allowed]
@@ -818,6 +988,12 @@ def scan_tree(root):
                 counts.setdefault(key, [0, 0])
                 counts[key][1 if allowed else 0] += 1
                 details.append((rule, rel, line, what, allowed))
+    # rule M1 runs over the whole repo, not the rust/src walk
+    for rule, rel, line, what, allowed in scan_model_vocab(root):
+        key = (rule, m1_module(rel))
+        counts.setdefault(key, [0, 0])
+        counts[key][0] += 1
+        details.append((rule, rel, line, what, allowed))
     return nfiles, counts, details
 
 
@@ -873,7 +1049,7 @@ def main(argv):
     for (rule, module), (v, _a) in sorted(counts.items()):
         if v == 0:
             continue
-        if rule in ("D1", "D2", "C1", "A1", "C2", "Q1", "Q2", "U1"):
+        if rule in ("D1", "D2", "C1", "A1", "C2", "Q1", "Q2", "U1", "M1"):
             print(f"FLOOR: {rule} must be 0 everywhere, {module} has {v}")
             ok = False
         if rule == "P1" and module in CORE_MODULES:

@@ -1,6 +1,6 @@
 //! pallas-lint: a hermetic static-analysis pass over `rust/src`.
 //!
-//! Nine rule families, each encoding an invariant this repo has been
+//! Ten rule families, each encoding an invariant this repo has been
 //! bitten by (see DESIGN.md §7 "Static invariants"):
 //!
 //! * **D1** — determinism: no `HashMap`/`HashSet`/`Instant`/
@@ -47,6 +47,15 @@
 //!   flagged; the `Tokens`/`Blocks`/`Bytes`/`ScaleEpoch` newtypes in
 //!   `util` carry the same invariant into the type system, the lint
 //!   guards the residual `usize` boundary sites.
+//! * **M1** — model drift: the protocol vocabulary that
+//!   `tools/model/src/vocab.rs` pins (`("Enum", "Variant")` pairs, one
+//!   per line) must match the implementation enums exactly, in both
+//!   directions: every variant of `Ctl`/`ToWorker`/`Ordered`/`Fence`/
+//!   `Event` in `rollout/pool.rs` and of `FenceState` in
+//!   `testkit/hb.rs` must appear in the vocabulary, and every
+//!   vocabulary pair must name a real variant. A drifted model checker
+//!   silently verifies the wrong protocol, so M1 is a hard floor and
+//!   has no allow escape.
 //!
 //! Per-site escape hatch: a `// lint: allow(<rule>): <reason>` comment
 //! on the violation's line or the line immediately above. Allowed
@@ -78,8 +87,8 @@ pub const Q2_MODULES: [&str; 3] = ["rollout", "sync", "coordinator"];
 /// Modules where unit-family mixing must be zero (rule U1 hard floor).
 pub const U1_MODULES: [&str; 3] = ["fp8", "rollout", "sync"];
 
-const RULE_NAMES: [&str; 9] =
-    ["D1", "D2", "P1", "C1", "A1", "C2", "Q1", "Q2", "U1"];
+const RULE_NAMES: [&str; 10] =
+    ["D1", "D2", "P1", "C1", "A1", "C2", "Q1", "Q2", "U1", "M1"];
 const C1_METHODS: [&str; 4] = ["send", "try_send", "send_ctl", "send_ordered"];
 /// Identifier segments that mark an accounting quantity (rule A1).
 const ACCT_WORDS: [&str; 11] = [
@@ -113,6 +122,16 @@ const UNIT_FAMILIES: [(&str, [&str; 2]); 4] = [
     ("epoch", ["epoch", "epochs"]),
     ("tokens", ["token", "tokens"]),
 ];
+/// Rule M1 sources of truth: (file under `rust/src`, enums pinned).
+const M1_SOURCES: [(&str, &[&str]); 2] = [
+    (
+        "rollout/pool.rs",
+        &["Ctl", "ToWorker", "Ordered", "Fence", "Event"],
+    ),
+    ("testkit/hb.rs", &["FenceState"]),
+];
+/// The model-side vocabulary file rule M1 cross-checks (repo-relative).
+const M1_VOCAB: &str = "tools/model/src/vocab.rs";
 const KEYWORDS: [&str; 31] = [
     "as", "box", "break", "const", "continue", "dyn", "else", "enum",
     "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
@@ -1191,6 +1210,205 @@ fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     Ok(())
 }
 
+/// Extract the variants of `enum <name>` from Rust source, line-based:
+/// the header is a trimmed line `enum <name>` (optionally behind
+/// `pub`/`pub(crate)`); a variant is a leading uppercase identifier on
+/// a depth-1 line of the body. Comment-only and attribute lines are
+/// skipped. Returns `(variant, 1-based line)` in source order, or
+/// `None` when the enum is not found.
+fn enum_variants(src: &str, name: &str) -> Option<Vec<(String, usize)>> {
+    let lines: Vec<&str> = src.split('\n').collect();
+    let mut header = None;
+    for (idx, raw) in lines.iter().enumerate() {
+        let mut t = raw.trim();
+        for p in ["pub(crate) ", "pub "] {
+            if let Some(rest) = t.strip_prefix(p) {
+                t = rest;
+            }
+        }
+        if let Some(rest) = t.strip_prefix("enum ") {
+            if let Some(after) = rest.strip_prefix(name) {
+                let c = after.chars().next();
+                if matches!(c, None | Some(' ') | Some('{') | Some('<')) {
+                    header = Some(idx);
+                    break;
+                }
+            }
+        }
+    }
+    let header = header?;
+    let mut vars = Vec::new();
+    let mut depth = 0i64;
+    let mut open = false;
+    for (idx, raw) in lines.iter().enumerate().skip(header) {
+        let t = raw.trim();
+        if t.starts_with("//") {
+            continue;
+        }
+        if open
+            && depth == 1
+            && !t.starts_with("#[")
+            && t.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+        {
+            let v: String = t
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            vars.push((v, idx + 1));
+        }
+        for c in raw.chars() {
+            if c == '{' {
+                depth += 1;
+                open = true;
+            } else if c == '}' {
+                depth -= 1;
+            }
+        }
+        if open && depth <= 0 {
+            break;
+        }
+    }
+    Some(vars)
+}
+
+/// Extract `("Enum", "Variant")` pairs from the vocabulary file: a
+/// pair is the first two quoted identifiers on a trimmed line starting
+/// with `("` — the lexical contract vocab.rs documents.
+fn vocab_pairs(src: &str) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.split('\n').enumerate() {
+        let t = raw.trim();
+        if !t.starts_with("(\"") {
+            continue;
+        }
+        let mut parts: Vec<String> = Vec::new();
+        let mut rest = t;
+        while parts.len() < 2 {
+            let Some(start) = rest.find('"') else { break };
+            let after = &rest[start + 1..];
+            let Some(end) = after.find('"') else { break };
+            parts.push(after[..end].to_string());
+            rest = &after[end + 1..];
+        }
+        if let [e, v] = parts.as_slice() {
+            out.push((e.clone(), v.clone(), idx + 1));
+        }
+    }
+    out
+}
+
+/// Module bucket for an M1 finding (vocab findings land in "model").
+fn m1_module(rel: &str) -> String {
+    if rel.starts_with("tools/") {
+        return "model".to_string();
+    }
+    match rel.split_once('/') {
+        Some((m, _)) => m.to_string(),
+        None => "root".to_string(),
+    }
+}
+
+/// Rule M1 — model drift. Cross-checks the `tools/model` protocol
+/// vocabulary against the implementation enums in both directions;
+/// findings carry no allow escape. Ordering is fixed: per-source
+/// missing variants (M1_SOURCES order, variants in line order), then
+/// stale vocabulary pairs in vocab.rs line order.
+pub fn scan_model_vocab(root: &Path) -> Vec<Detail> {
+    let mut details = Vec::new();
+    let mut vpath = root.to_path_buf();
+    for seg in M1_VOCAB.split('/') {
+        vpath = vpath.join(seg);
+    }
+    let mut vocab: Vec<(String, String, usize)> = Vec::new();
+    let mut have_vocab = false;
+    match fs::read_to_string(&vpath) {
+        Ok(src) => {
+            have_vocab = true;
+            vocab = vocab_pairs(&src);
+        }
+        Err(_) => details.push(Detail {
+            rule: "M1",
+            rel: M1_VOCAB.to_string(),
+            line: 1,
+            what: "vocabulary file unreadable — the model's protocol \
+                   vocabulary cannot be cross-checked"
+                .to_string(),
+            allowed: false,
+        }),
+    }
+    let mut used = vec![false; vocab.len()];
+    for (file, enums) in M1_SOURCES {
+        let mut path = root.join("rust").join("src");
+        for seg in file.split('/') {
+            path = path.join(seg);
+        }
+        let src = match fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(_) => {
+                details.push(Detail {
+                    rule: "M1",
+                    rel: file.to_string(),
+                    line: 1,
+                    what: format!(
+                        "{file} unreadable — M1 source of truth missing"
+                    ),
+                    allowed: false,
+                });
+                continue;
+            }
+        };
+        for name in enums {
+            let Some(vars) = enum_variants(&src, name) else {
+                details.push(Detail {
+                    rule: "M1",
+                    rel: file.to_string(),
+                    line: 1,
+                    what: format!("enum {name} not found in {file}"),
+                    allowed: false,
+                });
+                continue;
+            };
+            for (variant, line) in vars {
+                let mut hit = false;
+                for (vi, (e, v, _)) in vocab.iter().enumerate() {
+                    if e == name && *v == variant {
+                        used[vi] = true;
+                        hit = true;
+                    }
+                }
+                if have_vocab && !hit {
+                    details.push(Detail {
+                        rule: "M1",
+                        rel: file.to_string(),
+                        line,
+                        what: format!(
+                            "{name}::{variant} missing from the \
+                             tools/model vocabulary — update vocab.rs \
+                             and the model"
+                        ),
+                        allowed: false,
+                    });
+                }
+            }
+        }
+    }
+    for (vi, (e, v, line)) in vocab.iter().enumerate() {
+        if !used[vi] {
+            details.push(Detail {
+                rule: "M1",
+                rel: M1_VOCAB.to_string(),
+                line: *line,
+                what: format!(
+                    "stale vocabulary pair {e}::{v} — no such variant \
+                     in the implementation"
+                ),
+                allowed: false,
+            });
+        }
+    }
+    details
+}
+
 /// Scan every `.rs` file under `<root>/rust/src`.
 pub fn scan_tree(root: &Path) -> io::Result<(usize, Counts, Vec<Detail>)> {
     let src_root = root.join("rust").join("src");
@@ -1221,6 +1439,14 @@ pub fn scan_tree(root: &Path) -> io::Result<(usize, Counts, Vec<Detail>)> {
                 allowed: f.allowed,
             });
         }
+    }
+    // rule M1 runs over the whole repo, not the rust/src walk
+    for d in scan_model_vocab(root) {
+        let e = counts
+            .entry((d.rule, m1_module(&d.rel)))
+            .or_insert((0, 0));
+        e.0 += 1;
+        details.push(d);
     }
     Ok((files.len(), counts, details))
 }
@@ -1286,7 +1512,7 @@ pub fn run(root: &Path, write: bool, verbose: bool) -> io::Result<bool> {
         }
         if matches!(
             *rule,
-            "D1" | "D2" | "C1" | "A1" | "C2" | "Q1" | "Q2" | "U1"
+            "D1" | "D2" | "C1" | "A1" | "C2" | "Q1" | "Q2" | "U1" | "M1"
         ) {
             println!("FLOOR: {rule} must be 0 everywhere, {module} has {v}");
             ok = false;

@@ -1,0 +1,32 @@
+//! M1 fixture: a drifted copy of the pool protocol enums. `Fence`
+//! grew a `Drain` variant the model vocabulary does not know about.
+
+enum Ctl {
+    Abort(u64),
+    Discard(u64),
+    Stats,
+    Shutdown,
+}
+
+enum ToWorker {
+    Ordered(Ordered),
+    Ctl(Ctl),
+}
+
+enum Ordered {
+    Submit(u64, u64),
+    Fence(Fence),
+}
+
+enum Fence {
+    Weights(u64),
+    KvScales(f32, f32, u64),
+    Drain,
+}
+
+enum Event {
+    Done(usize, u64),
+    Aborted(usize, u64),
+    Failed(usize, u64, String),
+    Fence(usize, u64),
+}

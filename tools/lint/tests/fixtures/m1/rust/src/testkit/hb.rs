@@ -1,0 +1,7 @@
+//! M1 fixture: the fence state machine, faithful to the vocabulary.
+
+pub enum FenceState {
+    Running,
+    Draining { target: u64 },
+    Installed { epoch: u64 },
+}

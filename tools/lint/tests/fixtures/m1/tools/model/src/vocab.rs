@@ -1,0 +1,24 @@
+//! M1 fixture vocabulary: complete except for `Fence::Drain` (missing
+//! here, present in the fixture pool.rs) and with one stale pair
+//! (`Ctl::Retired` names no real variant).
+
+pub const PROTOCOL_VOCAB: &[(&str, &str)] = &[
+    ("Ctl", "Abort"),
+    ("Ctl", "Discard"),
+    ("Ctl", "Stats"),
+    ("Ctl", "Shutdown"),
+    ("Ctl", "Retired"),
+    ("ToWorker", "Ordered"),
+    ("ToWorker", "Ctl"),
+    ("Ordered", "Submit"),
+    ("Ordered", "Fence"),
+    ("Fence", "Weights"),
+    ("Fence", "KvScales"),
+    ("Event", "Done"),
+    ("Event", "Aborted"),
+    ("Event", "Failed"),
+    ("Event", "Fence"),
+    ("FenceState", "Running"),
+    ("FenceState", "Draining"),
+    ("FenceState", "Installed"),
+];

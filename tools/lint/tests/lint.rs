@@ -307,6 +307,40 @@ fn baseline_round_trips() {
 }
 
 #[test]
+fn m1_detects_model_drift_in_both_directions() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("m1");
+    let details = scan_model_vocab(&root);
+    assert_eq!(details.len(), 2, "got {details:?}");
+    assert_eq!(details[0].rule, "M1");
+    assert_eq!(details[0].rel, "rollout/pool.rs");
+    assert!(
+        details[0].what.contains("Fence::Drain missing"),
+        "got {:?}",
+        details[0].what
+    );
+    assert_eq!(details[1].rel, "tools/model/src/vocab.rs");
+    assert!(
+        details[1]
+            .what
+            .contains("stale vocabulary pair Ctl::Retired"),
+        "got {:?}",
+        details[1].what
+    );
+    // M1 has no allow escape
+    assert!(details.iter().all(|d| !d.allowed));
+}
+
+#[test]
+fn m1_is_clean_on_the_committed_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let details = scan_model_vocab(&root);
+    assert!(details.is_empty(), "model vocabulary drift: {details:?}");
+}
+
+#[test]
 fn committed_baseline_matches_fresh_scan() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
     let (nfiles, counts, _details) =

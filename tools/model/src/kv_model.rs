@@ -1,0 +1,588 @@
+//! Abstract model of the `KvBlockManager` refcount / prefix-registry
+//! algebra (rust/src/rollout/kvcache.rs), checked exhaustively by
+//! `explore`.
+//!
+//! ## Abstraction mapping (see DESIGN.md §11)
+//!
+//! Block payloads are collapsed to the token list written into each
+//! block (`content`); geometry is collapsed to `block_tokens`. The
+//! modeled operations mirror the real manager call for call:
+//!
+//! * `Alloc{slot}`    -> `allocate_shared(id, tokens, prompt)`:
+//!   longest-prefix registry probe (whole-prompt partial first, then
+//!   full-block prefixes descending), rc bump on hits, LIFO free-list
+//!   take for the remainder, `register_all` of every full-block prefix
+//!   plus the whole prompt when it ends mid-block (first-writer-wins);
+//! * `Append{slot}`   -> `append_token(id)`: fresh block at a block
+//!   boundary, copy-on-write when the partial tail is shared
+//!   (`rc > 1`), in-place write otherwise;
+//! * `Release{slot}`  -> `release(id)`: unref every block, return
+//!   rc-0 blocks to the free list and eagerly purge registry entries
+//!   naming them (the ABA guard);
+//! * `FencePreempt`   -> the epoch-fence cancel storm: every live
+//!   sequence is released in slot order, modeling the trainer
+//!   preempting all rollouts at a weight install.
+//!
+//! Sequences are bounded slots; slot `i` allocates prompt
+//! `PROMPTS[i % 2]`, so one prompt pair shares a full-block prefix and
+//! the other shares a partial tail (the COW trigger). Appended tokens
+//! are distinct per slot so a clobbered block is observable.
+//!
+//! ## Properties
+//!
+//! State invariants: refcount conservation (`rc[b]` == live references
+//! to `b`), free-list exactness (free xor referenced, no duplicates),
+//! no duplicate block within a sequence, token/block occupancy bounds,
+//! registry well-formedness (`blocks.len() == ceil(tokens/bt)`, no
+//! entry names an rc-0 block — the eager-purge guarantee), and content
+//! faithfulness: every claimant of a block (sequence or registry
+//! entry) sees exactly its own token prefix in the block. The content
+//! check is what catches both a skipped COW (a sharer's token gets
+//! clobbered in place) and ABA re-registration through a stale entry.
+//! Terminal obligations: all refcounts zero, free list full, registry
+//! empty — nothing leaks.
+
+use crate::explore::Model;
+
+/// The two prompts. Index 0 ends mid-block (3 tokens, bt = 2): its
+/// whole-prompt registration makes the partial tail shareable and COW
+/// reachable. Index 1 is block-aligned and shares the `[1, 2]` prefix
+/// block with index 0.
+pub const PROMPTS: [&[i32]; 2] = [&[1, 2, 5], &[1, 2, 3, 4]];
+
+/// Token appended by slot `i` (distinct per slot so in-place clobber
+/// of a shared block is observable in `content`).
+pub fn append_token(slot: usize) -> i32 {
+    90 + slot as i32
+}
+
+pub fn prompt_for(slot: usize) -> &'static [i32] {
+    PROMPTS[slot % PROMPTS.len()]
+}
+
+/// Exploration bound + mutant selection.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCfg {
+    pub total_blocks: usize,
+    pub block_tokens: usize,
+    pub slots: usize,
+    /// Max `Append` actions per live sequence.
+    pub max_appends: usize,
+    /// Allocation rounds per slot (>= 2 exercises ABA reuse).
+    pub allocs: usize,
+    /// Max `FencePreempt` storms.
+    pub fences: usize,
+    pub mutant: Option<KvMutant>,
+}
+
+impl Default for KvCfg {
+    fn default() -> Self {
+        // the documented bound: >= 2 sharers x preempt/cancel, with a
+        // second allocation round so freed blocks get re-registered.
+        KvCfg {
+            total_blocks: 6,
+            block_tokens: 2,
+            slots: 3,
+            max_appends: 1,
+            allocs: 2,
+            fences: 2,
+            mutant: None,
+        }
+    }
+}
+
+/// Deliberately injected algebra bugs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KvMutant {
+    /// `release` returns rc-0 blocks to the free list but skips the
+    /// registry purge — stale entries name freed (and later reused)
+    /// blocks: the ABA hazard.
+    SkipRc0Purge,
+    /// `append_token` writes in place even when the partial tail is
+    /// shared — a sharer's token gets clobbered.
+    SkipCow,
+}
+
+impl KvMutant {
+    pub fn parse(name: &str) -> Option<KvMutant> {
+        match name {
+            "skip_rc0_purge" => Some(KvMutant::SkipRc0Purge),
+            "skip_cow" => Some(KvMutant::SkipCow),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [(&'static str, KvMutant); 2] = [
+        ("skip_rc0_purge", KvMutant::SkipRc0Purge),
+        ("skip_cow", KvMutant::SkipCow),
+    ];
+}
+
+/// A live sequence: its logical token stream and block table.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct Seq {
+    pub toks: Vec<i32>,
+    pub blocks: Vec<u8>,
+    pub appends: u8,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct Slot {
+    pub allocs_done: u8,
+    pub live: Option<Seq>,
+}
+
+/// A prefix-registry entry, keyed by token content (the real registry
+/// is hash-keyed and token-verified, which is equivalent here).
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct RegEnt {
+    pub tokens: Vec<i32>,
+    pub blocks: Vec<u8>,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct KvState {
+    pub rc: Vec<u8>,
+    /// LIFO free stack; initialized `(0..total).rev()` like the real
+    /// manager, so block 0 is taken first.
+    pub free: Vec<u8>,
+    /// Physical tokens written into each block (cleared on free).
+    pub content: Vec<Vec<i32>>,
+    pub slots: Vec<Slot>,
+    /// Kept sorted for state canonicalization.
+    pub registry: Vec<RegEnt>,
+    pub fences_done: u8,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KvAct {
+    Alloc { slot: u8 },
+    Append { slot: u8 },
+    Release { slot: u8 },
+    FencePreempt,
+}
+
+/// What `allocate_shared` would return: (shared_blocks, new_blocks,
+/// shared_tokens) — the model's prediction of the real `SharedGrant`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct GrantShape {
+    pub shared_blocks: usize,
+    pub new_blocks: usize,
+    pub shared_tokens: usize,
+}
+
+pub struct KvModel {
+    pub cfg: KvCfg,
+}
+
+impl KvModel {
+    pub fn new(cfg: KvCfg) -> KvModel {
+        KvModel { cfg }
+    }
+
+    fn mutant(&self, m: KvMutant) -> bool {
+        self.cfg.mutant == Some(m)
+    }
+
+    /// Mirror of `find_prefix`: whole-prompt partial hit first, then
+    /// full-block prefixes longest-first. Returns the hit entry's
+    /// blocks and the shared token count.
+    fn find_prefix(
+        &self,
+        s: &KvState,
+        prompt: &[i32],
+    ) -> (Vec<u8>, usize) {
+        let bt = self.cfg.block_tokens;
+        let p = prompt.len();
+        if p % bt != 0 {
+            if let Some(e) =
+                s.registry.iter().find(|e| e.tokens == prompt)
+            {
+                if e.blocks.len() == p.div_ceil(bt) {
+                    return (e.blocks.clone(), p);
+                }
+            }
+        }
+        for k in (1..=p / bt).rev() {
+            let key = &prompt[..k * bt];
+            if let Some(e) =
+                s.registry.iter().find(|e| e.tokens == key)
+            {
+                if e.blocks.len() == k {
+                    return (e.blocks.clone(), k * bt);
+                }
+            }
+        }
+        (Vec::new(), 0)
+    }
+
+    /// The grant `Alloc{slot}` would produce in `s`, or `None` when
+    /// the free list cannot cover the remainder (the action is then
+    /// disabled, mirroring `allocate_shared` returning `None`).
+    pub fn grant(&self, s: &KvState, slot: usize) -> Option<GrantShape> {
+        let prompt = prompt_for(slot);
+        let bt = self.cfg.block_tokens;
+        let (shared, shared_tokens) = self.find_prefix(s, prompt);
+        let total = prompt.len().div_ceil(bt);
+        let new = total - shared.len();
+        if s.free.len() < new {
+            return None;
+        }
+        Some(GrantShape {
+            shared_blocks: shared.len(),
+            new_blocks: new,
+            shared_tokens,
+        })
+    }
+
+    /// First-writer-wins registration, kept sorted for canonical form.
+    fn register(&self, s: &mut KvState, tokens: &[i32], blocks: &[u8]) {
+        if s.registry.iter().any(|e| e.tokens == tokens) {
+            return;
+        }
+        s.registry.push(RegEnt {
+            tokens: tokens.to_vec(),
+            blocks: blocks.to_vec(),
+        });
+        s.registry.sort();
+    }
+
+    fn unref(&self, s: &mut KvState, b: u8) {
+        let bi = b as usize;
+        s.rc[bi] -= 1;
+        if s.rc[bi] == 0 {
+            s.free.push(b);
+            s.content[bi].clear();
+            if !self.mutant(KvMutant::SkipRc0Purge) {
+                s.registry.retain(|e| !e.blocks.contains(&b));
+            }
+        }
+    }
+
+    fn release_slot(&self, s: &mut KvState, slot: usize) {
+        if let Some(seq) = s.slots[slot].live.take() {
+            for b in seq.blocks {
+                self.unref(s, b);
+            }
+        }
+    }
+
+    /// Tokens the sequence currently holds in its tail block.
+    fn tail_fill(&self, seq: &Seq) -> usize {
+        seq.toks.len() - (seq.blocks.len() - 1) * self.cfg.block_tokens
+    }
+}
+
+impl Model for KvModel {
+    type State = KvState;
+    type Action = KvAct;
+
+    fn initial(&self) -> KvState {
+        KvState {
+            rc: vec![0; self.cfg.total_blocks],
+            free: (0..self.cfg.total_blocks as u8).rev().collect(),
+            content: vec![Vec::new(); self.cfg.total_blocks],
+            slots: (0..self.cfg.slots)
+                .map(|_| Slot { allocs_done: 0, live: None })
+                .collect(),
+            registry: Vec::new(),
+            fences_done: 0,
+        }
+    }
+
+    fn actions(&self, s: &KvState, out: &mut Vec<KvAct>) {
+        let bt = self.cfg.block_tokens;
+        let mut any_live = false;
+        for (i, slot) in s.slots.iter().enumerate() {
+            let i8t = i as u8;
+            match &slot.live {
+                None => {
+                    if (slot.allocs_done as usize) < self.cfg.allocs
+                        && self.grant(s, i).is_some()
+                    {
+                        out.push(KvAct::Alloc { slot: i8t });
+                    }
+                }
+                Some(seq) => {
+                    any_live = true;
+                    out.push(KvAct::Release { slot: i8t });
+                    if (seq.appends as usize) < self.cfg.max_appends {
+                        let boundary = seq.toks.len() % bt == 0;
+                        let tail = *seq.blocks.last().unwrap() as usize;
+                        let needs_block = boundary
+                            || (s.rc[tail] > 1
+                                && !self.mutant(KvMutant::SkipCow));
+                        if !needs_block || !s.free.is_empty() {
+                            out.push(KvAct::Append { slot: i8t });
+                        }
+                    }
+                }
+            }
+        }
+        if any_live && (s.fences_done as usize) < self.cfg.fences {
+            out.push(KvAct::FencePreempt);
+        }
+    }
+
+    fn apply(
+        &self,
+        prev: &KvState,
+        a: &KvAct,
+    ) -> Result<KvState, String> {
+        let mut s = prev.clone();
+        let bt = self.cfg.block_tokens;
+        match *a {
+            KvAct::Alloc { slot } => {
+                let i = slot as usize;
+                let prompt = prompt_for(i);
+                let (shared, _) = self.find_prefix(&s, prompt);
+                for &b in &shared {
+                    s.rc[b as usize] += 1;
+                }
+                let mut blocks = shared;
+                // cover the remainder from the LIFO free stack,
+                // writing each new block's token slice
+                let mut covered = blocks.len() * bt;
+                while covered < prompt.len() {
+                    let b = s.free.pop().ok_or_else(|| {
+                        "alloc enabled without free blocks".to_string()
+                    })?;
+                    s.rc[b as usize] = 1;
+                    let end = prompt.len().min(covered + bt);
+                    s.content[b as usize] = prompt[covered..end].to_vec();
+                    blocks.push(b);
+                    covered += bt;
+                }
+                // register_all: every full-block prefix, plus the
+                // whole prompt when it ends mid-block
+                for k in 1..=prompt.len() / bt {
+                    let key = &prompt[..k * bt];
+                    let pre = blocks[..k].to_vec();
+                    self.register(&mut s, key, &pre);
+                }
+                if prompt.len() % bt != 0 {
+                    let all = blocks.clone();
+                    self.register(&mut s, prompt, &all);
+                }
+                s.slots[i].allocs_done += 1;
+                s.slots[i].live = Some(Seq {
+                    toks: prompt.to_vec(),
+                    blocks,
+                    appends: 0,
+                });
+            }
+            KvAct::Append { slot } => {
+                let i = slot as usize;
+                let mut seq = s.slots[i]
+                    .live
+                    .take()
+                    .ok_or_else(|| "append on idle slot".to_string())?;
+                let tok = append_token(i);
+                let boundary = seq.toks.len() % bt == 0;
+                if boundary {
+                    let b = s.free.pop().ok_or_else(|| {
+                        "append enabled without free block".to_string()
+                    })?;
+                    s.rc[b as usize] = 1;
+                    s.content[b as usize] = vec![tok];
+                    seq.blocks.push(b);
+                } else {
+                    let tail = *seq.blocks.last().ok_or_else(|| {
+                        "live sequence with no blocks".to_string()
+                    })?;
+                    let fill = self.tail_fill(&seq);
+                    let shared_tail = s.rc[tail as usize] > 1;
+                    if shared_tail && !self.mutant(KvMutant::SkipCow) {
+                        // copy-on-write: private copy of the claimed
+                        // prefix, then extend it
+                        let b = s.free.pop().ok_or_else(|| {
+                            "cow enabled without free block".to_string()
+                        })?;
+                        s.rc[b as usize] = 1;
+                        let mut copied =
+                            s.content[tail as usize][..fill].to_vec();
+                        copied.push(tok);
+                        s.content[b as usize] = copied;
+                        let last = seq.blocks.len() - 1;
+                        seq.blocks[last] = b;
+                        self.unref(&mut s, tail);
+                    } else {
+                        // in-place write at the sequence's own fill
+                        // position (under SkipCow this clobbers a
+                        // longer-claiming sharer's token)
+                        let c = &mut s.content[tail as usize];
+                        if fill < c.len() {
+                            c[fill] = tok;
+                        } else {
+                            c.push(tok);
+                        }
+                    }
+                }
+                seq.toks.push(tok);
+                seq.appends += 1;
+                s.slots[i].live = Some(seq);
+            }
+            KvAct::Release { slot } => {
+                self.release_slot(&mut s, slot as usize);
+            }
+            KvAct::FencePreempt => {
+                for i in 0..s.slots.len() {
+                    self.release_slot(&mut s, i);
+                }
+                s.fences_done += 1;
+            }
+        }
+        Ok(s)
+    }
+
+    fn check(&self, s: &KvState) -> Option<String> {
+        let bt = self.cfg.block_tokens;
+        let n = self.cfg.total_blocks;
+        // refcount conservation
+        let mut refs = vec![0u8; n];
+        for slot in &s.slots {
+            if let Some(seq) = &slot.live {
+                for &b in &seq.blocks {
+                    refs[b as usize] += 1;
+                }
+            }
+        }
+        for b in 0..n {
+            if s.rc[b] != refs[b] {
+                return Some(format!(
+                    "block {b}: rc={} but {} live references",
+                    s.rc[b], refs[b]
+                ));
+            }
+        }
+        // free-list exactness
+        let mut in_free = vec![false; n];
+        for &b in &s.free {
+            if in_free[b as usize] {
+                return Some(format!("block {b} on the free list twice"));
+            }
+            in_free[b as usize] = true;
+        }
+        for b in 0..n {
+            if in_free[b] && s.rc[b] != 0 {
+                return Some(format!("block {b} free while referenced"));
+            }
+            if !in_free[b] && s.rc[b] == 0 {
+                return Some(format!("block {b} leaked (rc 0, not free)"));
+            }
+        }
+        // per-sequence shape + content faithfulness
+        for (i, slot) in s.slots.iter().enumerate() {
+            let Some(seq) = &slot.live else { continue };
+            let mut seen = vec![false; n];
+            for &b in &seq.blocks {
+                if seen[b as usize] {
+                    return Some(format!(
+                        "slot {i}: block {b} appears twice in the table"
+                    ));
+                }
+                seen[b as usize] = true;
+            }
+            let lo = (seq.blocks.len() - 1) * bt;
+            let hi = seq.blocks.len() * bt;
+            if seq.toks.len() <= lo || seq.toks.len() > hi {
+                return Some(format!(
+                    "slot {i}: {} tokens in {} blocks",
+                    seq.toks.len(),
+                    seq.blocks.len()
+                ));
+            }
+            if let Some(msg) =
+                claims_check(s, &seq.toks, &seq.blocks, bt, &format!("slot {i}"))
+            {
+                return Some(msg);
+            }
+        }
+        // registry well-formedness + content faithfulness (ABA guard)
+        for (j, e) in s.registry.iter().enumerate() {
+            if e.blocks.len() != e.tokens.len().div_ceil(bt) {
+                return Some(format!(
+                    "registry[{j}]: {} tokens but {} blocks",
+                    e.tokens.len(),
+                    e.blocks.len()
+                ));
+            }
+            for &b in &e.blocks {
+                if s.rc[b as usize] == 0 {
+                    return Some(format!(
+                        "registry[{j}] ({:?}) names freed block {b} — \
+                         rc-0 purge skipped (ABA hazard)",
+                        e.tokens
+                    ));
+                }
+            }
+            if s.registry[j + 1..].iter().any(|o| o.tokens == e.tokens) {
+                return Some(format!(
+                    "registry: duplicate key {:?}",
+                    e.tokens
+                ));
+            }
+            if let Some(msg) = claims_check(
+                s,
+                &e.tokens,
+                &e.blocks,
+                bt,
+                &format!("registry[{j}]"),
+            ) {
+                return Some(msg);
+            }
+        }
+        None
+    }
+
+    fn check_terminal(&self, s: &KvState) -> Option<String> {
+        if s.rc.iter().any(|&r| r != 0) {
+            return Some("terminal state holds references".to_string());
+        }
+        if s.free.len() != self.cfg.total_blocks {
+            return Some(format!(
+                "free list has {} of {} blocks — leak",
+                s.free.len(),
+                self.cfg.total_blocks
+            ));
+        }
+        if !s.registry.is_empty() {
+            return Some(format!(
+                "{} registry entr(ies) survived full release",
+                s.registry.len()
+            ));
+        }
+        None
+    }
+}
+
+/// Every claimant of a block must see exactly its own token prefix in
+/// the block's physical content.
+fn claims_check(
+    s: &KvState,
+    toks: &[i32],
+    blocks: &[u8],
+    bt: usize,
+    who: &str,
+) -> Option<String> {
+    for (pos, &b) in blocks.iter().enumerate() {
+        let lo = pos * bt;
+        let claim = toks.len().saturating_sub(lo).min(bt);
+        let c = &s.content[b as usize];
+        if claim > c.len() {
+            return Some(format!(
+                "{who}: claims {claim} tokens of block {b} holding {}",
+                c.len()
+            ));
+        }
+        if c[..claim] != toks[lo..lo + claim] {
+            return Some(format!(
+                "{who}: block {b} holds {:?} where {:?} was expected — \
+                 shared content clobbered or stale",
+                &c[..claim],
+                &toks[lo..lo + claim]
+            ));
+        }
+    }
+    None
+}

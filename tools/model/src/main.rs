@@ -1,0 +1,355 @@
+//! pallas-model CLI: bounded exhaustive exploration of the pool
+//! fence protocol and the KV refcount/prefix algebra, with optional
+//! counterexample replay against the real implementation.
+//!
+//! Exit codes: 0 = every property holds to the bound (and, with
+//! `--replay-clean`, the bridge agrees); 1 = a property violated (a
+//! counterexample trace is printed, and with `--replay` the replayed
+//! plan's divergences are printed) or the clean replay diverged;
+//! 2 = the state cap was exceeded (inconclusive — treat as failure in
+//! gating CI) or a usage error.
+//!
+//! Examples:
+//!
+//! ```text
+//! pallas-model --model pool --replicas 2 --requests 3 --fences 2
+//! pallas-model --model kv
+//! pallas-model --model pool --mutant admit_past_fence --replay
+//! pallas-model --model kv --mutant skip_rc0_purge --replay
+//! pallas-model --model all --replay-clean
+//! ```
+
+use std::process::exit;
+
+use pallas_model::explore::{explore, Outcome, Stats};
+use pallas_model::kv_model::{KvCfg, KvModel, KvMutant};
+use pallas_model::pool_model::{PoolCfg, PoolModel, PoolMutant};
+use pallas_model::replay::{
+    canonical_clean_kv_trace, canonical_clean_trace,
+    extend_with_next_alloc, replay_kv_trace, replay_pool_trace,
+};
+
+struct Args {
+    model: String,
+    pool: PoolCfg,
+    kv: KvCfg,
+    mutant: Option<String>,
+    max_states: usize,
+    trace_out: Option<String>,
+    replay: bool,
+    replay_clean: bool,
+}
+
+fn usage() -> String {
+    "usage: pallas-model [--model pool|kv|all]\n\
+     \x20 pool bound:  --replicas N --requests N --fences N \
+     --aborts N --kills N\n\
+     \x20 kv bound:    --blocks N --block-tokens N --slots N \
+     --appends N --allocs N --kv-fences N\n\
+     \x20 checking:    --mutant NAME --max-states N \
+     --trace-out PATH --replay --replay-clean\n\
+     \x20 pool mutants: admit_past_fence skip_fence_ack \
+     install_with_inflight stamp_skew\n\
+     \x20 kv mutants:   skip_rc0_purge skip_cow"
+        .to_string()
+}
+
+fn take(
+    argv: &[String],
+    i: &mut usize,
+    flag: &str,
+) -> Result<String, String> {
+    let v = argv
+        .get(*i)
+        .cloned()
+        .ok_or_else(|| format!("missing value for {flag}"))?;
+    *i += 1;
+    Ok(v)
+}
+
+fn take_num(
+    argv: &[String],
+    i: &mut usize,
+    flag: &str,
+) -> Result<usize, String> {
+    let v = take(argv, i, flag)?;
+    v.parse::<usize>()
+        .map_err(|_| format!("{flag}: not a number: {v}"))
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        model: "all".to_string(),
+        pool: PoolCfg { requests: 3, ..PoolCfg::default() },
+        kv: KvCfg::default(),
+        mutant: None,
+        max_states: 4_000_000,
+        trace_out: None,
+        replay: false,
+        replay_clean: false,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        let flag = argv[i].clone();
+        i += 1;
+        match flag.as_str() {
+            "--model" => args.model = take(&argv, &mut i, &flag)?,
+            "--replicas" => {
+                args.pool.replicas = take_num(&argv, &mut i, &flag)?
+            }
+            "--requests" => {
+                args.pool.requests = take_num(&argv, &mut i, &flag)?
+            }
+            "--fences" => {
+                args.pool.fences = take_num(&argv, &mut i, &flag)?
+            }
+            "--aborts" => {
+                args.pool.aborts = take_num(&argv, &mut i, &flag)?
+            }
+            "--kills" => {
+                args.pool.kills = take_num(&argv, &mut i, &flag)?
+            }
+            "--blocks" => {
+                args.kv.total_blocks = take_num(&argv, &mut i, &flag)?
+            }
+            "--block-tokens" => {
+                args.kv.block_tokens = take_num(&argv, &mut i, &flag)?
+            }
+            "--slots" => {
+                args.kv.slots = take_num(&argv, &mut i, &flag)?
+            }
+            "--appends" => {
+                args.kv.max_appends = take_num(&argv, &mut i, &flag)?
+            }
+            "--allocs" => {
+                args.kv.allocs = take_num(&argv, &mut i, &flag)?
+            }
+            "--kv-fences" => {
+                args.kv.fences = take_num(&argv, &mut i, &flag)?
+            }
+            "--mutant" => {
+                args.mutant = Some(take(&argv, &mut i, &flag)?)
+            }
+            "--max-states" => {
+                args.max_states = take_num(&argv, &mut i, &flag)?
+            }
+            "--trace-out" => {
+                args.trace_out = Some(take(&argv, &mut i, &flag)?)
+            }
+            "--replay" => args.replay = true,
+            "--replay-clean" => args.replay_clean = true,
+            "--help" | "-h" => return Err(usage()),
+            other => {
+                return Err(format!("unknown flag {other}\n{}", usage()))
+            }
+        }
+    }
+    if !matches!(args.model.as_str(), "pool" | "kv" | "all") {
+        return Err(format!("--model must be pool|kv|all\n{}", usage()));
+    }
+    if args.pool.replicas == 0 {
+        return Err("--replicas must be >= 1".to_string());
+    }
+    Ok(args)
+}
+
+fn stats_line(st: &Stats) -> String {
+    format!(
+        "states={} transitions={} depth={} terminals={}",
+        st.states, st.transitions, st.depth, st.terminals
+    )
+}
+
+fn dump_trace<A: std::fmt::Debug>(
+    trace: &[A],
+    message: &str,
+    path: Option<&str>,
+) {
+    eprintln!("counterexample ({} steps):", trace.len());
+    for (i, a) in trace.iter().enumerate() {
+        eprintln!("  {:>3}. {a:?}", i + 1);
+    }
+    if let Some(path) = path {
+        let mut body = format!("violation: {message}\n");
+        for (i, a) in trace.iter().enumerate() {
+            body.push_str(&format!("{:>3}. {a:?}\n", i + 1));
+        }
+        match std::fs::write(path, body) {
+            Ok(()) => eprintln!("trace written to {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+fn report_divergence(diverged: &[String]) {
+    if diverged.is_empty() {
+        println!("replay: AGREED (model and implementation match)");
+    } else {
+        println!("replay: DIVERGED ({} mismatch(es))", diverged.len());
+        for d in diverged {
+            println!("  {d}");
+        }
+    }
+}
+
+fn run_pool(args: &Args) -> i32 {
+    let mut cfg = args.pool;
+    if let Some(name) = &args.mutant {
+        match PoolMutant::parse(name) {
+            Some(m) => cfg.mutant = Some(m),
+            None => {
+                if args.model == "pool" {
+                    eprintln!("unknown pool mutant {name}\n{}", usage());
+                    return 2;
+                }
+                // `all` with a kv-only mutant: run the pool clean
+            }
+        }
+    }
+    let m = PoolModel::new(cfg);
+    println!(
+        "pallas-model: pool bound replicas={} requests={} fences={} \
+         aborts={} kills={} mutant={:?}",
+        cfg.replicas, cfg.requests, cfg.fences, cfg.aborts, cfg.kills,
+        cfg.mutant
+    );
+    let mut code = match explore(&m, args.max_states) {
+        Outcome::Ok(st) => {
+            println!("pallas-model: pool OK — {}", stats_line(&st));
+            0
+        }
+        Outcome::Violation(st, v) => {
+            println!(
+                "pallas-model: pool VIOLATION — {} ({})",
+                v.message,
+                stats_line(&st)
+            );
+            dump_trace(&v.trace, &v.message, args.trace_out.as_deref());
+            if args.replay {
+                match replay_pool_trace(&m, &v.trace) {
+                    Ok(d) => report_divergence(&d),
+                    Err(e) => println!("replay: SKIPPED — {e}"),
+                }
+            }
+            1
+        }
+        Outcome::CapExceeded(st) => {
+            println!(
+                "pallas-model: pool INCONCLUSIVE — state cap hit \
+                 ({})",
+                stats_line(&st)
+            );
+            2
+        }
+    };
+    if args.replay_clean && cfg.mutant.is_none() && code == 0 {
+        let trace = canonical_clean_trace(&m);
+        match replay_pool_trace(&m, &trace) {
+            Ok(d) => {
+                report_divergence(&d);
+                if !d.is_empty() {
+                    code = 1;
+                }
+            }
+            Err(e) => {
+                println!("replay: ERROR — {e}");
+                code = 2;
+            }
+        }
+    }
+    code
+}
+
+fn run_kv(args: &Args) -> i32 {
+    let mut cfg = args.kv;
+    if let Some(name) = &args.mutant {
+        match KvMutant::parse(name) {
+            Some(m) => cfg.mutant = Some(m),
+            None => {
+                if args.model == "kv" {
+                    eprintln!("unknown kv mutant {name}\n{}", usage());
+                    return 2;
+                }
+            }
+        }
+    }
+    let m = KvModel::new(cfg);
+    println!(
+        "pallas-model: kv bound blocks={} block_tokens={} slots={} \
+         appends={} allocs={} fences={} mutant={:?}",
+        cfg.total_blocks,
+        cfg.block_tokens,
+        cfg.slots,
+        cfg.max_appends,
+        cfg.allocs,
+        cfg.fences,
+        cfg.mutant
+    );
+    let mut code = match explore(&m, args.max_states) {
+        Outcome::Ok(st) => {
+            println!("pallas-model: kv OK — {}", stats_line(&st));
+            0
+        }
+        Outcome::Violation(st, v) => {
+            println!(
+                "pallas-model: kv VIOLATION — {} ({})",
+                v.message,
+                stats_line(&st)
+            );
+            dump_trace(&v.trace, &v.message, args.trace_out.as_deref());
+            if args.replay {
+                // one more allocation turns a stale-registry state
+                // into an observable grant divergence
+                let extended = extend_with_next_alloc(&m, &v.trace)
+                    .unwrap_or_else(|_| v.trace.clone());
+                match replay_kv_trace(&m, &extended) {
+                    Ok(d) => report_divergence(&d),
+                    Err(e) => println!("replay: SKIPPED — {e}"),
+                }
+            }
+            1
+        }
+        Outcome::CapExceeded(st) => {
+            println!(
+                "pallas-model: kv INCONCLUSIVE — state cap hit ({})",
+                stats_line(&st)
+            );
+            2
+        }
+    };
+    if args.replay_clean && cfg.mutant.is_none() && code == 0 {
+        let trace = canonical_clean_kv_trace(&m);
+        match replay_kv_trace(&m, &trace) {
+            Ok(d) => {
+                report_divergence(&d);
+                if !d.is_empty() {
+                    code = 1;
+                }
+            }
+            Err(e) => {
+                println!("replay: ERROR — {e}");
+                code = 2;
+            }
+        }
+    }
+    code
+}
+
+fn main() {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            exit(2);
+        }
+    };
+    let mut code = 0;
+    if matches!(args.model.as_str(), "pool" | "all") {
+        code = code.max(run_pool(&args));
+    }
+    if matches!(args.model.as_str(), "kv" | "all") {
+        code = code.max(run_kv(&args));
+    }
+    exit(code);
+}

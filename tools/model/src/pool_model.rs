@@ -1,0 +1,677 @@
+//! Abstract model of the streaming pool's epoch-fence protocol
+//! (rust/src/rollout/pool.rs), checked exhaustively by `explore`.
+//!
+//! ## Abstraction mapping (see DESIGN.md §11 and vocab.rs)
+//!
+//! One pool thread plus N worker actors. Each replica's `ToWorker`
+//! channel is a bounded FIFO ([`Msg`]); completions flow back through
+//! a per-replica FIFO ([`Ev`]) — the real implementation multiplexes
+//! one shared channel, and per-replica queues with a free interleaving
+//! of drains is a superset of the merge orders that channel can
+//! produce. Weight payloads are collapsed to their fence target;
+//! engine execution is collapsed to "an inflight entry completes".
+//!
+//! The worker's serve loop becomes three atomic actions, justified by
+//! the loop's single-threadedness:
+//!
+//! * `WorkerIngest` — handle one channel message (Ctl immediately,
+//!   Ordered into the backlog while a fence is parked);
+//! * `WorkerComplete` — one inflight request finishes and emits Done;
+//! * `WorkerApplyFence` — install + ack + backlog replay as one step.
+//!   In the real worker, `fence.is_none()` implies an empty backlog at
+//!   ingest time and the replay runs to completion without an
+//!   interleaved recv, so the merged action loses no interleavings.
+//!
+//! ## Properties
+//!
+//! Transition-level: a completion's epoch equals its admission epoch
+//! (no completion spans an install), a drained Done's epoch equals the
+//! ticket's submit stamp, fence targets are consecutive, acks arrive
+//! exactly once and in order and only when owed. State invariant: an
+//! un-parked replica has an empty backlog; per-replica ack accounting
+//! conserves (`sent == acked + owed + quarantined`). Terminal: every
+//! submitted ticket resolved exactly once, no acks owed by any live or
+//! reaped replica (deadlock-freedom folds in: a stuck state missing
+//! these obligations is the counterexample).
+//!
+//! ## Known abstractions (soundness caveats)
+//!
+//! * `place()` skips dead replicas directly instead of reaping them on
+//!   send failure; `Reap` is a separate action.
+//! * `Abort` is only enabled while the ticket's replica is alive (the
+//!   real abort retries through the reaper).
+//! * `Ctl::Discard` / `Ctl::Stats` are not modeled (Discard shares
+//!   Abort's FIFO position without emitting a completion; Stats is
+//!   read-only).
+
+use crate::explore::Model;
+
+/// Exploration bound + mutant selection.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolCfg {
+    pub replicas: usize,
+    pub requests: usize,
+    pub fences: usize,
+    pub aborts: usize,
+    pub kills: usize,
+    pub mutant: Option<PoolMutant>,
+}
+
+impl Default for PoolCfg {
+    fn default() -> Self {
+        // the documented bound: 2 replicas x 3 requests x 2 fences,
+        // plus one abort. Kills get their own smaller config (the CLI
+        // runs both; see main.rs).
+        PoolCfg {
+            replicas: 2,
+            requests: 3,
+            fences: 2,
+            aborts: 1,
+            kills: 0,
+            mutant: None,
+        }
+    }
+}
+
+/// Deliberately injected protocol bugs; each must yield a
+/// counterexample whose replay diverges from the real pool.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolMutant {
+    /// Ingest admits an `Ordered::Submit` past a parked fence,
+    /// skipping both the backlog and the stamp check — the request
+    /// runs under the old weights while stamped for the new ones.
+    AdmitPastFence,
+    /// `ApplyFence` installs without emitting the ack — the pool's
+    /// `owed` accounting never drains.
+    SkipFenceAck,
+    /// `ApplyFence` fires with inflight requests still running — the
+    /// install is no longer quiescent.
+    InstallWithInflight,
+    /// The pool stamps submissions one epoch ahead of the weights it
+    /// actually installed.
+    StampSkew,
+}
+
+impl PoolMutant {
+    pub fn parse(name: &str) -> Option<PoolMutant> {
+        match name {
+            "admit_past_fence" => Some(PoolMutant::AdmitPastFence),
+            "skip_fence_ack" => Some(PoolMutant::SkipFenceAck),
+            "install_with_inflight" => {
+                Some(PoolMutant::InstallWithInflight)
+            }
+            "stamp_skew" => Some(PoolMutant::StampSkew),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [(&'static str, PoolMutant); 4] = [
+        ("admit_past_fence", PoolMutant::AdmitPastFence),
+        ("skip_fence_ack", PoolMutant::SkipFenceAck),
+        ("install_with_inflight", PoolMutant::InstallWithInflight),
+        ("stamp_skew", PoolMutant::StampSkew),
+    ];
+}
+
+/// `ToWorker` collapsed: Ordered::{Submit,Fence} + Ctl::Abort ride the
+/// same FIFO, exactly like the real channel.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Msg {
+    Submit { req: u8, stamp: u8 },
+    Fence { target: u8 },
+    Abort { req: u8 },
+}
+
+/// `Event` collapsed (Fence ack result is always Ok in-model).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Ev {
+    Done { req: u8, epoch: u8 },
+    Aborted { req: u8 },
+    Failed { req: u8 },
+    FenceAck { target: u8 },
+}
+
+/// How a ticket resolved at the pool.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Resolution {
+    Done { epoch: u8 },
+    Aborted,
+    Failed,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct Ticket {
+    pub stamp: u8,
+    pub replica: u8,
+    pub resolution: Option<Resolution>,
+    pub abort_sent: bool,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct Replica {
+    pub alive: bool,
+    pub reaped: bool,
+    /// ToWorker FIFO (head at index 0).
+    pub chan: Vec<Msg>,
+    /// Completion FIFO back to the pool (head at index 0).
+    pub events: Vec<Ev>,
+    pub engine_epoch: u8,
+    /// Parked fence target (FenceState::Draining).
+    pub parked: Option<u8>,
+    /// Ordered messages deferred behind the parked fence.
+    pub backlog: Vec<Msg>,
+    /// (req, admission epoch) pairs the engine is running.
+    pub inflight: Vec<(u8, u8)>,
+    /// Fence messages successfully sent to this replica.
+    pub fenced: u8,
+    /// Acks the pool is still owed.
+    pub owed: u8,
+    /// Ack targets received, in arrival order.
+    pub acked: Vec<u8>,
+    /// Acks written off by the reaper.
+    pub quarantined: u8,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct PoolState {
+    pub epoch: u8,
+    pub fences_sent: u8,
+    pub next_req: u8,
+    pub aborts_sent: u8,
+    pub kills_done: u8,
+    pub tickets: Vec<Ticket>,
+    pub replicas: Vec<Replica>,
+}
+
+/// One interleaving step. Pool-side actions project onto
+/// `testkit::interleave::Event`s for replay; worker-side actions are
+/// internal.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolAct {
+    Submit,
+    Fence,
+    Abort { req: u8 },
+    WorkerIngest { replica: u8 },
+    WorkerComplete { replica: u8, slot: u8 },
+    WorkerApplyFence { replica: u8 },
+    PoolDrain { replica: u8 },
+    Kill { replica: u8 },
+    Reap { replica: u8 },
+}
+
+pub struct PoolModel {
+    pub cfg: PoolCfg,
+    /// When set, transition-level property failures are handled the
+    /// way the real implementation handles them (admission mismatch
+    /// emits `Failed`, a mid-install completion is tagged with the
+    /// current engine epoch, ...) instead of aborting exploration.
+    /// Used by the replay bridge to compute a mutant model's
+    /// *predicted* outcomes past the violation point.
+    pub lenient: bool,
+}
+
+impl PoolModel {
+    pub fn new(cfg: PoolCfg) -> PoolModel {
+        PoolModel { cfg, lenient: false }
+    }
+
+    fn mutant(&self, m: PoolMutant) -> bool {
+        self.cfg.mutant == Some(m)
+    }
+
+    /// Round-robin placement skipping dead replicas, mirroring
+    /// `place()`'s retry loop (abstraction: no reap on send failure).
+    fn place(&self, s: &PoolState, start: usize) -> Option<usize> {
+        (0..self.cfg.replicas)
+            .map(|k| (start + k) % self.cfg.replicas)
+            .find(|&r| s.replicas[r].alive)
+    }
+
+    /// `handle_ordered`: admit (stamp-checked) or park a fence.
+    fn handle_ordered(
+        &self,
+        s: &mut PoolState,
+        r: usize,
+        msg: Msg,
+    ) -> Result<(), String> {
+        let rep = &mut s.replicas[r];
+        match msg {
+            Msg::Submit { req, stamp } => {
+                if stamp != rep.engine_epoch {
+                    // the real worker emits Event::Failed here; in the
+                    // clean model FIFO ordering makes this unreachable,
+                    // so reaching it is a protocol violation
+                    if !self.lenient {
+                        return Err(format!(
+                            "req {req}: admitted with stamp {stamp} at \
+                             engine epoch {} — submission crossed the \
+                             fence FIFO",
+                            rep.engine_epoch
+                        ));
+                    }
+                    rep.events.push(Ev::Failed { req });
+                } else {
+                    rep.inflight.push((req, rep.engine_epoch));
+                }
+            }
+            Msg::Fence { target } => {
+                if target != rep.engine_epoch + 1 && !self.lenient {
+                    return Err(format!(
+                        "replica {r}: fence target {target} not \
+                         consecutive after epoch {}",
+                        rep.engine_epoch
+                    ));
+                }
+                rep.parked = Some(target);
+            }
+            Msg::Abort { .. } => {
+                return Err(format!(
+                    "replica {r}: Ctl message routed into the ordered \
+                     path"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// One pool-side event-channel drain, shared by `PoolDrain` and
+    /// the reaper's pump.
+    fn handle_event(
+        &self,
+        s: &mut PoolState,
+        r: usize,
+        ev: Ev,
+    ) -> Result<(), String> {
+        match ev {
+            Ev::Done { req, epoch } => {
+                let t = &mut s.tickets[req as usize];
+                // the real pool gates on `outstanding.remove()`: an
+                // event for an already-resolved ticket is dropped
+                if t.resolution.is_none() {
+                    if epoch != t.stamp && !self.lenient {
+                        return Err(format!(
+                            "req {req}: completion epoch {epoch} != \
+                             submit stamp {} (completion crossed a \
+                             weight install)",
+                            t.stamp
+                        ));
+                    }
+                    t.resolution = Some(Resolution::Done { epoch });
+                }
+            }
+            Ev::Aborted { req } => {
+                let t = &mut s.tickets[req as usize];
+                if t.resolution.is_none() {
+                    t.resolution = Some(Resolution::Aborted);
+                }
+            }
+            Ev::Failed { req } => {
+                let t = &mut s.tickets[req as usize];
+                if t.resolution.is_none() {
+                    t.resolution = Some(Resolution::Failed);
+                }
+            }
+            Ev::FenceAck { target } => {
+                let rep = &mut s.replicas[r];
+                if !self.lenient {
+                    if rep.owed == 0 {
+                        return Err(format!(
+                            "replica {r}: fence ack {target} arrived \
+                             with zero acks owed (duplicate ack)"
+                        ));
+                    }
+                    if rep.acked.last().is_some_and(|&l| target <= l) {
+                        return Err(format!(
+                            "replica {r}: fence ack {target} out of \
+                             order after {:?}",
+                            rep.acked
+                        ));
+                    }
+                }
+                rep.owed = rep.owed.saturating_sub(1);
+                rep.acked.push(target);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Model for PoolModel {
+    type State = PoolState;
+    type Action = PoolAct;
+
+    fn initial(&self) -> PoolState {
+        PoolState {
+            epoch: 0,
+            fences_sent: 0,
+            next_req: 0,
+            aborts_sent: 0,
+            kills_done: 0,
+            tickets: Vec::new(),
+            replicas: (0..self.cfg.replicas)
+                .map(|_| Replica {
+                    alive: true,
+                    reaped: false,
+                    chan: Vec::new(),
+                    events: Vec::new(),
+                    engine_epoch: 0,
+                    parked: None,
+                    backlog: Vec::new(),
+                    inflight: Vec::new(),
+                    fenced: 0,
+                    owed: 0,
+                    acked: Vec::new(),
+                    quarantined: 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn actions(&self, s: &PoolState, out: &mut Vec<PoolAct>) {
+        if (s.next_req as usize) < self.cfg.requests {
+            out.push(PoolAct::Submit);
+        }
+        if (s.fences_sent as usize) < self.cfg.fences {
+            out.push(PoolAct::Fence);
+        }
+        if (s.aborts_sent as usize) < self.cfg.aborts {
+            for (i, t) in s.tickets.iter().enumerate() {
+                let alive = s.replicas[t.replica as usize].alive;
+                if t.resolution.is_none() && !t.abort_sent && alive {
+                    out.push(PoolAct::Abort { req: i as u8 });
+                }
+            }
+        }
+        for (r, rep) in s.replicas.iter().enumerate() {
+            let r8 = r as u8;
+            if rep.alive && !rep.chan.is_empty() {
+                out.push(PoolAct::WorkerIngest { replica: r8 });
+            }
+            if rep.alive {
+                for slot in 0..rep.inflight.len() {
+                    out.push(PoolAct::WorkerComplete {
+                        replica: r8,
+                        slot: slot as u8,
+                    });
+                }
+            }
+            let quiescent = rep.inflight.is_empty()
+                || self.mutant(PoolMutant::InstallWithInflight);
+            if rep.alive && rep.parked.is_some() && quiescent {
+                out.push(PoolAct::WorkerApplyFence { replica: r8 });
+            }
+            if !rep.events.is_empty() {
+                out.push(PoolAct::PoolDrain { replica: r8 });
+            }
+            if rep.alive && (s.kills_done as usize) < self.cfg.kills {
+                out.push(PoolAct::Kill { replica: r8 });
+            }
+            if !rep.alive && !rep.reaped {
+                out.push(PoolAct::Reap { replica: r8 });
+            }
+        }
+    }
+
+    fn apply(
+        &self,
+        prev: &PoolState,
+        a: &PoolAct,
+    ) -> Result<PoolState, String> {
+        let mut s = prev.clone();
+        match *a {
+            PoolAct::Submit => {
+                let req = s.next_req;
+                let stamp = if self.mutant(PoolMutant::StampSkew) {
+                    s.epoch + 1
+                } else {
+                    s.epoch
+                };
+                match self.place(&s, req as usize % self.cfg.replicas) {
+                    Some(r) => {
+                        s.replicas[r].chan.push(Msg::Submit { req, stamp });
+                        s.tickets.push(Ticket {
+                            stamp,
+                            replica: r as u8,
+                            resolution: None,
+                            abort_sent: false,
+                        });
+                    }
+                    None => {
+                        // submit() fails outright with no live replica
+                        s.tickets.push(Ticket {
+                            stamp,
+                            replica: 0,
+                            resolution: Some(Resolution::Failed),
+                            abort_sent: false,
+                        });
+                    }
+                }
+                s.next_req += 1;
+            }
+            PoolAct::Fence => {
+                // send_fence bumps the epoch unconditionally, then
+                // counts owed acks per successful send
+                s.epoch += 1;
+                s.fences_sent += 1;
+                let target = s.epoch;
+                for rep in &mut s.replicas {
+                    if rep.alive {
+                        rep.chan.push(Msg::Fence { target });
+                        rep.fenced += 1;
+                        rep.owed += 1;
+                    }
+                }
+            }
+            PoolAct::Abort { req } => {
+                let r = s.tickets[req as usize].replica as usize;
+                s.tickets[req as usize].abort_sent = true;
+                s.aborts_sent += 1;
+                s.replicas[r].chan.push(Msg::Abort { req });
+            }
+            PoolAct::WorkerIngest { replica } => {
+                let r = replica as usize;
+                let msg = s.replicas[r].chan.remove(0);
+                match msg {
+                    Msg::Abort { req } => {
+                        let rep = &mut s.replicas[r];
+                        if let Some(pos) = rep
+                            .inflight
+                            .iter()
+                            .position(|&(q, _)| q == req)
+                        {
+                            // engine.cancel: pull the running request
+                            rep.inflight.remove(pos);
+                            rep.events.push(Ev::Aborted { req });
+                        } else if let Some(pos) =
+                            rep.backlog.iter().position(|m| {
+                                matches!(m, Msg::Submit { req: q, .. }
+                                    if *q == req)
+                            })
+                        {
+                            // backlog-cancel: the abort jumps the fence
+                            rep.backlog.remove(pos);
+                            rep.events.push(Ev::Aborted { req });
+                        }
+                        // unknown id: already completed — no-op
+                    }
+                    ordered => {
+                        let parked = s.replicas[r].parked.is_some();
+                        let admit_anyway = self
+                            .mutant(PoolMutant::AdmitPastFence)
+                            && matches!(ordered, Msg::Submit { .. });
+                        if parked && admit_anyway {
+                            // MUTANT: admit under the old weights,
+                            // skipping backlog AND stamp check
+                            if let Msg::Submit { req, .. } = ordered {
+                                let rep = &mut s.replicas[r];
+                                let e = rep.engine_epoch;
+                                rep.inflight.push((req, e));
+                            }
+                        } else if parked {
+                            s.replicas[r].backlog.push(ordered);
+                        } else {
+                            self.handle_ordered(&mut s, r, ordered)?;
+                        }
+                    }
+                }
+            }
+            PoolAct::WorkerComplete { replica, slot } => {
+                let r = replica as usize;
+                let (req, admit_epoch) =
+                    s.replicas[r].inflight.remove(slot as usize);
+                let engine_epoch = s.replicas[r].engine_epoch;
+                if admit_epoch != engine_epoch && !self.lenient {
+                    return Err(format!(
+                        "req {req}: admitted at epoch {admit_epoch} but \
+                         completing at engine epoch {engine_epoch} — a \
+                         weight install landed mid-flight"
+                    ));
+                }
+                s.replicas[r]
+                    .events
+                    .push(Ev::Done { req, epoch: engine_epoch });
+            }
+            PoolAct::WorkerApplyFence { replica } => {
+                let r = replica as usize;
+                let target = s.replicas[r]
+                    .parked
+                    .ok_or_else(|| "apply without parked fence".to_string())?;
+                s.replicas[r].engine_epoch = target;
+                s.replicas[r].parked = None;
+                if !self.mutant(PoolMutant::SkipFenceAck) {
+                    s.replicas[r].events.push(Ev::FenceAck { target });
+                }
+                // backlog replay runs to completion (no interleaved
+                // recv) and re-parks at the next fence, as in the
+                // real worker's post-apply loop
+                while s.replicas[r].parked.is_none()
+                    && !s.replicas[r].backlog.is_empty()
+                {
+                    let msg = s.replicas[r].backlog.remove(0);
+                    self.handle_ordered(&mut s, r, msg)?;
+                }
+            }
+            PoolAct::PoolDrain { replica } => {
+                let r = replica as usize;
+                let ev = s.replicas[r].events.remove(0);
+                self.handle_event(&mut s, r, ev)?;
+            }
+            PoolAct::Kill { replica } => {
+                // the serve loop exits: channel contents, backlog,
+                // inflight, and a parked fence are dropped on the
+                // floor; already-emitted events remain drainable
+                let r = replica as usize;
+                let rep = &mut s.replicas[r];
+                rep.alive = false;
+                rep.chan.clear();
+                rep.backlog.clear();
+                rep.inflight.clear();
+                rep.parked = None;
+                s.kills_done += 1;
+            }
+            PoolAct::Reap { replica } => {
+                let r = replica as usize;
+                // pump: drain the dead replica's remaining events
+                // before writing anything off (reap_dead_workers)
+                while !s.replicas[r].events.is_empty() {
+                    let ev = s.replicas[r].events.remove(0);
+                    self.handle_event(&mut s, r, ev)?;
+                }
+                // write off exactly the owed acks
+                let owed = s.replicas[r].owed;
+                s.replicas[r].quarantined += owed;
+                s.replicas[r].owed = 0;
+                s.replicas[r].reaped = true;
+                // re-route orphans at the CURRENT epoch, or fail them
+                for (i, t) in s.tickets.iter_mut().enumerate() {
+                    if t.replica as usize != r || t.resolution.is_some() {
+                        continue;
+                    }
+                    let start = i % self.cfg.replicas;
+                    let next = (0..self.cfg.replicas)
+                        .map(|k| (start + k) % self.cfg.replicas)
+                        .find(|&nr| s.replicas[nr].alive);
+                    match next {
+                        Some(nr) => {
+                            t.replica = nr as u8;
+                            t.stamp = s.epoch;
+                            s.replicas[nr].chan.push(Msg::Submit {
+                                req: i as u8,
+                                stamp: s.epoch,
+                            });
+                        }
+                        None => t.resolution = Some(Resolution::Failed),
+                    }
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    fn check(&self, s: &PoolState) -> Option<String> {
+        for (r, rep) in s.replicas.iter().enumerate() {
+            if rep.parked.is_none() && !rep.backlog.is_empty() {
+                return Some(format!(
+                    "replica {r}: backlog nonempty with no parked fence"
+                ));
+            }
+            let acked = rep.acked.len() as u8;
+            if rep.fenced != acked + rep.owed + rep.quarantined {
+                return Some(format!(
+                    "replica {r}: ack accounting broken — {} fences \
+                     sent but {} acked + {} owed + {} quarantined",
+                    rep.fenced,
+                    acked,
+                    rep.owed,
+                    rep.quarantined
+                ));
+            }
+        }
+        None
+    }
+
+    fn check_terminal(&self, s: &PoolState) -> Option<String> {
+        for (i, t) in s.tickets.iter().enumerate() {
+            if t.resolution.is_none() {
+                return Some(format!(
+                    "ticket {i} never resolved (deadlocked or leaked)"
+                ));
+            }
+        }
+        for (r, rep) in s.replicas.iter().enumerate() {
+            if rep.owed > 0 {
+                return Some(format!(
+                    "replica {r}: {} fence ack(s) still owed and never \
+                     written off",
+                    rep.owed
+                ));
+            }
+            if !rep.alive && !rep.reaped {
+                return Some(format!("replica {r}: dead but unreaped"));
+            }
+            if rep.alive
+                && (rep.parked.is_some() || !rep.inflight.is_empty())
+            {
+                return Some(format!(
+                    "replica {r}: stuck with parked fence or inflight \
+                     work"
+                ));
+            }
+        }
+        None
+    }
+}
+
+/// Apply a trace without enforcing transition properties (used by the
+/// replay bridge to read a mutant model's *predicted* outcomes past
+/// the violation point).
+pub fn step_unchecked(
+    m: &PoolModel,
+    s: &PoolState,
+    a: &PoolAct,
+) -> PoolState {
+    let lm = PoolModel { cfg: m.cfg, lenient: true };
+    // lenient mode removes every Err site reachable from an enabled
+    // action, so this cannot fail; keep the old state as a backstop
+    lm.apply(s, a).unwrap_or_else(|_| s.clone())
+}

@@ -1,0 +1,563 @@
+//! Counterexample replay: turn a model-checker trace into a concrete
+//! `testkit::interleave` plan and run it against the REAL
+//! implementation, comparing the model's predicted per-request
+//! outcomes with what the implementation actually does.
+//!
+//! This is what keeps the model honest. A clean trace must replay
+//! with zero divergence (model and implementation agree). A mutant
+//! counterexample must diverge — the mutant lives only in the model,
+//! so its predicted outcomes cannot match the correct implementation.
+//! A mutant whose counterexample replayed *cleanly* would mean the
+//! model is checking properties the implementation does not actually
+//! have, i.e. the bridge is vacuous; the in-crate tests and the CI
+//! `model-check` job assert both directions.
+//!
+//! ## Projection
+//!
+//! Pool-side actions project onto plan events
+//! (`Submit -> Event::Submit`, `Fence -> Event::Sync`,
+//! `Abort -> Event::Abort`, `PoolDrain -> Event::Poll`); worker-side
+//! actions order *internal* steps and project to nothing — the real
+//! worker threads schedule those themselves. `Kill`/`Reap` traces are
+//! not plan-expressible (the public pool API cannot kill a replica
+//! mid-session) and are rejected.
+//!
+//! ## Prediction
+//!
+//! The (possibly mutant) model is stepped over the trace in lenient
+//! mode — property failures are carried through the way the real
+//! implementation would carry them — and then quiesced with internal
+//! actions only (ingest, drain-inflight-then-apply-fence, drain
+//! events; never a new pool-side send), yielding a predicted
+//! resolution for every ticket. Requests with an abort in flight are
+//! excluded from comparison: abort-vs-completion is a true race and
+//! both outcomes are legal.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use fp8_rl::rollout::{
+    hermetic_runtime_factory, Completed, EngineConfig, EnginePool,
+    KvBlockManager, KvGeometry, KvPrecision, PoolConfig, Request,
+    RoutePolicy, SamplingParams,
+};
+use fp8_rl::runtime::{HostArray, Runtime};
+use fp8_rl::sync::{WeightSync, WeightSyncConfig};
+use fp8_rl::testkit::hb::{HbHandle, HbRecorder};
+use fp8_rl::testkit::interleave::{
+    run, Event, InterleaveSpec, InterleaveTarget, Plan,
+};
+use fp8_rl::util::units::{Blocks, Tokens};
+
+use crate::explore::Model;
+use crate::kv_model::{prompt_for, KvAct, KvModel, KvState};
+use crate::pool_model::{
+    step_unchecked, PoolAct, PoolModel, PoolState, Resolution,
+};
+
+// ---------------------------------------------------------------------
+// pool replay
+// ---------------------------------------------------------------------
+
+/// Project a model trace onto an interleave plan. Errors when the
+/// trace is not plan-expressible (contains `Kill`/`Reap`).
+pub fn project_plan(
+    trace: &[PoolAct],
+) -> Result<(Plan, InterleaveSpec), String> {
+    let mut events = Vec::new();
+    let (mut subs, mut syncs, mut aborts, mut polls) = (0, 0, 0, 0);
+    for a in trace {
+        match *a {
+            PoolAct::Submit => {
+                events.push(Event::Submit(subs));
+                subs += 1;
+            }
+            PoolAct::Fence => {
+                events.push(Event::Sync(syncs));
+                syncs += 1;
+            }
+            PoolAct::Abort { req } => {
+                events.push(Event::Abort(req as usize));
+                aborts += 1;
+            }
+            PoolAct::PoolDrain { .. } => {
+                events.push(Event::Poll);
+                polls += 1;
+            }
+            PoolAct::Kill { .. } | PoolAct::Reap { .. } => {
+                return Err(
+                    "trace kills a replica: not expressible as an \
+                     interleave plan (the public pool API cannot kill \
+                     a worker mid-session)"
+                        .to_string(),
+                );
+            }
+            PoolAct::WorkerIngest { .. }
+            | PoolAct::WorkerComplete { .. }
+            | PoolAct::WorkerApplyFence { .. } => {}
+        }
+    }
+    let spec = InterleaveSpec {
+        n_requests: subs,
+        n_syncs: syncs,
+        n_aborts: aborts,
+        n_polls: polls,
+    };
+    Ok((Plan { seed: 0, events }, spec))
+}
+
+/// Pick the next internal (worker/drain) action, if any. Deterministic
+/// priority per replica: ingest the channel, finish inflight work,
+/// apply a parked fence once the engine is idle, drain events.
+fn next_internal(m: &PoolModel, s: &PoolState) -> Option<PoolAct> {
+    let inflight_gate = |rep: &crate::pool_model::Replica| {
+        rep.inflight.is_empty()
+            || m.cfg.mutant
+                == Some(crate::pool_model::PoolMutant::InstallWithInflight)
+    };
+    for (r, rep) in s.replicas.iter().enumerate() {
+        let r8 = r as u8;
+        if rep.alive && !rep.chan.is_empty() {
+            return Some(PoolAct::WorkerIngest { replica: r8 });
+        }
+        if rep.alive && !rep.inflight.is_empty() {
+            return Some(PoolAct::WorkerComplete { replica: r8, slot: 0 });
+        }
+        if rep.alive && rep.parked.is_some() && inflight_gate(rep) {
+            return Some(PoolAct::WorkerApplyFence { replica: r8 });
+        }
+        if !rep.events.is_empty() {
+            return Some(PoolAct::PoolDrain { replica: r8 });
+        }
+    }
+    None
+}
+
+/// Drive the model to rest with internal actions only, recording what
+/// was applied.
+pub fn quiesce_recording(
+    m: &PoolModel,
+    s: &mut PoolState,
+) -> Vec<PoolAct> {
+    let mut applied = Vec::new();
+    for _ in 0..10_000 {
+        let Some(a) = next_internal(m, s) else { break };
+        *s = step_unchecked(m, s, &a);
+        applied.push(a);
+    }
+    applied
+}
+
+/// Step the (mutant) model over `trace` leniently, then quiesce:
+/// the model's prediction of how every ticket resolves.
+pub fn predict_pool(m: &PoolModel, trace: &[PoolAct]) -> PoolState {
+    let mut s = m.initial();
+    for a in trace {
+        s = step_unchecked(m, &s, a);
+    }
+    quiesce_recording(m, &mut s);
+    s
+}
+
+/// A canonical clean end-to-end trace at the model's bound: submits
+/// and fences interleaved, one abort when the bound allows it, then a
+/// full internal quiesce. Used to show the bridge passes on the clean
+/// model.
+pub fn canonical_clean_trace(m: &PoolModel) -> Vec<PoolAct> {
+    let mut s = m.initial();
+    let mut trace = Vec::new();
+    let mut fences = 0usize;
+    for i in 0..m.cfg.requests {
+        let a = PoolAct::Submit;
+        s = step_unchecked(m, &s, &a);
+        trace.push(a);
+        if fences < m.cfg.fences && i % 2 == 0 {
+            let f = PoolAct::Fence;
+            s = step_unchecked(m, &s, &f);
+            trace.push(f);
+            fences += 1;
+        }
+    }
+    while fences < m.cfg.fences {
+        let f = PoolAct::Fence;
+        s = step_unchecked(m, &s, &f);
+        trace.push(f);
+        fences += 1;
+    }
+    if m.cfg.aborts > 0 && m.cfg.requests > 0 {
+        let a = PoolAct::Abort { req: 0 };
+        s = step_unchecked(m, &s, &a);
+        trace.push(a);
+    }
+    trace.extend(quiesce_recording(m, &mut s));
+    trace
+}
+
+/// How a request actually resolved in the real pool.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum RealOutcome {
+    Done { epoch: u64 },
+    Aborted,
+    Failed,
+}
+
+struct ReplaySession {
+    pool: EnginePool,
+    requests: Vec<Request>,
+    syncs: Vec<Arc<Vec<HostArray>>>,
+    outcomes: BTreeMap<u64, RealOutcome>,
+    errors: Vec<String>,
+}
+
+impl ReplaySession {
+    fn record(&mut self, c: Completed) {
+        let (id, out) = match c {
+            Completed::Done(c) => {
+                (c.id, RealOutcome::Done { epoch: c.epoch })
+            }
+            Completed::Aborted(id) => (id, RealOutcome::Aborted),
+            Completed::Failed(id, _) => (id, RealOutcome::Failed),
+        };
+        if self.outcomes.insert(id, out).is_some() {
+            self.errors.push(format!("ticket {id} resolved twice"));
+        }
+    }
+
+    fn finish(&mut self) -> Result<(), String> {
+        while let Some(c) =
+            self.pool.next_resolved().map_err(|e| e.to_string())?
+        {
+            self.record(c);
+        }
+        Ok(())
+    }
+}
+
+impl InterleaveTarget for ReplaySession {
+    type Err = String;
+
+    fn submit(&mut self, i: usize) -> Result<(), String> {
+        let req = self.requests[i].clone();
+        self.pool.submit(req).map(|_| ()).map_err(|e| e.to_string())
+    }
+
+    fn sync(&mut self, j: usize) -> Result<(), String> {
+        self.pool
+            .sync_weights(self.syncs[j].clone())
+            .map(|_| ())
+            .map_err(|e| e.to_string())
+    }
+
+    fn poll(&mut self) -> Result<(), String> {
+        while let Some(c) = self.pool.poll() {
+            self.record(c);
+        }
+        Ok(())
+    }
+
+    fn abort(&mut self, i: usize) -> Result<(), String> {
+        self.pool
+            .abort(self.requests[i].id)
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// Trainer-step-`j` weights, perturbed then FP8-synced (the same
+/// idiom the streaming property suite uses).
+fn synced_weights(
+    rt: &Runtime,
+    j: usize,
+) -> Result<Arc<Vec<HostArray>>, String> {
+    let spec = rt
+        .manifest
+        .model("dense")
+        .ok_or("no dense model in hermetic manifest")?
+        .clone();
+    let init = rt
+        .manifest
+        .load_initial_params("dense")
+        .map_err(|e| e.to_string())?;
+    let scale = 1.0 + 0.01 * (j as f32 + 1.0);
+    let params: Vec<HostArray> = init
+        .into_iter()
+        .zip(&spec.params)
+        .map(|(mut v, p)| {
+            for x in v.iter_mut() {
+                *x *= scale;
+            }
+            HostArray::f32(p.shape.clone(), v)
+        })
+        .collect();
+    let sync = WeightSync::new(WeightSyncConfig::fp8());
+    let (w, _) =
+        sync.run_shared(&spec, &params).map_err(|e| e.to_string())?;
+    Ok(w)
+}
+
+fn mk_requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: 1 + i as u64,
+            prompt: vec![12, (i % 10) as i32, 10, 11],
+            params: SamplingParams {
+                temperature: 0.0,
+                max_new_tokens: 2,
+                ..Default::default()
+            },
+        })
+        .collect()
+}
+
+/// Replay a pool-model trace against the real `EnginePool`.
+///
+/// Returns the list of divergences between the model's predicted
+/// per-request outcomes and the implementation's actual ones (empty ==
+/// the bridge agrees), or `Err` for infrastructure failures (trace not
+/// plan-expressible, pool construction failed, ...).
+pub fn replay_pool_trace(
+    m: &PoolModel,
+    trace: &[PoolAct],
+) -> Result<Vec<String>, String> {
+    let (plan, spec) = project_plan(trace)?;
+    plan.check_well_formed(&spec);
+    let predicted = predict_pool(m, trace);
+
+    let rt = Runtime::hermetic();
+    let syncs = (0..spec.n_syncs)
+        .map(|j| synced_weights(&rt, j))
+        .collect::<Result<Vec<_>, _>>()?;
+    let pool = EnginePool::new_traced(
+        PoolConfig {
+            n_replicas: m.cfg.replicas,
+            policy: RoutePolicy::RoundRobin,
+            engine: EngineConfig::new("dense", "bf16"),
+        },
+        hermetic_runtime_factory(),
+        HbHandle::traced(HbRecorder::new(m.cfg.replicas)),
+    )
+    .map_err(|e| e.to_string())?;
+    let mut sess = ReplaySession {
+        pool,
+        requests: mk_requests(spec.n_requests),
+        syncs,
+        outcomes: BTreeMap::new(),
+        errors: Vec::new(),
+    };
+    run(&plan, &mut sess)?;
+    sess.finish()?;
+
+    let mut diverged = sess.errors.clone();
+    for (i, t) in predicted.tickets.iter().enumerate() {
+        if t.abort_sent {
+            // abort-vs-completion is a legal race; outcome not pinned
+            continue;
+        }
+        let id = 1 + i as u64;
+        let actual = sess.outcomes.get(&id).copied();
+        let agree = match (t.resolution, actual) {
+            (
+                Some(Resolution::Done { epoch }),
+                Some(RealOutcome::Done { epoch: e }),
+            ) => u64::from(epoch) == e,
+            (Some(Resolution::Aborted), Some(RealOutcome::Aborted)) => {
+                true
+            }
+            (Some(Resolution::Failed), Some(RealOutcome::Failed)) => true,
+            _ => false,
+        };
+        if !agree {
+            diverged.push(format!(
+                "request {i}: model predicted {:?}, real pool produced \
+                 {:?}",
+                t.resolution, actual
+            ));
+        }
+    }
+    Ok(diverged)
+}
+
+// ---------------------------------------------------------------------
+// kv replay
+// ---------------------------------------------------------------------
+
+/// Replay a KV-model trace against the real `KvBlockManager`, running
+/// `check_invariants` after every operation and comparing every
+/// predicted `SharedGrant` shape with the real one.
+///
+/// Returns the divergence list (empty == the bridge agrees) or `Err`
+/// for infrastructure failures.
+pub fn replay_kv_trace(
+    m: &KvModel,
+    trace: &[KvAct],
+) -> Result<Vec<String>, String> {
+    let geometry = KvGeometry {
+        n_layers: 1,
+        n_kv_heads: 1,
+        d_head: 2,
+        block_tokens: m.cfg.block_tokens,
+        precision: KvPrecision::Bf16,
+    };
+    let mut mgr =
+        KvBlockManager::new(geometry, Blocks::new(m.cfg.total_blocks))
+            .map_err(|e| format!("{e:?}"))?;
+    let mut diverged = Vec::new();
+    let mut state = m.initial();
+    let mut next_id = 0u64;
+    let mut live_ids: Vec<Option<u64>> = vec![None; m.cfg.slots];
+
+    let mut release_real =
+        |mgr: &mut KvBlockManager,
+         live_ids: &mut Vec<Option<u64>>,
+         slot: usize| {
+            if let Some(id) = live_ids[slot].take() {
+                mgr.release(id);
+            }
+        };
+
+    for (step, a) in trace.iter().enumerate() {
+        match *a {
+            KvAct::Alloc { slot } => {
+                let i = slot as usize;
+                let predicted = m.grant(&state, i);
+                next_id += 1;
+                let prompt = prompt_for(i);
+                let real = mgr.allocate_shared(
+                    next_id,
+                    Tokens::new(prompt.len()),
+                    prompt,
+                );
+                match (predicted, real) {
+                    (Some(p), Some(g)) => {
+                        live_ids[i] = Some(next_id);
+                        let got = (
+                            g.shared_blocks.get(),
+                            g.new_blocks.get(),
+                            g.shared_tokens.get(),
+                        );
+                        let want = (
+                            p.shared_blocks,
+                            p.new_blocks,
+                            p.shared_tokens,
+                        );
+                        if got != want {
+                            diverged.push(format!(
+                                "step {step}: slot {i} alloc — model \
+                                 predicted grant (shared_blocks, \
+                                 new_blocks, shared_tokens) = {want:?}, \
+                                 real manager returned {got:?}",
+                            ));
+                        }
+                    }
+                    (p, g) => {
+                        if g.is_some() {
+                            live_ids[i] = Some(next_id);
+                        }
+                        diverged.push(format!(
+                            "step {step}: slot {i} alloc — model \
+                             predicted {p:?}, real manager returned \
+                             {:?}",
+                            g.map(|g| (
+                                g.shared_blocks.get(),
+                                g.new_blocks.get(),
+                                g.shared_tokens.get(),
+                            ))
+                        ));
+                    }
+                }
+            }
+            KvAct::Append { slot } => {
+                let i = slot as usize;
+                let id = live_ids[i]
+                    .ok_or_else(|| format!("step {step}: append on idle slot {i}"))?;
+                match mgr.append_token(id) {
+                    Ok(true) => {}
+                    Ok(false) => diverged.push(format!(
+                        "step {step}: slot {i} append ran out of blocks \
+                         where the model had capacity"
+                    )),
+                    Err(e) => diverged.push(format!(
+                        "step {step}: slot {i} append failed: {e}"
+                    )),
+                }
+            }
+            KvAct::Release { slot } => {
+                release_real(&mut mgr, &mut live_ids, slot as usize);
+            }
+            KvAct::FencePreempt => {
+                for i in 0..m.cfg.slots {
+                    release_real(&mut mgr, &mut live_ids, i);
+                }
+            }
+        }
+        if let Err(e) = mgr.check_invariants() {
+            diverged.push(format!(
+                "step {step}: real manager invariant broken after \
+                 {a:?}: {e}"
+            ));
+        }
+        state = m.apply(&state, a).map_err(|e| {
+            format!("step {step}: model could not apply {a:?}: {e}")
+        })?;
+    }
+    Ok(diverged)
+}
+
+fn kv_try(
+    m: &KvModel,
+    s: &mut KvState,
+    tr: &mut Vec<KvAct>,
+    a: KvAct,
+) {
+    let mut acts = Vec::new();
+    m.actions(s, &mut acts);
+    if acts.contains(&a) {
+        if let Ok(next) = m.apply(s, &a) {
+            *s = next;
+            tr.push(a);
+        }
+    }
+}
+
+/// A canonical clean KV trace at the model's bound: allocate every
+/// slot (exercising full-prefix and partial-tail sharing), append once
+/// per live sequence (exercising boundary, COW, and in-place paths),
+/// then release everything through a fence-preempt storm.
+pub fn canonical_clean_kv_trace(m: &KvModel) -> Vec<KvAct> {
+    let mut s = m.initial();
+    let mut tr = Vec::new();
+    for i in 0..m.cfg.slots {
+        kv_try(m, &mut s, &mut tr, KvAct::Alloc { slot: i as u8 });
+    }
+    for i in 0..m.cfg.slots {
+        kv_try(m, &mut s, &mut tr, KvAct::Append { slot: i as u8 });
+    }
+    kv_try(m, &mut s, &mut tr, KvAct::FencePreempt);
+    for i in 0..m.cfg.slots {
+        kv_try(m, &mut s, &mut tr, KvAct::Release { slot: i as u8 });
+    }
+    tr
+}
+
+/// Extend a (typically violating) KV trace with the next allocation
+/// the model believes is possible — this is what turns a stale-registry
+/// state into an observable grant divergence on replay.
+pub fn extend_with_next_alloc(
+    m: &KvModel,
+    trace: &[KvAct],
+) -> Result<Vec<KvAct>, String> {
+    let mut state: KvState = m.initial();
+    for a in trace {
+        state = m
+            .apply(&state, a)
+            .map_err(|e| format!("could not apply {a:?}: {e}"))?;
+    }
+    for i in 0..m.cfg.slots {
+        if state.slots[i].live.is_none() && m.grant(&state, i).is_some()
+        {
+            let mut out = trace.to_vec();
+            out.push(KvAct::Alloc { slot: i as u8 });
+            return Ok(out);
+        }
+    }
+    Err("no further allocation possible in the model state".to_string())
+}

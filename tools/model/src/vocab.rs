@@ -1,0 +1,66 @@
+//! The protocol vocabulary this model checker claims to cover.
+//!
+//! Every (enum, variant) pair below names a message or state of the
+//! real implementation: the `Ctl` / `ToWorker` / `Ordered` / `Fence` /
+//! `Event` enums in `rust/src/rollout/pool.rs` and the `FenceState`
+//! enum in `rust/src/testkit/hb.rs`. Lint rule M1 (tools/lint +
+//! mirror.py) extracts the variants from those files and byte-compares
+//! them against this table in both directions:
+//!
+//! * a variant added to the implementation but missing here fails the
+//!   lint at the variant's declaration line — you cannot grow the
+//!   protocol without consciously extending (or explicitly abstracting
+//!   it in) the model;
+//! * a pair listed here that no longer exists in the implementation
+//!   fails the lint at this file — the model cannot drift ahead of
+//!   reality either.
+//!
+//! The M1 extractor parses this file lexically: each pair must sit on
+//! its own line of the form `("Enum", "Variant"),`. Keep it that way.
+//!
+//! How each variant maps into the abstract model (see pool_model.rs /
+//! kv_model.rs and DESIGN.md §11):
+//!
+//! * `Ctl::Abort`         -> `Msg::Abort` (inflight-cancel / backlog-pull)
+//! * `Ctl::Discard`       -> abstracted: same channel position as Abort,
+//!                           no completion emitted; covered by Abort's
+//!                           FIFO interleavings
+//! * `Ctl::Stats`         -> abstracted: read-only side channel, no
+//!                           protocol state touched
+//! * `Ctl::Shutdown`      -> `Act::Kill` (serve-loop exit dropping
+//!                           channel, backlog, inflight, parked fence)
+//! * `ToWorker::Ordered`  -> FIFO-ordered half of `Msg`
+//! * `ToWorker::Ctl`      -> control half of `Msg` (same FIFO channel)
+//! * `Ordered::Submit`    -> `Msg::Submit { req, stamp }`
+//! * `Ordered::Fence`     -> `Msg::Fence { target }`
+//! * `Fence::Weights`     -> fence payload, collapsed: only `target()`
+//!                           matters to the protocol
+//! * `Fence::KvScales`    -> fence payload, collapsed likewise
+//! * `Event::Done`        -> `Ev::Done { req, epoch }`
+//! * `Event::Aborted`     -> `Ev::Aborted { req }`
+//! * `Event::Failed`      -> `Ev::Failed { req }`
+//! * `Event::Fence`       -> `Ev::FenceAck { target }`
+//! * `FenceState::Running`   -> replica with `parked == None`
+//! * `FenceState::Draining`  -> replica with `parked == Some(target)`
+//! * `FenceState::Installed` -> `engine_epoch` bumped by `ApplyFence`
+
+/// (enum name, variant name) pairs pinned by lint rule M1.
+pub const PROTOCOL_VOCAB: &[(&str, &str)] = &[
+    ("Ctl", "Abort"),
+    ("Ctl", "Discard"),
+    ("Ctl", "Stats"),
+    ("Ctl", "Shutdown"),
+    ("ToWorker", "Ordered"),
+    ("ToWorker", "Ctl"),
+    ("Ordered", "Submit"),
+    ("Ordered", "Fence"),
+    ("Fence", "Weights"),
+    ("Fence", "KvScales"),
+    ("Event", "Done"),
+    ("Event", "Aborted"),
+    ("Event", "Failed"),
+    ("Event", "Fence"),
+    ("FenceState", "Running"),
+    ("FenceState", "Draining"),
+    ("FenceState", "Installed"),
+];
